@@ -1,0 +1,66 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Runs ACPD (4 workers, group size 2) on a dense synthetic problem where
+//! each worker's local solve executes the AOT-compiled JAX/Pallas kernels
+//! through PJRT — python is NOT running; the artifacts were produced once by
+//! `make artifacts`.
+//!
+//!   cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use acpd::data::synthetic::Preset;
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+use acpd::runtime::{find_artifacts_dir, ArtifactRuntime, PjrtSolver};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a dataset — dense preset matching the `quickstart` artifact shapes
+    //    (n=4096 over K=4 workers -> nk=1024, d=512)
+    let mut spec = Preset::DenseE2e.spec();
+    spec.name = "quickstart-dense";
+    spec.n = 4096;
+    spec.d = 512;
+    let ds = acpd::data::synthetic::generate(&spec, 42);
+    println!("data:   {}", ds.summary());
+
+    // 2. an algorithm config — ACPD with the paper's sigma' = gamma*B
+    let mut cfg = EngineConfig::acpd(4, 2, 10, 1e-3);
+    cfg.rho_d = 64; // ship only 64 of 512 coordinates per message
+    cfg.h = 1024; // one artifact epoch per round
+    cfg.outer_rounds = 6;
+    println!("engine: {}", cfg.describe());
+
+    // 3. the compute backend — AOT JAX/Pallas artifacts on the PJRT client
+    let dir = find_artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts/ missing — run `make artifacts`"))?;
+    let rt = Arc::new(ArtifactRuntime::load_variant(dir, "quickstart")?);
+    println!(
+        "pjrt:   platform={} artifacts={}",
+        rt.client().platform_name(),
+        rt.manifest().entries.len()
+    );
+
+    // 4. run the full protocol in the deterministic cluster simulator
+    let (lambda, sigma, gamma, n) = (cfg.lambda, cfg.sigma_prime, cfg.gamma, ds.n());
+    let out = acpd::sim::run_with_solvers(&ds, &cfg, &NetworkModel::lan(), 7, |part, rng| {
+        Box::new(
+            PjrtSolver::new(rt.clone(), part, lambda, n, sigma, gamma, rng)
+                .expect("artifact shapes must fit the partition"),
+        )
+    });
+
+    println!("\nduality-gap trajectory (every 10th round):");
+    print!("{}", out.history.render(10));
+    println!(
+        "final gap {:.3e} after {} rounds — {:.2} MB up ({} B/round avg, dense would be {} B/round)",
+        out.history.last_gap(),
+        out.stats.rounds,
+        out.stats.bytes_up as f64 / 1e6,
+        out.history.mean_bytes_up_per_round() as u64,
+        4 * ds.d()
+    );
+    anyhow::ensure!(out.history.last_gap() < 0.05, "quickstart failed to converge");
+    println!("OK");
+    Ok(())
+}

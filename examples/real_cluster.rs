@@ -1,0 +1,88 @@
+//! Real distributed run: one coordinator + K worker OS PROCESSES talking
+//! length-prefixed frames over real TCP sockets on localhost — the
+//! reproduction of the paper's OpenMPI deployment (§V-C), with worker 0
+//! physically sleeping 5x as the straggler.
+//!
+//!   cargo run --release --example real_cluster
+//!
+//! (This example shells out to the `acpd` binary's `server`/`worker`
+//! subcommands, so it exercises the exact CLI a real deployment would use.)
+
+use std::process::{Command, Stdio};
+
+fn acpd_bin() -> std::path::PathBuf {
+    // target/<profile>/examples/real_cluster -> target/<profile>/acpd
+    let mut p = std::env::current_exe().expect("current_exe");
+    p.pop(); // real_cluster
+    p.pop(); // examples/
+    p.push("acpd");
+    p
+}
+
+fn main() -> anyhow::Result<()> {
+    let bin = acpd_bin();
+    anyhow::ensure!(
+        bin.exists(),
+        "{} missing — run `cargo build --release` first",
+        bin.display()
+    );
+    let addr = "127.0.0.1:47311";
+    let k = 3;
+    let common: Vec<String> = [
+        "--preset",
+        "rcv1-small",
+        "--workers",
+        "3",
+        "--group",
+        "2",
+        "--period",
+        "5",
+        "--rho-d",
+        "1000",
+        "--h",
+        "2000",
+        "--lambda",
+        "1e-3",
+        "--outer-rounds",
+        "6",
+        "--straggler-worker",
+        "0",
+        "--straggler-factor",
+        "5",
+        "--addr",
+        addr,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    println!("spawning coordinator on {addr} ...");
+    let mut server = Command::new(&bin)
+        .arg("server")
+        .args(&common)
+        .stdout(Stdio::inherit())
+        .stderr(Stdio::inherit())
+        .spawn()?;
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    println!("spawning {k} worker processes ...");
+    let mut workers = Vec::new();
+    for wid in 0..k {
+        workers.push(
+            Command::new(&bin)
+                .arg("worker")
+                .args(&common)
+                .args(["--id", &wid.to_string()])
+                .stdout(Stdio::inherit())
+                .stderr(Stdio::inherit())
+                .spawn()?,
+        );
+    }
+    let status = server.wait()?;
+    for mut w in workers {
+        let _ = w.wait();
+    }
+    anyhow::ensure!(status.success(), "server exited with {status}");
+    println!("real_cluster OK");
+    Ok(())
+}

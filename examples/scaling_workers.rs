@@ -1,0 +1,52 @@
+//! Worker-scaling study (Fig 4b in miniature): time to reach a target
+//! duality gap as K grows, ACPD (B=K/2, ρd=10³, T=10) vs CoCoA+.
+//!
+//! Paper finding: CoCoA+ stops scaling as K grows (communication-bound);
+//! ACPD keeps improving because both its per-round latency (group-wise)
+//! and bytes (top-ρd) shrink the synchronization cost.
+//!
+//!   cargo run --release --example scaling_workers
+
+use acpd::data::synthetic::Preset;
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+
+fn main() -> anyhow::Result<()> {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = 8000;
+    let ds = acpd::data::synthetic::generate(&spec, 42);
+    let target = 1e-4;
+    println!("data: {}  |  target gap = {target:.0e}\n", ds.summary());
+
+    println!(
+        "{:>4} {:>14} {:>14} {:>10}",
+        "K", "ACPD time(s)", "CoCoA+ time(s)", "speedup"
+    );
+    for k in [2usize, 4, 8, 16] {
+        let mut acpd_cfg = EngineConfig::acpd(k, (k / 2).max(1), 10, 1e-3);
+        acpd_cfg.rho_d = 1000;
+        acpd_cfg.h = 10_000;
+        acpd_cfg.outer_rounds = 10_000;
+        acpd_cfg.target_gap = target;
+        acpd_cfg.eval_every = 2;
+
+        let mut cocoa_cfg = EngineConfig::cocoa_plus(k, 1e-3);
+        cocoa_cfg.h = 10_000;
+        cocoa_cfg.outer_rounds = 100_000;
+        cocoa_cfg.target_gap = target;
+        cocoa_cfg.eval_every = 2;
+
+        let net = NetworkModel::lan(); // sigma = 1 per the paper's Fig 4b
+        let a = acpd::sim::run(&ds, &acpd_cfg, &net, 7);
+        let c = acpd::sim::run(&ds, &cocoa_cfg, &net, 7);
+        let ta = a.history.time_to_gap(target).map(|(_, t)| t);
+        let tc = c.history.time_to_gap(target).map(|(_, t)| t);
+        match (ta, tc) {
+            (Some(ta), Some(tc)) => {
+                println!("{k:>4} {ta:>14.2} {tc:>14.2} {:>9.2}x", tc / ta)
+            }
+            _ => println!("{k:>4} {ta:>14.2?} {tc:>14.2?}      n/a"),
+        }
+    }
+    Ok(())
+}

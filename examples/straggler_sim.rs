@@ -1,0 +1,92 @@
+//! Straggler study (the paper's headline scenario, Fig 3 in miniature).
+//!
+//! Compares ACPD against CoCoA+ and the two ablations (B=K: no
+//! straggler-agnosticism; ρ=1: no compression) on an rcv1-like workload
+//! with a σ× slow worker, reporting simulated time to reach a target
+//! duality gap.
+//!
+//!   cargo run --release --example straggler_sim [sigma] [target_gap]
+
+use acpd::data::synthetic::Preset;
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sigma: f64 = args.first().map(|s| s.parse()).transpose()?.unwrap_or(10.0);
+    let target: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(1e-4);
+
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = 8000; // keep the example snappy; bench fig3 runs the full size
+    let ds = acpd::data::synthetic::generate(&spec, 42);
+    println!("data: {}  |  straggler sigma = {sigma}  |  target gap = {target:.0e}\n", ds.summary());
+
+    let k = 4;
+    let lambda = 1e-3;
+    let mk = |label: &str, mut cfg: EngineConfig| {
+        cfg.h = 4000;
+        cfg.outer_rounds = 4000;
+        cfg.target_gap = target;
+        (label.to_string(), cfg)
+    };
+    let candidates = vec![
+        mk("ACPD (B=2, rho_d=1e3, T=20)", {
+            let mut c = EngineConfig::acpd(k, 2, 20, lambda);
+            c.rho_d = 1000;
+            c
+        }),
+        mk("ACPD B=K (no straggler-agn.)", {
+            let mut c = EngineConfig::acpd(k, k, 20, lambda);
+            c.recouple_sigma();
+            c.rho_d = 1000;
+            c
+        }),
+        mk("ACPD rho=1 (no compression)", {
+            let mut c = EngineConfig::acpd(k, 2, 20, lambda);
+            c.rho_d = 0;
+            c
+        }),
+        mk("CoCoA+", EngineConfig::cocoa_plus(k, lambda)),
+    ];
+
+    let net = NetworkModel::lan().with_straggler(k, 0, sigma);
+    println!(
+        "{:<32} {:>8} {:>12} {:>12} {:>10}",
+        "algorithm", "rounds", "time(s)", "MB up", "gap"
+    );
+    let mut times = Vec::new();
+    for (label, cfg) in candidates {
+        let out = acpd::sim::run(&ds, &cfg, &net, 7);
+        match out.history.time_to_gap(target) {
+            Some((round, time)) => {
+                println!(
+                    "{:<32} {:>8} {:>12.2} {:>12.2} {:>10.1e}",
+                    label,
+                    round,
+                    time,
+                    out.stats.bytes_up as f64 / 1e6,
+                    out.history.last_gap()
+                );
+                times.push((label, time));
+            }
+            None => println!(
+                "{:<32} {:>8} {:>12} {:>12.2} {:>10.1e}",
+                label,
+                out.stats.rounds,
+                "did not reach",
+                out.stats.bytes_up as f64 / 1e6,
+                out.history.last_gap()
+            ),
+        }
+    }
+    if let (Some(acpd), Some(cocoa)) = (
+        times.iter().find(|(l, _)| l.starts_with("ACPD (")),
+        times.iter().find(|(l, _)| l.starts_with("CoCoA+")),
+    ) {
+        println!(
+            "\nACPD speedup over CoCoA+ at sigma={sigma}: {:.2}x",
+            cocoa.1 / acpd.1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time (compile-path) python package for the ACPD reproduction.
+
+Nothing in here is imported at runtime: ``aot.py`` lowers the jitted L2
+functions in ``model.py`` (which call the L1 Pallas kernels) to HLO *text*
+once, and the rust coordinator loads the artifacts via the PJRT C API.
+"""

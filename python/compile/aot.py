@@ -1,0 +1,139 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+(what the published ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--variants test,e2e,...]
+
+Outputs <out-dir>/<entry>_<variant>.hlo.txt plus a line-based manifest.txt
+the rust side parses:
+
+    entry name=local_round variant=e2e file=local_round_e2e.hlo.txt \
+          nk=2048 d=1024 h=2048
+
+Shape variants deliberately use 128-multiples (TPU tiling; see DESIGN.md
+§Hardware-Adaptation).  The scalar-vector calling conventions are documented
+in model.py and mirrored by rust/src/runtime/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, n_k, d, h).  n_k multiples of 128 (gap kernel tiling), d multiples
+# of 128 (VPU lanes).  "test" is sized for fast pytest/cargo-test cycles;
+# "quickstart" for the quickstart example; "e2e" for the end-to-end driver
+# (n=8192 over K=4 workers => n_k=2048).
+VARIANTS = {
+    "test": dict(nk=256, d=128, h=256),
+    "quickstart": dict(nk=1024, d=512, h=1024),
+    "e2e": dict(nk=2048, d=1024, h=2048),
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_signatures(nk: int, d: int, h: int):
+    """Input specs per entry, in positional order (the PJRT call order)."""
+    return {
+        "local_round": [
+            _spec((nk, d)),      # A
+            _spec((nk,)),        # y
+            _spec((nk,)),        # alpha
+            _spec((d,)),         # w_k
+            _spec((d,)),         # resid
+            _spec((h,), I32),    # idx
+            _spec((nk,)),        # sqnorms
+            _spec((4,)),         # scalars [lam_n, sigma', gamma, k]
+        ],
+        "objectives": [
+            _spec((nk, d)),      # A
+            _spec((nk,)),        # y
+            _spec((nk,)),        # alpha
+            _spec((d,)),         # w
+        ],
+        "sdca_epoch": [
+            _spec((nk, d)),
+            _spec((nk,)),
+            _spec((nk,)),
+            _spec((d,)),
+            _spec((h,), I32),
+            _spec((nk,)),
+            _spec((2,)),         # [lam_n, sigma']
+        ],
+        "topk_filter": [
+            _spec((d,)),
+            _spec((1,)),         # [k]
+        ],
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the rust
+    side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, shapes: dict, out_dir: str, manifest: list):
+    nk, d, h = shapes["nk"], shapes["d"], shapes["h"]
+    sigs = entry_signatures(nk, d, h)
+    for entry, specs in sigs.items():
+        fn = getattr(model, entry)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{entry}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        nouts = {
+            "local_round": 4,
+            "objectives": 3,
+            "sdca_epoch": 2,
+            "topk_filter": 3,
+        }[entry]
+        manifest.append(
+            f"entry name={entry} variant={name} file={fname} "
+            f"nk={nk} d={d} h={h} nin={len(specs)} nout={nouts}"
+        )
+        print(f"  {fname}: {len(text)} chars")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(VARIANTS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = ["# acpd artifact manifest v1"]
+    for name in args.variants.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"variant {name}: {VARIANTS[name]}")
+        lower_variant(name, VARIANTS[name], args.out_dir, manifest)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest) - 1} entries to {args.out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for ACPD (ridge-regression instantiation).
+
+- ``sdca``: H-step local SDCA epoch (Algorithm 2 line 4) — the hot spot.
+- ``topk``: bandwidth filter F + residual split (Algorithm 2 lines 7-12).
+- ``gap``: duality-gap pieces (loss/conjugate sums + A^T alpha) in one pass.
+- ``ref``: pure-jnp oracle for all of the above.
+
+All kernels run under ``interpret=True`` so they lower to plain HLO the CPU
+PJRT client can execute; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import gap, ref, sdca, topk  # noqa: F401

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: duality-gap pieces in one pass over the partition.
+
+Computes, for a dense local partition A (n_k, d):
+
+    loss_sum = sum_i 0.5 (x_i.w - y_i)^2        (square-loss primal part)
+    conj_sum = sum_i (alpha_i y_i - alpha_i^2/2)
+    v        = A^T alpha                         (d,)
+
+in a single HBM read of A.  TPU mapping (DESIGN.md §Hardware-Adaptation):
+the grid tiles the sample axis in TILE_N=128 row blocks; each program does an
+MXU-shaped (128, d) x (d,) matvec for z = A_blk.w and a (128,)x(128, d)
+vector-matrix product for the v accumulation, then fuses the per-sample loss
+math into the same pass.  Scalar partial sums land in a per-program slot of a
+(grid,)-shaped output (no cross-program races); v accumulates into a single
+(d,) block, initialised by program 0 — the canonical sequential-grid
+accumulation pattern on TPU.
+
+VMEM per program: A block 128*d*4 (d=8192 -> 4 MiB) + 3 d-vectors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+
+
+def _gap_kernel(y_ref, alpha_ref, w_ref, a_ref, loss_ref, conj_ref, v_ref):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    a_blk = a_ref[...]          # (TILE_N, d)
+    alpha_blk = alpha_ref[...]  # (TILE_N,)
+    z = a_blk @ w_ref[...]      # MXU-shaped matvec
+    r = z - y_ref[...]
+    loss_ref[0] = 0.5 * jnp.sum(r * r)
+    conj_ref[0] = jnp.sum(alpha_blk * y_ref[...] - 0.5 * alpha_blk * alpha_blk)
+    v_ref[...] = v_ref[...] + alpha_blk @ a_blk
+
+
+@jax.jit
+def objective_pieces(A, y, alpha, w):
+    """Pallas-backed twin of ``ref.objective_pieces``.
+
+    Requires n_k to be a multiple of TILE_N (the AOT shape variants are);
+    callers with ragged n_k zero-pad rows (zero rows contribute y=0, alpha=0
+    => loss 0.5*z^2 with z=0, i.e. nothing).
+    """
+    n_k, d = A.shape
+    assert n_k % TILE_N == 0, f"n_k={n_k} must be a multiple of {TILE_N}"
+    grid = n_k // TILE_N
+    loss_p, conj_p, v = pl.pallas_call(
+        _gap_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),       # y
+            pl.BlockSpec((TILE_N,), lambda i: (i,)),       # alpha
+            pl.BlockSpec((d,), lambda i: (0,)),            # w (replicated)
+            pl.BlockSpec((TILE_N, d), lambda i: (i, 0)),   # A row-tiles
+        ],
+        out_specs=(
+            pl.BlockSpec((1,), lambda i: (i,)),            # loss partials
+            pl.BlockSpec((1,), lambda i: (i,)),            # conj partials
+            pl.BlockSpec((d,), lambda i: (0,)),            # v (accumulated)
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ),
+        interpret=True,
+    )(y, alpha, w, A)
+    return jnp.sum(loss_p), jnp.sum(conj_p), v

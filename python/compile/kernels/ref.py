@@ -1,0 +1,151 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float round-off)
+counterpart here, written with plain ``jax.numpy`` so that pytest can assert
+``kernel(x) == ref(x)``.  These are also the semantics documents: if a kernel
+and its ref disagree, the ref wins.
+
+All functions are shape-polymorphic and jittable.  The math follows the paper
+(Huo & Huang 2019), ridge regression instantiation (Eq. 25):
+
+  primal   P(w)    = (1/n) sum_i 0.5 (w.x_i - y_i)^2 + (lam/2) ||w||^2
+  dual     D(alpha)= (1/n) sum_i (alpha_i y_i - alpha_i^2/2)
+                     - (lam/2) || (1/(lam n)) A^T alpha ||^2
+  SDCA coordinate step on the local subproblem G_k^{sigma'} (Eq. 8):
+      delta_i = (y_i - alpha_i - x_i.(w_eff + u)) / (1 + sigma' ||x_i||^2/(lam n))
+      u      += (sigma'/(lam n)) * delta_i * x_i
+  where u tracks sigma' * (1/(lam n)) A_[k]^T delta_alpha over the epoch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# SDCA epoch (Algorithm 2, line 4) — square loss, H sequential steps
+# ---------------------------------------------------------------------------
+
+
+def sdca_epoch(A, y, alpha, w_eff, idx, sqnorms, lam_n, sigma_prime):
+    """Run ``len(idx)`` SDCA coordinate-ascent steps on the local subproblem.
+
+    Args:
+      A:        (n_k, d) dense local data partition (rows are samples).
+      y:        (n_k,) labels.
+      alpha:    (n_k,) local dual variables at epoch start.
+      w_eff:    (d,) effective primal iterate the subproblem is centred on
+                (``w_k + gamma * delta_w_k`` in Algorithm 2).
+      idx:      (H,) int32 coordinate schedule (sampled by the caller; shared
+                with the rust path so both solvers walk the same stream).
+      sqnorms:  (n_k,) precomputed ||x_i||^2.
+      lam_n:    scalar, lambda * n  (n = GLOBAL sample count).
+      sigma_prime: scalar, subproblem difficulty sigma' = gamma * B.
+
+    Returns:
+      (alpha_new, delta_w): updated duals and the primal update
+      ``delta_w = (1/(lam n)) A^T (alpha_new - alpha)``.
+    """
+    A = jnp.asarray(A)
+    y = jnp.asarray(y)
+    alpha = jnp.asarray(alpha)
+    w_eff = jnp.asarray(w_eff)
+    idx = jnp.asarray(idx)
+    sqnorms = jnp.asarray(sqnorms)
+    scale = sigma_prime / lam_n
+
+    def body(_h, carry):
+        alpha_c, u = carry
+        i = idx[_h]
+        x = A[i]
+        z = jnp.dot(x, w_eff + u)
+        denom = 1.0 + sigma_prime * sqnorms[i] / lam_n
+        delta = (y[i] - alpha_c[i] - z) / denom
+        alpha_c = alpha_c.at[i].add(delta)
+        u = u + scale * delta * x
+        return alpha_c, u
+
+    alpha_new, u = jax.lax.fori_loop(
+        0, idx.shape[0], body, (alpha, jnp.zeros_like(w_eff))
+    )
+    # u = sigma'/(lam n) * A^T dalpha  =>  delta_w = u / sigma'
+    delta_w = u / sigma_prime
+    return alpha_new, delta_w
+
+
+# ---------------------------------------------------------------------------
+# Top-(rho d) magnitude filter (Algorithm 2, lines 7-9) — exact, sort-based
+# ---------------------------------------------------------------------------
+
+
+def topk_threshold_exact(delta_w, k):
+    """Exact k-th largest magnitude of ``delta_w`` (static k), via sort."""
+    mags = jnp.sort(jnp.abs(delta_w))[::-1]
+    k = max(1, min(int(k), delta_w.shape[0]))
+    return mags[k - 1]
+
+
+def topk_filter(delta_w, k):
+    """Split ``delta_w`` into (filtered F(dw), residual) with exact top-k mask.
+
+    mask M(i) = |dw_i| >= c  where c is the k-th largest magnitude.  Ties can
+    push the support above k (matches the paper's definition of M_k).
+    ``filtered + residual == delta_w`` exactly.
+    """
+    c = topk_threshold_exact(delta_w, k)
+    mask = jnp.abs(delta_w) >= c
+    filtered = jnp.where(mask, delta_w, 0.0)
+    return filtered, delta_w - filtered, c
+
+
+def topk_threshold_bisect(delta_w, k, iters=48):
+    """Bisection threshold with *dynamic* k: smallest representable c such
+    that count(|dw| >= c) <= k (up to bisection resolution).  This is the
+    XLA-path algorithm; exact selection is quickselect on the rust path."""
+    mags = jnp.abs(delta_w)
+    lo = jnp.asarray(0.0, delta_w.dtype)
+    hi = jnp.max(mags) + jnp.asarray(1e-12, delta_w.dtype)
+
+    def body(_i, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(mags >= mid)
+        too_many = cnt > k
+        return jnp.where(too_many, mid, lo), jnp.where(too_many, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# Objectives (duality-gap pieces) — per-partition contributions
+# ---------------------------------------------------------------------------
+
+
+def objective_pieces(A, y, alpha, w):
+    """Per-partition contributions to P(w) and D(alpha) for the square loss.
+
+    Returns (loss_sum, conj_sum, v) where
+      loss_sum = sum_i 0.5 (x_i.w - y_i)^2         (primal loss part)
+      conj_sum = sum_i (alpha_i y_i - alpha_i^2/2)  (dual -phi^*(-alpha) part)
+      v        = A^T alpha                          (d,) for ||w(alpha)||^2
+
+    The driver combines partitions:
+      P = loss_sum_tot/n + lam/2 ||w||^2
+      D = conj_sum_tot/n - lam/2 || v_tot/(lam n) ||^2
+    """
+    z = A @ w
+    loss_sum = 0.5 * jnp.sum((z - y) ** 2)
+    conj_sum = jnp.sum(alpha * y - 0.5 * alpha**2)
+    v = A.T @ alpha
+    return loss_sum, conj_sum, v
+
+
+def primal_dual(A, y, alpha, w, lam):
+    """Full-dataset primal, dual and gap (single partition convenience)."""
+    n = A.shape[0]
+    loss_sum, conj_sum, v = objective_pieces(A, y, alpha, w)
+    primal = loss_sum / n + 0.5 * lam * jnp.dot(w, w)
+    wa = v / (lam * n)
+    dual = conj_sum / n - 0.5 * lam * jnp.dot(wa, wa)
+    return primal, dual, primal - dual

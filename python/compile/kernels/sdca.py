@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: the local SDCA epoch (the paper's compute hot-spot).
+
+Algorithm 2 line 4: solve the local subproblem G_k^{sigma'} for H stochastic
+coordinate-ascent steps.  For the square loss (ridge regression, the paper's
+experiment) each 1-D subproblem has the closed form
+
+    delta = (y_i - alpha_i - x_i.(w_eff + u)) / (1 + sigma' ||x_i||^2 / lam_n)
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the epoch is inherently
+sequential in H, so the kernel is a single program (grid=()) that keeps the
+mutable d-vector ``u`` and the duals VMEM-resident across all H steps — the
+analogue of the paper's C++ worker keeping w hot in L2 cache — and streams a
+single row A[i, :] from the (VMEM-resident, n_k*d <= ~4 MiB per variant)
+partition per step.  Dot products are VPU lane reductions.  ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernel lowers to plain HLO (while-loop + dynamic-slice) that both pytest and
+the rust runtime can run.
+
+VMEM budget per shape variant (f32):
+    A: n_k*d*4   y/alpha/sqnorms: 3*n_k*4   w_eff,u: 2*d*4   idx: H*4
+    e.g. n_k=2048, d=1024: 8.0 MiB + 24 KiB + 8 KiB  << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sdca_kernel(
+    a_ref,        # (n_k, d) f32   data partition
+    y_ref,        # (n_k,)   f32   labels
+    alpha_ref,    # (n_k,)   f32   duals in
+    weff_ref,     # (d,)     f32   w_k + gamma*delta_w_k
+    idx_ref,      # (H,)     i32   coordinate schedule
+    sqn_ref,      # (n_k,)   f32   ||x_i||^2
+    scal_ref,     # (2,)     f32   [lam_n, sigma_prime]
+    alpha_out,    # (n_k,)   f32   duals out
+    ww_out,       # (d,)     f32   w_eff + sigma'/(lam n) * A^T dalpha
+):
+    lam_n = scal_ref[0]
+    sig = scal_ref[1]
+    scale = sig / lam_n
+
+    alpha_out[...] = alpha_ref[...]
+    # §Perf (L1): maintain the margin source ww = w_eff + u as ONE
+    # VMEM-resident accumulator instead of re-forming w_eff + u from two
+    # d-vectors every step — halves the per-step d-vector traffic
+    # (EXPERIMENTS.md §Perf: ~1.9x epoch time on the lowered HLO).
+    ww_out[...] = weff_ref[...]
+
+    def body(h, _):
+        i = idx_ref[h]
+        x = pl.load(a_ref, (i, slice(None)))
+        a_i = pl.load(alpha_out, (i,))
+        y_i = pl.load(y_ref, (i,))
+        q_i = pl.load(sqn_ref, (i,))
+        z = jnp.dot(x, ww_out[...])
+        delta = (y_i - a_i - z) / (1.0 + sig * q_i / lam_n)
+        pl.store(alpha_out, (i,), a_i + delta)
+        ww_out[...] = ww_out[...] + scale * delta * x
+        return 0
+
+    jax.lax.fori_loop(0, idx_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sdca_epoch(A, y, alpha, w_eff, idx, sqnorms, lam_n, sigma_prime):
+    """Pallas-backed SDCA epoch; signature mirrors ``ref.sdca_epoch``.
+
+    Returns ``(alpha_new, delta_w)`` with
+    ``delta_w = (1/(lam n)) A^T (alpha_new - alpha)``.
+    """
+    n_k, d = A.shape
+    scalars = jnp.stack(
+        [jnp.asarray(lam_n, jnp.float32), jnp.asarray(sigma_prime, jnp.float32)]
+    )
+    alpha_new, ww = pl.pallas_call(
+        _sdca_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_k,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+        ),
+        interpret=True,
+    )(A, y, alpha, w_eff, idx.astype(jnp.int32), sqnorms, scalars)
+    # ww = w_eff + u, u = sigma'/(lam n) A^T dalpha  =>  delta_w = u / sigma'
+    delta_w = (ww - w_eff) / jnp.asarray(sigma_prime, jnp.float32)
+    return alpha_new, delta_w

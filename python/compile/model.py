@@ -1,0 +1,67 @@
+"""L2: the jitted compute graphs that the rust coordinator executes via PJRT.
+
+Each public function here is one AOT artifact (per shape variant).  They are
+composed from the L1 Pallas kernels so the kernel lowers into the same HLO
+module; the rust hot path performs exactly ONE PJRT execute per worker round
+(``local_round``) and one per gap evaluation (``objectives``).
+
+Calling conventions (all f32 unless noted, shapes per manifest variant):
+
+``local_round(A, y, alpha, w_k, resid, idx:i32, sqnorms, scalars)``
+    scalars = [lam_n, sigma_prime, gamma, k]
+    1. w_eff      = w_k + gamma * resid          (Algorithm 2 line 4 centring)
+    2. alpha', dw = sdca_epoch(...) for H steps  (L1 kernel)
+    3. dw_total   = resid + dw                   (error feedback carry-in)
+    4. F, resid'  = top-k filter(dw_total)       (L1 kernel + bisection)
+    returns (alpha', F(dw), resid', threshold[1])
+
+``objectives(A, y, alpha, w)`` -> (loss_sum[1], conj_sum[1], v[d])
+    per-partition duality-gap pieces (L1 gap kernel).
+
+``sdca_epoch`` / ``topk_filter`` are also exported standalone for tests and
+microbenches.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import gap as gap_k
+from .kernels import sdca as sdca_k
+from .kernels import topk as topk_k
+
+
+def local_round(A, y, alpha, w_k, resid, idx, sqnorms, scalars):
+    """One full bandwidth-efficient worker round (Algorithm 2 lines 3-12)."""
+    lam_n = scalars[0]
+    sigma_prime = scalars[1]
+    gamma = scalars[2]
+    k = scalars[3]
+    w_eff = w_k + gamma * resid
+    alpha_new, dw = sdca_k.sdca_epoch(
+        A, y, alpha, w_eff, idx, sqnorms, lam_n, sigma_prime
+    )
+    # Algorithm 2 line 5: the retained dual state is alpha + gamma*delta_alpha
+    # (delta_w stays unscaled; the server applies its own gamma on aggregation,
+    # which keeps w = (1/lam_n) A^T alpha globally).
+    alpha_ret = alpha + gamma * (alpha_new - alpha)
+    dw_total = resid + dw
+    filt, resid_out, c = topk_k.topk_filter(dw_total, k)
+    return alpha_ret, filt, resid_out, jnp.reshape(c, (1,))
+
+
+def objectives(A, y, alpha, w):
+    """Per-partition duality-gap pieces; see kernels.gap."""
+    loss_sum, conj_sum, v = gap_k.objective_pieces(A, y, alpha, w)
+    return jnp.reshape(loss_sum, (1,)), jnp.reshape(conj_sum, (1,)), v
+
+
+def sdca_epoch(A, y, alpha, w_eff, idx, sqnorms, scalars):
+    """Standalone SDCA epoch; scalars = [lam_n, sigma_prime]."""
+    return sdca_k.sdca_epoch(A, y, alpha, w_eff, idx, sqnorms, scalars[0], scalars[1])
+
+
+def topk_filter(delta_w, scalars):
+    """Standalone filter; scalars = [k]."""
+    filt, resid, c = topk_k.topk_filter(delta_w, scalars[0])
+    return filt, resid, jnp.reshape(c, (1,))

@@ -1,0 +1,68 @@
+"""AOT pipeline: lowering produces loadable HLO text + a sane manifest."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--variants", "test"],
+        cwd=PY_DIR,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_entries(artifacts):
+    lines = (artifacts / "manifest.txt").read_text().strip().splitlines()
+    assert lines[0].startswith("#")
+    entries = [l for l in lines if l.startswith("entry ")]
+    names = set()
+    for line in entries:
+        kv = dict(tok.split("=", 1) for tok in line.split()[1:])
+        assert {"name", "variant", "file", "nk", "d", "h", "nin", "nout"} <= set(kv)
+        assert (artifacts / kv["file"]).exists()
+        names.add(kv["name"])
+    assert names == {"local_round", "objectives", "sdca_epoch", "topk_filter"}
+
+
+def test_hlo_text_is_parseable_hlo(artifacts):
+    for f in artifacts.glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "HloModule" in text, f.name
+        assert "ENTRY" in text, f.name
+        # interpret-mode pallas must NOT leave mosaic custom-calls behind
+        assert "tpu_custom_call" not in text, f.name
+        assert "mosaic" not in text.lower(), f.name
+
+
+def test_local_round_hlo_shapes(artifacts):
+    text = (artifacts / "local_round_test.hlo.txt").read_text()
+    # 8 parameters with the manifest shapes
+    assert "f32[256,128]" in text  # A
+    assert "s32[256]" in text      # idx (h=256)
+    assert "f32[4]" in text        # scalars
+
+
+def test_roundtrip_reparse(artifacts):
+    """Parse the HLO text back through XLA's own parser — validates the text
+    is a complete module (ids, shapes, computations).  Full load+EXECUTE
+    round-trip happens on the rust side (rust/tests/runtime_hlo.rs), which is
+    the consumer that matters."""
+    from jax._src.lib import xla_client as xc
+
+    for f in artifacts.glob("*.hlo.txt"):
+        m = xc._xla.hlo_module_from_text(f.read_text())
+        reprinted = m.to_string()
+        assert "ENTRY" in reprinted, f.name
+        # serializes to a proto without raising => structurally complete
+        assert len(m.as_serialized_hlo_module_proto()) > 100, f.name

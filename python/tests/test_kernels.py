@@ -1,0 +1,199 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/seeds/hyperparameters; assert_allclose against ref.
+This is the CORE correctness signal for the compute layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import gap, ref, sdca, topk
+
+SET = dict(deadline=None, max_examples=15, print_blob=True)
+
+
+def make_problem(seed, n, d, h, density=1.0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    if density < 1.0:
+        A *= (rng.random((n, d)) < density).astype(np.float32)
+    # paper Assumption 1: ||x_i|| <= 1
+    norms = np.maximum(np.linalg.norm(A, axis=1, keepdims=True), 1e-6)
+    A = A / norms
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    alpha = (rng.normal(size=n) * 0.1).astype(np.float32)
+    w = (rng.normal(size=d) * 0.05).astype(np.float32)
+    idx = rng.integers(0, n, h).astype(np.int32)
+    sqn = (A * A).sum(1).astype(np.float32)
+    return A, y, alpha, w, idx, sqn
+
+
+# ---------------------------------------------------------------- SDCA epoch
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 32, 128, 256]),
+    d=st.sampled_from([4, 64, 128]),
+    h=st.sampled_from([1, 17, 100]),
+    lam=st.sampled_from([1e-4, 1e-2, 1.0]),
+    sig=st.sampled_from([0.5, 1.0, 4.0]),
+)
+def test_sdca_epoch_matches_ref(seed, n, d, h, lam, sig):
+    A, y, alpha, w, idx, sqn = make_problem(seed, n, d, h)
+    lam_n = lam * n * 4  # pretend global n = 4 * local n
+    a1, dw1 = ref.sdca_epoch(A, y, alpha, w, idx, sqn, lam_n, sig)
+    a2, dw2 = sdca.sdca_epoch(A, y, alpha, w, idx, sqn, lam_n, sig)
+    assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(dw1), np.asarray(dw2), rtol=1e-5, atol=1e-5)
+
+
+def test_sdca_step_is_1d_argmax():
+    """The closed-form coordinate step exactly maximizes the 1-D subproblem."""
+    A, y, alpha, w, idx, sqn = make_problem(7, 16, 8, 1)
+    lam_n, sig = 16.0, 2.0
+    i = int(idx[0])
+    a1, _ = ref.sdca_epoch(A, y, alpha, w, idx[:1], sqn, lam_n, sig)
+    delta_star = float(a1[i] - alpha[i])
+
+    def obj(delta):
+        # 1-D restriction of G_k^{sigma'} (up to constants), in f64
+        a = np.float64(alpha[i]) + delta
+        return (a * np.float64(y[i]) - a * a / 2.0) - np.dot(
+            w.astype(np.float64), A[i].astype(np.float64)
+        ) * delta - (sig / (2.0 * lam_n)) * np.float64(sqn[i]) * delta * delta
+
+    grid = np.float64(delta_star) + np.linspace(-0.5, 0.5, 1001)
+    assert obj(np.float64(delta_star)) >= obj(grid).max() - 1e-7
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sdca_epoch_increases_local_objective(seed):
+    """H steps of coordinate ascent never decrease the local dual objective."""
+    A, y, alpha, w, idx, sqn = make_problem(seed, 64, 32, 200)
+    lam_n, sig = 64.0, 2.0
+    a1, dw = ref.sdca_epoch(A, y, alpha, w, idx, sqn, lam_n, sig)
+    dalpha = np.asarray(a1) - alpha
+
+    def G(da):
+        a = alpha + da
+        u = (A.T @ da) / lam_n  # (1/(lam n)) A^T da
+        conj = np.sum(a * y - a * a / 2.0)
+        return conj - lam_n * np.dot(w, u) - sig * lam_n / 2.0 * np.dot(u, u)
+
+    assert G(dalpha) >= G(np.zeros_like(dalpha)) - 1e-4
+
+
+def test_sdca_delta_w_consistency():
+    """delta_w returned by the kernel equals (1/lam_n) A^T (alpha' - alpha)."""
+    A, y, alpha, w, idx, sqn = make_problem(3, 128, 64, 300)
+    lam_n, sig = 512.0, 3.0
+    a1, dw = sdca.sdca_epoch(A, y, alpha, w, idx, sqn, lam_n, sig)
+    expect = A.T @ (np.asarray(a1) - alpha) / lam_n
+    assert_allclose(np.asarray(dw), expect, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------- top-k
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from([8, 100, 512, 1000]),
+    frac=st.sampled_from([0.01, 0.1, 0.5, 1.0]),
+)
+def test_topk_filter_properties(seed, d, frac):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d).astype(np.float32)
+    k = max(1, int(frac * d))
+    filt, resid, c = topk.topk_filter(w, k)
+    filt, resid = np.asarray(filt), np.asarray(resid)
+    # mass conservation (error feedback invariant)
+    assert_allclose(filt + resid, w, rtol=0, atol=0)
+    # disjoint supports
+    assert not np.any((filt != 0) & (resid != 0))
+    # bisection support within k (+ slack only from exact magnitude ties)
+    support = int((filt != 0).sum())
+    assert support <= k + int((np.abs(w) == float(c)).sum())
+    # everything kept dominates everything dropped
+    if support and support < d:
+        assert np.abs(filt[filt != 0]).min() >= np.abs(resid[resid != 0]).max() - 1e-7
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([16, 257, 1024]))
+def test_topk_bisect_matches_exact_support(seed, d):
+    """Bisection threshold keeps the same entries as the exact sort oracle
+    (distinct magnitudes almost surely with continuous data)."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=d).astype(np.float32)
+    k = d // 4 + 1
+    f_exact, _, _ = ref.topk_filter(w, k)
+    f_bis, _, _ = topk.topk_filter(w, k)
+    assert (np.asarray(f_exact) != 0).sum() == (np.asarray(f_bis) != 0).sum()
+    assert_allclose(np.asarray(f_exact), np.asarray(f_bis), atol=0)
+
+
+def test_topk_rho_one_is_identity():
+    """rho = 1 (no compression ablation) passes everything through."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=300).astype(np.float32)
+    filt, resid, _ = topk.topk_filter(w, 300)
+    assert_allclose(np.asarray(filt), w, atol=0)
+    assert np.all(np.asarray(resid) == 0)
+
+
+def test_topk_k_dynamic_is_runtime_input():
+    """Same jitted filter works for different k without recompilation."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=256).astype(np.float32)
+    for k in (1, 10, 128, 256):
+        filt, _, _ = topk.topk_filter(w, k)
+        assert (np.asarray(filt) != 0).sum() <= k
+
+
+# ---------------------------------------------------------------- gap pieces
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.sampled_from([1, 2, 5]),
+    d=st.sampled_from([8, 128, 300]),
+)
+def test_gap_pieces_match_ref(seed, blocks, d):
+    n = 128 * blocks  # gap kernel tiles rows in 128-blocks
+    A, y, alpha, w, _, _ = make_problem(seed, n, d, 1)
+    l1, c1, v1 = ref.objective_pieces(A, y, alpha, w)
+    l2, c2, v2 = gap.objective_pieces(A, y, alpha, w)
+    assert_allclose(float(l1), float(l2), rtol=1e-4)
+    assert_allclose(float(c1), float(c2), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_duality_gap_nonnegative(seed):
+    """P(w(alpha)) - D(alpha) >= 0 at the primal-dual-consistent point."""
+    A, y, alpha, w, _, _ = make_problem(seed, 128, 64, 1)
+    lam = 1e-2
+    n = A.shape[0]
+    w_of_alpha = A.T @ alpha / (lam * n)
+    p, d_, g = ref.primal_dual(A, y, alpha, w_of_alpha, lam)
+    assert float(g) >= -1e-6
+
+
+def test_gap_zero_at_optimum():
+    """Closed-form ridge optimum has (near-)zero duality gap."""
+    A, y, _, _, _, _ = make_problem(11, 128, 32, 1)
+    lam, n = 0.1, 128
+    # alpha* solves (I + X X^T/(lam n)) alpha = y  for square loss dual
+    Kmat = A @ A.T / (lam * n) + np.eye(n)
+    alpha_star = np.linalg.solve(Kmat, y).astype(np.float32)
+    w_star = A.T @ alpha_star / (lam * n)
+    _, _, g = ref.primal_dual(A, y, alpha_star, w_star, lam)
+    assert abs(float(g)) < 1e-5

@@ -1,0 +1,109 @@
+"""L2 correctness: model.local_round / model.objectives semantics.
+
+local_round must equal the hand-composed pipeline: centring on
+w_k + gamma*resid, SDCA epoch, error-feedback carry-in, top-k split.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=10, print_blob=True)
+
+
+def make_round_inputs(seed, n=128, d=64, h=100):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    A /= np.maximum(np.linalg.norm(A, axis=1, keepdims=True), 1e-6)
+    y = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    alpha = (rng.normal(size=n) * 0.1).astype(np.float32)
+    w_k = (rng.normal(size=d) * 0.05).astype(np.float32)
+    resid = (rng.normal(size=d) * 0.01).astype(np.float32)
+    idx = rng.integers(0, n, h).astype(np.int32)
+    sqn = (A * A).sum(1).astype(np.float32)
+    return A, y, alpha, w_k, resid, idx, sqn
+
+
+@settings(**SET)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    gamma=st.sampled_from([0.25, 0.5, 1.0]),
+    k=st.sampled_from([4, 16, 64]),
+)
+def test_local_round_composition(seed, gamma, k):
+    A, y, alpha, w_k, resid, idx, sqn = make_round_inputs(seed)
+    lam_n, sig = 512.0, gamma * 2
+    scalars = np.array([lam_n, sig, gamma, k], np.float32)
+
+    a1, filt, resid_out, c = model.local_round(
+        A, y, alpha, w_k, resid, idx, sqn, scalars
+    )
+    # hand-composed reference
+    w_eff = w_k + gamma * resid
+    a_full, dw = ref.sdca_epoch(A, y, alpha, w_eff, idx, sqn, lam_n, sig)
+    a_ref = alpha + gamma * (np.asarray(a_full) - alpha)  # line 5 scaling
+    dw_total = resid + np.asarray(dw)
+
+    assert_allclose(np.asarray(a1), np.asarray(a_ref), rtol=1e-5, atol=1e-5)
+    # conservation: filtered + residual == resid_in + epoch delta_w
+    assert_allclose(
+        np.asarray(filt) + np.asarray(resid_out), dw_total, rtol=1e-5, atol=1e-6
+    )
+    assert (np.asarray(filt) != 0).sum() <= k + 1
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_local_round_progress(seed):
+    """Repeated local rounds (single worker, K=1 semantics) drive the duality
+    gap down — the end-to-end sanity of the compute layer."""
+    A, y, alpha, w_k, _, _, sqn = make_round_inputs(seed, n=128, d=32, h=256)
+    lam = 0.05
+    n = A.shape[0]
+    lam_n = lam * n
+    gamma, B = 1.0, 1
+    scalars = np.array([lam_n, gamma * B, gamma, 32], np.float32)
+    alpha = np.zeros(n, np.float32)
+    w = np.zeros(32, np.float32)
+    resid = np.zeros(32, np.float32)
+    rng = np.random.default_rng(seed)
+
+    gaps = []
+    for _ in range(6):
+        idx = rng.integers(0, n, 256).astype(np.int32)
+        alpha_j, filt, resid, _ = model.local_round(
+            A, y, alpha, w, resid, idx, sqn, scalars
+        )
+        alpha = np.asarray(alpha_j)
+        w = w + gamma * np.asarray(filt)  # server applies F(dw)
+        _, _, g = ref.primal_dual(A, y, alpha, w + resid, lam)
+        gaps.append(float(g))
+    assert gaps[-1] < gaps[0] * 0.5
+
+
+def test_objectives_shapes_and_values():
+    A, y, alpha, w_k, _, _, _ = make_round_inputs(0, n=256, d=64)
+    loss, conj, v = model.objectives(A, y, alpha, w_k)
+    assert np.asarray(loss).shape == (1,)
+    assert np.asarray(conj).shape == (1,)
+    assert np.asarray(v).shape == (64,)
+    l_ref, c_ref, v_ref = ref.objective_pieces(A, y, alpha, w_k)
+    assert_allclose(float(np.asarray(loss)[0]), float(l_ref), rtol=1e-4)
+    assert_allclose(float(np.asarray(conj)[0]), float(c_ref), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(v), np.asarray(v_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_standalone_entries_match_composed():
+    A, y, alpha, w_k, resid, idx, sqn = make_round_inputs(5)
+    lam_n, sig = 512.0, 2.0
+    a1, dw1 = model.sdca_epoch(
+        A, y, alpha, w_k, idx, sqn, np.array([lam_n, sig], np.float32)
+    )
+    a2, dw2 = ref.sdca_epoch(A, y, alpha, w_k, idx, sqn, lam_n, sig)
+    assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+    f1, r1, c1 = model.topk_filter(dw1, np.array([8.0], np.float32))
+    assert (np.asarray(f1) != 0).sum() <= 8
+    assert_allclose(np.asarray(f1) + np.asarray(r1), np.asarray(dw1), atol=0)

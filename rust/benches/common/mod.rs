@@ -1,0 +1,64 @@
+//! Shared helpers for the paper-figure benches (criterion is unavailable
+//! offline, so each bench is a `harness = false` binary built on this).
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use std::time::Instant;
+
+use acpd::util::csv::CsvWriter;
+
+/// Where bench outputs land (CSV per figure/table).
+pub fn results_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// `ACPD_BENCH_FAST=1` shrinks workloads ~10x for smoke runs / CI.
+pub fn fast_mode() -> bool {
+    std::env::var("ACPD_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale a workload knob down in fast mode.
+pub fn scaled(full: usize, fast: usize) -> usize {
+    if fast_mode() {
+        fast
+    } else {
+        full
+    }
+}
+
+/// Median + mean wall time over `iters` runs of `f` (after 1 warmup).
+pub fn time_it<R>(iters: usize, mut f: impl FnMut() -> R) -> (f64, f64) {
+    let _ = f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let r = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(r);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    (median, mean)
+}
+
+/// Save a table and echo the path.
+pub fn save(csv: &CsvWriter, name: &str) {
+    let path = results_dir().join(name);
+    csv.save(&path).expect("save results csv");
+    println!("-> wrote {}", path.display());
+}
+
+/// Pretty duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}

@@ -1,0 +1,103 @@
+//! Fig 3 — duality-gap convergence vs communication rounds AND elapsed time,
+//! σ ∈ {1, 10} straggler factors, rcv1-like, K = 4.
+//!
+//! Series (paper's legend): ACPD (B=2, T=20, ρd=10³), ablation B=K,
+//! ablation ρ=1, and CoCoA+.  Prints rounds/time to fixed gap levels and
+//! writes the full curves to results/fig3_sigma{1,10}.csv.
+//!
+//!   cargo bench --bench fig3_convergence            (full, ~2 min)
+//!   ACPD_BENCH_FAST=1 cargo bench --bench fig3_convergence
+
+#[path = "common/mod.rs"]
+mod common;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+use acpd::util::csv::CsvWriter;
+
+fn main() {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = common::scaled(20_000, 2_000);
+    let ds = synthetic::generate(&spec, 42);
+    println!("Fig 3 workload: {}\n", ds.summary());
+
+    let k = 4;
+    let lambda = 1e-4;
+    // h << n_k (paper regime: H=1e4 vs n_k=169k on real RCV1); near-exact
+    // local solves would overshoot at the K-wide barrier adds
+    let h = common::scaled(2_500, 800);
+    let outer = common::scaled(60, 10); // x T=20 => up to 1200 rounds
+
+    // gamma = 0.25 keeps the group-wise dynamics in the smooth regime
+    // (gamma = 0.5 produces visible limit-cycle oscillation; see
+    // EXPERIMENTS.md "gamma note")
+    let acpd_base = |group: usize, rho_d: usize| {
+        let mut c = EngineConfig::acpd(k, group, 20, lambda);
+        c.gamma = 0.25;
+        c.recouple_sigma();
+        c.rho_d = rho_d;
+        c
+    };
+    let series: Vec<(&str, EngineConfig)> = vec![
+        ("acpd", acpd_base(2, 1000)),
+        ("acpd_B=K", acpd_base(k, 1000)),
+        ("acpd_rho=1", acpd_base(2, 0)),
+        ("cocoa+", EngineConfig::cocoa_plus(k, lambda)),
+    ];
+
+    for sigma in [1.0, 10.0] {
+        println!("== sigma = {sigma} (worker 1 is {sigma}x slower) ==");
+        let mut net = NetworkModel::lan().with_straggler(k, 1, sigma);
+        net.flop_time = 2e-8; // t2.medium-class CPU: compute ~ comm
+        let mut csv = CsvWriter::new(&[
+            "series", "round", "time_s", "gap", "bytes_up", "bytes_down",
+        ]);
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>12} {:>12} {:>12}",
+            "series", "r@1e-2", "r@1e-3", "r@1e-4", "t@1e-2(s)", "t@1e-3(s)", "t@1e-4(s)"
+        );
+        for (label, base) in &series {
+            let mut cfg = base.clone();
+            cfg.h = h;
+            // synchronous baselines do 1 round per outer; equalize budget
+            cfg.outer_rounds = if cfg.period == 1 { outer * 20 } else { outer };
+            cfg.eval_every = if cfg.period == 1 { 20 } else { 1 }; // per ~20 rounds
+            let out = acpd::sim::run(&ds, &cfg, &net, 7);
+            for p in &out.history.points {
+                csv.rowf(&[label, &p.round, &p.time, &p.gap, &p.bytes_up, &p.bytes_down]);
+            }
+            // sustained crossings: robust to transient dips under
+            // group-wise asynchrony
+            let rounds_at = |g: f64| -> String {
+                out.history
+                    .time_to_gap_sustained(g)
+                    .map(|(r, _)| r.to_string())
+                    .unwrap_or_else(|| "-".into())
+            };
+            let time_at = |g: f64| -> String {
+                out.history
+                    .time_to_gap_sustained(g)
+                    .map(|(_, t)| format!("{t:.2}"))
+                    .unwrap_or_else(|| "-".into())
+            };
+            println!(
+                "{:<14} {:>10} {:>10} {:>10} {:>12} {:>12} {:>12}",
+                label,
+                rounds_at(1e-2),
+                rounds_at(1e-3),
+                rounds_at(1e-4),
+                time_at(1e-2),
+                time_at(1e-3),
+                time_at(1e-4),
+            );
+        }
+        common::save(&csv, &format!("fig3_sigma{}.csv", sigma as u32));
+        println!();
+    }
+    println!(
+        "expected shapes: sigma=1 — ACPD ~ CoCoA+ per ROUND, faster in TIME;\n\
+         sigma=10 — ACPD much faster in TIME (group-wise comm hides the straggler);\n\
+         ablations degrade per-round convergence slightly but not catastrophically."
+    );
+}

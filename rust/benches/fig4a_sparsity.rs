@@ -1,0 +1,67 @@
+//! Fig 4a — robustness to the sparsity constant ρ: duality gap vs
+//! communication rounds for ρd ∈ {10, 10², 10³, 10⁴} (σ=1, B=2, T=20, K=4).
+//!
+//! Paper finding: curves coincide while the gap is above ~10⁻⁴; heavy
+//! compression only degrades the last digits.  Writes
+//! results/fig4a_sparsity.csv with the full curves.
+//!
+//!   cargo bench --bench fig4a_sparsity
+
+#[path = "common/mod.rs"]
+mod common;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+use acpd::util::csv::CsvWriter;
+
+fn main() {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = common::scaled(20_000, 2_000);
+    let ds = synthetic::generate(&spec, 42);
+    println!("Fig 4a workload: {}\n", ds.summary());
+
+    let rho_ds: [usize; 5] = [0, 10_000, 1000, 100, 10]; // 0 = dense reference
+    let mut csv = CsvWriter::new(&["rho_d", "round", "gap"]);
+    let checkpoints = [40u64, 100, 200, 400, 700];
+
+    println!(
+        "{:<10} {}",
+        "rho_d",
+        checkpoints
+            .iter()
+            .map(|r| format!("{:>11}", format!("gap@r{r}")))
+            .collect::<String>()
+    );
+    for &rho_d in &rho_ds {
+        let mut cfg = EngineConfig::acpd(4, 2, 20, 1e-4);
+        cfg.gamma = 0.25;
+        cfg.recouple_sigma();
+        cfg.rho_d = rho_d;
+        cfg.h = common::scaled(2_500, 800);
+        cfg.outer_rounds = common::scaled(40, 8); // up to 800 rounds
+        cfg.eval_every = 1; // per barrier (T=20 rounds)
+        let out = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 7);
+        let label = if rho_d == 0 { "dense".to_string() } else { rho_d.to_string() };
+        for p in &out.history.points {
+            csv.rowf(&[&label, &p.round, &p.gap]);
+        }
+        let row: String = checkpoints
+            .iter()
+            .map(|&r| {
+                let gap = out
+                    .history
+                    .points
+                    .iter()
+                    .filter(|p| p.round <= r)
+                    .next_back()
+                    .map(|p| p.gap)
+                    .unwrap_or(f64::NAN);
+                format!("{gap:>11.2e}")
+            })
+            .collect();
+        println!("{label:<10} {row}");
+    }
+    common::save(&csv, "fig4a_sparsity.csv");
+    println!("\nexpected: rows overlap down to ~1e-4; rho_d=10 degrades last digits only.");
+}

@@ -1,0 +1,78 @@
+//! Fig 4b — total running time to duality gap 1e-4 vs number of workers
+//! K ∈ {2, 4, 8, 16} (σ=1, H=10⁴, ACPD: B=K/2, ρd=10³, T=10 vs CoCoA+).
+//!
+//! Paper finding: CoCoA+ stops scaling once communication dominates; ACPD
+//! keeps its advantage (group-wise + sparse messages), growing to ~2-4x.
+//! Writes results/fig4b_scaling.csv.
+//!
+//!   cargo bench --bench fig4b_scaling
+
+#[path = "common/mod.rs"]
+mod common;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+use acpd::util::csv::CsvWriter;
+
+fn main() {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = common::scaled(20_000, 2_000);
+    let ds = synthetic::generate(&spec, 42);
+    let target = 1e-4;
+    println!("Fig 4b workload: {} | target gap {target:.0e}\n", ds.summary());
+
+    let h = common::scaled(2_500, 800);
+    let mut csv = CsvWriter::new(&[
+        "k", "algo", "time_s", "rounds", "bytes_up", "comm_time_s", "compute_time_s",
+    ]);
+    println!(
+        "{:>4} {:>14} {:>14} {:>10}",
+        "K", "ACPD t(s)", "CoCoA+ t(s)", "speedup"
+    );
+    for k in [2usize, 4, 8, 16] {
+        let mut acpd_cfg = EngineConfig::acpd(k, (k / 2).max(1), 10, 1e-4);
+        acpd_cfg.gamma = 0.25;
+        acpd_cfg.recouple_sigma();
+        acpd_cfg.rho_d = 1000;
+        acpd_cfg.h = h;
+        acpd_cfg.outer_rounds = 100_000;
+        acpd_cfg.target_gap = target;
+        acpd_cfg.eval_every = 2;
+
+        let mut cocoa_cfg = EngineConfig::cocoa_plus(k, 1e-4);
+        cocoa_cfg.h = h;
+        cocoa_cfg.outer_rounds = 1_000_000;
+        cocoa_cfg.target_gap = target;
+        cocoa_cfg.eval_every = 2;
+
+        let mut net = NetworkModel::lan();
+        net.flop_time = 2e-8;
+        let mut row = |algo: &str, cfg: &EngineConfig| -> Option<f64> {
+            let out = acpd::sim::run(&ds, cfg, &net, 7);
+            let t = out.history.time_to_gap_sustained(target).map(|(_, t)| t);
+            if let Some(t) = t {
+                csv.rowf(&[
+                    &k,
+                    &algo,
+                    &t,
+                    &out.stats.rounds,
+                    &out.stats.bytes_up,
+                    &out.stats.comm_time,
+                    &out.stats.compute_time,
+                ]);
+            }
+            t
+        };
+        let ta = row("acpd", &acpd_cfg);
+        let tc = row("cocoa+", &cocoa_cfg);
+        match (ta, tc) {
+            (Some(ta), Some(tc)) => {
+                println!("{k:>4} {ta:>14.2} {tc:>14.2} {:>9.2}x", tc / ta)
+            }
+            _ => println!("{k:>4} {ta:>14.2?} {tc:>14.2?}      n/a"),
+        }
+    }
+    common::save(&csv, "fig4b_scaling.csv");
+    println!("\nexpected: speedup grows with K as CoCoA+ turns communication-bound.");
+}

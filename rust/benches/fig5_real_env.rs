@@ -1,0 +1,92 @@
+//! Fig 5 — "real distributed environment": url-like and kdd-like workloads,
+//! K=8 workers with background-load jitter (other tenants), ACPD (B=4,
+//! ρd=10³, T=10) vs CoCoA+.
+//!
+//! Left panels: duality gap vs elapsed time.  Right panel: computation vs
+//! communication time breakdown when both reach the same gap — the paper's
+//! claim is that ACPD's comm share collapses.  Writes
+//! results/fig5_curves.csv and results/fig5_breakdown.csv.
+//!
+//!   cargo bench --bench fig5_real_env
+
+#[path = "common/mod.rs"]
+mod common;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::engine::EngineConfig;
+use acpd::network::{JitterModel, NetworkModel};
+use acpd::util::csv::CsvWriter;
+
+fn main() {
+    let target = common::scaled(1_000_000, 1) as f64 * 0.0 + 1e-5; // fixed 1e-5
+    let mut curves = CsvWriter::new(&["dataset", "algo", "round", "time_s", "gap"]);
+    let mut breakdown = CsvWriter::new(&[
+        "dataset",
+        "algo",
+        "gap_reached",
+        "compute_time_s",
+        "comm_time_s",
+        "total_time_s",
+        "bytes_up",
+    ]);
+
+    for preset in [Preset::UrlSmall, Preset::KddSmall] {
+        let mut spec = preset.spec();
+        spec.n = common::scaled(spec.n / 2, 2_000); // half-size keeps the bench < ~1 min
+        let ds = synthetic::generate(&spec, 42);
+        println!("== {} ==", ds.summary());
+        let k = 8;
+        let h = common::scaled(2_500, 800);
+
+        let mut acpd_cfg = EngineConfig::acpd(k, 4, 10, 1e-4);
+        acpd_cfg.gamma = 0.25;
+        acpd_cfg.recouple_sigma();
+        acpd_cfg.rho_d = 1000;
+        acpd_cfg.h = h;
+        acpd_cfg.outer_rounds = 100_000;
+        acpd_cfg.target_gap = target;
+        acpd_cfg.eval_every = 4;
+
+        let mut cocoa_cfg = EngineConfig::cocoa_plus(k, 1e-4);
+        cocoa_cfg.h = h;
+        cocoa_cfg.outer_rounds = 1_000_000;
+        cocoa_cfg.target_gap = target;
+        cocoa_cfg.eval_every = 4;
+
+        let mut net = NetworkModel::lan().with_jitter(JitterModel::cloud());
+        net.flop_time = 2e-8;
+        println!(
+            "{:<8} {:>10} {:>12} {:>14} {:>14} {:>10}",
+            "algo", "rounds", "time(s)", "compute(s)", "comm(s)", "gap"
+        );
+        for (label, cfg) in [("acpd", &acpd_cfg), ("cocoa+", &cocoa_cfg)] {
+            let out = acpd::sim::run(&ds, cfg, &net, 11);
+            for p in &out.history.points {
+                curves.rowf(&[&ds.name, &label, &p.round, &p.time, &p.gap]);
+            }
+            breakdown.rowf(&[
+                &ds.name,
+                &label,
+                &out.history.last_gap(),
+                &out.stats.compute_time,
+                &out.stats.comm_time,
+                &out.stats.wall_time,
+                &out.stats.bytes_up,
+            ]);
+            println!(
+                "{:<8} {:>10} {:>12.2} {:>14.2} {:>14.2} {:>10.1e}",
+                label,
+                out.stats.rounds,
+                out.stats.wall_time,
+                out.stats.compute_time,
+                out.stats.comm_time,
+                out.history.last_gap()
+            );
+        }
+        println!();
+    }
+    common::save(&curves, "fig5_curves.csv");
+    common::save(&breakdown, "fig5_breakdown.csv");
+    println!("expected: ACPD reaches the target several times sooner; its comm\n\
+              time is a small fraction of CoCoA+'s (high-d dense messages).");
+}

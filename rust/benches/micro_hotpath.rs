@@ -1,0 +1,195 @@
+//! §Perf microbenches — the instrument for the optimization pass.
+//!
+//! Times every hot path in isolation:
+//!   * SDCA epoch (ns per coordinate step, per nonzero touched)
+//!   * top-k threshold selection (quickselect vs full sort)
+//!   * SparseVec/message codec throughput
+//!   * duality-gap evaluation (full data pass)
+//!   * DES engine round throughput (protocol + network model only)
+//!   * PJRT execute latency per artifact (if artifacts are built)
+//!
+//!   cargo bench --bench micro_hotpath
+
+#[path = "common/mod.rs"]
+mod common;
+
+use acpd::data::partition::partition_rows;
+use acpd::data::synthetic::{self, Preset};
+use acpd::engine::EngineConfig;
+use acpd::filter::{filter_topk, FilterScratch};
+use acpd::loss::LossKind;
+use acpd::network::NetworkModel;
+use acpd::protocol::messages::UpdateMsg;
+use acpd::solver::sdca::SdcaSolver;
+use acpd::solver::LocalSolver;
+use acpd::util::csv::CsvWriter;
+use acpd::util::rng::Pcg64;
+use common::{fmt_secs, time_it};
+
+fn main() {
+    let mut csv = CsvWriter::new(&["bench", "metric", "value", "unit"]);
+    let iters = common::scaled(20, 5);
+
+    // ---------------------------------------------------------- SDCA epoch
+    {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 8_000;
+        let ds = synthetic::generate(&spec, 1);
+        let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+        let nnz_mean = part.features.nnz() as f64 / part.n_local() as f64;
+        let mut solver = SdcaSolver::new(
+            part,
+            LossKind::Square,
+            1e-4,
+            ds.n(),
+            1.0,
+            0.5,
+            Pcg64::new(1),
+        );
+        let w = vec![0.01f32; ds.d()];
+        let h = 20_000;
+        let (med, _) = time_it(iters, || solver.solve_epoch(&w, h));
+        let per_step = med / h as f64;
+        let per_nz = per_step / nnz_mean;
+        println!(
+            "sdca_epoch      {:>10}/epoch  {:>8.1} ns/step  {:>6.2} ns/nz  (h={h}, ~{nnz_mean:.0} nnz/row)",
+            fmt_secs(med),
+            per_step * 1e9,
+            per_nz * 1e9
+        );
+        csv.rowf(&[&"sdca_epoch", &"ns_per_step", &(per_step * 1e9), &"ns"]);
+        csv.rowf(&[&"sdca_epoch", &"ns_per_nz", &(per_nz * 1e9), &"ns"]);
+    }
+
+    // ---------------------------------------------------------- top-k
+    for d in [47_236usize, 400_000] {
+        let mut rng = Pcg64::new(2);
+        let vals: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+        let mut scratch = FilterScratch::default();
+        let k = 1000;
+        let (med_qs, _) = time_it(iters, || {
+            let mut v = vals.clone();
+            filter_topk(&mut v, k, &mut scratch)
+        });
+        let (med_clone, _) = time_it(iters, || vals.clone());
+        let (med_sort, _) = time_it(iters, || {
+            let mut v: Vec<f32> = vals.iter().map(|x| x.abs()).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[d - k]
+        });
+        let qs = med_qs - med_clone;
+        println!(
+            "topk d={d:<7}  quickselect+split {:>10}   sort-oracle {:>10}   ({:.1}x)",
+            fmt_secs(qs),
+            fmt_secs(med_sort),
+            med_sort / qs.max(1e-12)
+        );
+        csv.rowf(&[&format!("topk_d{d}"), &"quickselect_s", &qs, &"s"]);
+        csv.rowf(&[&format!("topk_d{d}"), &"sort_s", &med_sort, &"s"]);
+    }
+
+    // ---------------------------------------------------------- codec
+    {
+        let d = 3_231_961usize;
+        let nnz = 1000;
+        let mut rng = Pcg64::new(3);
+        let mut idx: Vec<u32> = (0..nnz).map(|i| (i * (d / nnz)) as u32).collect();
+        idx.sort_unstable();
+        let val: Vec<f32> = (0..nnz).map(|_| rng.next_normal() as f32).collect();
+        let msg = UpdateMsg::from_sparse(
+            1,
+            9,
+            acpd::linalg::sparse::SparseVec::new(d, idx, val),
+        );
+        let (med_enc, _) = time_it(iters * 50, || msg.encode());
+        let frame = msg.encode();
+        let (med_dec, _) = time_it(iters * 50, || UpdateMsg::decode(&frame).unwrap());
+        let mbps = frame.len() as f64 / med_enc / 1e6;
+        println!(
+            "codec nnz={nnz}   encode {:>10} ({mbps:.0} MB/s)   decode {:>10}",
+            fmt_secs(med_enc),
+            fmt_secs(med_dec)
+        );
+        csv.rowf(&[&"codec", &"encode_s", &med_enc, &"s"]);
+        csv.rowf(&[&"codec", &"decode_s", &med_dec, &"s"]);
+    }
+
+    // ---------------------------------------------------------- gap eval
+    {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = common::scaled(20_000, 4_000);
+        let ds = synthetic::generate(&spec, 4);
+        let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+        let solver = SdcaSolver::new(
+            part,
+            LossKind::Square,
+            1e-4,
+            ds.n(),
+            1.0,
+            0.5,
+            Pcg64::new(5),
+        );
+        let w = vec![0.01f32; ds.d()];
+        let (med, _) = time_it(iters, || solver.objective_pieces(&w));
+        let per_nz = med / ds.nnz() as f64;
+        println!(
+            "gap_eval        {:>10}/pass   {:>6.2} ns/nz   (n={}, nnz={})",
+            fmt_secs(med),
+            per_nz * 1e9,
+            ds.n(),
+            ds.nnz()
+        );
+        csv.rowf(&[&"gap_eval", &"s_per_pass", &med, &"s"]);
+        csv.rowf(&[&"gap_eval", &"ns_per_nz", &(per_nz * 1e9), &"ns"]);
+    }
+
+    // ---------------------------------------------------------- DES engine
+    {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 1_000;
+        spec.d = 2_000;
+        let ds = synthetic::generate(&spec, 6);
+        let mut cfg = EngineConfig::acpd(8, 4, 10, 1e-2);
+        cfg.h = 1; // minimal numeric work: time the ENGINE, not the math
+        cfg.rho_d = 100;
+        cfg.outer_rounds = 100;
+        cfg.eval_every = 1_000_000; // no gap eval inside the loop
+        let (med, _) = time_it(iters.min(10), || {
+            acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 7)
+        });
+        let rounds = 100.0 * 10.0;
+        println!(
+            "des_engine      {:>10}/run    {:>8.1} µs/round (K=8, protocol+net only)",
+            fmt_secs(med),
+            med / rounds * 1e6
+        );
+        csv.rowf(&[&"des_engine", &"us_per_round", &(med / rounds * 1e6), &"us"]);
+    }
+
+    // ---------------------------------------------------------- PJRT
+    if let Some(dir) = acpd::runtime::find_artifacts_dir() {
+        use acpd::runtime::{ArtifactRuntime, PjrtSolver};
+        use std::sync::Arc;
+        let rt = Arc::new(ArtifactRuntime::load_variant(dir, "test").expect("load artifacts"));
+        let mut spec = Preset::DenseTest.spec();
+        spec.n = 1024;
+        let ds = synthetic::generate(&spec, 7);
+        let part = partition_rows(&ds, 4, None).into_iter().next().unwrap();
+        let mut solver =
+            PjrtSolver::new(rt, part, 1e-2, ds.n(), 1.0, 0.5, Pcg64::new(8)).unwrap();
+        let w = vec![0.0f32; ds.d()];
+        let (med, _) = time_it(iters, || solver.solve_epoch(&w, 256));
+        println!(
+            "pjrt_sdca       {:>10}/epoch  (test variant nk=256 d=128 h=256, interpret-lowered)",
+            fmt_secs(med)
+        );
+        csv.rowf(&[&"pjrt_sdca_test", &"s_per_epoch", &med, &"s"]);
+        let (med_obj, _) = time_it(iters, || solver.objective_pieces(&w));
+        println!("pjrt_objectives {:>10}/pass", fmt_secs(med_obj));
+        csv.rowf(&[&"pjrt_objectives_test", &"s_per_pass", &med_obj, &"s"]);
+    } else {
+        println!("pjrt            skipped (run `make artifacts`)");
+    }
+
+    common::save(&csv, "micro_hotpath.csv");
+}

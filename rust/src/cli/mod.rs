@@ -1,0 +1,350 @@
+//! CLI command implementations (hand-rolled parser; clap unavailable offline).
+
+use anyhow::{bail, Context, Result};
+
+use acpd::config::schema::DataSource;
+use acpd::config::ExperimentConfig;
+use acpd::data::synthetic::Preset;
+use acpd::data::{libsvm, Dataset};
+use acpd::engine::{Algorithm, EngineConfig};
+use acpd::network::{JitterModel, NetworkModel};
+use acpd::util::args::{Args, FlagSpec};
+
+const USAGE: &str = "\
+acpd — Straggler-Agnostic Communication-Efficient Distributed Primal-Dual (Huo & Huang 2019)
+
+usage: acpd <command> [flags]
+
+commands:
+  info          presets, artifact status, build info
+  gen-data      write a synthetic dataset in LIBSVM format
+  train         run one experiment (sim or threads runtime)
+  server        TCP coordinator for a multi-process cluster
+  worker        TCP worker process
+  theory        Theorem 1/2 quantities for a config (predicted rounds)
+  help          this message
+";
+
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "gen-data" => cmd_gen_data(rest),
+        "train" => cmd_train(rest),
+        "server" => cmd_server(rest),
+        "worker" => cmd_worker(rest),
+        "theory" => cmd_theory(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("acpd {} ({})", env!("CARGO_PKG_VERSION"), env!("CARGO_PKG_DESCRIPTION"));
+    println!("\nsynthetic presets:");
+    for &name in Preset::all_names() {
+        let spec = Preset::from_name(name).unwrap().spec();
+        println!(
+            "  {:<12} n={:<9} d={:<9} ~{} nnz/row",
+            name, spec.n, spec.d, spec.nnz_per_row
+        );
+    }
+    match acpd::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            let m = acpd::runtime::Manifest::load(&dir)?;
+            println!("\nartifacts ({}):", dir.display());
+            for e in m.entries.values() {
+                println!("  {:<28} nk={:<6} d={:<6} h={}", e.key(), e.nk, e.d, e.h);
+            }
+        }
+        None => println!("\nartifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(raw: &[String]) -> Result<()> {
+    let specs = [
+        FlagSpec::opt("preset", "synthetic preset name", "rcv1-small"),
+        FlagSpec::opt("seed", "generator seed", "42"),
+        FlagSpec::req("out", "output LIBSVM path"),
+        FlagSpec::switch("help", "show flags"),
+    ];
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(());
+    }
+    let name = a.get_str("preset")?;
+    let preset = Preset::from_name(&name)
+        .with_context(|| format!("unknown preset {name:?} ({:?})", Preset::all_names()))?;
+    let seed: u64 = a.get("seed")?;
+    let out = a.get_str("out")?;
+    eprintln!("generating {name} (seed {seed})...");
+    let ds = preset.generate(seed);
+    eprintln!("{}", ds.summary());
+    libsvm::write(&ds, &out)?;
+    eprintln!("wrote {out}");
+    Ok(())
+}
+
+/// Shared experiment flags → (dataset, engine, network, seed, runtime, out).
+fn experiment_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::opt("config", "TOML config file (flags override it)", ""),
+        FlagSpec::opt("preset", "synthetic preset", "rcv1-small"),
+        FlagSpec::opt("data", "LIBSVM file (overrides preset)", ""),
+        FlagSpec::opt("data-seed", "dataset seed", "42"),
+        FlagSpec::opt("algo", "acpd|cocoa|cocoa+|disdca", "acpd"),
+        FlagSpec::opt("workers", "K", "4"),
+        FlagSpec::opt("group", "B (acpd)", "2"),
+        FlagSpec::opt("period", "T (acpd)", "10"),
+        FlagSpec::opt("rho-d", "kept coordinates per message (0=dense)", "1000"),
+        FlagSpec::opt("gamma", "aggregation scale", "0.5"),
+        FlagSpec::opt("h", "local iterations per round", "10000"),
+        FlagSpec::opt("lambda", "L2 regularization", "1e-4"),
+        FlagSpec::opt("loss", "square|logistic|smooth-hinge", "square"),
+        FlagSpec::opt("outer-rounds", "L", "50"),
+        FlagSpec::opt("target-gap", "stop at this duality gap (0=off)", "0"),
+        FlagSpec::opt("eval-every", "gap eval cadence (rounds)", "1"),
+        FlagSpec::opt("seed", "run seed", "42"),
+        FlagSpec::opt("straggler-worker", "slow worker index", "0"),
+        FlagSpec::opt("straggler-factor", "slowdown sigma (1=off)", "1"),
+        FlagSpec::switch("jitter", "background-load jitter (fig 5 mode)"),
+        FlagSpec::switch("no-error-feedback", "drop filtered residual (ablation)"),
+        FlagSpec::opt("runtime", "sim|threads", "sim"),
+        FlagSpec::opt("out", "write history CSV here", ""),
+        FlagSpec::switch("quiet", "suppress progress table"),
+        FlagSpec::switch("help", "show flags"),
+    ]
+}
+
+struct ExperimentArgs {
+    ds: Dataset,
+    engine: EngineConfig,
+    net: NetworkModel,
+    seed: u64,
+    runtime: String,
+    out: String,
+    quiet: bool,
+}
+
+fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<ExperimentArgs>> {
+    let mut specs = experiment_flags();
+    specs.extend_from_slice(extra);
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(None);
+    }
+    // base config: file if given, else defaults from flags
+    let mut cfg = match a.get_str("config")?.as_str() {
+        "" => {
+            let algo = a.get_str("algo")?;
+            let algorithm =
+                Algorithm::from_name(&algo).with_context(|| format!("unknown algo {algo:?}"))?;
+            let workers: usize = a.get("workers")?;
+            let lambda: f64 = a.get("lambda")?;
+            let engine = match algorithm {
+                Algorithm::Acpd => {
+                    EngineConfig::acpd(workers, a.get("group")?, a.get("period")?, lambda)
+                }
+                Algorithm::Cocoa => EngineConfig::cocoa(workers, lambda),
+                Algorithm::CocoaPlus => EngineConfig::cocoa_plus(workers, lambda),
+                Algorithm::DisDca => EngineConfig::disdca(workers, lambda),
+            };
+            let data = match a.get_str("data")?.as_str() {
+                "" => {
+                    let p = a.get_str("preset")?;
+                    DataSource::Preset(
+                        Preset::from_name(&p).with_context(|| format!("unknown preset {p:?}"))?,
+                    )
+                }
+                path => DataSource::Libsvm(path.to_string()),
+            };
+            ExperimentConfig {
+                data,
+                data_seed: a.get("data-seed")?,
+                normalize: true,
+                shuffle: true,
+                engine,
+                network: NetworkModel::lan(),
+            }
+        }
+        path => ExperimentConfig::from_file(path)?,
+    };
+    // flag overrides
+    if a.opts.contains_key("rho-d") || a.get_str("config")?.is_empty() {
+        cfg.engine.rho_d = a.get("rho-d")?;
+    }
+    if a.opts.contains_key("gamma") || a.get_str("config")?.is_empty() {
+        cfg.engine.gamma = a.get("gamma")?;
+        cfg.engine.recouple_sigma();
+    }
+    for (flag, field) in [("h", &mut cfg.engine.h), ("outer-rounds", &mut cfg.engine.outer_rounds)]
+    {
+        if a.opts.contains_key(flag) || a.get_str("config")?.is_empty() {
+            *field = a.get(flag)?;
+        }
+    }
+    cfg.engine.target_gap = a.get("target-gap")?;
+    cfg.engine.eval_every = a.get("eval-every")?;
+    if let Some(loss) = acpd::loss::LossKind::from_name(&a.get_str("loss")?) {
+        cfg.engine.loss = loss;
+    } else {
+        bail!("unknown loss {:?}", a.get_str("loss")?);
+    }
+    let sf: f64 = a.get("straggler-factor")?;
+    if sf != 1.0 {
+        cfg.network = cfg
+            .network
+            .with_straggler(cfg.engine.workers, a.get("straggler-worker")?, sf);
+    }
+    if a.get_bool("jitter") {
+        cfg.network = cfg.network.with_jitter(JitterModel::cloud());
+    }
+    if a.get_bool("no-error-feedback") {
+        cfg.engine.error_feedback = false;
+    }
+
+    let ds = cfg.load_data()?;
+    Ok(Some(ExperimentArgs {
+        ds,
+        engine: cfg.engine,
+        net: cfg.network,
+        seed: a.get("seed")?,
+        runtime: a.get_str("runtime")?,
+        out: a.get_str("out")?,
+        quiet: a.get_bool("quiet"),
+    }))
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let Some(x) = parse_experiment(raw, &[])? else {
+        return Ok(());
+    };
+    eprintln!("data:   {}", x.ds.summary());
+    eprintln!("engine: {}", x.engine.describe());
+    let history = match x.runtime.as_str() {
+        "sim" => {
+            let out = acpd::sim::run(&x.ds, &x.engine, &x.net, x.seed);
+            eprintln!(
+                "sim: {} rounds, virtual {:.3}s, {:.2} MB up / {:.2} MB down, \
+                 q_k = {:?}, max staleness {}",
+                out.stats.rounds,
+                out.stats.wall_time,
+                out.stats.bytes_up as f64 / 1e6,
+                out.stats.bytes_down as f64 / 1e6,
+                out.stats
+                    .participation
+                    .iter()
+                    .map(|q| (q * 100.0).round() / 100.0)
+                    .collect::<Vec<_>>(),
+                out.stats.max_staleness
+            );
+            out.history
+        }
+        "threads" => {
+            let out = acpd::runtime_threads::run(&x.ds, &x.engine, &x.net, x.seed);
+            eprintln!(
+                "threads: wall {:.3}s, {:.2} MB up / {:.2} MB down, max staleness {}",
+                out.wall_time,
+                out.bytes_up as f64 / 1e6,
+                out.bytes_down as f64 / 1e6,
+                out.max_staleness
+            );
+            out.history
+        }
+        other => bail!("unknown runtime {other:?} (sim|threads)"),
+    };
+    if !x.quiet {
+        let stride = (history.points.len() / 20).max(1);
+        print!("{}", history.render(stride));
+    }
+    if !x.out.is_empty() {
+        history.to_csv().save(&x.out)?;
+        eprintln!("wrote {}", x.out);
+    }
+    Ok(())
+}
+
+fn cmd_theory(raw: &[String]) -> Result<()> {
+    let extra = [
+        FlagSpec::opt("theta", "local solver quality Theta in [0,1)", "0.5"),
+        FlagSpec::opt("eps", "target accuracy", "1e-4"),
+    ];
+    let mut specs = experiment_flags();
+    specs.extend_from_slice(&extra);
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(());
+    }
+    let Some(x) = parse_experiment(raw, &extra)? else {
+        return Ok(());
+    };
+    let theta: f64 = a.get("theta")?;
+    let eps: f64 = a.get("eps")?;
+    eprintln!("data:   {}", x.ds.summary());
+    eprintln!("engine: {}", x.engine.describe());
+    let rep = acpd::engine::theory::analyze(&x.ds, &x.engine, theta, eps)?;
+    println!("{}", rep.render(eps));
+    Ok(())
+}
+
+fn cmd_server(raw: &[String]) -> Result<()> {
+    let extra = [FlagSpec::opt("addr", "listen address", "127.0.0.1:7777")];
+    let mut specs = experiment_flags();
+    specs.extend_from_slice(&extra);
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(());
+    }
+    let addr = a.get_str("addr")?;
+    let Some(x) = parse_experiment(raw, &extra)? else {
+        return Ok(());
+    };
+    eprintln!("server on {addr}: {}", x.engine.describe());
+    let out = acpd::transport::run_server(&addr, x.ds.n(), x.ds.d(), &x.engine)?;
+    let stride = (out.history.points.len() / 20).max(1);
+    print!("{}", out.history.render(stride));
+    eprintln!(
+        "done: {:.2} MB up / {:.2} MB down, q_k = {:?}",
+        out.bytes_up as f64 / 1e6,
+        out.bytes_down as f64 / 1e6,
+        out.participation
+    );
+    if !x.out.is_empty() {
+        out.history.to_csv().save(&x.out)?;
+        eprintln!("wrote {}", x.out);
+    }
+    Ok(())
+}
+
+fn cmd_worker(raw: &[String]) -> Result<()> {
+    let extra = [
+        FlagSpec::opt("addr", "server address", "127.0.0.1:7777"),
+        FlagSpec::req("id", "worker index in [0, K)"),
+    ];
+    let mut specs = experiment_flags();
+    specs.extend_from_slice(&extra);
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(());
+    }
+    let addr = a.get_str("addr")?;
+    let id: usize = a.get("id")?;
+    let Some(x) = parse_experiment(raw, &extra)? else {
+        return Ok(());
+    };
+    eprintln!("worker {id} -> {addr}");
+    acpd::transport::run_worker(&addr, id, &x.ds, &x.engine, &x.net, x.seed)
+}

@@ -1,0 +1,31 @@
+//! Config system: a TOML-subset parser (offline build — no serde/toml crate)
+//! plus the typed experiment schema and validation.
+//!
+//! Example config (see `configs/` in the repo root):
+//!
+//! ```toml
+//! [data]
+//! preset = "rcv1-small"
+//! seed = 42
+//!
+//! [algo]
+//! name = "acpd"       # acpd | cocoa | cocoa+ | disdca
+//! workers = 4
+//! group = 2           # B
+//! period = 20         # T
+//! rho_d = 1000        # ρd (absolute kept coordinates)
+//! gamma = 0.5
+//! h = 10000           # local iterations per round
+//! lambda = 1e-4
+//!
+//! [network]
+//! latency_s = 1e-3
+//! bandwidth_bps = 1e9
+//! straggler_worker = 0
+//! straggler_factor = 1.0
+//! ```
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::ExperimentConfig;

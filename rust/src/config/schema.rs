@@ -1,0 +1,196 @@
+//! Typed experiment schema on top of the TOML-subset [`super::toml`] parser.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::toml::Document;
+use crate::data::{synthetic::Preset, Dataset};
+use crate::engine::{Algorithm, EngineConfig};
+use crate::loss::LossKind;
+use crate::network::{JitterModel, NetworkModel};
+
+/// Where the samples come from.
+#[derive(Debug, Clone)]
+pub enum DataSource {
+    /// Named synthetic preset (DESIGN.md §3).
+    Preset(Preset),
+    /// A LIBSVM file on disk.
+    Libsvm(String),
+}
+
+/// Complete experiment description (data + algorithm + cluster).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub data: DataSource,
+    pub data_seed: u64,
+    pub normalize: bool,
+    pub shuffle: bool,
+    pub engine: EngineConfig,
+    pub network: NetworkModel,
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text (see module docs of [`crate::config`]).
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = Document::parse(text)?;
+
+        // [data]
+        let data = if let Some(path) = doc.get("data", "libsvm").and_then(|v| v.as_str()) {
+            DataSource::Libsvm(path.to_string())
+        } else {
+            let name = doc.get_str("data", "preset", "rcv1-small");
+            let preset = Preset::from_name(&name)
+                .with_context(|| format!("unknown preset {name:?} (try one of {:?})", Preset::all_names()))?;
+            DataSource::Preset(preset)
+        };
+        let data_seed = doc.get_i64("data", "seed", 42) as u64;
+        let normalize = doc.get_bool("data", "normalize", true);
+        let shuffle = doc.get_bool("data", "shuffle", true);
+
+        // [algo]
+        let algo_name = doc.get_str("algo", "name", "acpd");
+        let algorithm = Algorithm::from_name(&algo_name)
+            .with_context(|| format!("unknown algorithm {algo_name:?}"))?;
+        let workers = doc.get_i64("algo", "workers", 4) as usize;
+        let lambda = doc.get_f64("algo", "lambda", 1e-4);
+        let mut engine = match algorithm {
+            Algorithm::Acpd => {
+                let group = doc.get_i64("algo", "group", (workers / 2).max(1) as i64) as usize;
+                let period = doc.get_i64("algo", "period", 10) as usize;
+                EngineConfig::acpd(workers, group, period, lambda)
+            }
+            Algorithm::Cocoa => EngineConfig::cocoa(workers, lambda),
+            Algorithm::CocoaPlus => EngineConfig::cocoa_plus(workers, lambda),
+            Algorithm::DisDca => EngineConfig::disdca(workers, lambda),
+        };
+        if let Some(v) = doc.get("algo", "rho_d") {
+            engine.rho_d = v.as_i64().context("rho_d must be integer")? as usize;
+        }
+        if let Some(v) = doc.get("algo", "gamma") {
+            engine.gamma = v.as_f64().context("gamma must be numeric")?;
+        }
+        engine.recouple_sigma();
+        if let Some(v) = doc.get("algo", "sigma_prime") {
+            engine.sigma_prime = v.as_f64().context("sigma_prime must be numeric")?;
+        }
+        engine.h = doc.get_i64("algo", "h", engine.h as i64) as usize;
+        engine.outer_rounds = doc.get_i64("algo", "outer_rounds", engine.outer_rounds as i64) as usize;
+        engine.target_gap = doc.get_f64("algo", "target_gap", 0.0);
+        engine.eval_every = doc.get_i64("algo", "eval_every", 1) as usize;
+        engine.seed = doc.get_i64("algo", "seed", 42) as u64;
+        engine.error_feedback = doc.get_bool("algo", "error_feedback", true);
+        let loss_name = doc.get_str("algo", "loss", "square");
+        engine.loss =
+            LossKind::from_name(&loss_name).with_context(|| format!("unknown loss {loss_name:?}"))?;
+
+        // [network]
+        let mut network = NetworkModel::lan();
+        network.latency_s = doc.get_f64("network", "latency_s", network.latency_s);
+        network.bandwidth_bps = doc.get_f64("network", "bandwidth_bps", network.bandwidth_bps);
+        network.flop_time = doc.get_f64("network", "flop_time", network.flop_time);
+        let sf = doc.get_f64("network", "straggler_factor", 1.0);
+        if sf != 1.0 {
+            let idx = doc.get_i64("network", "straggler_worker", 0) as usize;
+            if idx >= workers {
+                bail!("straggler_worker {idx} out of range (K={workers})");
+            }
+            network = network.with_straggler(workers, idx, sf);
+        }
+        if doc.get_bool("network", "jitter", false) {
+            network = network.with_jitter(JitterModel::cloud());
+        }
+
+        Ok(ExperimentConfig {
+            data,
+            data_seed,
+            normalize,
+            shuffle,
+            engine,
+            network,
+        })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {}", path.as_ref().display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Materialize the dataset described by `[data]`.
+    pub fn load_data(&self) -> Result<Dataset> {
+        let mut ds = match &self.data {
+            DataSource::Preset(p) => p.generate(self.data_seed),
+            DataSource::Libsvm(path) => crate::data::libsvm::read(path, 0)?,
+        };
+        if self.normalize {
+            ds.normalize();
+        }
+        ds.validate()?;
+        Ok(ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[data]
+preset = "dense-test"
+seed = 7
+
+[algo]
+name = "acpd"
+workers = 4
+group = 2
+period = 20
+rho_d = 100
+gamma = 0.5
+h = 500
+lambda = 1e-3
+target_gap = 1e-4
+
+[network]
+latency_s = 2e-3
+straggler_worker = 1
+straggler_factor = 10.0
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.engine.algorithm, Algorithm::Acpd);
+        assert_eq!(cfg.engine.workers, 4);
+        assert_eq!(cfg.engine.group, 2);
+        assert_eq!(cfg.engine.period, 20);
+        assert_eq!(cfg.engine.rho_d, 100);
+        assert!((cfg.engine.sigma_prime - 1.0).abs() < 1e-12); // γB = 0.5*2
+        assert_eq!(cfg.network.slowdown, vec![1.0, 10.0, 1.0, 1.0]);
+        assert!((cfg.network.latency_s - 2e-3).abs() < 1e-15);
+        let ds = cfg.load_data().unwrap();
+        assert_eq!(ds.d(), 128);
+    }
+
+    #[test]
+    fn baseline_defaults() {
+        let cfg = ExperimentConfig::from_toml("[algo]\nname = \"cocoa+\"\nworkers = 8\n").unwrap();
+        assert_eq!(cfg.engine.algorithm, Algorithm::CocoaPlus);
+        assert!(cfg.engine.is_synchronous());
+        assert_eq!(cfg.engine.sigma_prime, 8.0);
+    }
+
+    #[test]
+    fn bad_preset_and_algo_rejected() {
+        assert!(ExperimentConfig::from_toml("[data]\npreset = \"nope\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[algo]\nname = \"sgd\"\n").is_err());
+    }
+
+    #[test]
+    fn straggler_out_of_range_rejected() {
+        let e = ExperimentConfig::from_toml(
+            "[algo]\nworkers = 2\n[network]\nstraggler_worker = 5\nstraggler_factor = 3.0\n",
+        );
+        assert!(e.is_err());
+    }
+}

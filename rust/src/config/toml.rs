@@ -1,0 +1,198 @@
+//! Minimal TOML-subset parser: `[section]` headers and `key = value` pairs
+//! with string / integer / float / boolean values and `#` comments.
+//! Enough for experiment configs; arrays/tables-of-tables are out of scope.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value` map.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, val.trim()))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .context("unterminated string literal")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // underscores as digit separators, toml-style
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = Document::parse(
+            r#"
+# top comment
+[data]
+preset = "rcv1-small"   # inline comment
+seed = 42
+frac = 1e-3
+big = 1_000_000
+
+[algo]
+enabled = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("data", "preset", ""), "rcv1-small");
+        assert_eq!(doc.get_i64("data", "seed", 0), 42);
+        assert!((doc.get_f64("data", "frac", 0.0) - 1e-3).abs() < 1e-15);
+        assert_eq!(doc.get_i64("data", "big", 0), 1_000_000);
+        assert!(doc.get_bool("algo", "enabled", false));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let doc = Document::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.get_i64("a", "y", 7), 7);
+        assert_eq!(doc.get_str("b", "z", "dft"), "dft");
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = Document::parse("[a]\nx = 3\n").unwrap();
+        assert_eq!(doc.get_f64("a", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = Document::parse("[a\n").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        let e2 = Document::parse("[a]\nnovalue\n").unwrap_err().to_string();
+        assert!(e2.contains("line 2"), "{e2}");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Document::parse("[a]\nx = \"ab#cd\"\n").unwrap();
+        assert_eq!(doc.get_str("a", "x", ""), "ab#cd");
+    }
+}

@@ -1,0 +1,162 @@
+//! LIBSVM text format parser/writer.
+//!
+//! Format per line: `<label> <idx>:<val> <idx>:<val> ...` with 1-based,
+//! strictly increasing indices.  The paper's RCV1/URL/KDD corpora are
+//! distributed in this format, so genuine files drop straight in
+//! (`acpd train --data path.svm`); the synthetic generators write it too.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+use crate::linalg::csr::CsrMatrix;
+
+/// Parse a LIBSVM file. `d_hint` forces the feature dimension (use when the
+/// test split may not touch the highest feature id); 0 = infer from data.
+pub fn read(path: impl AsRef<Path>, d_hint: usize) -> Result<Dataset> {
+    let path = path.as_ref();
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut reader = BufReader::with_capacity(1 << 20, f);
+    let mut labels = Vec::new();
+    let mut rows: Vec<(Vec<u32>, Vec<f32>)> = Vec::new();
+    let mut max_idx = 0usize;
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let (label, idx, val, hi) =
+            parse_line(&line).with_context(|| format!("{}:{}", path.display(), lineno))?;
+        if idx.is_empty() && label.is_none() {
+            continue; // blank/comment line
+        }
+        let label = label.with_context(|| format!("{}:{}: missing label", path.display(), lineno))?;
+        labels.push(label);
+        max_idx = max_idx.max(hi);
+        rows.push((idx, val));
+    }
+    let d = if d_hint > 0 { d_hint.max(max_idx) } else { max_idx };
+    let features = CsrMatrix::from_rows(d, &rows);
+    Ok(Dataset {
+        features,
+        labels,
+        name: format!("libsvm:{}", path.display()),
+    })
+}
+
+/// Parse one line -> (label, indices0, values, max_index_1based).
+/// Comment/blank lines return (None, [], [], 0).
+fn parse_line(line: &str) -> Result<(Option<f32>, Vec<u32>, Vec<f32>, usize)> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok((None, Vec::new(), Vec::new(), 0));
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().unwrap();
+    let raw: f32 = label_tok
+        .parse()
+        .with_context(|| format!("bad label {label_tok:?}"))?;
+    // common encodings: {-1,1}, {0,1}, {1,2}
+    let label = if raw == 0.0 || raw == 2.0 { -1.0 } else { raw.signum() };
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    let mut max_idx = 0usize;
+    let mut prev: i64 = -1;
+    for tok in parts {
+        let (i_s, v_s) = tok
+            .split_once(':')
+            .with_context(|| format!("bad feature token {tok:?}"))?;
+        let i: usize = i_s.parse().with_context(|| format!("bad index {i_s:?}"))?;
+        let v: f32 = v_s.parse().with_context(|| format!("bad value {v_s:?}"))?;
+        if i == 0 {
+            bail!("libsvm indices are 1-based, got 0");
+        }
+        if (i as i64) <= prev {
+            bail!("indices not strictly increasing at {i}");
+        }
+        prev = i as i64;
+        max_idx = max_idx.max(i);
+        if v != 0.0 {
+            idx.push((i - 1) as u32);
+            val.push(v);
+        }
+    }
+    Ok((Some(label), idx, val, max_idx))
+}
+
+/// Write a dataset in LIBSVM format.
+pub fn write(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    for r in 0..ds.n() {
+        let (idx, val) = ds.features.row(r);
+        write!(w, "{}", if ds.labels[r] > 0.0 { "+1" } else { "-1" })?;
+        for (&i, &v) in idx.iter().zip(val) {
+            write!(w, " {}:{}", i + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_variants() {
+        let (l, i, v, m) = parse_line("+1 3:0.5 7:1\n").unwrap();
+        assert_eq!(l, Some(1.0));
+        assert_eq!(i, vec![2, 6]);
+        assert_eq!(v, vec![0.5, 1.0]);
+        assert_eq!(m, 7);
+        let (l, ..) = parse_line("0 1:1").unwrap();
+        assert_eq!(l, Some(-1.0)); // 0/1 labels map to -1/+1
+        let (l, i, ..) = parse_line("# comment").unwrap();
+        assert!(l.is_none() && i.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_line("1 0:1").is_err()); // 0-based index
+        assert!(parse_line("1 5:1 3:1").is_err()); // unsorted
+        assert!(parse_line("x 1:1").is_err()); // bad label
+        assert!(parse_line("1 3:abc").is_err()); // bad value
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("acpd_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.svm");
+        let m = CsrMatrix::from_rows(
+            5,
+            &[
+                (vec![0, 4], vec![1.0, -0.5]),
+                (vec![2], vec![2.0]),
+                (vec![], vec![]),
+            ],
+        );
+        let ds = Dataset {
+            features: m,
+            labels: vec![1.0, -1.0, 1.0],
+            name: "t".into(),
+        };
+        write(&ds, &p).unwrap();
+        let back = read(&p, 5).unwrap();
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.features, ds.features);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

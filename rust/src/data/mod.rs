@@ -1,0 +1,99 @@
+//! Datasets: LIBSVM parsing, synthetic generators matched to the paper's
+//! corpora (RCV1 / URL / KDD shape statistics), and sample partitioning.
+
+pub mod libsvm;
+pub mod partition;
+pub mod synthetic;
+
+use crate::linalg::csr::CsrMatrix;
+
+/// A labelled sparse dataset (binary classification / regression targets).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Feature matrix, rows = samples.
+    pub features: CsrMatrix,
+    /// Labels, in {-1, +1} for the paper's binary tasks.
+    pub labels: Vec<f32>,
+    /// Human-readable provenance ("rcv1-small", "libsvm:/path", ...).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.features.n_rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.features.n_cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.features.nnz()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n() as f64 * self.d() as f64).max(1.0)
+    }
+
+    /// Normalize rows to unit norm (paper Assumption 1). Idempotent-ish
+    /// (second call is a no-op up to float error).
+    pub fn normalize(&mut self) {
+        self.features.normalize_rows();
+    }
+
+    /// Summary line for logs/reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: n={} d={} nnz={} density={:.2e}",
+            self.name,
+            self.n(),
+            self.d(),
+            self.nnz(),
+            self.density()
+        )
+    }
+
+    /// Basic sanity: labels in {-1, 1}, no empty dataset, indices in range.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n() > 0, "empty dataset");
+        anyhow::ensure!(self.labels.len() == self.n(), "label count mismatch");
+        anyhow::ensure!(
+            self.labels.iter().all(|&y| y == 1.0 || y == -1.0),
+            "labels must be ±1"
+        );
+        anyhow::ensure!(
+            self.features.indices.iter().all(|&i| (i as usize) < self.d()),
+            "feature index out of range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_and_validate() {
+        let m = CsrMatrix::from_rows(4, &[(vec![0, 2], vec![1.0, 1.0]), (vec![3], vec![2.0])]);
+        let ds = Dataset {
+            features: m,
+            labels: vec![1.0, -1.0],
+            name: "tiny".into(),
+        };
+        ds.validate().unwrap();
+        assert!(ds.summary().contains("n=2 d=4 nnz=3"));
+        assert!((ds.density() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_bad_labels() {
+        let m = CsrMatrix::from_rows(1, &[(vec![0], vec![1.0])]);
+        let ds = Dataset {
+            features: m,
+            labels: vec![0.5],
+            name: "bad".into(),
+        };
+        assert!(ds.validate().is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Sample partitioning across K workers (paper §II-B: even split, sample i
+//! lives on exactly one worker).
+
+use super::Dataset;
+use crate::linalg::csr::CsrMatrix;
+use crate::util::rng::Pcg64;
+
+/// One worker's shard: local rows + the mapping back to global sample ids.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub worker: usize,
+    pub features: CsrMatrix,
+    pub labels: Vec<f32>,
+    /// global sample id of each local row
+    pub global_ids: Vec<u32>,
+}
+
+impl Partition {
+    pub fn n_local(&self) -> usize {
+        self.features.n_rows
+    }
+}
+
+/// Evenly partition `ds` into K shards.  When `shuffle_seed` is `Some`, rows
+/// are randomly permuted first (breaks label/order correlation, the default
+/// for experiments); `None` keeps contiguous blocks (deterministic layout).
+pub fn partition_rows(ds: &Dataset, k: usize, shuffle_seed: Option<u64>) -> Vec<Partition> {
+    assert!(k >= 1, "need at least one worker");
+    assert!(ds.n() >= k, "fewer samples than workers");
+    let mut order: Vec<u32> = (0..ds.n() as u32).collect();
+    if let Some(seed) = shuffle_seed {
+        let mut rng = Pcg64::with_stream(seed, 0x9A87);
+        rng.shuffle(&mut order);
+    }
+    let base = ds.n() / k;
+    let extra = ds.n() % k;
+    let mut parts = Vec::with_capacity(k);
+    let mut cursor = 0usize;
+    for w in 0..k {
+        let take = base + usize::from(w < extra);
+        let ids = &order[cursor..cursor + take];
+        cursor += take;
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = ids
+            .iter()
+            .map(|&g| {
+                let (idx, val) = ds.features.row(g as usize);
+                (idx.to_vec(), val.to_vec())
+            })
+            .collect();
+        let labels = ids.iter().map(|&g| ds.labels[g as usize]).collect();
+        parts.push(Partition {
+            worker: w,
+            features: CsrMatrix::from_rows(ds.d(), &rows),
+            labels,
+            global_ids: ids.to_vec(),
+        });
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Preset;
+
+    fn tiny() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 103;
+        spec.d = 500;
+        crate::data::synthetic::generate(&spec, 2)
+    }
+
+    #[test]
+    fn covers_all_samples_exactly_once() {
+        let ds = tiny();
+        for k in [1, 2, 4, 7] {
+            let parts = partition_rows(&ds, k, Some(1));
+            let mut seen: Vec<u32> = parts.iter().flat_map(|p| p.global_ids.clone()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..ds.n() as u32).collect::<Vec<_>>(), "k={k}");
+            // balanced within 1
+            let sizes: Vec<usize> = parts.iter().map(|p| p.n_local()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn rows_match_source() {
+        let ds = tiny();
+        let parts = partition_rows(&ds, 3, Some(9));
+        for p in &parts {
+            for (local, &g) in p.global_ids.iter().enumerate() {
+                let (gi, gv) = ds.features.row(g as usize);
+                let (li, lv) = p.features.row(local);
+                assert_eq!(gi, li);
+                assert_eq!(gv, lv);
+                assert_eq!(ds.labels[g as usize], p.labels[local]);
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_when_unshuffled() {
+        let ds = tiny();
+        let parts = partition_rows(&ds, 2, None);
+        assert_eq!(parts[0].global_ids[0], 0);
+        assert_eq!(
+            parts[1].global_ids[0] as usize,
+            parts[0].n_local()
+        );
+    }
+}

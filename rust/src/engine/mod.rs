@@ -1,0 +1,280 @@
+//! The unified distributed primal-dual engine configuration.
+//!
+//! Every algorithm the paper compares is one parameter point of the same
+//! (server, worker) protocol — Table 6 of DESIGN.md:
+//!
+//! | Algorithm | B  | T | ρd    | γ    | σ'  |
+//! |-----------|----|---|-------|------|-----|
+//! | CoCoA     | K  | 1 | dense | 1/K  | 1   |
+//! | CoCoA+    | K  | 1 | dense | 1    | K   |
+//! | DisDCA    | K  | 1 | dense | 1    | K   |
+//! | ACPD      | B  | T | ρd    | γ    | γB  |
+//!
+//! (CoCoA+ ≡ DisDCA's practical variant, as the paper notes; they are kept
+//! as distinct config points and cross-checked equivalent in tests.)
+
+pub mod theory;
+
+use crate::loss::LossKind;
+
+/// Which published algorithm a config point corresponds to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's contribution (Algorithms 1 & 2).
+    Acpd,
+    /// CoCoA with averaging aggregation (Jaggi et al. 2014).
+    Cocoa,
+    /// CoCoA+ with adding aggregation (Ma et al. 2015).
+    CocoaPlus,
+    /// DisDCA practical variant (Yang 2013).
+    DisDca,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Acpd => "acpd",
+            Algorithm::Cocoa => "cocoa",
+            Algorithm::CocoaPlus => "cocoa+",
+            Algorithm::DisDca => "disdca",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        Some(match s {
+            "acpd" => Algorithm::Acpd,
+            "cocoa" => Algorithm::Cocoa,
+            "cocoa+" | "cocoaplus" | "cocoa_plus" => Algorithm::CocoaPlus,
+            "disdca" => Algorithm::DisDca,
+            _ => return None,
+        })
+    }
+}
+
+/// Full engine parameterization (protocol + solver hyper-parameters).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub algorithm: Algorithm,
+    /// K — number of workers.
+    pub workers: usize,
+    /// B — group size the server waits for per inner iteration.
+    pub group: usize,
+    /// T — barrier period: every T-th inner iteration waits for all K
+    /// (bounds staleness by T-1; Assumption 3).
+    pub period: usize,
+    /// ρd — number of coordinates each message keeps; 0 ⇒ dense (ρ = 1).
+    pub rho_d: usize,
+    /// γ — server/worker aggregation scale.
+    pub gamma: f64,
+    /// σ' — subproblem difficulty (γB for ACPD; K for CoCoA+/DisDCA; 1 for CoCoA).
+    pub sigma_prime: f64,
+    /// H — local solver iterations per round.
+    pub h: usize,
+    /// λ — L2 regularization.
+    pub lambda: f64,
+    pub loss: LossKind,
+    /// L — max outer iterations (each = T inner rounds).
+    pub outer_rounds: usize,
+    /// Stop once the duality gap falls below this (0 ⇒ run all rounds).
+    pub target_gap: f64,
+    /// Evaluate the duality gap every this many inner rounds (1 = every).
+    pub eval_every: usize,
+    /// Base RNG seed (worker streams are split from it).
+    pub seed: u64,
+    /// Error feedback (paper §III-B2 practical variant): keep the
+    /// filtered-out residual `Δw ∘ ¬M` locally and fold it into the next
+    /// round.  `false` = drop it (ablation; breaks mass conservation).
+    pub error_feedback: bool,
+}
+
+impl EngineConfig {
+    /// ACPD with the paper's σ' = γB coupling.
+    pub fn acpd(workers: usize, group: usize, period: usize, lambda: f64) -> EngineConfig {
+        let gamma = 0.5;
+        EngineConfig {
+            algorithm: Algorithm::Acpd,
+            workers,
+            group,
+            period,
+            rho_d: 1000,
+            gamma,
+            sigma_prime: gamma * group as f64,
+            h: 10_000,
+            lambda,
+            loss: LossKind::Square,
+            outer_rounds: 50,
+            target_gap: 0.0,
+            eval_every: 1,
+            seed: 42,
+            error_feedback: true,
+        }
+    }
+
+    /// CoCoA+ (adding): synchronous, dense, γ=1, σ'=K.
+    pub fn cocoa_plus(workers: usize, lambda: f64) -> EngineConfig {
+        EngineConfig {
+            algorithm: Algorithm::CocoaPlus,
+            workers,
+            group: workers,
+            period: 1,
+            rho_d: 0,
+            gamma: 1.0,
+            sigma_prime: workers as f64,
+            h: 10_000,
+            lambda,
+            loss: LossKind::Square,
+            outer_rounds: 50,
+            target_gap: 0.0,
+            eval_every: 1,
+            seed: 42,
+            error_feedback: true,
+        }
+    }
+
+    /// CoCoA (averaging): synchronous, dense, γ=1/K, σ'=1.
+    pub fn cocoa(workers: usize, lambda: f64) -> EngineConfig {
+        EngineConfig {
+            algorithm: Algorithm::Cocoa,
+            gamma: 1.0 / workers as f64,
+            sigma_prime: 1.0,
+            ..EngineConfig::cocoa_plus(workers, lambda)
+        }
+    }
+
+    /// DisDCA practical variant — same aggregation geometry as CoCoA+.
+    pub fn disdca(workers: usize, lambda: f64) -> EngineConfig {
+        EngineConfig {
+            algorithm: Algorithm::DisDca,
+            ..EngineConfig::cocoa_plus(workers, lambda)
+        }
+    }
+
+    /// Keep σ' consistent after mutating γ/B on an ACPD config.
+    pub fn recouple_sigma(&mut self) {
+        if self.algorithm == Algorithm::Acpd {
+            self.sigma_prime = self.gamma * self.group as f64;
+        }
+    }
+
+    /// Effective per-message coordinate budget for dimension d.
+    pub fn message_coords(&self, d: usize) -> usize {
+        if self.rho_d == 0 || self.rho_d >= d {
+            d
+        } else {
+            self.rho_d
+        }
+    }
+
+    /// ρ as a fraction of d (for reports).
+    pub fn rho(&self, d: usize) -> f64 {
+        self.message_coords(d) as f64 / d as f64
+    }
+
+    /// Is every round a full barrier (synchronous baseline)?
+    pub fn is_synchronous(&self) -> bool {
+        self.group >= self.workers
+    }
+
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "need >= 1 worker");
+        anyhow::ensure!(
+            (1..=self.workers).contains(&self.group),
+            "group B={} must be in [1, K={}]",
+            self.group,
+            self.workers
+        );
+        anyhow::ensure!(self.period >= 1, "period T must be >= 1");
+        anyhow::ensure!(self.gamma > 0.0 && self.gamma <= 1.0, "gamma in (0,1]");
+        anyhow::ensure!(self.sigma_prime > 0.0, "sigma' must be positive");
+        anyhow::ensure!(self.lambda > 0.0, "lambda must be positive");
+        anyhow::ensure!(self.h >= 1, "h must be >= 1");
+        anyhow::ensure!(n >= self.workers, "fewer samples than workers");
+        Ok(())
+    }
+
+    /// One-line description for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} K={} B={} T={} rho_d={} gamma={} sigma'={} H={} lambda={:.1e} loss={}",
+            self.algorithm.name(),
+            self.workers,
+            self.group,
+            self.period,
+            if self.rho_d == 0 { "dense".into() } else { self.rho_d.to_string() },
+            self.gamma,
+            self.sigma_prime,
+            self.h,
+            self.lambda,
+            self.loss.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baselines_are_synchronous_dense() {
+        for cfg in [
+            EngineConfig::cocoa(4, 1e-3),
+            EngineConfig::cocoa_plus(4, 1e-3),
+            EngineConfig::disdca(4, 1e-3),
+        ] {
+            assert!(cfg.is_synchronous());
+            assert_eq!(cfg.period, 1);
+            assert_eq!(cfg.message_coords(1000), 1000);
+            cfg.validate(100).unwrap();
+        }
+    }
+
+    #[test]
+    fn cocoa_vs_plus_scaling() {
+        let c = EngineConfig::cocoa(8, 1e-3);
+        assert!((c.gamma - 0.125).abs() < 1e-12);
+        assert_eq!(c.sigma_prime, 1.0);
+        let p = EngineConfig::cocoa_plus(8, 1e-3);
+        assert_eq!(p.gamma, 1.0);
+        assert_eq!(p.sigma_prime, 8.0);
+    }
+
+    #[test]
+    fn acpd_sigma_coupling() {
+        let mut a = EngineConfig::acpd(8, 4, 10, 1e-3);
+        assert!((a.sigma_prime - 0.5 * 4.0).abs() < 1e-12);
+        a.gamma = 0.25;
+        a.group = 2;
+        a.recouple_sigma();
+        assert!((a.sigma_prime - 0.5).abs() < 1e-12);
+        assert!(!a.is_synchronous());
+    }
+
+    #[test]
+    fn rho_computation() {
+        let a = EngineConfig::acpd(4, 2, 10, 1e-3);
+        assert_eq!(a.message_coords(500), 500); // rho_d=1000 > d
+        assert_eq!(a.message_coords(10_000), 1000);
+        assert!((a.rho(10_000) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_catches_bad_group() {
+        let mut a = EngineConfig::acpd(4, 2, 10, 1e-3);
+        a.group = 5;
+        assert!(a.validate(100).is_err());
+        a.group = 0;
+        assert!(a.validate(100).is_err());
+    }
+
+    #[test]
+    fn algorithm_names() {
+        for a in [
+            Algorithm::Acpd,
+            Algorithm::Cocoa,
+            Algorithm::CocoaPlus,
+            Algorithm::DisDca,
+        ] {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Theorem 1/2 of the paper as executable code.
+//!
+//! Given a problem instance and an engine config, compute the quantities the
+//! convergence analysis is built from — σ_max (per-partition spectral bound),
+//! the step parameter
+//!
+//!   s = (λμn − 2γn(T−1) + √Δ) / (2(σ'σ_max + λμn)),
+//!   Δ = (2γn(T−1) − λμn)² − 8γn(T−1)/(1−Θ) · (σ'σ_max + λμn)
+//!
+//! and the outer-round lower bounds
+//!
+//!   L_dual ≥ K/(Bγ(1−Θ)s) · log(1/ε_D)            (Theorem 1, Eq. 13)
+//!   L_gap  ≥ K/(Bγ(1−Θ)s) · log(K/(Bγ(1−Θ)s)/ε_G) (Theorem 2, Eq. 22)
+//!
+//! The diagnostics CLI prints predicted vs measured rounds; a test checks
+//! that measured linear convergence is no slower than the bound predicts
+//! on a well-conditioned instance (the bound is conservative, so measured
+//! ≤ predicted).
+
+use crate::data::{partition::partition_rows, Dataset};
+use crate::engine::EngineConfig;
+use crate::util::rng::Pcg64;
+
+/// The analysis quantities for one (dataset, config) pair.
+#[derive(Debug, Clone)]
+pub struct TheoryReport {
+    /// max_k σ_k = max_k ‖A_[k]‖² (largest squared singular value)
+    pub sigma_max: f64,
+    /// subproblem quality assumed of the local solver (Assumption 4)
+    pub theta: f64,
+    /// discriminant Δ (must be > 0 for s to exist)
+    pub delta: f64,
+    /// step parameter s ∈ (0, 1)
+    pub s: f64,
+    /// per-outer-round contraction factor (1 − Bγs(1−Θ)/K)
+    pub contraction: f64,
+    /// Theorem 1: outer rounds to reach dual sub-optimality ε_D
+    pub l_dual: f64,
+    /// Theorem 2: outer rounds to reach duality gap ε_G
+    pub l_gap: f64,
+}
+
+/// μ of the configured loss (Assumption 2: φ is (1/μ)-smooth).
+fn loss_mu(cfg: &EngineConfig) -> f64 {
+    cfg.loss.instantiate().mu()
+}
+
+/// Compute the paper's analysis quantities.  `theta` is the assumed local
+/// solver quality Θ ∈ [0,1) (Assumption 4); ε_D / ε_G the targets.
+pub fn analyze(
+    ds: &Dataset,
+    cfg: &EngineConfig,
+    theta: f64,
+    eps: f64,
+) -> anyhow::Result<TheoryReport> {
+    anyhow::ensure!((0.0..1.0).contains(&theta), "theta in [0,1)");
+    anyhow::ensure!(eps > 0.0 && eps < 1.0, "eps in (0,1)");
+    let n = ds.n() as f64;
+    let k = cfg.workers as f64;
+    let b = cfg.group as f64;
+    let t = cfg.period as f64;
+    let gamma = cfg.gamma;
+    let lambda = cfg.lambda;
+    let mu = loss_mu(cfg);
+    let sigma_p = cfg.sigma_prime;
+
+    // σ_max over partitions via power iteration (deterministic seed)
+    let parts = partition_rows(ds, cfg.workers, Some(cfg.seed ^ 0xACDC));
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x5167);
+    let sigma_max = parts
+        .iter()
+        .map(|p| p.features.sigma_max_estimate(60, &mut rng))
+        .fold(0.0f64, f64::max);
+
+    let lam_mu_n = lambda * mu * n;
+    let stale = 2.0 * gamma * n * (t - 1.0);
+    let denom_core = sigma_p * sigma_max + lam_mu_n;
+    let delta = (stale - lam_mu_n).powi(2) - 4.0 * stale / (1.0 - theta) * denom_core;
+    // s from Theorem 1; for T = 1 (no staleness) it reduces to the CoCoA+
+    // style s = λμn / (σ'σ_max + λμn)
+    let s_exact = if t <= 1.0 {
+        lam_mu_n / denom_core
+    } else if delta >= 0.0 {
+        ((lam_mu_n - stale) + delta.sqrt()) / (2.0 * denom_core)
+    } else {
+        f64::NEG_INFINITY
+    };
+    // Δ < 0 or s ≤ 0: the chosen γ is outside the guaranteed region for
+    // this (n, T); Remark 1 says a small-enough γ always works and its
+    // γ→0 limit is s = λμn/(σ'σ_max + λμn) — report that usable bound.
+    let s = if s_exact > 0.0 {
+        s_exact
+    } else {
+        lam_mu_n / denom_core
+    };
+    let s = s.clamp(1e-12, 1.0);
+    let rate = b * gamma * s * (1.0 - theta) / k;
+    let contraction = 1.0 - rate;
+    let l_dual = (1.0 / eps).ln() / rate;
+    let l_gap = ((1.0 / rate) * (1.0 / eps)).ln() / rate;
+    Ok(TheoryReport {
+        sigma_max,
+        theta,
+        delta,
+        s,
+        contraction,
+        l_dual,
+        l_gap,
+    })
+}
+
+impl TheoryReport {
+    pub fn render(&self, eps: f64) -> String {
+        format!(
+            "sigma_max = {:.4}\ntheta     = {:.2}\nDelta     = {:.4e}\n\
+             s         = {:.6}\ncontract  = {:.6} per outer round\n\
+             L (Thm 1, eps_D={eps:.0e}) >= {:.1}\nL (Thm 2, eps_G={eps:.0e}) >= {:.1}",
+            self.sigma_max, self.theta, self.delta, self.s, self.contraction,
+            self.l_dual, self.l_gap
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, Preset};
+    use crate::network::NetworkModel;
+
+    fn tiny() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 400;
+        spec.d = 800;
+        synthetic::generate(&spec, 3)
+    }
+
+    #[test]
+    fn quantities_are_sane() {
+        let ds = tiny();
+        let cfg = EngineConfig::acpd(4, 2, 10, 1e-2);
+        let rep = analyze(&ds, &cfg, 0.1, 1e-4).unwrap();
+        assert!(rep.sigma_max > 0.0);
+        assert!((0.0..=1.0).contains(&rep.s), "s = {}", rep.s);
+        assert!((0.0..1.0).contains(&rep.contraction));
+        assert!(rep.l_dual > 0.0 && rep.l_gap > rep.l_dual);
+    }
+
+    #[test]
+    fn synchronous_t1_reduces_to_cocoa_form() {
+        let ds = tiny();
+        let mut cfg = EngineConfig::acpd(4, 4, 1, 1e-2);
+        cfg.recouple_sigma();
+        let rep = analyze(&ds, &cfg, 0.0, 1e-3).unwrap();
+        let n = ds.n() as f64;
+        let expect = cfg.lambda * 1.0 * n / (cfg.sigma_prime * rep.sigma_max + cfg.lambda * n);
+        assert!((rep.s - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn larger_staleness_weakens_the_guarantee() {
+        let ds = tiny();
+        let mk = |t: usize| {
+            let cfg = EngineConfig::acpd(4, 2, t, 1e-2);
+            analyze(&ds, &cfg, 0.1, 1e-4).unwrap()
+        };
+        let fast = mk(1);
+        let slow = mk(50);
+        assert!(
+            slow.s <= fast.s + 1e-12,
+            "T=50 s={} should be <= T=1 s={}",
+            slow.s,
+            fast.s
+        );
+    }
+
+    /// The measured per-outer-round dual contraction must be at least as
+    /// good as the bound (the analysis is conservative).
+    #[test]
+    fn measured_rate_beats_bound() {
+        let ds = tiny();
+        let mut cfg = EngineConfig::acpd(4, 2, 5, 1e-2);
+        cfg.h = 2000; // high-quality local solves => small effective theta
+        cfg.outer_rounds = 12;
+        cfg.eval_every = 1;
+        let rep = analyze(&ds, &cfg, 0.5, 1e-4).unwrap();
+        let out = crate::sim::run(&ds, &cfg, &NetworkModel::lan(), 5);
+        // measured contraction from first to last full-barrier point
+        let pts = &out.history.points;
+        let d_star_proxy = pts.last().unwrap().dual.max(0.0) + 1e-12;
+        let sub0 = (d_star_proxy - pts[0].dual).abs().max(1e-12);
+        let sub1 = (d_star_proxy - pts[pts.len() - 2].dual).abs().max(1e-15);
+        let rounds = (pts[pts.len() - 2].round - pts[0].round) as f64
+            / cfg.period as f64;
+        let measured = (sub1 / sub0).powf(1.0 / rounds.max(1.0));
+        assert!(
+            measured <= rep.contraction + 0.05,
+            "measured contraction {measured:.4} worse than bound {:.4}",
+            rep.contraction
+        );
+    }
+}

@@ -1,0 +1,135 @@
+//! The bandwidth filter F (Algorithm 2, lines 7-12, practical variant).
+//!
+//! Given the accumulated primal update Δw_k (dense), keep the top-ρd entries
+//! by magnitude as a [`SparseVec`] for the wire and leave the complement in
+//! place as the error-feedback residual:
+//!
+//!   c_k   = ρd-th largest |Δw_k|          (quickselect, expected O(d))
+//!   M_k   = |Δw_k| ≥ c_k
+//!   F(Δw) = Δw ∘ M_k       (sent, exactly ≤ ρd entries — ties truncated
+//!                           deterministically by lowest index, matching the
+//!                           "ρd largest values" budget of line 7)
+//!   Δw    ← Δw ∘ ¬M_k      (kept locally; conservation: F + resid = Δw)
+
+use crate::linalg::{sparse::SparseVec, topk};
+
+/// Reusable scratch so the hot path stays allocation-light.
+#[derive(Default)]
+pub struct FilterScratch {
+    buf: Vec<f32>,
+}
+
+/// Split `delta_w` in place: returns the filtered top-k sparse vector and
+/// leaves the residual in `delta_w`.  `k >= d` (or `k == 0` meaning dense)
+/// short-circuits to "send everything".
+pub fn filter_topk(
+    delta_w: &mut [f32],
+    k: usize,
+    scratch: &mut FilterScratch,
+) -> SparseVec {
+    let d = delta_w.len();
+    if k == 0 || k >= d {
+        let full = SparseVec::from_dense(delta_w);
+        delta_w.fill(0.0);
+        return full;
+    }
+    // early exit: if the update already has <= k nonzeros, ship it whole
+    // (skips the selection pass — common for very sparse local updates)
+    let nnz = delta_w.iter().filter(|&&v| v != 0.0).count();
+    if nnz <= k {
+        let full = SparseVec::from_dense(delta_w);
+        delta_w.fill(0.0);
+        return full;
+    }
+    let c = topk::topk_threshold(delta_w, k, &mut scratch.buf);
+    let mut idx = Vec::with_capacity(k);
+    let mut val = Vec::with_capacity(k);
+    if c == 0.0 {
+        // fewer than k nonzeros in total: ship all nonzeros, residual empty.
+        for (i, v) in delta_w.iter_mut().enumerate() {
+            if *v != 0.0 {
+                idx.push(i as u32);
+                val.push(*v);
+                *v = 0.0;
+            }
+        }
+        return SparseVec::new(d, idx, val);
+    }
+    for (i, v) in delta_w.iter_mut().enumerate() {
+        if v.abs() >= c && idx.len() < k {
+            idx.push(i as u32);
+            val.push(*v);
+            *v = 0.0;
+        }
+    }
+    SparseVec::new(d, idx, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn conservation_and_budget() {
+        let mut rng = Pcg64::new(3);
+        let mut scratch = FilterScratch::default();
+        for _ in 0..50 {
+            let d = 10 + rng.next_below(500) as usize;
+            let orig: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+            let k = 1 + rng.next_below(d as u32) as usize;
+            let mut work = orig.clone();
+            let f = filter_topk(&mut work, k, &mut scratch);
+            assert!(f.nnz() <= k, "nnz {} > k {}", f.nnz(), k);
+            // conservation: filtered + residual == original
+            let mut recon = work.clone();
+            f.add_into(&mut recon, 1.0);
+            for (a, b) in recon.iter().zip(&orig) {
+                assert_eq!(a, b);
+            }
+            // dominance: min kept magnitude >= max residual magnitude
+            let min_kept = f.val.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+            let max_resid = work.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+            assert!(min_kept >= max_resid, "{min_kept} < {max_resid}");
+        }
+    }
+
+    #[test]
+    fn exact_k_without_ties() {
+        let mut w: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let mut s = FilterScratch::default();
+        let f = filter_topk(&mut w, 3, &mut s);
+        assert_eq!(f.idx, vec![7, 8, 9]);
+        assert_eq!(f.val, vec![8.0, 9.0, 10.0]);
+        assert_eq!(&w[7..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ties_truncated_to_budget() {
+        let mut w = vec![1.0f32; 6];
+        let mut s = FilterScratch::default();
+        let f = filter_topk(&mut w, 4, &mut s);
+        assert_eq!(f.nnz(), 4);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn dense_passthrough() {
+        let mut w = vec![1.0, 0.0, -2.0];
+        let mut s = FilterScratch::default();
+        let f = filter_topk(&mut w, 0, &mut s); // k=0 => dense mode
+        assert_eq!(f.nnz(), 2);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sparser_than_k_ships_all_nonzeros() {
+        let mut w = vec![0.0f32; 100];
+        w[3] = 5.0;
+        w[70] = -1.0;
+        let mut s = FilterScratch::default();
+        let f = filter_topk(&mut w, 50, &mut s);
+        assert_eq!(f.nnz(), 2);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,58 @@
+//! # ACPD — Straggler-Agnostic and Communication-Efficient Distributed Primal-Dual
+//!
+//! A full-system reproduction of Huo & Huang (2019) as a three-layer
+//! Rust + JAX + Pallas stack.  This crate is Layer 3: the distributed
+//! coordinator (the paper's Algorithms 1 & 2), every substrate it needs
+//! (sparse linear algebra, datasets, losses, a discrete-event cluster
+//! simulator, a real TCP runtime, a wire codec, metrics), the compared
+//! baselines (CoCoA, CoCoA+, DisDCA) as parameter points of one engine,
+//! and a PJRT runtime that executes the AOT-compiled JAX/Pallas compute
+//! graphs from `artifacts/*.hlo.txt`.
+//!
+//! ## Layout
+//!
+//! * [`util`] — RNG, clocks, binary wire codec, CSV, CLI args.
+//! * [`config`] — TOML-subset config system, experiment presets.
+//! * [`linalg`] — sparse vectors, CSR matrices, dense ops, quickselect.
+//! * [`data`] — LIBSVM parser, synthetic dataset generators, partitioning.
+//! * [`loss`] — square / logistic / smooth-hinge losses + conjugates.
+//! * [`solver`] — local SDCA solver (Eq. 8), primal/dual objectives.
+//! * [`filter`] — top-ρd magnitude filter with error feedback.
+//! * [`protocol`] — Algorithm 1 (server) & Algorithm 2 (worker) state machines.
+//! * [`engine`] — the unified distributed primal-dual engine + baselines.
+//! * [`network`] — α-β network cost model, stragglers, background jitter.
+//! * [`sim`] — discrete-event cluster simulator (deterministic time axes).
+//! * [`runtime_threads`] — std::thread + mpsc runtime (real concurrency).
+//! * [`transport`] — length-prefixed TCP transport (real multi-process).
+//! * [`runtime`] — PJRT client / artifact manifest / typed executors.
+//! * [`metrics`] — convergence histories, comm/comp breakdowns, reports.
+//! * [`testing`] — mini property-testing harness used across the test suite.
+
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod filter;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod network;
+pub mod protocol;
+pub mod runtime;
+pub mod runtime_threads;
+pub mod sim;
+pub mod solver;
+pub mod testing;
+pub mod transport;
+pub mod util;
+
+/// Convenient glob-import for examples and benches.
+pub mod prelude {
+    pub use crate::config::ExperimentConfig;
+    pub use crate::data::{partition::partition_rows, Dataset};
+    pub use crate::engine::{Algorithm, EngineConfig};
+    pub use crate::linalg::{csr::CsrMatrix, sparse::SparseVec};
+    pub use crate::loss::LossKind;
+    pub use crate::metrics::history::History;
+    pub use crate::network::NetworkModel;
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,269 @@
+//! CSR (compressed sparse row) matrix — rows are samples, columns features.
+//!
+//! The local SDCA solver's inner loop is `row · w` followed by
+//! `w += c * row`, so row-major sparse layout is the cache-friendly choice
+//! (exactly what the paper's C++/MPI implementation uses).
+
+use crate::util::rng::Pcg64;
+
+/// Immutable CSR matrix over f32 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row pointers, length `n_rows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices per nonzero (sorted within each row).
+    pub indices: Vec<u32>,
+    /// Values per nonzero.
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (indices, values) pairs.
+    pub fn from_rows(n_cols: usize, rows: &[(Vec<u32>, Vec<f32>)]) -> Self {
+        let n_rows = rows.len();
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for (idx, val) in rows {
+            debug_assert_eq!(idx.len(), val.len());
+            debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            n_rows,
+            n_cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Dense row-major constructor (used by the PJRT dense path + tests).
+    pub fn from_dense(n_rows: usize, n_cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), n_rows * n_cols);
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n_rows)
+            .map(|r| {
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for c in 0..n_cols {
+                    let v = data[r * n_cols + c];
+                    if v != 0.0 {
+                        idx.push(c as u32);
+                        val.push(v);
+                    }
+                }
+                (idx, val)
+            })
+            .collect();
+        Self::from_rows(n_cols, &rows)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// `row · w` for a dense w.
+    #[inline]
+    pub fn row_dot(&self, r: usize, w: &[f32]) -> f64 {
+        let (idx, val) = self.row(r);
+        let mut s = 0.0f64;
+        for (&i, &v) in idx.iter().zip(val) {
+            s += (v as f64) * (w[i as usize] as f64);
+        }
+        s
+    }
+
+    /// `w += c * row`.
+    #[inline]
+    pub fn row_axpy(&self, r: usize, c: f32, w: &mut [f32]) {
+        let (idx, val) = self.row(r);
+        for (&i, &v) in idx.iter().zip(val) {
+            w[i as usize] += c * v;
+        }
+    }
+
+    /// Squared L2 norm of each row (precomputed once per dataset;
+    /// the `q_ii` of the SDCA closed-form step).
+    pub fn row_sqnorms(&self) -> Vec<f32> {
+        (0..self.n_rows)
+            .map(|r| {
+                let (_, val) = self.row(r);
+                val.iter().map(|&v| v * v).sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// Normalize every row to unit L2 norm (paper Assumption 1). Returns the
+    /// original norms.
+    pub fn normalize_rows(&mut self) -> Vec<f32> {
+        let mut norms = Vec::with_capacity(self.n_rows);
+        for r in 0..self.n_rows {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let n: f32 = self.values[lo..hi]
+                .iter()
+                .map(|&v| v * v)
+                .sum::<f32>()
+                .sqrt();
+            norms.push(n);
+            if n > 0.0 {
+                for v in &mut self.values[lo..hi] {
+                    *v /= n;
+                }
+            }
+        }
+        norms
+    }
+
+    /// `A^T alpha` into a dense accumulator (duality-gap `v` piece).
+    pub fn t_matvec(&self, alpha: &[f32], out: &mut [f32]) {
+        assert_eq!(alpha.len(), self.n_rows);
+        assert_eq!(out.len(), self.n_cols);
+        out.fill(0.0);
+        for r in 0..self.n_rows {
+            let a = alpha[r];
+            if a != 0.0 {
+                self.row_axpy(r, a, out);
+            }
+        }
+    }
+
+    /// `A w` (per-sample margins) into a dense accumulator.
+    pub fn matvec(&self, w: &[f32], out: &mut [f32]) {
+        assert_eq!(w.len(), self.n_cols);
+        assert_eq!(out.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            out[r] = self.row_dot(r, w) as f32;
+        }
+    }
+
+    /// Row-major dense copy (PJRT literal upload). Panics if too large to be
+    /// sensible (> 2^31 elements).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let total = self.n_rows * self.n_cols;
+        assert!(total < (1usize << 31), "dense copy of {total} elems");
+        let mut out = vec![0.0f32; total];
+        for r in 0..self.n_rows {
+            let (idx, val) = self.row(r);
+            for (&i, &v) in idx.iter().zip(val) {
+                out[r * self.n_cols + i as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Largest eigenvalue of `A_k A_k^T` upper bound via power iteration —
+    /// the per-partition `sigma_k` of Theorem 1, reported by the diagnostics.
+    pub fn sigma_max_estimate(&self, iters: usize, rng: &mut Pcg64) -> f64 {
+        if self.n_rows == 0 || self.nnz() == 0 {
+            return 0.0;
+        }
+        let mut v: Vec<f32> = (0..self.n_rows)
+            .map(|_| rng.next_normal() as f32)
+            .collect();
+        let mut tmp = vec![0.0f32; self.n_cols];
+        let mut lambda = 0.0f64;
+        for _ in 0..iters {
+            // u = A^T v ; v' = A u
+            self.t_matvec(&v, &mut tmp);
+            let mut v2 = vec![0.0f32; self.n_rows];
+            self.matvec(&tmp, &mut v2);
+            let norm = v2.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return 0.0;
+            }
+            lambda = norm;
+            for (a, b) in v.iter_mut().zip(&v2) {
+                *a = b / norm as f32;
+            }
+        }
+        lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2], [0, 3, 0]]
+        CsrMatrix::from_rows(
+            3,
+            &[
+                (vec![0, 2], vec![1.0, 2.0]),
+                (vec![1], vec![3.0]),
+            ],
+        )
+    }
+
+    #[test]
+    fn rows_and_dots() {
+        let m = sample();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_dot(0, &[1.0, 1.0, 1.0]), 3.0);
+        assert_eq!(m.row_dot(1, &[1.0, 2.0, 3.0]), 6.0);
+        let mut w = vec![0.0; 3];
+        m.row_axpy(0, 2.0, &mut w);
+        assert_eq!(w, vec![2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = sample();
+        let d = m.to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let m2 = CsrMatrix::from_dense(2, 3, &d);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn sqnorms_and_normalize() {
+        let mut m = sample();
+        assert_eq!(m.row_sqnorms(), vec![5.0, 9.0]);
+        let norms = m.normalize_rows();
+        assert!((norms[0] - 5.0f32.sqrt()).abs() < 1e-6);
+        let sq = m.row_sqnorms();
+        assert!((sq[0] - 1.0).abs() < 1e-6 && (sq[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matvecs_agree_with_dense() {
+        let m = sample();
+        let mut out = vec![0.0; 3];
+        m.t_matvec(&[2.0, -1.0], &mut out);
+        assert_eq!(out, vec![2.0, -3.0, 4.0]);
+        let mut mv = vec![0.0; 2];
+        m.matvec(&[1.0, 1.0, 1.0], &mut mv);
+        assert_eq!(mv, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn sigma_max_on_identityish() {
+        // rows = unit basis vectors => A A^T = I => sigma_max = 1
+        let m = CsrMatrix::from_rows(
+            4,
+            &[
+                (vec![0], vec![1.0]),
+                (vec![1], vec![1.0]),
+                (vec![2], vec![1.0]),
+            ],
+        );
+        let mut rng = Pcg64::new(0);
+        let s = m.sigma_max_estimate(50, &mut rng);
+        assert!((s - 1.0).abs() < 1e-3, "sigma {s}");
+    }
+}

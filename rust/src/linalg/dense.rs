@@ -1,0 +1,85 @@
+//! Dense vector helpers used on the hot path (f32 storage, f64 accumulation).
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product with f64 accumulation (stable for long vectors).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way unrolled accumulation: independent adds break the dependency
+    // chain (see EXPERIMENTS.md §Perf).
+    let chunks = x.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += (x[i] as f64) * (y[i] as f64);
+        s1 += (x[i + 1] as f64) * (y[i + 1] as f64);
+        s2 += (x[i + 2] as f64) * (y[i + 2] as f64);
+        s3 += (x[i + 3] as f64) * (y[i + 3] as f64);
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..x.len() {
+        s += (x[i] as f64) * (y[i] as f64);
+    }
+    s
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+/// Elementwise `out = a + scale * b`.
+pub fn add_scaled(a: &[f32], scale: f32, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + scale * b[i];
+    }
+}
+
+/// Max |x_i|.
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_dot_norm() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        assert_eq!(dot(&x, &x), 14.0);
+        assert_eq!(norm2_sq(&y), 9.0 + 25.0 + 49.0);
+    }
+
+    #[test]
+    fn dot_unroll_matches_naive() {
+        let x: Vec<f32> = (0..1037).map(|i| (i as f32) * 0.01 - 5.0).collect();
+        let y: Vec<f32> = (0..1037).map(|i| ((i * 7) % 13) as f32 - 6.0).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-6 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn helpers() {
+        let a = vec![1.0, -2.0];
+        let b = vec![0.5, 0.5];
+        let mut out = vec![0.0; 2];
+        add_scaled(&a, 2.0, &b, &mut out);
+        assert_eq!(out, vec![2.0, -1.0]);
+        assert_eq!(max_abs(&a), 2.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Sparse/dense linear algebra substrate.
+//!
+//! The paper's datasets are sample-major sparse matrices (LIBSVM style), so
+//! [`csr::CsrMatrix`] (rows = samples) is the workhorse; [`sparse::SparseVec`]
+//! carries the filtered model updates `F(Δw)` over the wire; [`topk`] holds
+//! the quickselect used by the bandwidth filter.
+
+pub mod csr;
+pub mod dense;
+pub mod sparse;
+pub mod topk;

@@ -1,0 +1,158 @@
+//! Sparse vector: sorted (index, value) pairs over a fixed dimension.
+//!
+//! This is the on-the-wire representation of the filtered update
+//! `F(Δw_k)` — the paper's whole bandwidth story is that shipping
+//! `O(ρd)` of these beats shipping a dense `f32[d]`.
+
+use crate::util::binio::{Decoder, Encoder};
+use anyhow::Result;
+
+/// Sparse vector with strictly increasing indices.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn empty(dim: usize) -> Self {
+        SparseVec {
+            dim,
+            idx: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    /// Build from parallel arrays; debug-asserts sortedness.
+    pub fn new(dim: usize, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not sorted");
+        debug_assert!(idx.last().map(|&i| (i as usize) < dim).unwrap_or(true));
+        SparseVec { dim, idx, val }
+    }
+
+    /// Gather the nonzeros of a dense slice (exact zeros dropped).
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        SparseVec {
+            dim: dense.len(),
+            idx,
+            val,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// `out += scale * self` into a dense accumulator.
+    pub fn add_into(&self, out: &mut [f32], scale: f32) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += scale * v;
+        }
+    }
+
+    pub fn dot_dense(&self, dense: &[f32]) -> f64 {
+        debug_assert_eq!(dense.len(), self.dim);
+        let mut s = 0.0f64;
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            s += (v as f64) * (dense[i as usize] as f64);
+        }
+        s
+    }
+
+    pub fn norm2_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Wire size in bytes under the codec (4B idx + 4B val per nz + headers).
+    /// This is what the network model charges: `O(ρd)` per the paper.
+    pub fn wire_bytes(&self) -> usize {
+        4 + 4 + 4 + 8 * self.nnz() // dim + two slice headers + payload
+    }
+
+    pub fn encode(&self, e: &mut Encoder) {
+        e.put_u32(self.dim as u32);
+        e.put_u32_slice(&self.idx);
+        e.put_f32_slice(&self.val);
+    }
+
+    pub fn decode(d: &mut Decoder) -> Result<Self> {
+        let dim = d.get_u32()? as usize;
+        let idx = d.get_u32_vec()?;
+        let val = d.get_f32_vec()?;
+        anyhow::ensure!(idx.len() == val.len(), "idx/val length mismatch");
+        anyhow::ensure!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "indices not strictly increasing"
+        );
+        anyhow::ensure!(
+            idx.last().map(|&i| (i as usize) < dim).unwrap_or(true),
+            "index out of dim"
+        );
+        Ok(SparseVec { dim, idx, val })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseVec::from_dense(&d);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn add_and_dot() {
+        let s = SparseVec::new(4, vec![1, 3], vec![2.0, -1.0]);
+        let mut acc = vec![1.0; 4];
+        s.add_into(&mut acc, 0.5);
+        assert_eq!(acc, vec![1.0, 2.0, 1.0, 0.5]);
+        let dot = s.dot_dense(&[1.0, 1.0, 1.0, 2.0]);
+        assert_eq!(dot, 0.0);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let s = SparseVec::new(10, vec![0, 7, 9], vec![1.0, 2.0, 3.0]);
+        let mut e = Encoder::new();
+        s.encode(&mut e);
+        let buf = e.finish();
+        assert_eq!(buf.len(), s.wire_bytes());
+        let mut dec = Decoder::new(&buf);
+        let s2 = SparseVec::decode(&mut dec).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        // unsorted indices
+        let mut e = Encoder::new();
+        e.put_u32(10);
+        e.put_u32_slice(&[5, 2]);
+        e.put_f32_slice(&[1.0, 2.0]);
+        let buf = e.finish();
+        assert!(SparseVec::decode(&mut Decoder::new(&buf)).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Quickselect for the bandwidth filter's threshold `c_k` (Algorithm 2 line 7).
+//!
+//! Finding the ρd-th largest |Δw_k(i)| is the filter's only super-linear
+//! candidate; a sort would be O(d log d) per round.  Three-way-partition
+//! quickselect with median-of-3 pivots is expected O(d) — including on the
+//! duplicate-heavy inputs this filter sees (mostly exact zeros), where
+//! two-way schemes degrade to O(d²) (found + fixed in §Perf) — and is
+//! allocation-free over a scratch buffer the worker reuses across rounds.
+
+/// k-th largest value of `vals` (1-based k), by magnitude-agnostic ordering
+/// of the raw values.  `scratch` is clobbered.  k is clamped to [1, len].
+pub fn kth_largest(vals: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
+    assert!(!vals.is_empty(), "kth_largest on empty slice");
+    let k = k.clamp(1, vals.len());
+    scratch.clear();
+    scratch.extend_from_slice(vals);
+    // k-th largest == (len - k)-th smallest (0-based)
+    let target = scratch.len() - k;
+    select_nth(scratch, target)
+}
+
+/// k-th largest |v|: the threshold `c_k` such that
+/// `|{i : |v_i| >= c_k}| >= k` with equality unless ties.
+pub fn topk_threshold(vals: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
+    assert!(!vals.is_empty());
+    let k = k.clamp(1, vals.len());
+    scratch.clear();
+    scratch.extend(vals.iter().map(|v| v.abs()));
+    let target = scratch.len() - k;
+    select_nth(scratch, target)
+}
+
+/// Quickselect for the `target`-th smallest (0-based) via 3-way partition.
+fn select_nth(v: &mut [f32], target: usize) -> f32 {
+    let mut lo = 0usize;
+    let mut hi = v.len() - 1;
+    loop {
+        if lo >= hi {
+            return v[lo.min(v.len() - 1)];
+        }
+        let (lt, gt) = partition3(v, lo, hi);
+        if target < lt {
+            hi = lt - 1;
+        } else if target > gt {
+            lo = gt + 1;
+        } else {
+            return v[target]; // inside the equal band
+        }
+    }
+}
+
+/// Three-way (Dutch-national-flag) partition with median-of-3 pivot.
+/// Returns (lt, gt): v[lo..lt] < pivot, v[lt..=gt] == pivot, v[gt+1..=hi] > pivot.
+/// Equal keys are common in this workload (filtered updates are mostly
+/// exact zeros), where a Lomuto/Hoare scheme degrades to O(n²); three-way
+/// partitioning keeps quickselect expected O(n) regardless of duplicates.
+fn partition3(v: &mut [f32], lo: usize, hi: usize) -> (usize, usize) {
+    let mid = lo + (hi - lo) / 2;
+    // median-of-3 pivot
+    if v[mid] < v[lo] {
+        v.swap(mid, lo);
+    }
+    if v[hi] < v[lo] {
+        v.swap(hi, lo);
+    }
+    if v[hi] < v[mid] {
+        v.swap(hi, mid);
+    }
+    let pivot = v[mid];
+    let (mut lt, mut i, mut gt) = (lo, lo, hi);
+    while i <= gt {
+        if v[i] < pivot {
+            v.swap(i, lt);
+            lt += 1;
+            i += 1;
+        } else if v[i] > pivot {
+            v.swap(i, gt);
+            if gt == 0 {
+                break;
+            }
+            gt -= 1;
+        } else {
+            i += 1;
+        }
+    }
+    (lt, gt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn oracle_kth_largest(vals: &[f32], k: usize) -> f32 {
+        let mut s = vals.to_vec();
+        s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        s[k.clamp(1, s.len()) - 1]
+    }
+
+    #[test]
+    fn matches_sort_oracle_randomized() {
+        let mut rng = Pcg64::new(99);
+        let mut scratch = Vec::new();
+        for trial in 0..200 {
+            let n = 1 + rng.next_below(500) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+            let k = 1 + rng.next_below(n as u32) as usize;
+            let got = kth_largest(&vals, k, &mut scratch);
+            let want = oracle_kth_largest(&vals, k);
+            assert_eq!(got, want, "trial {trial} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn threshold_keeps_at_least_k() {
+        let mut rng = Pcg64::new(5);
+        let mut scratch = Vec::new();
+        for _ in 0..100 {
+            let n = 2 + rng.next_below(300) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+            let k = 1 + rng.next_below(n as u32) as usize;
+            let c = topk_threshold(&vals, k, &mut scratch);
+            let kept = vals.iter().filter(|v| v.abs() >= c).count();
+            assert!(kept >= k, "kept {kept} < k {k}");
+        }
+    }
+
+    #[test]
+    fn handles_ties_and_duplicates() {
+        let vals = vec![1.0f32; 10];
+        let mut scratch = Vec::new();
+        assert_eq!(kth_largest(&vals, 3, &mut scratch), 1.0);
+        let vals2 = vec![-2.0, 2.0, -2.0, 1.0];
+        assert_eq!(topk_threshold(&vals2, 2, &mut scratch), 2.0);
+    }
+
+    #[test]
+    fn k_clamping() {
+        let vals = vec![3.0, 1.0, 2.0];
+        let mut s = Vec::new();
+        assert_eq!(kth_largest(&vals, 0, &mut s), 3.0); // clamps to 1
+        assert_eq!(kth_largest(&vals, 99, &mut s), 1.0); // clamps to len
+    }
+}

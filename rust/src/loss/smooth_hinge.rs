@@ -1,0 +1,142 @@
+//! Smoothed hinge loss (Shalev-Shwartz & Zhang 2013).
+//!
+//!   φ(a; y) = 0                     if y a ≥ 1
+//!           = 1 − y a − g/2         if y a ≤ 1 − g
+//!           = (1 − y a)² / (2 g)    otherwise          (1/g-smooth ⇒ μ = g)
+//!
+//!   -φ*(-α; y) = α y − (g/2)(α y)²  on the domain α y ∈ [0, 1]
+//!
+//! 1-D dual step (closed form): the local objective is a concave quadratic
+//! in δ with box constraint b = (α+δ)y ∈ [0, 1]; projecting the
+//! unconstrained maximizer onto the box is exact:
+//!   δ_unc = (y − z − g α) / (g + c q),  then clip b.
+
+use super::Loss;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SmoothHinge {
+    /// smoothing width g (μ = g); paper-style default 1.0.
+    pub gamma: f64,
+}
+
+impl Default for SmoothHinge {
+    fn default() -> Self {
+        SmoothHinge { gamma: 1.0 }
+    }
+}
+
+impl Loss for SmoothHinge {
+    fn phi(&self, a: f64, y: f64) -> f64 {
+        let m = y * a;
+        let g = self.gamma;
+        if m >= 1.0 {
+            0.0
+        } else if m <= 1.0 - g {
+            1.0 - m - g / 2.0
+        } else {
+            (1.0 - m) * (1.0 - m) / (2.0 * g)
+        }
+    }
+
+    fn neg_conjugate(&self, alpha: f64, y: f64) -> f64 {
+        let b = alpha * y;
+        if !(-1e-9..=1.0 + 1e-9).contains(&b) {
+            return f64::NEG_INFINITY;
+        }
+        let b = b.clamp(0.0, 1.0);
+        b - self.gamma / 2.0 * b * b
+    }
+
+    fn mu(&self) -> f64 {
+        self.gamma
+    }
+
+    fn cd_step(&self, alpha: f64, y: f64, z: f64, q: f64, sigma_over_lamn: f64) -> f64 {
+        let g = self.gamma;
+        let cq = sigma_over_lamn * q;
+        // maximize (α+δ)y − g/2 ((α+δ)y)² − zδ − cq/2 δ², y² = 1
+        let delta_unc = (y - z - g * alpha) / (g + cq);
+        // box: b = (α+δ)y ∈ [0,1]  ⇔  α+δ = b·y
+        let b_unc = (alpha + delta_unc) * y;
+        let b = b_unc.clamp(0.0, 1.0);
+        b * y - alpha
+    }
+
+    fn dual_point(&self, a: f64, y: f64) -> f64 {
+        let m = y * a;
+        let g = self.gamma;
+        if m >= 1.0 {
+            0.0
+        } else if m <= 1.0 - g {
+            y
+        } else {
+            y * (1.0 - m) / g
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "smooth-hinge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_cd_step_is_argmax;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn phi_piecewise_continuity() {
+        let l = SmoothHinge { gamma: 0.5 };
+        // joints at m = 1 and m = 1 - g must be continuous
+        for &m in &[1.0, 0.5] {
+            let lo = l.phi(m - 1e-9, 1.0);
+            let hi = l.phi(m + 1e-9, 1.0);
+            assert!((lo - hi).abs() < 1e-6, "discontinuity at m={m}");
+        }
+    }
+
+    #[test]
+    fn cd_step_is_argmax_randomized() {
+        let mut rng = Pcg64::new(8);
+        for &g in &[0.25, 1.0, 2.0] {
+            let l = SmoothHinge { gamma: g };
+            for _ in 0..60 {
+                let y = if rng.next_f64() < 0.5 { 1.0 } else { -1.0 };
+                let alpha = (rng.next_f64()) * y; // b in [0,1]
+                let z = rng.next_normal();
+                let q = rng.next_f64() + 0.01;
+                let c = rng.next_f64() * 5.0;
+                assert_cd_step_is_argmax(&l, alpha, y, z, q, c);
+            }
+        }
+    }
+
+    #[test]
+    fn step_respects_box() {
+        let l = SmoothHinge::default();
+        let mut rng = Pcg64::new(9);
+        for _ in 0..300 {
+            let y = if rng.next_f64() < 0.5 { 1.0 } else { -1.0 };
+            let alpha = rng.next_f64() * y;
+            let d = l.cd_step(alpha, y, rng.next_normal() * 4.0, 1.0, 0.3);
+            let b = (alpha + d) * y;
+            assert!((-1e-12..=1.0 + 1e-12).contains(&b), "b={b}");
+        }
+    }
+
+    #[test]
+    fn dual_point_is_negative_gradient() {
+        let l = SmoothHinge { gamma: 0.7 };
+        for &(a, y) in &[(0.2, 1.0), (0.9, 1.0), (-0.4, -1.0), (2.0, 1.0)] {
+            let eps = 1e-7;
+            let grad = (l.phi(a + eps, y) - l.phi(a - eps, y)) / (2.0 * eps);
+            assert!(
+                (l.dual_point(a, y) + grad).abs() < 1e-5,
+                "a={a} y={y}: {} vs {}",
+                l.dual_point(a, y),
+                -grad
+            );
+        }
+    }
+}

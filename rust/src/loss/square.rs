@@ -1,0 +1,99 @@
+//! Square loss (ridge regression) — the paper's experimental setting (Eq. 25).
+//!
+//!   φ(a; y)      = ½ (a − y)²              (1-smooth ⇒ μ = 1)
+//!   φ*(g; y)     = ½ g² + g y
+//!   -φ*(-α; y)   = α y − α²/2
+//!
+//! 1-D dual step: maximize over δ
+//!   (α+δ)y − (α+δ)²/2 − z δ − (c q / 2) δ²,  c = σ'/(λn)
+//! ⇒ δ* = (y − α − z) / (1 + c q)   (closed form; the Pallas kernel and
+//!   the pure-rust solver compute exactly this expression).
+
+use super::Loss;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Square;
+
+impl Loss for Square {
+    fn phi(&self, a: f64, y: f64) -> f64 {
+        0.5 * (a - y) * (a - y)
+    }
+
+    fn neg_conjugate(&self, alpha: f64, y: f64) -> f64 {
+        alpha * y - 0.5 * alpha * alpha
+    }
+
+    fn mu(&self) -> f64 {
+        1.0
+    }
+
+    fn cd_step(&self, alpha: f64, y: f64, z: f64, q: f64, sigma_over_lamn: f64) -> f64 {
+        (y - alpha - z) / (1.0 + sigma_over_lamn * q)
+    }
+
+    fn dual_point(&self, a: f64, y: f64) -> f64 {
+        y - a // -∂φ(a) = -(a - y)
+    }
+
+    fn name(&self) -> &'static str {
+        "square"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_util::assert_cd_step_is_argmax;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn conjugate_is_fenchel_dual() {
+        // φ*(-α) = sup_a (-α a - φ(a)); check -φ*(-α) numerically
+        let l = Square;
+        for &(alpha, y) in &[(0.3, 1.0), (-0.7, -1.0), (1.2, 1.0)] {
+            let sup = (-1000..1000)
+                .map(|t| {
+                    let a = t as f64 * 0.01;
+                    -alpha * a - l.phi(a, y)
+                })
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!(
+                (l.neg_conjugate(alpha, y) - (-sup)).abs() < 1e-3,
+                "α={alpha} y={y}: {} vs {}",
+                l.neg_conjugate(alpha, y),
+                -sup
+            );
+        }
+    }
+
+    #[test]
+    fn cd_step_is_argmax_randomized() {
+        let l = Square;
+        let mut rng = Pcg64::new(2);
+        for _ in 0..100 {
+            let alpha = rng.next_normal();
+            let y = if rng.next_f64() < 0.5 { 1.0 } else { -1.0 };
+            let z = rng.next_normal();
+            let q = rng.next_f64() + 0.01;
+            let c = rng.next_f64() * 5.0;
+            assert_cd_step_is_argmax(&l, alpha, y, z, q, c);
+        }
+    }
+
+    #[test]
+    fn optimum_reached_in_one_step_when_unregularized_q() {
+        // with z = x·w and c q = 0 the step lands on the 1-D optimum y - z
+        let l = Square;
+        let d = l.cd_step(0.2, 1.0, 0.5, 1.0, 0.0);
+        assert!((0.2 + d - (1.0 - 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_point_is_negative_gradient() {
+        let l = Square;
+        let (a, y) = (0.7, 1.0);
+        let eps = 1e-6;
+        let grad = (l.phi(a + eps, y) - l.phi(a - eps, y)) / (2.0 * eps);
+        assert!((l.dual_point(a, y) + grad).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,26 @@
+//! `acpd` — launcher CLI for the ACPD reproduction.
+//!
+//! Subcommands:
+//!   info        show presets, artifact status, build info
+//!   gen-data    write a synthetic dataset in LIBSVM format
+//!   train       run one experiment (sim or threads runtime)
+//!   server      TCP coordinator (multi-process real cluster)
+//!   worker      TCP worker process
+//!
+//! `acpd <cmd> --help` lists flags.
+
+use std::process::ExitCode;
+
+#[path = "cli/mod.rs"]
+mod cli;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match cli::dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Classification quality metrics — the "data mining" side of the paper:
+//! beyond the duality gap, a trained `w` should actually classify.
+//! (§V-B2 of the paper argues generalization is already good at gap 1e-4,
+//! which is what makes ACPD's aggressive compression safe in practice.)
+
+use crate::data::Dataset;
+
+/// Train/test split (deterministic in seed); returns (train, test).
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut order: Vec<u32> = (0..ds.n() as u32).collect();
+    let mut rng = crate::util::rng::Pcg64::with_stream(seed, 0x7E57DA7A);
+    rng.shuffle(&mut order);
+    let n_test = ((ds.n() as f64) * test_frac).round() as usize;
+    let take = |ids: &[u32], name: &str| -> Dataset {
+        let rows: Vec<(Vec<u32>, Vec<f32>)> = ids
+            .iter()
+            .map(|&g| {
+                let (i, v) = ds.features.row(g as usize);
+                (i.to_vec(), v.to_vec())
+            })
+            .collect();
+        Dataset {
+            features: crate::linalg::csr::CsrMatrix::from_rows(ds.d(), &rows),
+            labels: ids.iter().map(|&g| ds.labels[g as usize]).collect(),
+            name: format!("{}:{name}", ds.name),
+        }
+    };
+    (
+        take(&order[n_test..], "train"),
+        take(&order[..n_test], "test"),
+    )
+}
+
+/// Binary accuracy of `sign(x·w)` against ±1 labels.
+pub fn accuracy(ds: &Dataset, w: &[f32]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..ds.n() {
+        let z = ds.features.row_dot(i, w);
+        if (z >= 0.0) == (ds.labels[i] > 0.0) {
+            correct += 1;
+        }
+    }
+    correct as f64 / ds.n().max(1) as f64
+}
+
+/// Area under the ROC curve via the rank statistic (ties get half credit).
+pub fn auc(ds: &Dataset, w: &[f32]) -> f64 {
+    let mut scored: Vec<(f64, bool)> = (0..ds.n())
+        .map(|i| (ds.features.row_dot(i, w), ds.labels[i] > 0.0))
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n_pos = scored.iter().filter(|(_, p)| *p).count();
+    let n_neg = scored.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // sum of positive ranks, with average ranks over score ties
+    let mut rank_sum = 0.0f64;
+    let mut i = 0usize;
+    while i < scored.len() {
+        let mut j = i;
+        while j + 1 < scored.len() && scored[j + 1].0 == scored[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for item in &scored[i..=j] {
+            if item.1 {
+                rank_sum += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, Preset};
+    use crate::linalg::csr::CsrMatrix;
+
+    fn tiny() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 500;
+        spec.d = 600;
+        synthetic::generate(&spec, 5)
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let ds = tiny();
+        let (tr, te) = train_test_split(&ds, 0.2, 1);
+        assert_eq!(tr.n() + te.n(), ds.n());
+        assert_eq!(te.n(), 100);
+        tr.validate().unwrap();
+        te.validate().unwrap();
+    }
+
+    #[test]
+    fn perfect_separator_scores_one() {
+        // y = sign(x_0): w = e0 classifies perfectly
+        let m = CsrMatrix::from_rows(
+            2,
+            &[
+                (vec![0], vec![1.0]),
+                (vec![0], vec![-2.0]),
+                (vec![0, 1], vec![0.5, 1.0]),
+                (vec![0], vec![-0.1]),
+            ],
+        );
+        let ds = Dataset {
+            features: m,
+            labels: vec![1.0, -1.0, 1.0, -1.0],
+            name: "t".into(),
+        };
+        let w = vec![1.0, 0.0];
+        assert_eq!(accuracy(&ds, &w), 1.0);
+        assert_eq!(auc(&ds, &w), 1.0);
+        // inverted separator: AUC 0
+        let w_bad = vec![-1.0, 0.0];
+        assert_eq!(auc(&ds, &w_bad), 0.0);
+    }
+
+    #[test]
+    fn random_scores_give_half_auc() {
+        let ds = tiny();
+        let w = vec![0.0f32; ds.d()]; // all scores tie at 0
+        assert!((auc(&ds, &w) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trained_model_generalizes() {
+        // n >> d so the planted concept is learnable from the train split
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 1500;
+        spec.d = 400;
+        let ds = synthetic::generate(&spec, 5);
+        let (train, test) = train_test_split(&ds, 0.25, 3);
+        let mut cfg = crate::engine::EngineConfig::acpd(4, 2, 10, 1e-2);
+        cfg.h = 1000;
+        cfg.outer_rounds = 15;
+        cfg.target_gap = 1e-5;
+        let out = crate::sim::run(&train, &cfg, &crate::network::NetworkModel::lan(), 7);
+        let acc = accuracy(&test, &out.final_w);
+        let a = auc(&test, &out.final_w);
+        assert!(acc > 0.7, "test accuracy {acc:.3}");
+        assert!(a > 0.75, "test AUC {a:.3}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Convergence history: one point per evaluated communication round,
+//! carrying everything the paper's figures plot — duality gap vs rounds
+//! (Fig 3 left, Fig 4a), vs simulated time (Fig 3 right, Fig 5), byte and
+//! time breakdowns (Table I, Fig 5 right).
+
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone, Copy)]
+pub struct HistoryPoint {
+    /// communication round (server inner iteration)
+    pub round: u64,
+    /// simulated (or wall) time, seconds
+    pub time: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    /// cumulative uplink bytes (workers → server)
+    pub bytes_up: u64,
+    /// cumulative downlink bytes (server → workers)
+    pub bytes_down: u64,
+    /// cumulative busy compute time across workers, seconds
+    pub compute_time: f64,
+    /// cumulative time charged to messages, seconds
+    pub comm_time: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub points: Vec<HistoryPoint>,
+    pub label: String,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> History {
+        History {
+            points: Vec::new(),
+            label: label.into(),
+        }
+    }
+
+    pub fn push(&mut self, p: HistoryPoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_gap(&self) -> f64 {
+        self.points.last().map(|p| p.gap).unwrap_or(f64::INFINITY)
+    }
+
+    pub fn last(&self) -> Option<&HistoryPoint> {
+        self.points.last()
+    }
+
+    /// First (round, time) at which the gap fell to/below `target`.
+    pub fn time_to_gap(&self, target: f64) -> Option<(u64, f64)> {
+        self.points
+            .iter()
+            .find(|p| p.gap <= target)
+            .map(|p| (p.round, p.time))
+    }
+
+    /// First (round, time) after which the gap *stays* at/below `target` for
+    /// the rest of the run — robust to the transient oscillations group-wise
+    /// asynchrony produces (a first-crossing can be a lucky dip).
+    pub fn time_to_gap_sustained(&self, target: f64) -> Option<(u64, f64)> {
+        let last_above = self.points.iter().rposition(|p| p.gap > target);
+        match last_above {
+            None => self.points.first().map(|p| (p.round, p.time)),
+            Some(i) => self.points.get(i + 1).map(|p| (p.round, p.time)),
+        }
+    }
+
+    /// Mean uplink bytes per communication round (Table I's T_c(d) proxy).
+    pub fn mean_bytes_up_per_round(&self) -> f64 {
+        match self.points.last() {
+            Some(p) if p.round > 0 => p.bytes_up as f64 / p.round as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "label",
+            "round",
+            "time_s",
+            "primal",
+            "dual",
+            "gap",
+            "bytes_up",
+            "bytes_down",
+            "compute_time_s",
+            "comm_time_s",
+        ]);
+        for p in &self.points {
+            w.rowf(&[
+                &self.label,
+                &p.round,
+                &p.time,
+                &p.primal,
+                &p.dual,
+                &p.gap,
+                &p.bytes_up,
+                &p.bytes_down,
+                &p.compute_time,
+                &p.comm_time,
+            ]);
+        }
+        w
+    }
+
+    /// Pretty-print a sampled view (first/last + every `stride`-th point).
+    pub fn render(&self, stride: usize) -> String {
+        let mut out = format!(
+            "{:>8} {:>12} {:>14} {:>14} {:>12} {:>12}\n",
+            "round", "time(s)", "primal", "dual", "gap", "MB_up"
+        );
+        for (i, p) in self.points.iter().enumerate() {
+            if i % stride.max(1) == 0 || i + 1 == self.points.len() {
+                out.push_str(&format!(
+                    "{:>8} {:>12.4} {:>14.8} {:>14.8} {:>12.3e} {:>12.3}\n",
+                    p.round,
+                    p.time,
+                    p.primal,
+                    p.dual,
+                    p.gap,
+                    p.bytes_up as f64 / 1e6
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(round: u64, time: f64, gap: f64) -> HistoryPoint {
+        HistoryPoint {
+            round,
+            time,
+            primal: gap,
+            dual: 0.0,
+            gap,
+            bytes_up: round * 100,
+            bytes_down: round * 50,
+            compute_time: time * 0.7,
+            comm_time: time * 0.3,
+        }
+    }
+
+    #[test]
+    fn time_to_gap_finds_first_crossing() {
+        let mut h = History::new("t");
+        h.push(pt(1, 0.1, 1.0));
+        h.push(pt(2, 0.2, 0.05));
+        h.push(pt(3, 0.3, 0.01));
+        assert_eq!(h.time_to_gap(0.05), Some((2, 0.2)));
+        assert_eq!(h.time_to_gap(1e-9), None);
+        assert_eq!(h.last_gap(), 0.01);
+    }
+
+    #[test]
+    fn sustained_crossing_ignores_lucky_dips() {
+        let mut h = History::new("t");
+        h.push(pt(1, 0.1, 1.0));
+        h.push(pt(2, 0.2, 0.04)); // transient dip
+        h.push(pt(3, 0.3, 0.5)); // bounces back
+        h.push(pt(4, 0.4, 0.03));
+        h.push(pt(5, 0.5, 0.01));
+        assert_eq!(h.time_to_gap(0.05), Some((2, 0.2)));
+        assert_eq!(h.time_to_gap_sustained(0.05), Some((4, 0.4)));
+        assert_eq!(h.time_to_gap_sustained(1e-9), None);
+        // already below from the start
+        assert_eq!(h.time_to_gap_sustained(2.0), Some((1, 0.1)));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut h = History::new("x");
+        h.push(pt(1, 0.1, 1.0));
+        h.push(pt(2, 0.2, 0.5));
+        let csv = h.to_csv().to_string();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("label,round"));
+    }
+
+    #[test]
+    fn bytes_per_round() {
+        let mut h = History::new("x");
+        h.push(pt(4, 0.4, 0.5));
+        assert_eq!(h.mean_bytes_up_per_round(), 100.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Experiment metrics: convergence histories and comm/comp breakdowns.
+
+pub mod classification;
+pub mod history;
+
+pub use history::{History, HistoryPoint};

@@ -1,0 +1,163 @@
+//! Network + compute cost models for the simulated cluster.
+//!
+//! The paper's total-time decomposition (Eq. 1):
+//!   T(A, ε) = Σ_t ( T_c(d) + max_k T_{A,t}^k )
+//! The simulator charges every message `latency + bytes/bandwidth` (α-β
+//! model — what OpenMPI point-to-point costs on a LAN) and every local
+//! solve `h · nnz_row · flop_time · slowdown_k(t)`, where `slowdown_k`
+//! models stragglers (the paper's σ multiplier on worker 1) and optionally
+//! a background-load jitter process ("real environment", Fig 5).
+
+use crate::util::rng::Pcg64;
+
+/// Multiplicative background-load jitter: log-normal noise plus occasional
+/// spikes (another tenant scheduled on the node).
+#[derive(Debug, Clone)]
+pub struct JitterModel {
+    /// log-normal sigma of the per-round multiplier (0 = off).
+    pub lognormal_sigma: f64,
+    /// probability a round hits a spike,
+    pub spike_prob: f64,
+    /// spike multiplier (e.g. 4.0 = 4x slower that round).
+    pub spike_factor: f64,
+}
+
+impl JitterModel {
+    /// Moderate contention typical of shared cloud instances.
+    pub fn cloud() -> JitterModel {
+        JitterModel {
+            lognormal_sigma: 0.25,
+            spike_prob: 0.05,
+            spike_factor: 4.0,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let base = rng.next_lognormal(0.0, self.lognormal_sigma);
+        if rng.next_f64() < self.spike_prob {
+            base * self.spike_factor
+        } else {
+            base
+        }
+    }
+}
+
+/// Cluster cost model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// α — per-message latency in seconds.
+    pub latency_s: f64,
+    /// β — link bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// seconds per (local iteration · nonzero) of SDCA compute.
+    pub flop_time: f64,
+    /// per-worker deterministic slowdown factors (stragglers); empty = all 1.
+    pub slowdown: Vec<f64>,
+    /// optional background-load jitter ("real environment").
+    pub jitter: Option<JitterModel>,
+    /// small always-on compute-time dispersion (fraction, e.g. 0.01 = ±1%).
+    /// Real machines are never clock-identical; without this the DES can
+    /// produce exact arrival ties that lock workers into fixed groups — a
+    /// resonance a physical cluster cannot exhibit.
+    pub base_dispersion: f64,
+}
+
+impl NetworkModel {
+    /// Gigabit-LAN-ish defaults: 1 ms latency, 1 Gb/s, 2 ns per nz-op.
+    pub fn lan() -> NetworkModel {
+        NetworkModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 125e6, // 1 Gb/s in bytes/s
+            flop_time: 2e-9,
+            slowdown: Vec::new(),
+            jitter: None,
+            base_dispersion: 0.01,
+        }
+    }
+
+    /// Paper Fig 3 setup: worker `idx` runs σ× slower than the rest.
+    pub fn with_straggler(mut self, workers: usize, idx: usize, sigma: f64) -> NetworkModel {
+        let mut s = vec![1.0; workers];
+        if idx < workers {
+            s[idx] = sigma;
+        }
+        self.slowdown = s;
+        self
+    }
+
+    /// Paper Fig 5 setup: every worker carries background-load jitter.
+    pub fn with_jitter(mut self, jitter: JitterModel) -> NetworkModel {
+        self.jitter = Some(jitter);
+        self
+    }
+
+    /// Time for one message of `bytes` over the link (α + bytes/β).
+    pub fn message_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time for one local solve of `h` iterations over rows with mean
+    /// `nnz_mean` nonzeros on worker `k` at round `round`.
+    pub fn compute_time(
+        &self,
+        k: usize,
+        h: usize,
+        nnz_mean: f64,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        let base = h as f64 * nnz_mean * self.flop_time;
+        let slow = self.slowdown.get(k).copied().unwrap_or(1.0);
+        let jit = self.jitter.as_ref().map(|j| j.sample(rng)).unwrap_or(1.0);
+        // ±base_dispersion uniform: breaks exact arrival ties
+        let disp = 1.0 + self.base_dispersion * (2.0 * rng.next_f64() - 1.0);
+        base * slow * jit * disp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_is_alpha_beta() {
+        let m = NetworkModel::lan();
+        let t = m.message_time(125_000_000); // 1 second of payload
+        assert!((t - 1.001).abs() < 1e-9);
+        // dense d=3.2M f32 vs rho_d=1000 sparse: the paper's whole point
+        let dense = m.message_time(4 * 3_231_961);
+        let sparse = m.message_time(8 * 1000);
+        assert!(dense / sparse > 50.0, "{dense} / {sparse}");
+    }
+
+    #[test]
+    fn straggler_multiplies_compute() {
+        let mut m = NetworkModel::lan().with_straggler(4, 1, 10.0);
+        m.base_dispersion = 0.0; // isolate the sigma factor
+        let mut rng = Pcg64::new(0);
+        let t_normal = m.compute_time(0, 1000, 50.0, &mut rng);
+        let t_slow = m.compute_time(1, 1000, 50.0, &mut rng);
+        assert!((t_slow / t_normal - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_is_positive_and_spiky() {
+        let j = JitterModel::cloud();
+        let mut rng = Pcg64::new(1);
+        let samples: Vec<f64> = (0..2000).map(|_| j.sample(&mut rng)).collect();
+        assert!(samples.iter().all(|&s| s > 0.0));
+        let spikes = samples.iter().filter(|&&s| s > 2.5).count();
+        assert!(spikes > 20, "expected spikes, got {spikes}");
+        let median = {
+            let mut s = samples.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s[s.len() / 2]
+        };
+        assert!((median - 1.0).abs() < 0.2, "median {median}");
+    }
+
+    #[test]
+    fn no_straggler_out_of_range_panic() {
+        let m = NetworkModel::lan().with_straggler(2, 5, 10.0);
+        assert_eq!(m.slowdown, vec![1.0, 1.0]);
+    }
+}

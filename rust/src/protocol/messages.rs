@@ -1,0 +1,411 @@
+//! Wire messages between workers and the server.
+//!
+//! The byte layout (via [`crate::util::binio`]) is shared by the TCP
+//! transport and the simulator's byte accounting, so "bytes on the wire"
+//! means the same thing in both runtimes.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::sparse::SparseVec;
+use crate::util::binio::{Decoder, Encoder};
+
+/// Worker → server: the filtered update F(Δw_k) (Algorithm 2 line 9),
+/// in whichever encoding is smaller on the wire (sparse idx+val pairs cost
+/// 8 B/coordinate vs 4 B/coordinate dense — a ρ=1 baseline must pay
+/// exactly O(4d), not O(8d)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateMsg {
+    pub worker: u32,
+    /// monotone per-worker round counter (staleness diagnostics)
+    pub round: u64,
+    pub update: ModelDelta,
+}
+
+impl UpdateMsg {
+    /// Wrap a filtered update, choosing the smaller wire encoding.
+    pub fn from_sparse(worker: u32, round: u64, sv: SparseVec) -> UpdateMsg {
+        let update = if 8 * sv.nnz() <= 4 * sv.dim {
+            ModelDelta::Sparse(sv)
+        } else {
+            ModelDelta::Dense(sv.to_dense())
+        };
+        UpdateMsg {
+            worker,
+            round,
+            update,
+        }
+    }
+}
+
+/// Server → worker: the accumulated model delta Δw̃_k (Algorithm 1 line 11),
+/// shipped sparse or dense, whichever is smaller on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelDelta {
+    Sparse(SparseVec),
+    Dense(Vec<f32>),
+}
+
+impl ModelDelta {
+    /// Number of (possibly zero, if dense) carried coordinates.
+    pub fn nnz(&self) -> usize {
+        match self {
+            ModelDelta::Sparse(s) => s.nnz(),
+            ModelDelta::Dense(d) => d.iter().filter(|&&v| v != 0.0).count(),
+        }
+    }
+
+    /// `out += scale * self`.
+    pub fn add_scaled_into(&self, out: &mut [f32], scale: f32) {
+        match self {
+            ModelDelta::Sparse(s) => s.add_into(out, scale),
+            ModelDelta::Dense(d) => {
+                for (o, &v) in out.iter_mut().zip(d) {
+                    *o += scale * v;
+                }
+            }
+        }
+    }
+
+    /// Choose the smaller encoding of an accumulated dense delta.
+    pub fn from_dense(delta: &[f32]) -> ModelDelta {
+        let nnz = delta.iter().filter(|&&v| v != 0.0).count();
+        // sparse costs 8 bytes/nz, dense 4 bytes/coord
+        if 8 * nnz < 4 * delta.len() {
+            ModelDelta::Sparse(SparseVec::from_dense(delta))
+        } else {
+            ModelDelta::Dense(delta.to_vec())
+        }
+    }
+
+    pub fn add_into(&self, out: &mut [f32]) {
+        match self {
+            ModelDelta::Sparse(s) => s.add_into(out, 1.0),
+            ModelDelta::Dense(d) => {
+                for (o, &v) in out.iter_mut().zip(d) {
+                    *o += v;
+                }
+            }
+        }
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            ModelDelta::Sparse(s) => 1 + s.wire_bytes(),
+            ModelDelta::Dense(d) => 1 + 4 + 4 * d.len(),
+        }
+    }
+}
+
+/// Server → worker envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaMsg {
+    pub worker: u32,
+    /// server inner-iteration counter when this reply was emitted
+    pub server_round: u64,
+    /// true on the last reply: worker should stop after applying it
+    pub shutdown: bool,
+    pub delta: ModelDelta,
+}
+
+/// Server → worker: gap probe at a full barrier (control plane; its bytes
+/// are *not* charged to the paper's communication accounting — the paper's
+/// curves measure optimization traffic, not instrumentation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GapRequestMsg {
+    /// current global model
+    pub w: Vec<f32>,
+}
+
+/// Worker → server: partition duality-gap pieces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GapPiecesMsg {
+    pub worker: u32,
+    pub loss_sum: f64,
+    pub conj_sum: f64,
+    /// Aᵀα over the local partition
+    pub v: Vec<f32>,
+}
+
+/// Envelope enums for the thread/TCP runtimes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToServerMsg {
+    Update(UpdateMsg),
+    GapPieces(GapPiecesMsg),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToWorkerMsg {
+    Delta(DeltaMsg),
+    GapRequest(GapRequestMsg),
+}
+
+/// Frame tags for the TCP transport.
+const TAG_UPDATE: u8 = 1;
+const TAG_DELTA: u8 = 2;
+const TAG_GAP_REQ: u8 = 3;
+const TAG_GAP_PIECES: u8 = 4;
+const TAG_SPARSE: u8 = 0;
+const TAG_DENSE: u8 = 1;
+
+impl UpdateMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(16 + self.update.wire_bytes());
+        e.put_u8(TAG_UPDATE);
+        e.put_u32(self.worker);
+        e.put_u64(self.round);
+        match &self.update {
+            ModelDelta::Sparse(s) => {
+                e.put_u8(TAG_SPARSE);
+                s.encode(&mut e);
+            }
+            ModelDelta::Dense(v) => {
+                e.put_u8(TAG_DENSE);
+                e.put_f32_slice(v);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<UpdateMsg> {
+        let mut d = Decoder::new(buf);
+        let tag = d.get_u8()?;
+        if tag != TAG_UPDATE {
+            bail!("expected UpdateMsg tag, got {tag}");
+        }
+        let worker = d.get_u32()?;
+        let round = d.get_u64()?;
+        let update = match d.get_u8()? {
+            TAG_SPARSE => ModelDelta::Sparse(SparseVec::decode(&mut d)?),
+            TAG_DENSE => ModelDelta::Dense(d.get_f32_vec()?),
+            t => bail!("bad update delta tag {t}"),
+        };
+        if !d.finished() {
+            bail!("trailing bytes in UpdateMsg frame");
+        }
+        Ok(UpdateMsg {
+            worker,
+            round,
+            update,
+        })
+    }
+
+    /// Bytes this message occupies on the wire (simulator charge).
+    /// (`ModelDelta::wire_bytes` already includes its encoding-tag byte.)
+    pub fn wire_bytes(&self) -> usize {
+        1 + 4 + 8 + self.update.wire_bytes()
+    }
+}
+
+impl DeltaMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(32 + self.delta.wire_bytes());
+        e.put_u8(TAG_DELTA);
+        e.put_u32(self.worker);
+        e.put_u64(self.server_round);
+        e.put_u8(self.shutdown as u8);
+        match &self.delta {
+            ModelDelta::Sparse(s) => {
+                e.put_u8(TAG_SPARSE);
+                s.encode(&mut e);
+            }
+            ModelDelta::Dense(v) => {
+                e.put_u8(TAG_DENSE);
+                e.put_f32_slice(v);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DeltaMsg> {
+        let mut d = Decoder::new(buf);
+        let tag = d.get_u8()?;
+        if tag != TAG_DELTA {
+            bail!("expected DeltaMsg tag, got {tag}");
+        }
+        let worker = d.get_u32()?;
+        let server_round = d.get_u64()?;
+        let shutdown = d.get_u8()? != 0;
+        let delta = match d.get_u8()? {
+            TAG_SPARSE => ModelDelta::Sparse(SparseVec::decode(&mut d)?),
+            TAG_DENSE => ModelDelta::Dense(d.get_f32_vec()?),
+            t => bail!("bad delta tag {t}"),
+        };
+        if !d.finished() {
+            bail!("trailing bytes in DeltaMsg frame");
+        }
+        Ok(DeltaMsg {
+            worker,
+            server_round,
+            shutdown,
+            delta,
+        })
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        1 + 4 + 8 + 1 + self.delta.wire_bytes()
+    }
+}
+
+impl GapRequestMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(8 + 4 * self.w.len());
+        e.put_u8(TAG_GAP_REQ);
+        e.put_f32_slice(&self.w);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<GapRequestMsg> {
+        let mut d = Decoder::new(buf);
+        let tag = d.get_u8()?;
+        if tag != TAG_GAP_REQ {
+            bail!("expected GapRequestMsg tag, got {tag}");
+        }
+        Ok(GapRequestMsg {
+            w: d.get_f32_vec()?,
+        })
+    }
+}
+
+impl GapPiecesMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(32 + 4 * self.v.len());
+        e.put_u8(TAG_GAP_PIECES);
+        e.put_u32(self.worker);
+        e.put_f64(self.loss_sum);
+        e.put_f64(self.conj_sum);
+        e.put_f32_slice(&self.v);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<GapPiecesMsg> {
+        let mut d = Decoder::new(buf);
+        let tag = d.get_u8()?;
+        if tag != TAG_GAP_PIECES {
+            bail!("expected GapPiecesMsg tag, got {tag}");
+        }
+        Ok(GapPiecesMsg {
+            worker: d.get_u32()?,
+            loss_sum: d.get_f64()?,
+            conj_sum: d.get_f64()?,
+            v: d.get_f32_vec()?,
+        })
+    }
+}
+
+impl ToServerMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            ToServerMsg::Update(m) => m.encode(),
+            ToServerMsg::GapPieces(m) => m.encode(),
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ToServerMsg> {
+        match buf.first() {
+            Some(&TAG_UPDATE) => Ok(ToServerMsg::Update(UpdateMsg::decode(buf)?)),
+            Some(&TAG_GAP_PIECES) => Ok(ToServerMsg::GapPieces(GapPiecesMsg::decode(buf)?)),
+            t => bail!("bad ToServerMsg tag {t:?}"),
+        }
+    }
+}
+
+impl ToWorkerMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            ToWorkerMsg::Delta(m) => m.encode(),
+            ToWorkerMsg::GapRequest(m) => m.encode(),
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ToWorkerMsg> {
+        match buf.first() {
+            Some(&TAG_DELTA) => Ok(ToWorkerMsg::Delta(DeltaMsg::decode(buf)?)),
+            Some(&TAG_GAP_REQ) => Ok(ToWorkerMsg::GapRequest(GapRequestMsg::decode(buf)?)),
+            t => bail!("bad ToWorkerMsg tag {t:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_sparse(rng: &mut Pcg64, d: usize, nnz: usize) -> SparseVec {
+        let mut idx: Vec<u32> = (0..d as u32).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(nnz);
+        idx.sort_unstable();
+        let val = (0..idx.len()).map(|_| rng.next_normal() as f32).collect();
+        SparseVec::new(d, idx, val)
+    }
+
+    #[test]
+    fn update_roundtrip_randomized() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..30 {
+            let d = 5 + rng.next_below(2000) as usize;
+            let nnz = rng.next_below(d as u32) as usize;
+            let m = UpdateMsg::from_sparse(
+                rng.next_below(16),
+                rng.next_u64(),
+                rand_sparse(&mut rng, d, nnz),
+            );
+            let buf = m.encode();
+            assert_eq!(buf.len(), m.wire_bytes());
+            assert_eq!(UpdateMsg::decode(&buf).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn update_encoding_is_adaptive() {
+        // nearly-dense updates ship dense (4B/coord), sparse ones sparse
+        let dense_ish = UpdateMsg::from_sparse(
+            0,
+            1,
+            SparseVec::new(8, (0..8).collect(), vec![1.0; 8]),
+        );
+        assert!(matches!(dense_ish.update, ModelDelta::Dense(_)));
+        let sparse = UpdateMsg::from_sparse(0, 1, SparseVec::new(100, vec![3], vec![1.0]));
+        assert!(matches!(sparse.update, ModelDelta::Sparse(_)));
+    }
+
+    #[test]
+    fn delta_roundtrip_both_encodings() {
+        let sparse = DeltaMsg {
+            worker: 3,
+            server_round: 99,
+            shutdown: false,
+            delta: ModelDelta::Sparse(SparseVec::new(10, vec![1, 9], vec![0.5, -0.5])),
+        };
+        let dense = DeltaMsg {
+            worker: 1,
+            server_round: 100,
+            shutdown: true,
+            delta: ModelDelta::Dense(vec![1.0, 2.0, 3.0]),
+        };
+        for m in [sparse, dense] {
+            let buf = m.encode();
+            assert_eq!(buf.len(), m.wire_bytes());
+            assert_eq!(DeltaMsg::decode(&buf).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn from_dense_picks_smaller_encoding() {
+        let mut mostly_zero = vec![0.0f32; 1000];
+        mostly_zero[7] = 1.0;
+        assert!(matches!(
+            ModelDelta::from_dense(&mostly_zero),
+            ModelDelta::Sparse(_)
+        ));
+        let full: Vec<f32> = (0..1000).map(|i| i as f32 + 1.0).collect();
+        assert!(matches!(ModelDelta::from_dense(&full), ModelDelta::Dense(_)));
+    }
+
+    #[test]
+    fn cross_decoding_rejected() {
+        let m = UpdateMsg::from_sparse(0, 1, SparseVec::empty(4));
+        assert!(DeltaMsg::decode(&m.encode()).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's contribution as runtime-agnostic state machines.
+//!
+//! [`server::ServerState`] implements Algorithm 1 (straggler-agnostic,
+//! group-wise aggregation with a T-periodic full barrier);
+//! [`worker::WorkerState`] implements Algorithm 2 (local subproblem +
+//! bandwidth filter with error feedback).  Neither knows about time,
+//! threads or sockets: the DES simulator, the thread runtime and the TCP
+//! runtime all drive the *same* code, which is what makes the simulated
+//! and real experiments comparable.
+
+pub mod messages;
+pub mod server;
+pub mod worker;

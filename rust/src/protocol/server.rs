@@ -1,0 +1,395 @@
+//! Algorithm 1 — the straggler-agnostic server, as a pure state machine.
+//!
+//! The server holds the global model `w`, one pending-delta accumulator
+//! `Δw̃_k` per worker, and the current group set Φ.  `on_update` ingests one
+//! worker message; when the barrier condition is met ( |Φ| ≥ B normally,
+//! |Φ| = K on every T-th inner iteration ) it commits the group:
+//!
+//!   w ← w + γ Σ_{k∈Φ} F(Δw_k)          (line 10)
+//!   Δw̃_j ← Δw̃_j + γ F(Δw_k)  ∀j,k∈Φ   (line 8)
+//!   reply Δw̃_k to k ∈ Φ; Δw̃_k ← 0     (line 11)
+//!
+//! The runtime (sim / threads / tcp) decides *when* messages arrive; the
+//! state machine only decides *what happens*.
+
+use crate::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+
+/// What the server wants the runtime to do after ingesting a message.
+#[derive(Debug)]
+pub enum ServerAction {
+    /// Barrier not met yet — wait for more workers.
+    Wait,
+    /// Group committed: send these replies; `finished` = training over.
+    Commit {
+        replies: Vec<DeltaMsg>,
+        /// Inner iteration that just completed (global round counter).
+        round: u64,
+        /// Was this a full (T-th / final) barrier?
+        full_barrier: bool,
+        finished: bool,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// B — group size.
+    pub group: usize,
+    /// T — full-barrier period (inner iterations per outer round).
+    pub period: usize,
+    /// L — outer rounds.
+    pub outer_rounds: usize,
+    /// γ — aggregation scale.
+    pub gamma: f32,
+}
+
+pub struct ServerState {
+    cfg: ServerConfig,
+    /// global model w
+    w: Vec<f32>,
+    /// per-worker pending delta Δw̃_k (dense accumulators)
+    pending: Vec<Vec<f32>>,
+    /// messages of the current group, at most one per worker
+    inbox: Vec<Option<ModelDelta>>,
+    in_group: usize,
+    /// inner iteration t within the current outer round
+    t: usize,
+    /// outer iteration l
+    l: usize,
+    /// total committed inner iterations (communication rounds)
+    total_rounds: u64,
+    /// per-worker count of commits they were part of (q_k estimate)
+    participation: Vec<u64>,
+    /// per-worker round at last inclusion (staleness diagnostics)
+    last_included: Vec<u64>,
+    /// max observed staleness (rounds between inclusions)
+    max_staleness: u64,
+    finished: bool,
+    /// true once a stop was requested (target gap reached)
+    stop_requested: bool,
+}
+
+impl ServerState {
+    pub fn new(cfg: ServerConfig, dim: usize) -> ServerState {
+        assert!(cfg.group >= 1 && cfg.group <= cfg.workers);
+        assert!(cfg.period >= 1);
+        ServerState {
+            w: vec![0.0; dim],
+            pending: vec![vec![0.0; dim]; cfg.workers],
+            inbox: vec![None; cfg.workers],
+            in_group: 0,
+            t: 0,
+            l: 0,
+            total_rounds: 0,
+            participation: vec![0; cfg.workers],
+            last_included: vec![0; cfg.workers],
+            max_staleness: 0,
+            finished: false,
+            stop_requested: false,
+            cfg,
+        }
+    }
+
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn total_rounds(&self) -> u64 {
+        self.total_rounds
+    }
+
+    pub fn outer_round(&self) -> usize {
+        self.l
+    }
+
+    pub fn finished(&self) -> bool {
+        self.finished
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.max_staleness
+    }
+
+    /// Empirical inclusion frequency of each worker (the paper's q_k).
+    pub fn participation_rates(&self) -> Vec<f64> {
+        self.participation
+            .iter()
+            .map(|&c| c as f64 / self.total_rounds.max(1) as f64)
+            .collect()
+    }
+
+    /// Ask the server to wind down: the next barrier becomes a full one and
+    /// replies carry `shutdown` (used when the target gap is reached).
+    pub fn request_stop(&mut self) {
+        self.stop_requested = true;
+    }
+
+    /// Is the current inner iteration a full-barrier one?
+    fn is_full_barrier(&self) -> bool {
+        self.t == self.cfg.period - 1 || self.stop_requested
+    }
+
+    fn barrier_met(&self) -> bool {
+        if self.is_full_barrier() {
+            self.in_group == self.cfg.workers
+        } else {
+            self.in_group >= self.cfg.group.min(self.cfg.workers)
+        }
+    }
+
+    /// Ingest one worker update (Algorithm 1 line 7).
+    pub fn on_update(&mut self, msg: UpdateMsg) -> ServerAction {
+        assert!(!self.finished, "update after shutdown");
+        let k = msg.worker as usize;
+        assert!(k < self.cfg.workers, "worker id {k} out of range");
+        assert!(
+            self.inbox[k].is_none(),
+            "worker {k} sent twice within one group (protocol violation)"
+        );
+        self.inbox[k] = Some(msg.update);
+        self.in_group += 1;
+        if !self.barrier_met() {
+            return ServerAction::Wait;
+        }
+        self.commit_group()
+    }
+
+    fn commit_group(&mut self) -> ServerAction {
+        let gamma = self.cfg.gamma;
+        let full_barrier = self.is_full_barrier();
+        // lines 8 + 10: fold every received update into w and ALL pending Δw̃
+        let members: Vec<usize> = (0..self.cfg.workers)
+            .filter(|&k| self.inbox[k].is_some())
+            .collect();
+        for &k in &members {
+            let f = self.inbox[k].take().unwrap();
+            f.add_scaled_into(&mut self.w, gamma);
+            for pend in self.pending.iter_mut() {
+                f.add_scaled_into(pend, gamma);
+            }
+        }
+        self.in_group = 0;
+        self.total_rounds += 1;
+
+        // staleness bookkeeping
+        for &k in &members {
+            self.participation[k] += 1;
+            let stale = self.total_rounds - self.last_included[k];
+            self.max_staleness = self.max_staleness.max(stale.saturating_sub(1));
+            self.last_included[k] = self.total_rounds;
+        }
+
+        // advance (l, t)
+        if full_barrier {
+            self.t = 0;
+            self.l += 1;
+        } else {
+            self.t += 1;
+        }
+        let finished =
+            self.stop_requested && full_barrier || self.l >= self.cfg.outer_rounds;
+        self.finished = finished;
+
+        // line 11: reply with (and reset) Δw̃_k for members
+        let replies: Vec<DeltaMsg> = members
+            .iter()
+            .map(|&k| {
+                let delta = ModelDelta::from_dense(&self.pending[k]);
+                self.pending[k].fill(0.0);
+                DeltaMsg {
+                    worker: k as u32,
+                    server_round: self.total_rounds,
+                    shutdown: finished,
+                    delta,
+                }
+            })
+            .collect();
+        ServerAction::Commit {
+            replies,
+            round: self.total_rounds,
+            full_barrier,
+            finished,
+        }
+    }
+
+    /// Invariant: w == Σ over history of γF committed; equivalently each
+    /// pending Δw̃_k replays exactly the commits since k's last inclusion.
+    /// Exposed for tests/diagnostics.
+    pub fn pending_norm(&self, k: usize) -> f64 {
+        crate::linalg::dense::norm2_sq(&self.pending[k]).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(worker: u32, dim: usize, idx: u32, val: f32) -> UpdateMsg {
+        UpdateMsg::from_sparse(
+            worker,
+            0,
+            crate::linalg::sparse::SparseVec::new(dim, vec![idx], vec![val]),
+        )
+    }
+
+    fn server(k: usize, b: usize, t: usize) -> ServerState {
+        ServerState::new(
+            ServerConfig {
+                workers: k,
+                group: b,
+                period: t,
+                outer_rounds: 100,
+                gamma: 0.5,
+            },
+            4,
+        )
+    }
+
+    #[test]
+    fn waits_until_group_of_b() {
+        let mut s = server(4, 2, 10);
+        assert!(matches!(s.on_update(upd(0, 4, 0, 1.0)), ServerAction::Wait));
+        match s.on_update(upd(2, 4, 1, 2.0)) {
+            ServerAction::Commit {
+                replies,
+                round,
+                full_barrier,
+                finished,
+            } => {
+                assert_eq!(round, 1);
+                assert!(!full_barrier);
+                assert!(!finished);
+                let mut ws: Vec<u32> = replies.iter().map(|r| r.worker).collect();
+                ws.sort_unstable();
+                assert_eq!(ws, vec![0, 2]);
+            }
+            other => panic!("expected commit, got {other:?}"),
+        }
+        // w = γ (e0·1 + e1·2)
+        assert_eq!(s.w(), &[0.5, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn replies_carry_accumulated_deltas() {
+        let mut s = server(4, 2, 10);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let a1 = s.on_update(upd(1, 4, 1, 1.0));
+        // both replies include BOTH updates of this commit (their own too)
+        if let ServerAction::Commit { replies, .. } = a1 {
+            for r in &replies {
+                let mut buf = vec![0.0; 4];
+                r.delta.add_into(&mut buf);
+                assert_eq!(buf, vec![0.5, 0.5, 0.0, 0.0]);
+            }
+        } else {
+            panic!()
+        }
+        // next group from workers 2,3: their pending also holds round 1
+        let _ = s.on_update(upd(2, 4, 2, 2.0));
+        if let ServerAction::Commit { replies, .. } = s.on_update(upd(3, 4, 3, 2.0)) {
+            for r in &replies {
+                let mut buf = vec![0.0; 4];
+                r.delta.add_into(&mut buf);
+                assert_eq!(buf, vec![0.5, 0.5, 1.0, 1.0]);
+            }
+        } else {
+            panic!()
+        }
+        // worker 0 was not in the second commit: its pending holds round 2 only
+        assert!((s.pending_norm(0) - (1.0f64 + 1.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn t_th_iteration_requires_all_workers() {
+        let mut s = server(3, 1, 2); // T=2: t=0 normal, t=1 full barrier
+        let _ = s.on_update(upd(0, 4, 0, 1.0)); // commit t=0 (B=1)
+        // now t=1: full barrier — B=1 must NOT suffice
+        assert!(matches!(s.on_update(upd(0, 4, 0, 1.0)), ServerAction::Wait));
+        assert!(matches!(s.on_update(upd(1, 4, 1, 1.0)), ServerAction::Wait));
+        match s.on_update(upd(2, 4, 2, 1.0)) {
+            ServerAction::Commit {
+                full_barrier,
+                replies,
+                ..
+            } => {
+                assert!(full_barrier);
+                assert_eq!(replies.len(), 3);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(s.outer_round(), 1);
+    }
+
+    #[test]
+    fn finishes_after_outer_rounds() {
+        let mut s = ServerState::new(
+            ServerConfig {
+                workers: 2,
+                group: 2,
+                period: 1,
+                outer_rounds: 2,
+                gamma: 1.0,
+            },
+            4,
+        );
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let a = s.on_update(upd(1, 4, 1, 1.0));
+        assert!(matches!(a, ServerAction::Commit { finished: false, .. }));
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let a = s.on_update(upd(1, 4, 1, 1.0));
+        match a {
+            ServerAction::Commit {
+                finished, replies, ..
+            } => {
+                assert!(finished);
+                assert!(replies.iter().all(|r| r.shutdown));
+            }
+            _ => panic!(),
+        }
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn stop_request_forces_full_barrier_and_shutdown() {
+        let mut s = server(3, 1, 100);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        s.request_stop();
+        // now even though B=1, all 3 must check in
+        assert!(matches!(s.on_update(upd(1, 4, 1, 1.0)), ServerAction::Wait));
+        assert!(matches!(s.on_update(upd(0, 4, 0, 1.0)), ServerAction::Wait));
+        match s.on_update(upd(2, 4, 2, 1.0)) {
+            ServerAction::Commit {
+                finished, replies, ..
+            } => {
+                assert!(finished);
+                assert_eq!(replies.len(), 3);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "twice")]
+    fn double_send_is_protocol_violation() {
+        let mut s = server(4, 3, 10);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+    }
+
+    #[test]
+    fn staleness_bounded_by_period() {
+        // B=1, T=3, K=2: worker 1 only checks in at full barriers
+        let mut s = server(2, 1, 3);
+        for _ in 0..4 {
+            // worker 0 drives t=0, t=1
+            let _ = s.on_update(upd(0, 4, 0, 0.1));
+            let _ = s.on_update(upd(0, 4, 0, 0.1));
+            // full barrier needs both
+            let _ = s.on_update(upd(0, 4, 0, 0.1));
+            let _ = s.on_update(upd(1, 4, 1, 0.1));
+        }
+        assert!(s.max_staleness() <= 2, "staleness {}", s.max_staleness());
+        let q = s.participation_rates();
+        assert!(q[0] > q[1]);
+    }
+}

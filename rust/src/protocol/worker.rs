@@ -1,0 +1,234 @@
+//! Algorithm 2 — the bandwidth-efficient worker, as a pure state machine.
+//!
+//! Per round:
+//!   1. centre the subproblem on `w_eff = w_k + γ·Δw_k`   (line 4)
+//!   2. H local solver iterations → epoch Δw                (line 4)
+//!   3. Δw_k ← Δw_k + epoch Δw                              (line 6)
+//!   4. split Δw_k into F(Δw_k) (top-ρd, sent) and the
+//!      error-feedback residual kept in Δw_k                (lines 7-12,
+//!      practical variant: Δw_k ← Δw_k ∘ ¬M)
+//!   5. on reply, w_k ← w_k + Δw̃_k                          (lines 13-14)
+//!
+//! The compute backend is any [`LocalSolver`] (pure-rust CSR or PJRT/HLO).
+
+use crate::filter::{filter_topk, FilterScratch};
+use crate::linalg::dense;
+use crate::protocol::messages::{DeltaMsg, UpdateMsg};
+use crate::solver::LocalSolver;
+
+pub struct WorkerState {
+    pub id: usize,
+    solver: Box<dyn LocalSolver>,
+    /// γ — scale applied to the residual when centring the subproblem.
+    gamma: f32,
+    /// H — local iterations per round.
+    h: usize,
+    /// per-message coordinate budget (0 = dense).
+    rho_d: usize,
+    /// Δw_k — accumulated-but-unsent update (error feedback).
+    resid: Vec<f32>,
+    /// w_k — local copy of the global model (updated only via Δw̃_k).
+    w_k: Vec<f32>,
+    w_eff: Vec<f32>,
+    scratch: FilterScratch,
+    round: u64,
+    /// paper §III-B2 practical variant: keep the filtered-out residual
+    /// (error feedback).  false = drop it after sending (ablation).
+    error_feedback: bool,
+    /// set when the server's reply carried `shutdown`
+    done: bool,
+}
+
+impl WorkerState {
+    pub fn new(
+        id: usize,
+        solver: Box<dyn LocalSolver>,
+        gamma: f32,
+        h: usize,
+        rho_d: usize,
+    ) -> WorkerState {
+        let d = solver.dim();
+        WorkerState {
+            id,
+            solver,
+            gamma,
+            h,
+            rho_d,
+            resid: vec![0.0; d],
+            w_k: vec![0.0; d],
+            w_eff: vec![0.0; d],
+            scratch: FilterScratch::default(),
+            round: 0,
+            error_feedback: true,
+            done: false,
+        }
+    }
+
+    /// Disable/enable error feedback (default on); ablation hook.
+    pub fn set_error_feedback(&mut self, on: bool) {
+        self.error_feedback = on;
+    }
+
+    /// Lines 3-9: one local round; returns the filtered update to send.
+    pub fn compute_round(&mut self) -> UpdateMsg {
+        debug_assert!(!self.done);
+        dense::add_scaled(&self.w_k, self.gamma, &self.resid, &mut self.w_eff);
+        let dw = self.solver.solve_epoch(&self.w_eff, self.h);
+        for (r, &x) in self.resid.iter_mut().zip(&dw) {
+            *r += x;
+        }
+        let filtered = filter_topk(&mut self.resid, self.rho_d, &mut self.scratch);
+        if !self.error_feedback {
+            self.resid.fill(0.0); // ablation: drop the unsent mass
+        }
+        self.round += 1;
+        UpdateMsg::from_sparse(self.id as u32, self.round, filtered)
+    }
+
+    /// Lines 13-14: fold the server's Δw̃_k into the local model.
+    pub fn apply_delta(&mut self, msg: &DeltaMsg) {
+        debug_assert_eq!(msg.worker as usize, self.id);
+        msg.delta.add_into(&mut self.w_k);
+        if msg.shutdown {
+            self.done = true;
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    pub fn alpha(&self) -> &[f32] {
+        self.solver.alpha()
+    }
+
+    pub fn solver(&self) -> &dyn LocalSolver {
+        self.solver.as_ref()
+    }
+
+    pub fn w_k(&self) -> &[f32] {
+        &self.w_k
+    }
+
+    /// Residual Δw_k (filtered-out mass awaiting future rounds).
+    pub fn residual(&self) -> &[f32] {
+        &self.resid
+    }
+
+    pub fn rounds_completed(&self) -> u64 {
+        self.round
+    }
+
+    /// Mean nonzeros per local row (the simulator's compute-cost input).
+    pub fn mean_row_nnz(&self) -> f64 {
+        // dim() * density is not available on the trait; approximate from n.
+        // (The sim uses Partition stats directly; this is a fallback.)
+        self.solver.n_local().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition::partition_rows, synthetic, synthetic::Preset};
+    use crate::loss::LossKind;
+    use crate::protocol::messages::ModelDelta;
+    use crate::solver::sdca::SdcaSolver;
+    use crate::util::rng::Pcg64;
+
+    fn make_worker(rho_d: usize) -> WorkerState {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 128;
+        spec.d = 200;
+        let ds = synthetic::generate(&spec, 4);
+        let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+        let solver = SdcaSolver::new(part, LossKind::Square, 0.01, 128, 1.0, 1.0, Pcg64::new(1));
+        WorkerState::new(0, Box::new(solver), 1.0, 200, rho_d)
+    }
+
+    #[test]
+    fn round_produces_bounded_message() {
+        let mut w = make_worker(10);
+        let msg = w.compute_round();
+        assert!(msg.update.nnz() <= 10);
+        assert_eq!(msg.round, 1);
+        // error feedback holds the rest
+        assert!(dense::norm2_sq(w.residual()) > 0.0);
+    }
+
+    #[test]
+    fn mass_conservation_across_rounds() {
+        // sum of all sent updates + current residual == (1/λn) A^T α
+        let mut w = make_worker(16);
+        let mut sent = vec![0.0f32; 200];
+        for _ in 0..5 {
+            let msg = w.compute_round();
+            msg.update.add_scaled_into(&mut sent, 1.0);
+            // echo an empty delta back so the worker can continue
+            w.apply_delta(&DeltaMsg {
+                worker: 0,
+                server_round: 0,
+                shutdown: false,
+                delta: ModelDelta::Dense(vec![0.0; 200]),
+            });
+        }
+        let mut total = sent.clone();
+        for (t, &r) in total.iter_mut().zip(w.residual()) {
+            *t += r;
+        }
+        // (1/λn) A^T α from the solver's state
+        let alpha = w.alpha().to_vec();
+        let solver_any = w.solver();
+        let _ = solver_any;
+        // recompute through a fresh partition copy
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 128;
+        spec.d = 200;
+        let ds = synthetic::generate(&spec, 4);
+        let mut expect = vec![0.0f32; 200];
+        ds.features.t_matvec(&alpha, &mut expect);
+        let lam_n = 0.01 * 128.0;
+        for e in &mut expect {
+            *e /= lam_n as f32;
+        }
+        let max_diff = total
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "conservation violated: {max_diff}");
+    }
+
+    #[test]
+    fn dense_mode_keeps_no_residual() {
+        let mut w = make_worker(0); // rho_d = 0 => dense
+        let _ = w.compute_round();
+        assert_eq!(dense::norm2_sq(w.residual()), 0.0);
+    }
+
+    #[test]
+    fn shutdown_flag_latches() {
+        let mut w = make_worker(10);
+        let _ = w.compute_round();
+        w.apply_delta(&DeltaMsg {
+            worker: 0,
+            server_round: 1,
+            shutdown: true,
+            delta: ModelDelta::Dense(vec![0.0; 200]),
+        });
+        assert!(w.done());
+    }
+
+    #[test]
+    fn delta_moves_local_model() {
+        let mut w = make_worker(10);
+        let _ = w.compute_round();
+        w.apply_delta(&DeltaMsg {
+            worker: 0,
+            server_round: 1,
+            shutdown: false,
+            delta: ModelDelta::Dense(vec![0.25; 200]),
+        });
+        assert!(w.w_k().iter().all(|&x| (x - 0.25).abs() < 1e-7));
+    }
+}

@@ -1,0 +1,159 @@
+//! Parser for `artifacts/manifest.txt` (emitted by `python/compile/aot.py`).
+//!
+//! Line format:
+//!   `entry name=local_round variant=e2e file=local_round_e2e.hlo.txt
+//!    nk=2048 d=1024 h=2048 nin=8 nout=4`
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled entry point at one shape variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub variant: String,
+    pub file: String,
+    /// local sample count the artifact was lowered for
+    pub nk: usize,
+    /// model dimension
+    pub d: usize,
+    /// schedule length (H)
+    pub h: usize,
+    pub nin: usize,
+    pub nout: usize,
+}
+
+impl ManifestEntry {
+    pub fn key(&self) -> String {
+        format!("{}/{}", self.name, self.variant)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some(body) = line.strip_prefix("entry ") else {
+                bail!("manifest line {}: expected `entry ...`", lineno + 1);
+            };
+            let mut kv = BTreeMap::new();
+            for tok in body.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                kv.insert(k.to_string(), v.to_string());
+            }
+            let get = |k: &str| -> Result<String> {
+                kv.get(k)
+                    .cloned()
+                    .with_context(|| format!("manifest line {}: missing {k}", lineno + 1))
+            };
+            let parse_usize = |k: &str| -> Result<usize> {
+                get(k)?
+                    .parse::<usize>()
+                    .with_context(|| format!("manifest line {}: bad {k}", lineno + 1))
+            };
+            let e = ManifestEntry {
+                name: get("name")?,
+                variant: get("variant")?,
+                file: get("file")?,
+                nk: parse_usize("nk")?,
+                d: parse_usize("d")?,
+                h: parse_usize("h")?,
+                nin: parse_usize("nin")?,
+                nout: parse_usize("nout")?,
+            };
+            entries.insert(e.key(), e);
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str, variant: &str) -> Result<&ManifestEntry> {
+        self.entries
+            .get(&format!("{name}/{variant}"))
+            .with_context(|| {
+                format!(
+                    "artifact {name}/{variant} not in manifest (have: {:?}); run `make artifacts`",
+                    self.entries.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Variants available for a given entry name.
+    pub fn variants(&self, name: &str) -> Vec<&ManifestEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.name == name)
+            .collect()
+    }
+
+    /// Pick a variant whose shapes fit (nk, d) exactly.
+    pub fn variant_for_shape(&self, name: &str, nk: usize, d: usize) -> Result<&ManifestEntry> {
+        self.entries
+            .values()
+            .find(|e| e.name == name && e.nk == nk && e.d == d)
+            .with_context(|| {
+                format!(
+                    "no {name} artifact for nk={nk} d={d}; available: {:?}",
+                    self.variants(name)
+                        .iter()
+                        .map(|e| (e.variant.as_str(), e.nk, e.d))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# acpd artifact manifest v1
+entry name=local_round variant=test file=local_round_test.hlo.txt nk=256 d=128 h=256 nin=8 nout=4
+entry name=objectives variant=test file=objectives_test.hlo.txt nk=256 d=128 h=256 nin=4 nout=3
+";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("local_round", "test").unwrap();
+        assert_eq!(e.nk, 256);
+        assert_eq!(e.nout, 4);
+        assert!(m.get("local_round", "nope").is_err());
+        let v = m.variant_for_shape("objectives", 256, 128).unwrap();
+        assert_eq!(v.variant, "test");
+        assert!(m.variant_for_shape("objectives", 1, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("garbage line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("entry name=x", PathBuf::new()).is_err()); // missing keys
+    }
+}

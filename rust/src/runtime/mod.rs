@@ -1,0 +1,31 @@
+//! PJRT runtime: load the AOT JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
+//! and execute them from the rust hot path.
+//!
+//! Interchange is HLO *text* (jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids the crate's xla_extension 0.5.1 rejects); the text parser
+//! reassigns ids.  Python never runs at request time: `make artifacts` is
+//! the only compile step, after which the rust binary is self-contained.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod solver;
+
+pub use manifest::{Manifest, ManifestEntry};
+pub use pjrt::ArtifactRuntime;
+pub use solver::PjrtSolver;
+
+/// Conventional artifacts directory (repo-root relative).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts dir from CWD or the repo layout; used by examples,
+/// tests and benches so they run from any working directory.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    let candidates = [
+        std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR),
+        std::path::PathBuf::from("../artifacts"),
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    candidates
+        .into_iter()
+        .find(|p| p.join("manifest.txt").exists())
+}

@@ -1,0 +1,133 @@
+//! PJRT CPU client wrapper: compile every manifest entry once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.  Outputs
+//! were lowered with `return_tuple=True`, so each execute yields one tuple
+//! literal that we decompose.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+
+/// All compiled artifacts + the PJRT client that owns them.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactRuntime {
+    /// Load and compile every entry in `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let manifest = Manifest::load(&dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load/compile only the entries of the given shape variant (cheaper
+    /// startup when e.g. only the `test` variant is exercised).
+    pub fn load_variant(dir: impl AsRef<Path>, variant: &str) -> Result<ArtifactRuntime> {
+        let mut manifest = Manifest::load(&dir)?;
+        manifest.entries.retain(|_, e| e.variant == variant);
+        anyhow::ensure!(
+            !manifest.entries.is_empty(),
+            "no artifacts for variant {variant:?} in {}",
+            manifest.dir.display()
+        );
+        Self::from_manifest(manifest)
+    }
+
+    fn from_manifest(manifest: Manifest) -> Result<ArtifactRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for e in manifest.entries.values() {
+            let path = manifest.hlo_path(e);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", e.key()))?;
+            exes.insert(e.key(), exe);
+        }
+        Ok(ArtifactRuntime {
+            client,
+            manifest,
+            exes,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn entry(&self, name: &str, variant: &str) -> Result<&ManifestEntry> {
+        self.manifest.get(name, variant)
+    }
+
+    /// Execute an entry with literal inputs; returns the decomposed outputs.
+    pub fn execute(
+        &self,
+        name: &str,
+        variant: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let e = self.manifest.get(name, variant)?;
+        anyhow::ensure!(
+            inputs.len() == e.nin,
+            "{}: expected {} inputs, got {}",
+            e.key(),
+            e.nin,
+            inputs.len()
+        );
+        let exe = self
+            .exes
+            .get(&e.key())
+            .with_context(|| format!("{} not compiled", e.key()))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", e.key()))?;
+        // single-replica single-device: [0][0]; return_tuple=True => 1 tuple
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("device -> host transfer")?;
+        let outs = tuple.to_tuple().context("decompose output tuple")?;
+        anyhow::ensure!(
+            outs.len() == e.nout,
+            "{}: expected {} outputs, got {}",
+            e.key(),
+            e.nout,
+            outs.len()
+        );
+        Ok(outs)
+    }
+}
+
+/// f32 slice -> rank-N literal.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        anyhow::ensure!(dims[0] as usize == data.len(), "dim mismatch");
+        Ok(lit)
+    } else {
+        Ok(lit.reshape(dims)?)
+    }
+}
+
+/// i32 slice -> rank-1 literal.
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Literal -> f32 vec.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

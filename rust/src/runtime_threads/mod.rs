@@ -1,0 +1,323 @@
+//! Thread runtime: the same Algorithm 1/2 state machines under real
+//! concurrency (std::thread + mpsc), with wall-clock time axes.
+//!
+//! Stragglers are *physically* injected: after its real solve, worker k
+//! sleeps `(slowdown_k − 1) × elapsed` (plus jitter), exactly the mechanism
+//! the paper uses ("forcing worker 1 to sleep at each iteration").  The
+//! duality gap is probed at full barriers through GapRequest/GapPieces
+//! control messages — what a real deployment's allreduce would do — so the
+//! server never touches worker memory.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::data::{partition::partition_rows, Dataset};
+use crate::engine::EngineConfig;
+use crate::metrics::{History, HistoryPoint};
+use crate::network::NetworkModel;
+use crate::protocol::messages::{GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
+use crate::protocol::server::{ServerAction, ServerConfig, ServerState};
+use crate::protocol::worker::WorkerState;
+use crate::solver::objective::{combine, ObjectivePieces};
+use crate::solver::sdca::SdcaSolver;
+use crate::util::rng::Pcg64;
+
+pub struct ThreadRunOutput {
+    pub history: History,
+    pub final_w: Vec<f32>,
+    pub participation: Vec<f64>,
+    pub max_staleness: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub wall_time: f64,
+}
+
+/// Drive one worker against abstract endpoints.  Reused verbatim by the TCP
+/// worker process; the solver is built by the caller *inside* its thread
+/// (LocalSolver is deliberately !Send — see solver/mod.rs).
+pub fn worker_loop(
+    mut state: WorkerState,
+    slowdown: f64,
+    jitter: Option<crate::network::JitterModel>,
+    mut jitter_rng: Pcg64,
+    send: impl Fn(ToServerMsg),
+    recv: impl Fn() -> Option<ToWorkerMsg>,
+) {
+    loop {
+        let t0 = Instant::now();
+        let msg = state.compute_round();
+        let elapsed = t0.elapsed().as_secs_f64();
+        // physical straggler/jitter injection (paper: "forcing worker 1 to
+        // sleep at each iteration")
+        let mut factor = slowdown;
+        if let Some(j) = &jitter {
+            factor *= j.sample(&mut jitter_rng);
+        }
+        if factor > 1.0 {
+            thread::sleep(Duration::from_secs_f64(elapsed * (factor - 1.0)));
+        }
+        send(ToServerMsg::Update(msg));
+        // await our delta; answer any gap probes that arrive first
+        loop {
+            match recv() {
+                Some(ToWorkerMsg::GapRequest(req)) => {
+                    let p = state.solver().objective_pieces(&req.w);
+                    send(ToServerMsg::GapPieces(GapPiecesMsg {
+                        worker: state.id as u32,
+                        loss_sum: p.loss_sum,
+                        conj_sum: p.conj_sum,
+                        v: p.v,
+                    }));
+                }
+                Some(ToWorkerMsg::Delta(delta)) => {
+                    state.apply_delta(&delta);
+                    break;
+                }
+                None => return, // channel closed
+            }
+        }
+        if state.done() {
+            return;
+        }
+    }
+}
+
+/// Server loop over abstract endpoints; shared by the thread and TCP
+/// runtimes.  Returns (history, final w, server state, bytes up, bytes down).
+pub fn server_loop(
+    mut server: ServerState,
+    cfg: &EngineConfig,
+    n: usize,
+    recv: impl Fn() -> Option<ToServerMsg>,
+    send: impl Fn(usize, ToWorkerMsg),
+) -> (History, Vec<f32>, ServerState, u64, u64) {
+    let start = Instant::now();
+    let mut history = History::new(cfg.algorithm.name());
+    let mut bytes_up = 0u64;
+    let mut bytes_down = 0u64;
+    loop {
+        let Some(msg) = recv() else { break };
+        let update = match msg {
+            ToServerMsg::Update(u) => u,
+            ToServerMsg::GapPieces(_) => panic!("unsolicited gap pieces"),
+        };
+        bytes_up += update.wire_bytes() as u64;
+        match server.on_update(update) {
+            ServerAction::Wait => {}
+            ServerAction::Commit {
+                replies,
+                round,
+                full_barrier,
+                finished,
+            } => {
+                // probe the gap at full barriers while all workers are
+                // parked awaiting their replies
+                if full_barrier {
+                    let k = cfg.workers;
+                    for wid in 0..k {
+                        send(
+                            wid,
+                            ToWorkerMsg::GapRequest(GapRequestMsg {
+                                w: server.w().to_vec(),
+                            }),
+                        );
+                    }
+                    let mut merged = ObjectivePieces::default();
+                    let mut got = 0;
+                    while got < k {
+                        match recv() {
+                            Some(ToServerMsg::GapPieces(p)) => {
+                                got += 1;
+                                merged = merged.merge(&ObjectivePieces {
+                                    loss_sum: p.loss_sum,
+                                    conj_sum: p.conj_sum,
+                                    v: p.v,
+                                });
+                            }
+                            Some(ToServerMsg::Update(_)) => {
+                                panic!("update during gap collection (barrier broken)")
+                            }
+                            None => {
+                                let w = server.w().to_vec();
+                                return (history, w, server, bytes_up, bytes_down);
+                            }
+                        }
+                    }
+                    let rep = combine(&merged, server.w(), cfg.lambda, n);
+                    history.push(HistoryPoint {
+                        round,
+                        time: start.elapsed().as_secs_f64(),
+                        primal: rep.primal,
+                        dual: rep.dual,
+                        gap: rep.gap,
+                        bytes_up,
+                        bytes_down,
+                        compute_time: 0.0,
+                        comm_time: 0.0,
+                    });
+                    if cfg.target_gap > 0.0 && rep.gap <= cfg.target_gap && !server.finished() {
+                        server.request_stop();
+                    }
+                }
+                for r in replies {
+                    bytes_down += r.wire_bytes() as u64;
+                    let wid = r.worker as usize;
+                    send(wid, ToWorkerMsg::Delta(r));
+                }
+                if finished {
+                    break;
+                }
+            }
+        }
+    }
+    let w = server.w().to_vec();
+    (history, w, server, bytes_up, bytes_down)
+}
+
+/// Run a full experiment on OS threads.  The convergence path is identical
+/// to [`crate::sim::run`]; only the time axis differs (wall clock).
+pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> ThreadRunOutput {
+    cfg.validate(ds.n()).expect("invalid engine config");
+    let k = cfg.workers;
+    let d = ds.d();
+    let rho_d = cfg.message_coords(d);
+    let rho_d_msg = if rho_d >= d { 0 } else { rho_d };
+    let mut root_rng = Pcg64::with_stream(seed, 0x51u64);
+    let parts = partition_rows(ds, k, Some(seed ^ 0xACDC));
+    // split order must match sim/tcp: all solver streams first, then aux
+    let mut solver_rngs: Vec<Pcg64> = (0..k).map(|wid| root_rng.split(wid as u64 + 1)).collect();
+    let mut jitter_rngs: Vec<Pcg64> =
+        (0..k).map(|wid| root_rng.split(0x9999 + wid as u64)).collect();
+
+    let (to_server_tx, to_server_rx) = mpsc::channel::<ToServerMsg>();
+    let mut worker_txs = Vec::new();
+    let mut handles = Vec::new();
+    let start = Instant::now();
+
+    for p in parts {
+        let wid = p.worker;
+        let (tx, rx) = mpsc::channel::<ToWorkerMsg>();
+        worker_txs.push(tx);
+        let up = to_server_tx.clone();
+        let solver_rng = std::mem::replace(&mut solver_rngs[wid], Pcg64::new(0));
+        let jitter_rng = std::mem::replace(&mut jitter_rngs[wid], Pcg64::new(0));
+        let slowdown = net.slowdown.get(wid).copied().unwrap_or(1.0);
+        let jitter = net.jitter.clone();
+        let (loss, lambda, sigma, gamma, h, n_global, error_feedback) = (
+            cfg.loss,
+            cfg.lambda,
+            cfg.sigma_prime,
+            cfg.gamma,
+            cfg.h,
+            ds.n(),
+            cfg.error_feedback,
+        );
+        handles.push(thread::spawn(move || {
+            // solver constructed inside the thread (LocalSolver is !Send)
+            let solver = SdcaSolver::new(p, loss, lambda, n_global, sigma, gamma, solver_rng);
+            let mut state = WorkerState::new(wid, Box::new(solver), gamma as f32, h, rho_d_msg);
+            state.set_error_feedback(error_feedback);
+            worker_loop(
+                state,
+                slowdown,
+                jitter,
+                jitter_rng,
+                move |m| {
+                    let _ = up.send(m);
+                },
+                move || rx.recv().ok(),
+            );
+        }));
+    }
+    drop(to_server_tx);
+
+    let server = ServerState::new(
+        ServerConfig {
+            workers: k,
+            group: cfg.group,
+            period: cfg.period,
+            outer_rounds: cfg.outer_rounds,
+            gamma: cfg.gamma as f32,
+        },
+        d,
+    );
+    let (history, final_w, server, bytes_up, bytes_down) = server_loop(
+        server,
+        cfg,
+        ds.n(),
+        || to_server_rx.recv().ok(),
+        |wid, msg| {
+            let _ = worker_txs[wid].send(msg);
+        },
+    );
+    drop(worker_txs);
+    for h in handles {
+        let _ = h.join();
+    }
+    ThreadRunOutput {
+        history,
+        final_w,
+        participation: server.participation_rates(),
+        max_staleness: server.max_staleness(),
+        bytes_up,
+        bytes_down,
+        wall_time: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, Preset};
+
+    fn small_ds() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 256;
+        spec.d = 500;
+        synthetic::generate(&spec, 21)
+    }
+
+    #[test]
+    fn threads_runtime_converges() {
+        let ds = small_ds();
+        let mut cfg = EngineConfig::acpd(4, 2, 4, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 8;
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 3);
+        assert!(!out.history.points.is_empty());
+        assert!(
+            out.history.last_gap() < 0.05,
+            "gap {}",
+            out.history.last_gap()
+        );
+        assert!(out.bytes_up > 0 && out.bytes_down > 0);
+    }
+
+    #[test]
+    fn threads_synchronous_baseline_converges() {
+        let ds = small_ds();
+        let mut cfg = EngineConfig::cocoa_plus(3, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 30;
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 5);
+        assert!(out.history.last_gap() < 0.02, "gap {}", out.history.last_gap());
+        assert!(out.participation.iter().all(|&q| (q - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn threads_with_straggler_still_correct() {
+        let ds = small_ds();
+        // B=2 of K=3 (paper-style group size; B=1 makes sigma'=gamma*B too
+        // lax and stale adds can destabilize — the divergence mode the
+        // paper cites [Zhang & Hsieh 2016] and controls with B and T)
+        let mut cfg = EngineConfig::acpd(3, 2, 3, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 12;
+        // worker 0 sleeps 3x its compute time: correctness must be unchanged
+        let net = NetworkModel::lan().with_straggler(3, 0, 3.0);
+        let out = run(&ds, &cfg, &net, 9);
+        assert!(out.history.last_gap() < 0.1, "gap {}", out.history.last_gap());
+        assert!(out.max_staleness <= (cfg.period - 1) as u64);
+    }
+}

@@ -1,0 +1,428 @@
+//! Discrete-event simulation of the cluster — the experiment substrate.
+//!
+//! The DES replaces the paper's AWS testbed (DESIGN.md §3): every message is
+//! charged `α + bytes/β`, every local solve `H · nnz · flop_time ·
+//! slowdown_k`, and events are processed in virtual-time order with
+//! deterministic tie-breaking, so a (dataset, config, seed) triple always
+//! produces bit-identical gap curves, byte counts and time axes.  The same
+//! [`protocol`] state machines also run under real threads/TCP
+//! ([`crate::runtime_threads`], [`crate::transport`]) — the sim decides
+//! *when*, the protocol decides *what*.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::data::{partition::partition_rows, Dataset};
+use crate::engine::EngineConfig;
+use crate::metrics::{History, HistoryPoint};
+use crate::network::NetworkModel;
+use crate::protocol::messages::{DeltaMsg, UpdateMsg};
+use crate::protocol::server::{ServerAction, ServerConfig, ServerState};
+use crate::protocol::worker::WorkerState;
+use crate::solver::objective::{combine, ObjectivePieces};
+use crate::solver::sdca::SdcaSolver;
+use crate::util::rng::Pcg64;
+
+/// A scheduled event.
+enum Payload {
+    ToServer(UpdateMsg),
+    ToWorker(DeltaMsg),
+}
+
+struct Event {
+    time: f64,
+    seq: u64,
+    payload: Payload,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first, seq tie-break.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Aggregate statistics of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    /// empirical q_k per worker
+    pub participation: Vec<f64>,
+    pub max_staleness: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Σ per-worker busy compute time (s)
+    pub compute_time: f64,
+    /// Σ per-message network time (s)
+    pub comm_time: f64,
+    /// final virtual time (s)
+    pub wall_time: f64,
+    pub rounds: u64,
+}
+
+pub struct SimOutput {
+    pub history: History,
+    pub final_w: Vec<f32>,
+    /// global dual variables assembled from all workers (indexed by global
+    /// sample id)
+    pub final_alpha: Vec<f32>,
+    /// Σ_k residual_k — the filtered-out mass still parked on workers
+    pub final_residual: Vec<f32>,
+    pub stats: SimStats,
+}
+
+/// Run one experiment in the simulator with the pure-rust CSR solver.
+/// Deterministic in all inputs.
+pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> SimOutput {
+    let (loss, lambda, sigma, gamma, n_global) = (
+        cfg.loss,
+        cfg.lambda,
+        cfg.sigma_prime,
+        cfg.gamma,
+        ds.n(),
+    );
+    run_with_solvers(ds, cfg, net, seed, move |p, rng| {
+        Box::new(SdcaSolver::new(
+            p, loss, lambda, n_global, sigma, gamma, rng,
+        ))
+    })
+}
+
+/// Same engine, custom solver backend — `examples/quickstart.rs` and
+/// `examples/train_e2e.rs` inject [`crate::runtime::PjrtSolver`] here so the
+/// whole protocol runs over the AOT JAX/Pallas artifacts.
+pub fn run_with_solvers(
+    ds: &Dataset,
+    cfg: &EngineConfig,
+    net: &NetworkModel,
+    seed: u64,
+    mut make_solver: impl FnMut(
+        crate::data::partition::Partition,
+        Pcg64,
+    ) -> Box<dyn crate::solver::LocalSolver>,
+) -> SimOutput {
+    cfg.validate(ds.n()).expect("invalid engine config");
+    let d = ds.d();
+    let k = cfg.workers;
+    let rho_d = cfg.message_coords(d);
+    let rho_d_msg = if rho_d >= d { 0 } else { rho_d };
+
+    let mut root_rng = Pcg64::with_stream(seed, 0x51u64);
+    let parts = partition_rows(ds, k, Some(seed ^ 0xACDC));
+    // mean nnz/row per worker for the compute-cost model
+    let nnz_means: Vec<f64> = parts
+        .iter()
+        .map(|p| p.features.nnz() as f64 / p.n_local().max(1) as f64)
+        .collect();
+
+    let mut workers: Vec<WorkerState> = parts
+        .into_iter()
+        .map(|p| {
+            let wid = p.worker;
+            let solver = make_solver(p, root_rng.split(wid as u64 + 1));
+            let mut ws = WorkerState::new(wid, solver, cfg.gamma as f32, cfg.h, rho_d_msg);
+            ws.set_error_feedback(cfg.error_feedback);
+            ws
+        })
+        .collect();
+
+    let mut server = ServerState::new(
+        ServerConfig {
+            workers: k,
+            group: cfg.group,
+            period: cfg.period,
+            outer_rounds: cfg.outer_rounds,
+            gamma: cfg.gamma as f32,
+        },
+        d,
+    );
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut time_rng = root_rng.split(0xBEEF);
+    let mut bytes_up = 0u64;
+    let mut bytes_down = 0u64;
+    let mut compute_time = 0.0f64;
+    let mut comm_time = 0.0f64;
+    let mut history = History::new(format!("{}", cfg.algorithm.name()));
+
+    // kick off: every worker computes its first round at t = 0
+    for w in workers.iter_mut() {
+        let dt = net.compute_time(w.id, cfg.h, nnz_means[w.id], &mut time_rng);
+        compute_time += dt;
+        let msg = w.compute_round();
+        let up = net.message_time(msg.wire_bytes());
+        comm_time += up;
+        bytes_up += msg.wire_bytes() as u64;
+        heap.push(Event {
+            time: dt + up,
+            seq: {
+                seq += 1;
+                seq
+            },
+            payload: Payload::ToServer(msg),
+        });
+    }
+
+    let mut now = 0.0f64;
+    let mut last_eval_round = 0u64;
+    while let Some(ev) = heap.pop() {
+        now = now.max(ev.time);
+        match ev.payload {
+            Payload::ToServer(msg) => {
+                match server.on_update(msg) {
+                    ServerAction::Wait => {}
+                    ServerAction::Commit {
+                        replies,
+                        round,
+                        full_barrier,
+                        finished,
+                    } => {
+                        for r in replies {
+                            let t = net.message_time(r.wire_bytes());
+                            comm_time += t;
+                            bytes_down += r.wire_bytes() as u64;
+                            heap.push(Event {
+                                time: now + t,
+                                seq: {
+                                    seq += 1;
+                                    seq
+                                },
+                                payload: Payload::ToWorker(r),
+                            });
+                        }
+                        // evaluate the duality gap at FULL BARRIERS only —
+                        // the only moments a real deployment can assemble a
+                        // consistent (w, alpha) pair (the threads/TCP
+                        // runtimes probe exactly there), and the phase at
+                        // which the group-wise dynamics are smooth.
+                        let do_eval = full_barrier
+                            && (round - last_eval_round >= cfg.eval_every as u64
+                                || finished
+                                || last_eval_round == 0);
+                        if do_eval {
+                            last_eval_round = round;
+                            let gap = evaluate_gap(&workers, server.w(), cfg, ds.n());
+                            history.push(HistoryPoint {
+                                round,
+                                time: now,
+                                primal: gap.0,
+                                dual: gap.1,
+                                gap: gap.2,
+                                bytes_up,
+                                bytes_down,
+                                compute_time,
+                                comm_time,
+                            });
+                            if cfg.target_gap > 0.0
+                                && gap.2 <= cfg.target_gap
+                                && !server.finished()
+                            {
+                                server.request_stop();
+                            }
+                        }
+                    }
+                }
+            }
+            Payload::ToWorker(msg) => {
+                let wid = msg.worker as usize;
+                workers[wid].apply_delta(&msg);
+                if !workers[wid].done() {
+                    let dt = net.compute_time(wid, cfg.h, nnz_means[wid], &mut time_rng);
+                    compute_time += dt;
+                    let out = workers[wid].compute_round();
+                    let up = net.message_time(out.wire_bytes());
+                    comm_time += up;
+                    bytes_up += out.wire_bytes() as u64;
+                    heap.push(Event {
+                        time: now + dt + up,
+                        seq: {
+                            seq += 1;
+                            seq
+                        },
+                        payload: Payload::ToServer(out),
+                    });
+                }
+            }
+        }
+    }
+
+    let stats = SimStats {
+        participation: server.participation_rates(),
+        max_staleness: server.max_staleness(),
+        bytes_up,
+        bytes_down,
+        compute_time,
+        comm_time,
+        wall_time: now,
+        rounds: server.total_rounds(),
+    };
+    // assemble final global dual state + leftover residual mass
+    let mut final_alpha = vec![0.0f32; ds.n()];
+    let mut final_residual = vec![0.0f32; d];
+    for wk in &workers {
+        let part = wk.solver().partition();
+        for (local, &g) in part.global_ids.iter().enumerate() {
+            final_alpha[g as usize] = wk.alpha()[local];
+        }
+        for (r, &x) in final_residual.iter_mut().zip(wk.residual()) {
+            *r += x;
+        }
+    }
+    SimOutput {
+        history,
+        final_w: server.w().to_vec(),
+        final_alpha,
+        final_residual,
+        stats,
+    }
+}
+
+/// Assemble the global duality gap from worker-local state + server model.
+fn evaluate_gap(
+    workers: &[WorkerState],
+    w: &[f32],
+    cfg: &EngineConfig,
+    n: usize,
+) -> (f64, f64, f64) {
+    let mut merged = ObjectivePieces::default();
+    for wk in workers {
+        merged = merged.merge(&wk.solver().objective_pieces(w));
+    }
+    let rep = combine(&merged, w, cfg.lambda, n);
+    (rep.primal, rep.dual, rep.gap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{self, Preset};
+
+    fn small_ds() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 512;
+        spec.d = 1000;
+        synthetic::generate(&spec, 11)
+    }
+
+    fn fast_cfg(mut cfg: EngineConfig) -> EngineConfig {
+        cfg.h = 512;
+        cfg.outer_rounds = 6;
+        cfg
+    }
+
+    #[test]
+    fn acpd_converges_and_is_deterministic() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        cfg.outer_rounds = 16;
+        let a = run(&ds, &cfg, &NetworkModel::lan(), 7);
+        let b = run(&ds, &cfg, &NetworkModel::lan(), 7);
+        assert_eq!(a.history.points.len(), b.history.points.len());
+        for (x, y) in a.history.points.iter().zip(&b.history.points) {
+            assert_eq!(x.gap, y.gap);
+            assert_eq!(x.time, y.time);
+            assert_eq!(x.bytes_up, y.bytes_up);
+        }
+        let first = a.history.points.first().unwrap().gap;
+        let last = a.history.last_gap();
+        assert!(last < first * 0.2, "gap {first} -> {last}");
+        // history points are at full barriers (multiples of T)
+        assert!(a
+            .history
+            .points
+            .iter()
+            .all(|p| p.round % cfg.period as u64 == 0));
+    }
+
+    #[test]
+    fn cocoa_plus_converges() {
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::cocoa_plus(4, 1e-3));
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 3);
+        assert!(out.history.last_gap() < 0.1);
+        // synchronous: every worker in every round
+        assert!(out.stats.participation.iter().all(|&q| (q - 1.0).abs() < 1e-9));
+        assert_eq!(out.stats.max_staleness, 0);
+    }
+
+    #[test]
+    fn straggler_hurts_cocoa_more_than_acpd() {
+        let ds = small_ds();
+        // compute must dominate the link latency for sigma to matter on a
+        // problem this small
+        let mut net = NetworkModel::lan().with_straggler(4, 0, 10.0);
+        net.flop_time = 2e-7;
+        let mut acpd = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        acpd.target_gap = 5e-3;
+        acpd.outer_rounds = 50;
+        let mut cocoa = fast_cfg(EngineConfig::cocoa_plus(4, 1e-3));
+        cocoa.target_gap = 5e-3;
+        cocoa.outer_rounds = 250;
+        let a = run(&ds, &acpd, &net, 7);
+        let c = run(&ds, &cocoa, &net, 7);
+        let (_, ta) = a.history.time_to_gap(5e-3).expect("acpd reached gap");
+        let (_, tc) = c.history.time_to_gap(5e-3).expect("cocoa+ reached gap");
+        assert!(
+            ta < tc,
+            "ACPD ({ta:.2}s) should beat CoCoA+ ({tc:.2}s) under stragglers"
+        );
+    }
+
+    #[test]
+    fn staleness_bounded_by_period() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(EngineConfig::acpd(4, 1, 4, 1e-3));
+        cfg.outer_rounds = 10;
+        let net = NetworkModel::lan().with_straggler(4, 1, 20.0);
+        let out = run(&ds, &cfg, &net, 1);
+        assert!(
+            out.stats.max_staleness <= (cfg.period - 1) as u64,
+            "staleness {} > T-1 = {}",
+            out.stats.max_staleness,
+            cfg.period - 1
+        );
+    }
+
+    #[test]
+    fn sparse_messages_cut_bytes() {
+        let ds = small_ds();
+        let mut dense_cfg = fast_cfg(EngineConfig::acpd(4, 4, 5, 1e-3));
+        dense_cfg.rho_d = 0; // dense ablation
+        let mut sparse_cfg = fast_cfg(EngineConfig::acpd(4, 4, 5, 1e-3));
+        sparse_cfg.rho_d = 50;
+        let d_out = run(&ds, &dense_cfg, &NetworkModel::lan(), 2);
+        let s_out = run(&ds, &sparse_cfg, &NetworkModel::lan(), 2);
+        let per_round_dense = d_out.history.mean_bytes_up_per_round();
+        let per_round_sparse = s_out.history.mean_bytes_up_per_round();
+        assert!(
+            per_round_sparse < per_round_dense / 3.0,
+            "sparse {per_round_sparse} vs dense {per_round_dense}"
+        );
+    }
+
+    #[test]
+    fn target_gap_stops_early() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        cfg.outer_rounds = 1000;
+        cfg.target_gap = 0.05;
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 4);
+        assert!(out.history.last_gap() <= 0.05 * 1.5);
+        assert!(out.stats.rounds < 500, "ran {} rounds", out.stats.rounds);
+    }
+}

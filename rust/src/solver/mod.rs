@@ -1,0 +1,46 @@
+//! Local subproblem solvers and global objectives.
+//!
+//! [`LocalSolver`] is the seam between the protocol (Algorithm 2) and the
+//! compute backend: [`sdca::SdcaSolver`] is the pure-rust CSR path used at
+//! paper scale; `runtime::PjrtSolver` (see [`crate::runtime`]) executes the
+//! AOT JAX/Pallas artifacts for dense partitions.  Both walk identical
+//! coordinate streams given the same seed, and a cross-check test holds
+//! their iterates together.
+
+pub mod objective;
+pub mod sdca;
+
+use objective::ObjectivePieces;
+
+/// A stateful local solver bound to one worker's partition.
+///
+/// The solver owns the local dual variables α_[k]; each `solve_epoch` runs H
+/// local iterations of the subproblem G_k^{σ'} centred at `w_eff` (Algorithm
+/// 2 line 4) and returns the epoch's primal update
+/// `Δw = (1/λn) A_[k]^T Δα` as a dense d-vector.
+///
+/// Deliberately NOT `Send`: the PJRT client is `Rc`-based, so solvers are
+/// constructed *inside* the thread that drives them (the thread/TCP runtimes
+/// take a `Send` factory, not a solver).
+pub trait LocalSolver {
+    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> Vec<f32>;
+
+    /// Local dual variables (length = local sample count).
+    fn alpha(&self) -> &[f32];
+
+    fn n_local(&self) -> usize;
+
+    /// Model dimension d.
+    fn dim(&self) -> usize;
+
+    /// The data shard this solver is bound to (global-id mapping etc.).
+    fn partition(&self) -> &crate::data::partition::Partition;
+
+    /// This partition's duality-gap contributions at global model `w`
+    /// (loss sum, conjugate sum, Aᵀα) — what a worker answers to the
+    /// server's gap probe at full barriers.
+    fn objective_pieces(&self, w: &[f32]) -> ObjectivePieces;
+
+    /// Runtime downcast hook (diagnostics only).
+    fn as_any(&self) -> &dyn std::any::Any;
+}

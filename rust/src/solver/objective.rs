@@ -1,0 +1,180 @@
+//! Global primal/dual objectives and the duality gap (the paper's metric
+//! and stopping rule).
+//!
+//!   P(w) = (1/n) Σ φ(xᵢ·w, yᵢ) + (λ/2)‖w‖²
+//!   D(α) = (1/n) Σ -φ*(-αᵢ, yᵢ) − (λ/2)‖(1/λn) Aᵀα‖²
+//!   G    = P(w) − D(α)
+//!
+//! Evaluation is a full data pass; partitions are scored independently
+//! (optionally on threads — §Perf) and combined, mirroring how a real
+//! deployment would compute the gap with one allreduce.
+
+use crate::data::partition::Partition;
+use crate::data::Dataset;
+use crate::linalg::dense;
+use crate::loss::Loss;
+
+/// Per-partition contributions (what a worker would send for a gap check).
+#[derive(Debug, Clone, Default)]
+pub struct ObjectivePieces {
+    /// Σ φ(xᵢ·w, yᵢ) over local rows.
+    pub loss_sum: f64,
+    /// Σ -φ*(-αᵢ, yᵢ) over local rows.
+    pub conj_sum: f64,
+    /// Aᵀα contribution (dense d).
+    pub v: Vec<f32>,
+}
+
+impl ObjectivePieces {
+    pub fn merge(mut self, other: &ObjectivePieces) -> ObjectivePieces {
+        self.loss_sum += other.loss_sum;
+        self.conj_sum += other.conj_sum;
+        if self.v.is_empty() {
+            self.v = other.v.clone();
+        } else {
+            for (a, b) in self.v.iter_mut().zip(&other.v) {
+                *a += b;
+            }
+        }
+        self
+    }
+}
+
+/// Score one partition against (w, local α).
+pub fn partition_pieces(
+    part: &Partition,
+    alpha: &[f32],
+    w: &[f32],
+    loss: &dyn Loss,
+) -> ObjectivePieces {
+    assert_eq!(alpha.len(), part.n_local());
+    let mut loss_sum = 0.0;
+    let mut conj_sum = 0.0;
+    for i in 0..part.n_local() {
+        let z = part.features.row_dot(i, w);
+        let y = part.labels[i] as f64;
+        loss_sum += loss.phi(z, y);
+        conj_sum += loss.neg_conjugate(alpha[i] as f64, y);
+    }
+    let mut v = vec![0.0f32; part.features.n_cols];
+    part.features.t_matvec(alpha, &mut v);
+    ObjectivePieces {
+        loss_sum,
+        conj_sum,
+        v,
+    }
+}
+
+/// Combined primal/dual/gap from merged pieces.
+#[derive(Debug, Clone, Copy)]
+pub struct GapReport {
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+}
+
+pub fn combine(pieces: &ObjectivePieces, w: &[f32], lambda: f64, n: usize) -> GapReport {
+    let primal = pieces.loss_sum / n as f64 + 0.5 * lambda * dense::norm2_sq(w);
+    let lam_n = lambda * n as f64;
+    // ‖(1/λn) v‖²
+    let wa_sq = dense::norm2_sq(&pieces.v) / (lam_n * lam_n);
+    let dual = pieces.conj_sum / n as f64 - 0.5 * lambda * wa_sq;
+    GapReport {
+        primal,
+        dual,
+        gap: primal - dual,
+    }
+}
+
+/// Whole-dataset convenience (single partition view).
+pub fn full_gap(ds: &Dataset, alpha: &[f32], w: &[f32], loss: &dyn Loss, lambda: f64) -> GapReport {
+    assert_eq!(alpha.len(), ds.n());
+    let mut loss_sum = 0.0;
+    let mut conj_sum = 0.0;
+    for i in 0..ds.n() {
+        let z = ds.features.row_dot(i, w);
+        let y = ds.labels[i] as f64;
+        loss_sum += loss.phi(z, y);
+        conj_sum += loss.neg_conjugate(alpha[i] as f64, y);
+    }
+    let mut v = vec![0.0f32; ds.d()];
+    ds.features.t_matvec(alpha, &mut v);
+    combine(
+        &ObjectivePieces {
+            loss_sum,
+            conj_sum,
+            v,
+        },
+        w,
+        lambda,
+        ds.n(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition::partition_rows, synthetic, synthetic::Preset};
+    use crate::loss::{LossKind, Square};
+
+    fn tiny() -> Dataset {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 200;
+        spec.d = 300;
+        synthetic::generate(&spec, 5)
+    }
+
+    #[test]
+    fn gap_nonnegative_at_consistent_point() {
+        let ds = tiny();
+        let loss = Square;
+        let lambda = 0.05;
+        // α arbitrary but w = w(α): gap >= 0 by weak duality
+        let alpha: Vec<f32> = (0..ds.n()).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect();
+        let mut w = vec![0.0f32; ds.d()];
+        ds.features.t_matvec(&alpha, &mut w);
+        let lam_n = lambda * ds.n() as f64;
+        for x in &mut w {
+            *x = (*x as f64 / lam_n) as f32;
+        }
+        let g = full_gap(&ds, &alpha, &w, &loss, lambda);
+        assert!(g.gap >= -1e-9, "gap {}", g.gap);
+    }
+
+    #[test]
+    fn gap_zero_at_alpha_zero_minus_loss() {
+        // α=0, w=0: P = (1/n)Σφ(0,y) = 0.5, D = 0 ⇒ gap = 0.5 for square loss
+        let ds = tiny();
+        let g = full_gap(
+            &ds,
+            &vec![0.0; ds.n()],
+            &vec![0.0; ds.d()],
+            &Square,
+            0.05,
+        );
+        assert!((g.primal - 0.5).abs() < 1e-9);
+        assert!(g.dual.abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_pieces_sum_to_full() {
+        let ds = tiny();
+        let loss = LossKind::Square.instantiate();
+        let lambda = 0.01;
+        let alpha: Vec<f32> = (0..ds.n()).map(|i| (i as f32 * 0.013).sin()).collect();
+        let w: Vec<f32> = (0..ds.d()).map(|j| (j as f32 * 0.07).cos() * 0.1).collect();
+
+        let parts = partition_rows(&ds, 4, Some(1));
+        let mut merged = ObjectivePieces::default();
+        for p in &parts {
+            let local_alpha: Vec<f32> =
+                p.global_ids.iter().map(|&g| alpha[g as usize]).collect();
+            merged = merged.merge(&partition_pieces(p, &local_alpha, &w, loss.as_ref()));
+        }
+        let via_parts = combine(&merged, &w, lambda, ds.n());
+        let direct = full_gap(&ds, &alpha, &w, loss.as_ref(), lambda);
+        // v merges in different order than the direct pass: f32 round-off
+        assert!((via_parts.primal - direct.primal).abs() < 1e-6);
+        assert!((via_parts.dual - direct.dual).abs() < 1e-6);
+    }
+}

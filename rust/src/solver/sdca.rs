@@ -1,0 +1,279 @@
+//! Pure-rust SDCA local solver over a CSR partition (Algorithm 2 line 4).
+//!
+//! One epoch = H stochastic coordinate-ascent steps on the local subproblem
+//! G_k^{σ'} (Eq. 8).  The loop maintains `v = w_eff + u` (the subproblem's
+//! current local margin source, u = (σ'/λn) A^T Δα) so each step is one
+//! sparse dot + one sparse axpy over the sampled row — the memory-access
+//! pattern the paper's C++ worker has, and the hot path of the whole system
+//! (see micro_hotpath bench + EXPERIMENTS.md §Perf).
+
+use super::LocalSolver;
+use crate::data::partition::Partition;
+use crate::loss::{Loss, LossKind};
+use crate::util::rng::Pcg64;
+
+pub struct SdcaSolver {
+    part: Partition,
+    loss: Box<dyn Loss>,
+    /// loss kind for the devirtualized fast path (§Perf: the epoch's inner
+    /// loop pays a virtual call per coordinate step otherwise)
+    loss_kind: LossKind,
+    /// local dual variables α_[k]
+    alpha: Vec<f32>,
+    /// precomputed row ‖x_i‖²
+    sqnorms: Vec<f32>,
+    /// λ·n with n the GLOBAL sample count
+    lam_n: f64,
+    /// σ' — subproblem difficulty
+    sigma_prime: f64,
+    /// γ — Algorithm 2 line 5: the *retained* dual update is α += γΔα
+    /// (the epoch itself walks full steps; the returned Δw is unscaled and
+    /// the server applies its own γ, keeping w = (1/λn)Aα globally).
+    gamma: f64,
+    rng: Pcg64,
+    /// reused margin-source buffer (d)
+    v: Vec<f32>,
+    /// α snapshot at epoch start (for the γ-scaling of line 5)
+    alpha_pre: Vec<f32>,
+}
+
+impl SdcaSolver {
+    pub fn new(
+        part: Partition,
+        loss: LossKind,
+        lambda: f64,
+        n_global: usize,
+        sigma_prime: f64,
+        gamma: f64,
+        rng: Pcg64,
+    ) -> SdcaSolver {
+        let n_local = part.n_local();
+        let d = part.features.n_cols;
+        let sqnorms = part.features.row_sqnorms();
+        SdcaSolver {
+            part,
+            loss: loss.instantiate(),
+            loss_kind: loss,
+            alpha: vec![0.0; n_local],
+            sqnorms,
+            lam_n: lambda * n_global as f64,
+            sigma_prime,
+            gamma,
+            rng,
+            v: vec![0.0; d],
+            alpha_pre: vec![0.0; n_local],
+        }
+    }
+
+    /// Run one epoch over an explicit coordinate schedule (shared with the
+    /// PJRT path for the cross-solver equivalence test).
+    pub fn solve_epoch_with_schedule(&mut self, w_eff: &[f32], idx: &[i32]) -> Vec<f32> {
+        debug_assert_eq!(w_eff.len(), self.v.len());
+        let scale = (self.sigma_prime / self.lam_n) as f32;
+        let c = self.sigma_prime / self.lam_n;
+        self.v.copy_from_slice(w_eff);
+        self.alpha_pre.copy_from_slice(&self.alpha);
+        match self.loss_kind {
+            // §Perf: monomorphized square-loss inner loop — the closed-form
+            // step inlines into the sparse dot/axpy, no virtual call per
+            // coordinate (≈1.4x epoch throughput; see EXPERIMENTS.md §Perf).
+            LossKind::Square => {
+                for &ii in idx {
+                    let i = ii as usize;
+                    let z = self.part.features.row_dot(i, &self.v);
+                    let delta = (self.part.labels[i] as f64 - self.alpha[i] as f64 - z)
+                        / (1.0 + c * self.sqnorms[i] as f64);
+                    if delta != 0.0 {
+                        self.alpha[i] += delta as f32;
+                        self.part
+                            .features
+                            .row_axpy(i, scale * delta as f32, &mut self.v);
+                    }
+                }
+            }
+            _ => {
+                for &ii in idx {
+                    let i = ii as usize;
+                    let z = self.part.features.row_dot(i, &self.v);
+                    let delta = self.loss.cd_step(
+                        self.alpha[i] as f64,
+                        self.part.labels[i] as f64,
+                        z,
+                        self.sqnorms[i] as f64,
+                        c,
+                    );
+                    if delta != 0.0 {
+                        self.alpha[i] += delta as f32;
+                        self.part
+                            .features
+                            .row_axpy(i, scale * delta as f32, &mut self.v);
+                    }
+                }
+            }
+        }
+        // line 5: retained dual state is α_pre + γΔα
+        let g = self.gamma as f32;
+        if g != 1.0 {
+            for (a, &pre) in self.alpha.iter_mut().zip(&self.alpha_pre) {
+                *a = pre + g * (*a - pre);
+            }
+        }
+        // u = v - w_eff = (σ'/λn) A^T Δα  ⇒  Δw = u / σ' (unscaled; the
+        // server applies its γ on aggregation, line 10)
+        let inv_sigma = 1.0 / self.sigma_prime as f32;
+        self.v
+            .iter()
+            .zip(w_eff)
+            .map(|(&vi, &wi)| (vi - wi) * inv_sigma)
+            .collect()
+    }
+
+    /// Draw a fresh uniform schedule of length h.
+    pub fn draw_schedule(&mut self, h: usize) -> Vec<i32> {
+        let mut idx = vec![0i32; h];
+        self.rng.fill_indices(&mut idx, self.part.n_local() as u32);
+        idx
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    pub fn set_alpha(&mut self, alpha: &[f32]) {
+        assert_eq!(alpha.len(), self.alpha.len());
+        self.alpha.copy_from_slice(alpha);
+    }
+
+    pub fn lam_n(&self) -> f64 {
+        self.lam_n
+    }
+
+    pub fn sigma_prime(&self) -> f64 {
+        self.sigma_prime
+    }
+}
+
+impl LocalSolver for SdcaSolver {
+    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> Vec<f32> {
+        let idx = self.draw_schedule(h);
+        self.solve_epoch_with_schedule(w_eff, &idx)
+    }
+
+    fn alpha(&self) -> &[f32] {
+        &self.alpha
+    }
+
+    fn n_local(&self) -> usize {
+        self.part.n_local()
+    }
+
+    fn dim(&self) -> usize {
+        self.part.features.n_cols
+    }
+
+    fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    fn objective_pieces(&self, w: &[f32]) -> crate::solver::objective::ObjectivePieces {
+        crate::solver::objective::partition_pieces(&self.part, &self.alpha, w, self.loss.as_ref())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition::partition_rows, synthetic, synthetic::Preset};
+    use crate::linalg::dense;
+
+    fn solver(h_seed: u64) -> SdcaSolver {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 256;
+        spec.d = 400;
+        let ds = synthetic::generate(&spec, 3);
+        let parts = partition_rows(&ds, 1, None);
+        SdcaSolver::new(
+            parts.into_iter().next().unwrap(),
+            LossKind::Square,
+            0.01,
+            256,
+            1.0,
+            1.0,
+            Pcg64::new(h_seed),
+        )
+    }
+
+    #[test]
+    fn delta_w_is_scaled_transpose_matvec() {
+        let mut s = solver(1);
+        let w = vec![0.0f32; 400];
+        let alpha_before = s.alpha().to_vec();
+        let dw = s.solve_epoch(&w, 300);
+        let dalpha: Vec<f32> = s
+            .alpha()
+            .iter()
+            .zip(&alpha_before)
+            .map(|(a, b)| a - b)
+            .collect();
+        let mut expect = vec![0.0f32; 400];
+        s.partition().features.t_matvec(&dalpha, &mut expect);
+        for e in &mut expect {
+            *e /= s.lam_n() as f32;
+        }
+        let diff: f64 = dw
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| ((a - b) as f64).abs())
+            .fold(0.0, f64::max);
+        assert!(diff < 1e-5, "max diff {diff}");
+    }
+
+    #[test]
+    fn epoch_increases_local_dual_objective() {
+        let mut s = solver(2);
+        let w = vec![0.01f32; 400];
+        let a0 = s.alpha().to_vec();
+        let g0 = local_dual_objective(&s, &a0, &w);
+        s.solve_epoch(&w, 500);
+        let g1 = local_dual_objective(&s, &s.alpha().to_vec(), &w);
+        assert!(g1 > g0, "G went {g0} -> {g1}");
+    }
+
+    /// G_k^{σ'} up to constants: Σ -φ*(-α_i) - λn·w·u - σ'λn/2 ‖u‖², with
+    /// u = (1/λn) A^T (α - α0) and α0 = 0 at construction.
+    fn local_dual_objective(s: &SdcaSolver, alpha: &[f32], w: &[f32]) -> f64 {
+        let p = s.partition();
+        let mut u = vec![0.0f32; w.len()];
+        p.features.t_matvec(alpha, &mut u);
+        let lam_n = s.lam_n();
+        for x in &mut u {
+            *x /= lam_n as f32;
+        }
+        let mut conj = 0.0;
+        for i in 0..p.n_local() {
+            conj += alpha[i] as f64 * p.labels[i] as f64
+                - 0.5 * (alpha[i] as f64) * (alpha[i] as f64);
+        }
+        conj - lam_n * dense::dot(w, &u) - s.sigma_prime() * lam_n / 2.0 * dense::norm2_sq(&u)
+    }
+
+    #[test]
+    fn schedule_reproducible_across_solvers() {
+        let mut a = solver(7);
+        let mut b = solver(7);
+        assert_eq!(a.draw_schedule(64), b.draw_schedule(64));
+    }
+
+    #[test]
+    fn zero_h_is_noop() {
+        let mut s = solver(3);
+        let w = vec![0.0f32; 400];
+        let dw = s.solve_epoch(&w, 0);
+        assert!(dw.iter().all(|&x| x == 0.0));
+        assert!(s.alpha().iter().all(|&a| a == 0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! drawn by `gen`; on failure it retries with progressively "smaller"
+//! regenerated inputs (generator-driven shrinking) and reports the seed so
+//! the case is replayable.
+
+use crate::util::rng::Pcg64;
+
+/// Size hint passed to generators: shrink attempts re-generate with smaller
+/// sizes, which for most generators (vec length, value magnitude) yields a
+/// simpler counterexample.
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+/// Run a property over random cases.  Panics with the failing seed + case.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64, Size) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut root = Pcg64::with_stream(seed, 0x7E57);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng, Size(64));
+        if prop(&input) {
+            continue;
+        }
+        // shrink: regenerate with smaller size hints from the same seed
+        let mut smallest = input;
+        for sz in [32usize, 16, 8, 4, 2, 1] {
+            let mut rng = Pcg64::new(case_seed);
+            let candidate = gen(&mut rng, Size(sz));
+            if !prop(&candidate) {
+                smallest = candidate;
+            }
+        }
+        panic!(
+            "property failed (case {case}, seed {case_seed:#x}):\n  input: {smallest:?}\n\
+             replay: forall({case_seed:#x}, 1, ...)"
+        );
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Size;
+    use crate::util::rng::Pcg64;
+
+    pub fn f32_vec(rng: &mut Pcg64, sz: Size) -> Vec<f32> {
+        let n = 1 + rng.next_below(sz.0.max(1) as u32 * 4) as usize;
+        (0..n).map(|_| (rng.next_normal() as f32) * 3.0).collect()
+    }
+
+    pub fn sparse_pattern(rng: &mut Pcg64, sz: Size, dim: usize) -> Vec<u32> {
+        let n = rng.next_below((sz.0.min(dim)).max(1) as u32) as usize;
+        let mut idx: Vec<u32> = (0..dim as u32).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(n);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        forall(1, 50, |rng, sz| gens::f32_vec(rng, sz), |v| !v.is_empty());
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(
+                2,
+                50,
+                |rng, sz| gens::f32_vec(rng, sz),
+                |v| v.len() < 3, // will fail
+            );
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_size() {
+        let mut rng = Pcg64::new(3);
+        let v = gens::f32_vec(&mut rng, Size(1));
+        assert!(v.len() <= 4);
+        let p = gens::sparse_pattern(&mut rng, Size(8), 100);
+        assert!(p.len() <= 8);
+        assert!(p.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed getters, defaults, and a generated `--help` listing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Declarative flag spec used for help text + validation.
+#[derive(Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    /// true = bare boolean switch (`--verbose`), consumes no value.
+    pub is_switch: bool,
+}
+
+impl FlagSpec {
+    pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> FlagSpec {
+        FlagSpec {
+            name,
+            help,
+            default: Some(default),
+            is_switch: false,
+        }
+    }
+
+    pub fn req(name: &'static str, help: &'static str) -> FlagSpec {
+        FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+        }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+        FlagSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+        }
+    }
+}
+
+/// Parsed command line.
+pub struct Args {
+    /// `--key value` / `--key=value` pairs (bare `--flag` maps to "true").
+    pub opts: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    pub pos: Vec<String>,
+    specs: Vec<FlagSpec>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]) against the given specs.
+    /// Unknown `--keys` are rejected so typos fail fast.
+    pub fn parse(raw: &[String], specs: &[FlagSpec]) -> Result<Args> {
+        let mut opts = BTreeMap::new();
+        let mut pos = Vec::new();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key.as_str())
+                    .with_context(|| format!("unknown flag --{key}\n{}", Self::help_text(specs)))?;
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if spec.is_switch {
+                    "true".to_string()
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap().clone()
+                } else {
+                    bail!("flag --{key} expects a value");
+                };
+                opts.insert(key, val);
+            } else {
+                pos.push(a.clone());
+            }
+        }
+        Ok(Args {
+            opts,
+            pos,
+            specs: specs.to_vec(),
+        })
+    }
+
+    pub fn help_text(specs: &[FlagSpec]) -> String {
+        let mut s = String::from("flags:\n");
+        for sp in specs {
+            let d = sp
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", sp.name, sp.help, d));
+        }
+        s
+    }
+
+    fn raw(&self, key: &str) -> Option<String> {
+        if let Some(v) = self.opts.get(key) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == key)
+            .and_then(|s| s.default.map(|d| d.to_string()))
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<String> {
+        self.raw(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.raw(key)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self.get_str(key)?;
+        s.parse::<T>()
+            .map_err(|e| anyhow!("flag --{key}={s}: {e}"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(
+            self.raw(key).as_deref(),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    /// Comma-separated list of T.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let s = self.get_str(key)?;
+        s.split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.trim()
+                    .parse::<T>()
+                    .map_err(|e| anyhow!("flag --{key} item {p}: {e}"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self, i: usize, what: &str) -> Result<&str> {
+        self.pos
+            .get(i)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing positional arg {i}: {what}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec::opt("workers", "number of workers", "4"),
+            FlagSpec::opt("gamma", "step scale", "0.5"),
+            FlagSpec::switch("verbose", "chatty"),
+            FlagSpec::opt("ks", "list", "2,4,8"),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = Args::parse(
+            &sv(&["--workers", "8", "--gamma=0.25", "--verbose", "pos0"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.get::<usize>("workers").unwrap(), 8);
+        assert_eq!(a.get::<f64>("gamma").unwrap(), 0.25);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(0, "cmd").unwrap(), "pos0");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get::<usize>("workers").unwrap(), 4);
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.get_list::<usize>("ks").unwrap(), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let a = Args::parse(&sv(&["--workers", "abc"]), &specs()).unwrap();
+        assert!(a.get::<usize>("workers").is_err());
+    }
+}

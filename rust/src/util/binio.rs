@@ -1,0 +1,223 @@
+//! Minimal binary wire codec (little-endian), serde-free.
+//!
+//! Used by the TCP transport and by the byte-accounting in the network
+//! model: `encoded_len` of a message is *exactly* what the simulator charges
+//! to the α-β cost model, so simulated and real byte counts agree.
+
+use anyhow::{bail, Result};
+
+/// Append-only encoder over a byte buffer.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Encoder {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32_slice(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-based decoder; every read is bounds-checked (a malformed frame
+/// yields an error, never a panic).
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Decoder { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "decode underrun: need {} bytes at {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.get_bytes()?)?)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// All bytes consumed? (frame completeness check)
+    pub fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u32(0xDEADBEEF);
+        e.put_u64(u64::MAX - 3);
+        e.put_f32(-1.5);
+        e.put_f64(std::f64::consts::PI);
+        e.put_str("straggler");
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.get_u8().unwrap(), 7);
+        assert_eq!(d.get_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(d.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.get_f32().unwrap(), -1.5);
+        assert_eq!(d.get_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.get_str().unwrap(), "straggler");
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let mut e = Encoder::new();
+        e.put_f32_slice(&[1.0, -2.0, 3.5]);
+        e.put_u32_slice(&[9, 8, 7, 6]);
+        let buf = e.finish();
+        let mut d = Decoder::new(&buf);
+        assert_eq!(d.get_f32_vec().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(d.get_u32_vec().unwrap(), vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn underrun_is_error_not_panic() {
+        let buf = [1u8, 2];
+        let mut d = Decoder::new(&buf);
+        assert!(d.get_u32().is_err());
+    }
+
+    #[test]
+    fn truncated_slice_is_error() {
+        let mut e = Encoder::new();
+        e.put_f32_slice(&[1.0, 2.0]);
+        let mut buf = e.finish();
+        buf.truncate(buf.len() - 2);
+        let mut d = Decoder::new(&buf);
+        assert!(d.get_f32_vec().is_err());
+    }
+}

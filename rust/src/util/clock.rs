@@ -1,0 +1,152 @@
+//! Time abstraction: the same protocol code runs against a *virtual* clock
+//! (discrete-event simulation — deterministic time axes for the figures)
+//! or the wall clock (thread / TCP runtimes).
+//!
+//! All times are `f64` seconds.  Simulated time never goes backwards.
+
+use std::time::Instant;
+
+/// Read-only clock handle passed to protocol code for timestamping.
+pub trait Clock {
+    /// Current time, in seconds since an arbitrary epoch.
+    fn now(&self) -> f64;
+}
+
+/// Wall clock backed by `std::time::Instant`.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Manually advanced virtual clock (owned by the DES event loop).
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+
+    /// Advance to `t`; panics on time travel (a DES ordering bug).
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t >= self.now - 1e-12,
+            "virtual clock moved backwards: {} -> {}",
+            self.now,
+            t
+        );
+        self.now = self.now.max(t);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+}
+
+/// Simple cumulative stopwatch for profiling sections of the hot path.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: f64,
+    count: u64,
+}
+
+impl Stopwatch {
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.total += t0.elapsed().as_secs_f64();
+        self.count += 1;
+        r
+    }
+
+    pub fn add(&mut self, secs: f64) {
+        self.total += secs;
+        self.count += 1;
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        c.advance_to(1.5);
+        c.advance_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn virtual_clock_rejects_time_travel() {
+        let mut c = VirtualClock::new();
+        c.advance_to(2.0);
+        c.advance_to(1.0);
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.add(0.5);
+        sw.add(1.5);
+        assert_eq!(sw.total_secs(), 2.0);
+        assert_eq!(sw.count(), 2);
+        assert_eq!(sw.mean_secs(), 1.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny CSV writer for bench/experiment outputs (quoting only when needed).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// In-memory CSV table; `save` writes atomically (tmp + rename).
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format a mixed row of display-ables.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&v);
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header
+                .iter()
+                .map(|c| Self::escape(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                r.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("csv.tmp");
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(self.to_string().as_bytes())?;
+        f.sync_all()?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_and_quoting() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "hello, \"world\"".into()]);
+        let s = w.to_string();
+        assert_eq!(s, "a,b\n1,\"hello, \"\"world\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let mut w = CsvWriter::new(&["x"]);
+        w.rowf(&[&1.25f64]);
+        let p = std::env::temp_dir().join("acpd_csv_test.csv");
+        w.save(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "x\n1.25\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

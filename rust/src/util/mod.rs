@@ -1,0 +1,11 @@
+//! Small self-contained substrates: RNG, clocks, wire codec, CSV, CLI args.
+//!
+//! The build is fully offline with only `xla` + `anyhow` available, so
+//! everything that would normally come from `rand`, `serde`, `clap` or
+//! `csv` is implemented here from scratch (and tested like a real library).
+
+pub mod args;
+pub mod binio;
+pub mod clock;
+pub mod csv;
+pub mod rng;

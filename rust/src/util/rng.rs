@@ -1,0 +1,227 @@
+//! PCG-XSH-RR 64/32 pseudo-random number generator (O'Neill 2014).
+//!
+//! Deterministic, splittable (each worker derives an independent stream from
+//! a seed + stream id), and shared semantics with the python path: the
+//! coordinate schedules fed to the AOT HLO artifacts are drawn with this
+//! generator on the rust side, so the PJRT path and the pure-rust path walk
+//! *identical* index streams (the cross-solver equivalence test relies on
+//! this).
+
+/// PCG-XSH-RR 64/32: 64-bit state, 64-bit stream selector, 32-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Seeded generator on stream 0.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0)
+    }
+
+    /// Independent stream: generators with the same seed but different
+    /// `stream` ids produce uncorrelated sequences (distinct LCG increments).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator (e.g. per-worker) — hashes the tag into both
+    /// state and stream so children are mutually independent.
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg64::with_stream(s, tag.wrapping_add(0xDA3E39CB94B95BDB))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire rejection).
+    #[inline]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (bound as u64);
+            let l = m as u32;
+            if l >= bound || l >= (bound.wrapping_neg() % bound) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of entropy.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped: keeps
+    /// the generator allocation-free and branch-simple).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Log-normal with given log-mean / log-sigma (background-load jitter).
+    pub fn next_lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.next_normal()).exp()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times).
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Fill `out` with uniform indices below `bound` (coordinate schedules).
+    pub fn fill_indices(&mut self, out: &mut [i32], bound: u32) {
+        for v in out.iter_mut() {
+            *v = self.next_below(bound) as i32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-like power-law sample over `[0, n)` with exponent `a > 1`
+    /// (approximate inverse-CDF; used for feature popularity in the
+    /// synthetic text-like datasets).
+    pub fn next_zipf(&mut self, n: usize, a: f64) -> usize {
+        let u = self.next_f64().max(1e-12);
+        let x = ((n as f64).powf(1.0 - a) * u + (1.0 - u)).powf(1.0 / (1.0 - a));
+        (x.floor() as usize).min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_reference_values() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(xs, ys);
+        let mut c = Pcg64::new(43);
+        assert_ne!(xs[0], c.next_u32());
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_unbiasedish() {
+        let mut r = Pcg64::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.next_below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "bias: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn floats_in_unit_interval() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.next_f32();
+            assert!((0.0..1.0).contains(&g));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::with_stream(42, 1);
+        let mut b = Pcg64::with_stream(42, 2);
+        let same = (0..1000).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 5);
+    }
+
+    #[test]
+    fn split_children_differ() {
+        let mut root = Pcg64::new(9);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Pcg64::new(11);
+        let n = 50_000;
+        let low = (0..n).filter(|_| r.next_zipf(1000, 1.5) < 10).count();
+        assert!(low as f64 > 0.3 * n as f64, "zipf not head-heavy: {low}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Property-based invariants across modules, via the in-tree mini
+//! property-testing harness (`acpd::testing::forall`).
+
+use acpd::filter::{filter_topk, FilterScratch};
+use acpd::linalg::sparse::SparseVec;
+use acpd::linalg::topk;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, ToServerMsg, ToWorkerMsg, UpdateMsg};
+use acpd::testing::{forall, gens, Size};
+use acpd::util::binio::{Decoder, Encoder};
+use acpd::util::rng::Pcg64;
+
+#[test]
+fn prop_filter_conserves_and_dominates() {
+    forall(
+        0xF117E4,
+        200,
+        |rng, sz| {
+            let v = gens::f32_vec(rng, sz);
+            let k = 1 + rng.next_below(v.len() as u32) as usize;
+            (v, k)
+        },
+        |(v, k)| {
+            let mut work = v.clone();
+            let mut scratch = FilterScratch::default();
+            let f = filter_topk(&mut work, *k, &mut scratch);
+            // conservation
+            let mut recon = work.clone();
+            f.add_into(&mut recon, 1.0);
+            if recon != *v {
+                return false;
+            }
+            // budget
+            if f.nnz() > *k {
+                return false;
+            }
+            // dominance
+            let min_kept = f.val.iter().map(|x| x.abs()).fold(f32::INFINITY, f32::min);
+            let max_left = work.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+            f.nnz() == 0 || min_kept >= max_left
+        },
+    );
+}
+
+#[test]
+fn prop_quickselect_matches_sort() {
+    forall(
+        0x5E1EC7,
+        300,
+        |rng, sz| {
+            let v = gens::f32_vec(rng, sz);
+            let k = 1 + rng.next_below(v.len() as u32) as usize;
+            (v, k)
+        },
+        |(v, k)| {
+            let mut scratch = Vec::new();
+            let got = topk::kth_largest(v, *k, &mut scratch);
+            let mut s = v.clone();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            got == s[*k - 1]
+        },
+    );
+}
+
+#[test]
+fn prop_sparsevec_codec_roundtrip() {
+    forall(
+        0xC0DEC,
+        200,
+        |rng, sz| {
+            let dim = 8 + rng.next_below(sz.0 as u32 * 50 + 1) as usize;
+            let idx = gens::sparse_pattern(rng, Size(sz.0.min(dim)), dim);
+            let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+            SparseVec::new(dim, idx, val)
+        },
+        |sv| {
+            let mut e = Encoder::new();
+            sv.encode(&mut e);
+            let buf = e.finish();
+            if buf.len() != sv.wire_bytes() {
+                return false;
+            }
+            match SparseVec::decode(&mut Decoder::new(&buf)) {
+                Ok(back) => back == *sv,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_messages_roundtrip() {
+    forall(
+        0x3355A6E,
+        150,
+        |rng, sz| {
+            let dim = 4 + rng.next_below(sz.0 as u32 * 20 + 1) as usize;
+            let idx = gens::sparse_pattern(rng, Size(sz.0.min(dim)), dim);
+            let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+            let update = UpdateMsg::from_sparse(
+                rng.next_below(64),
+                rng.next_u64(),
+                SparseVec::new(dim, idx, val),
+            );
+            let dense: Vec<f32> = (0..dim).map(|_| rng.next_normal() as f32).collect();
+            let delta = DeltaMsg {
+                worker: rng.next_below(64),
+                server_round: rng.next_u64(),
+                shutdown: rng.next_f64() < 0.5,
+                delta: if rng.next_f64() < 0.5 {
+                    ModelDelta::from_dense(&dense)
+                } else {
+                    ModelDelta::Dense(dense)
+                },
+            };
+            (update, delta)
+        },
+        |(update, delta)| {
+            let u2 = ToServerMsg::decode(&ToServerMsg::Update(update.clone()).encode());
+            let d2 = ToWorkerMsg::decode(&ToWorkerMsg::Delta(delta.clone()).encode());
+            matches!(u2, Ok(ToServerMsg::Update(u)) if u == *update)
+                && matches!(d2, Ok(ToWorkerMsg::Delta(d)) if d == *delta)
+        },
+    );
+}
+
+#[test]
+fn prop_decoder_never_panics_on_garbage() {
+    // fuzz the frame decoders with random bytes: errors allowed, panics not
+    forall(
+        0xBADF00D,
+        500,
+        |rng, sz| {
+            let n = rng.next_below(sz.0 as u32 * 4 + 2) as usize;
+            (0..n).map(|_| rng.next_u32() as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            let _ = ToServerMsg::decode(bytes);
+            let _ = ToWorkerMsg::decode(bytes);
+            let _ = SparseVec::decode(&mut Decoder::new(bytes));
+            true // surviving without panic IS the property
+        },
+    );
+}
+
+#[test]
+fn prop_rng_streams_reproducible() {
+    forall(
+        0x4249,
+        100,
+        |rng, _| (rng.next_u64(), rng.next_below(1 << 20) as u64),
+        |(seed, stream)| {
+            let mut a = Pcg64::with_stream(*seed, *stream);
+            let mut b = Pcg64::with_stream(*seed, *stream);
+            (0..64).all(|_| a.next_u64() == b.next_u64())
+        },
+    );
+}
+
+#[test]
+fn prop_model_delta_encoding_picks_min() {
+    forall(
+        0x3C0DE,
+        150,
+        |rng, sz| {
+            let d = 16 + rng.next_below(sz.0 as u32 * 30 + 1) as usize;
+            let density = rng.next_f64();
+            (0..d)
+                .map(|_| {
+                    if rng.next_f64() < density {
+                        rng.next_normal() as f32
+                    } else {
+                        0.0
+                    }
+                })
+                .collect::<Vec<f32>>()
+        },
+        |dense| {
+            let chosen = ModelDelta::from_dense(dense);
+            let alt = match &chosen {
+                ModelDelta::Sparse(_) => ModelDelta::Dense(dense.clone()),
+                ModelDelta::Dense(_) => ModelDelta::Sparse(SparseVec::from_dense(dense)),
+            };
+            // chosen encoding is no larger than the alternative
+            chosen.wire_bytes() <= alt.wire_bytes()
+                // and reconstructs identically
+                && {
+                    let mut a = vec![0.0f32; dense.len()];
+                    let mut b = vec![0.0f32; dense.len()];
+                    chosen.add_into(&mut a);
+                    alt.add_into(&mut b);
+                    a == b
+                }
+        },
+    );
+}

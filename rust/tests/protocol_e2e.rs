@@ -1,0 +1,219 @@
+//! Protocol-level invariants verified through whole simulated runs.
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::data::Dataset;
+use acpd::engine::EngineConfig;
+use acpd::linalg::dense;
+use acpd::network::NetworkModel;
+
+fn ds(seed: u64) -> Dataset {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = 400;
+    spec.d = 800;
+    synthetic::generate(&spec, seed)
+}
+
+/// w_server must equal (1/λn) Aᵀα at every full barrier when ρ = 1
+/// (no filtering): the primal-dual relation, Eq. 5.
+#[test]
+fn primal_dual_relation_dense() {
+    let ds = ds(1);
+    let mut cfg = EngineConfig::acpd(4, 2, 5, 1e-2);
+    cfg.rho_d = 0; // dense
+    cfg.h = 300;
+    cfg.outer_rounds = 6;
+    let out = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 3);
+    // residuals must be identically zero in dense mode
+    assert!(out.final_residual.iter().all(|&r| r == 0.0));
+    let mut w_of_alpha = vec![0.0f32; ds.d()];
+    ds.features.t_matvec(&out.final_alpha, &mut w_of_alpha);
+    let lam_n = (1e-2 * ds.n() as f64) as f32;
+    for w in &mut w_of_alpha {
+        *w /= lam_n;
+    }
+    let max_diff = out
+        .final_w
+        .iter()
+        .zip(&w_of_alpha)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "primal-dual relation broken: {max_diff}");
+}
+
+/// With filtering (ρ < 1), the error-feedback residuals account exactly for
+/// the difference: w_server + Σ_k γ·residual_k == γ·(1/λn) Aᵀ Δα? — more
+/// precisely  w + γ·Σ residual == (1/λn) Aᵀα  (mass conservation).
+#[test]
+fn mass_conservation_with_filtering() {
+    let ds = ds(2);
+    let mut cfg = EngineConfig::acpd(4, 2, 5, 1e-2);
+    cfg.rho_d = 37; // aggressive filtering
+    cfg.h = 300;
+    cfg.outer_rounds = 6;
+    let out = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 5);
+    assert!(dense::norm2_sq(&out.final_residual) > 0.0, "expected residual mass");
+    let mut w_of_alpha = vec![0.0f32; ds.d()];
+    ds.features.t_matvec(&out.final_alpha, &mut w_of_alpha);
+    let lam_n = (1e-2 * ds.n() as f64) as f32;
+    for w in &mut w_of_alpha {
+        *w /= lam_n;
+    }
+    let gamma = cfg.gamma as f32;
+    let max_diff = (0..ds.d())
+        .map(|j| (out.final_w[j] + gamma * out.final_residual[j] - w_of_alpha[j]).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "conservation broken: {max_diff}");
+}
+
+/// Staleness stays ≤ T−1 for every (B, T) combination, under stragglers.
+#[test]
+fn staleness_bound_sweep() {
+    let ds = ds(3);
+    for (b, t) in [(1usize, 2usize), (1, 5), (2, 5), (3, 10), (2, 20)] {
+        let mut cfg = EngineConfig::acpd(4, b, t, 1e-2);
+        cfg.h = 100;
+        cfg.outer_rounds = 8;
+        let net = NetworkModel::lan().with_straggler(4, 0, 13.0);
+        let out = acpd::sim::run(&ds, &cfg, &net, 7);
+        assert!(
+            out.stats.max_staleness <= (t - 1) as u64,
+            "B={b} T={t}: staleness {} > {}",
+            out.stats.max_staleness,
+            t - 1
+        );
+    }
+}
+
+/// Fast workers participate more often than the straggler (q_k ordering),
+/// yet every worker participates at least once per outer round.
+#[test]
+fn participation_rates_reflect_straggler() {
+    let ds = ds(4);
+    let mut cfg = EngineConfig::acpd(4, 2, 10, 1e-2);
+    cfg.h = 100;
+    cfg.outer_rounds = 12;
+    // compute must dominate the 1ms link latency for sigma to matter on
+    // this tiny test problem
+    let mut net = NetworkModel::lan().with_straggler(4, 2, 8.0);
+    net.flop_time = 2e-6;
+    let out = acpd::sim::run(&ds, &cfg, &net, 9);
+    let q = &out.stats.participation;
+    for (k, &qk) in q.iter().enumerate() {
+        if k != 2 {
+            assert!(
+                qk > q[2],
+                "worker {k} (q={qk:.3}) should participate more than straggler (q={:.3})",
+                q[2]
+            );
+        }
+        // at least the full barriers: >= 1/T of rounds
+        assert!(qk >= 1.0 / cfg.period as f64 - 1e-9, "q[{k}] = {qk}");
+    }
+}
+
+/// Message sizes respect the ρd budget exactly: mean uplink bytes/round/
+/// worker ≈ 8·ρd + headers, far below dense 4d.
+#[test]
+fn byte_budget_respected() {
+    let ds = ds(5);
+    let rho_d = 50usize;
+    let mut cfg = EngineConfig::acpd(4, 4, 5, 1e-2);
+    cfg.rho_d = rho_d;
+    cfg.h = 200;
+    cfg.outer_rounds = 5;
+    let out = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 11);
+    let per_round_per_worker = out.history.mean_bytes_up_per_round() / 4.0;
+    let budget = (8 * rho_d + 64) as f64;
+    assert!(
+        per_round_per_worker <= budget,
+        "bytes/round/worker {per_round_per_worker} > budget {budget}"
+    );
+    // and far below what a dense message would cost (4d payload + headers)
+    let dense_wire = (4 * ds.d() + 32) as f64;
+    assert!(
+        per_round_per_worker < dense_wire / 5.0,
+        "{per_round_per_worker} not << dense {dense_wire}"
+    );
+}
+
+/// Ablation of the paper's §III-B2 practical variant: with error feedback
+/// the filtered-out mass is recovered in later rounds; dropping it instead
+/// loses optimization progress at aggressive ρ.
+#[test]
+fn error_feedback_beats_dropping() {
+    let ds = ds(8);
+    let mut with_fb = EngineConfig::acpd(4, 4, 5, 1e-2);
+    with_fb.rho_d = 20; // very aggressive compression
+    with_fb.h = 400;
+    with_fb.outer_rounds = 20;
+    let mut without_fb = with_fb.clone();
+    without_fb.error_feedback = false;
+    let a = acpd::sim::run(&ds, &with_fb, &NetworkModel::lan(), 3);
+    let b = acpd::sim::run(&ds, &without_fb, &NetworkModel::lan(), 3);
+    assert!(
+        a.history.last_gap() < b.history.last_gap(),
+        "feedback {:.3e} should beat dropping {:.3e}",
+        a.history.last_gap(),
+        b.history.last_gap()
+    );
+    // dropping leaves no residual by construction
+    assert!(b.final_residual.iter().all(|&r| r == 0.0));
+}
+
+/// All shipped configs must parse, validate and load data.
+#[test]
+fn shipped_configs_are_valid() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "toml").unwrap_or(false) {
+            seen += 1;
+            let cfg = acpd::config::ExperimentConfig::from_file(&path)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            // engine must validate against its own preset's n
+            let n = match &cfg.data {
+                acpd::config::schema::DataSource::Preset(p) => p.spec().n,
+                acpd::config::schema::DataSource::Libsvm(_) => 1_000_000,
+            };
+            cfg.engine.validate(n).unwrap();
+        }
+    }
+    assert!(seen >= 3, "expected >= 3 shipped configs, found {seen}");
+}
+
+/// Determinism across identical runs, and sensitivity to the seed.
+#[test]
+fn deterministic_given_seed() {
+    let ds = ds(6);
+    let mut cfg = EngineConfig::acpd(4, 2, 5, 1e-2);
+    cfg.h = 150;
+    cfg.outer_rounds = 4;
+    let a = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 42);
+    let b = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 42);
+    assert_eq!(a.final_w, b.final_w);
+    assert_eq!(a.stats.bytes_up, b.stats.bytes_up);
+    let c = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 43);
+    assert_ne!(a.final_w, c.final_w);
+}
+
+/// The generalization sanity check: the trained model actually classifies
+/// the synthetic concept well above chance.
+#[test]
+fn trained_model_classifies() {
+    let ds = ds(7);
+    let mut cfg = EngineConfig::acpd(4, 2, 10, 1e-2);
+    cfg.h = 600;
+    cfg.outer_rounds = 20;
+    cfg.target_gap = 1e-5;
+    let out = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), 13);
+    let mut correct = 0usize;
+    for i in 0..ds.n() {
+        let z = ds.features.row_dot(i, &out.final_w);
+        if (z >= 0.0) == (ds.labels[i] > 0.0) {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / ds.n() as f64;
+    assert!(acc > 0.75, "train accuracy only {acc:.3}");
+}

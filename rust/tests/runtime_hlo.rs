@@ -1,0 +1,173 @@
+//! Integration: the AOT python->HLO->PJRT path against the pure-rust solver.
+//!
+//! These tests require `make artifacts` (the `test` shape variant).  They
+//! are the load-bearing proof that L1 (Pallas) / L2 (JAX) / L3 (rust)
+//! compose: identical coordinate streams must produce identical iterates.
+
+use std::sync::Arc;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::data::{partition::partition_rows, Dataset};
+use acpd::loss::LossKind;
+use acpd::runtime::{find_artifacts_dir, ArtifactRuntime, PjrtSolver};
+use acpd::solver::objective::{combine, partition_pieces, ObjectivePieces};
+use acpd::solver::sdca::SdcaSolver;
+use acpd::solver::LocalSolver;
+use acpd::util::rng::Pcg64;
+
+fn dense_ds() -> Dataset {
+    // matches the `test` artifact variant: nk=256, d=128 over K=4
+    let mut spec = Preset::DenseTest.spec();
+    spec.n = 1024;
+    synthetic::generate(&spec, 9)
+}
+
+fn runtime() -> Arc<ArtifactRuntime> {
+    let dir = find_artifacts_dir().expect("artifacts/ missing — run `make artifacts`");
+    Arc::new(ArtifactRuntime::load_variant(dir, "test").expect("load artifacts"))
+}
+
+#[test]
+fn pjrt_solver_matches_rust_solver() {
+    let ds = dense_ds();
+    let parts = partition_rows(&ds, 4, Some(1));
+    let rt = runtime();
+    let (lambda, sigma, gamma) = (1e-2, 1.0, 0.5);
+
+    for part in parts.into_iter().take(2) {
+        let seed = 1000 + part.worker as u64;
+        let mut rust_solver = SdcaSolver::new(
+            part.clone(),
+            LossKind::Square,
+            lambda,
+            ds.n(),
+            sigma,
+            gamma,
+            Pcg64::new(seed),
+        );
+        let mut pjrt_solver = PjrtSolver::new(
+            rt.clone(),
+            part,
+            lambda,
+            ds.n(),
+            sigma,
+            gamma,
+            Pcg64::new(seed),
+        )
+        .expect("construct PjrtSolver");
+
+        let mut w_eff = vec![0.0f32; ds.d()];
+        for round in 0..3 {
+            let dw_rust = rust_solver.solve_epoch(&w_eff, 256);
+            let dw_pjrt = pjrt_solver.solve_epoch(&w_eff, 256);
+            let max_dw = dw_rust
+                .iter()
+                .zip(&dw_pjrt)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let max_alpha = rust_solver
+                .alpha()
+                .iter()
+                .zip(pjrt_solver.alpha())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_dw < 2e-4 && max_alpha < 2e-4,
+                "round {round}: solvers diverged (dw {max_dw}, alpha {max_alpha})"
+            );
+            // move w a bit so later rounds exercise non-zero centring
+            for (w, &d) in w_eff.iter_mut().zip(&dw_rust) {
+                *w += 0.5 * d;
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_objectives_match_host_math() {
+    let ds = dense_ds();
+    let parts = partition_rows(&ds, 4, Some(2));
+    let rt = runtime();
+    let loss = LossKind::Square.instantiate();
+    let lambda = 1e-2;
+
+    let part = parts.into_iter().next().unwrap();
+    let mut pjrt_solver = PjrtSolver::new(
+        rt,
+        part.clone(),
+        lambda,
+        ds.n(),
+        1.0,
+        1.0,
+        Pcg64::new(5),
+    )
+    .unwrap();
+    let w: Vec<f32> = (0..ds.d()).map(|j| ((j * 13 % 7) as f32 - 3.0) * 0.02).collect();
+    let _ = pjrt_solver.solve_epoch(&w, 256); // non-trivial alpha
+
+    let (loss_dev, conj_dev, v_dev) = pjrt_solver.objective_pieces(&w).unwrap();
+    let host = partition_pieces(&part, pjrt_solver.alpha(), &w, loss.as_ref());
+    assert!(
+        (loss_dev - host.loss_sum).abs() < 1e-2 * host.loss_sum.abs().max(1.0),
+        "loss {loss_dev} vs {}",
+        host.loss_sum
+    );
+    assert!(
+        (conj_dev - host.conj_sum).abs() < 1e-2 * host.conj_sum.abs().max(1.0),
+        "conj {conj_dev} vs {}",
+        host.conj_sum
+    );
+    let max_v = v_dev
+        .iter()
+        .zip(&host.v)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_v < 1e-3, "v mismatch {max_v}");
+
+    // and the assembled gap is sane
+    let rep = combine(
+        &ObjectivePieces {
+            loss_sum: loss_dev,
+            conj_sum: conj_dev,
+            v: v_dev,
+        },
+        &w,
+        lambda,
+        ds.n() / 4, // single partition acting as the world
+    );
+    assert!(rep.gap.is_finite());
+}
+
+#[test]
+fn topk_filter_artifact_roundtrip() {
+    let rt = runtime();
+    let d = 128;
+    let mut rng = Pcg64::new(3);
+    let w: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+    let k = 16.0f32;
+    let outs = rt
+        .execute(
+            "topk_filter",
+            "test",
+            &[
+                acpd::runtime::pjrt::literal_f32(&w, &[d as i64]).unwrap(),
+                acpd::runtime::pjrt::literal_f32(&[k], &[1]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let filt = acpd::runtime::pjrt::to_f32_vec(&outs[0]).unwrap();
+    let resid = acpd::runtime::pjrt::to_f32_vec(&outs[1]).unwrap();
+    // conservation + budget, same invariants as the rust filter
+    for i in 0..d {
+        assert_eq!(filt[i] + resid[i], w[i]);
+    }
+    let nnz = filt.iter().filter(|&&x| x != 0.0).count();
+    assert!(nnz <= 16, "nnz {nnz}");
+    // rust filter picks the same support
+    let mut w2 = w.clone();
+    let mut scratch = acpd::filter::FilterScratch::default();
+    let sv = acpd::filter::filter_topk(&mut w2, 16, &mut scratch);
+    for &i in &sv.idx {
+        assert!(filt[i as usize] != 0.0, "support mismatch at {i}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Runtime parity: the DES simulator, the thread runtime and the TCP
+//! runtime drive the SAME protocol state machines — for synchronous
+//! configurations (B = K) the commit composition is identical, so all
+//! three must converge to (numerically) the same model.
+
+use std::net::TcpListener;
+use std::thread;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::data::Dataset;
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+
+fn ds() -> Dataset {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = 300;
+    spec.d = 600;
+    synthetic::generate(&spec, 77)
+}
+
+fn sync_cfg() -> EngineConfig {
+    let mut cfg = EngineConfig::cocoa_plus(3, 1e-2);
+    cfg.h = 300;
+    cfg.outer_rounds = 20;
+    cfg
+}
+
+#[test]
+fn sim_and_threads_agree_for_synchronous_config() {
+    let ds = ds();
+    let cfg = sync_cfg();
+    let seed = 5;
+    let sim = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    // same seeds + same commit composition => same final gap up to the
+    // float-summation order inside a commit
+    let gs = sim.history.last_gap();
+    let gt = thr.history.last_gap();
+    assert!(
+        (gs - gt).abs() <= 1e-6 * (1.0 + gs.abs().max(gt.abs())) || (gs - gt).abs() < 1e-8,
+        "sim gap {gs:.6e} != threads gap {gt:.6e}"
+    );
+    let max_w_diff = sim
+        .final_w
+        .iter()
+        .zip(&thr.final_w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_w_diff < 1e-4, "final w diverged: {max_w_diff}");
+}
+
+#[test]
+fn tcp_matches_threads_for_synchronous_config() {
+    let ds = ds();
+    let cfg = sync_cfg();
+    let seed = 5;
+
+    // pick a free port
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let (ds2, cfg2, addr2) = (ds.clone(), cfg.clone(), addr.clone());
+    let server =
+        thread::spawn(move || acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2).unwrap());
+    thread::sleep(std::time::Duration::from_millis(150));
+    let mut workers = Vec::new();
+    for wid in 0..cfg.workers {
+        let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
+        workers.push(thread::spawn(move || {
+            acpd::transport::run_worker(&addr_w, wid, &ds_w, &cfg_w, &NetworkModel::lan(), seed)
+                .unwrap();
+        }));
+    }
+    let tcp = server.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    let gt = thr.history.last_gap();
+    let gc = tcp.history.last_gap();
+    assert!(
+        (gt - gc).abs() <= 1e-6 * (1.0 + gt.abs().max(gc.abs())) || (gt - gc).abs() < 1e-8,
+        "threads gap {gt:.6e} != tcp gap {gc:.6e}"
+    );
+    // identical byte accounting: the wire format is shared
+    assert_eq!(thr.bytes_up, tcp.bytes_up, "uplink byte accounting differs");
+    assert_eq!(thr.bytes_down, tcp.bytes_down, "downlink byte accounting differs");
+}
+
+#[test]
+fn acpd_converges_on_all_three_runtimes() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(3, 2, 5, 1e-2);
+    cfg.h = 300;
+    cfg.outer_rounds = 10;
+    let seed = 6;
+
+    let sim = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    assert!(sim.history.last_gap() < 1e-3, "sim {:.3e}", sim.history.last_gap());
+
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    assert!(thr.history.last_gap() < 1e-3, "threads {:.3e}", thr.history.last_gap());
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let (ds2, cfg2, addr2) = (ds.clone(), cfg.clone(), addr.clone());
+    let server =
+        thread::spawn(move || acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2).unwrap());
+    thread::sleep(std::time::Duration::from_millis(150));
+    let mut workers = Vec::new();
+    for wid in 0..cfg.workers {
+        let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
+        workers.push(thread::spawn(move || {
+            acpd::transport::run_worker(&addr_w, wid, &ds_w, &cfg_w, &NetworkModel::lan(), seed)
+                .unwrap();
+        }));
+    }
+    let tcp = server.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert!(tcp.history.last_gap() < 1e-3, "tcp {:.3e}", tcp.history.last_gap());
+}
