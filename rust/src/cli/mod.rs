@@ -8,6 +8,7 @@ use acpd::data::synthetic::Preset;
 use acpd::data::{libsvm, Dataset};
 use acpd::engine::{Algorithm, EngineConfig};
 use acpd::network::{JitterModel, NetworkModel};
+use acpd::sweep::{self, SweepSpec};
 use acpd::util::args::{Args, FlagSpec};
 
 const USAGE: &str = "\
@@ -19,6 +20,8 @@ commands:
   info          presets, artifact status, build info
   gen-data      write a synthetic dataset in LIBSVM format
   train         run one experiment (sim or threads runtime)
+  sweep         run a scenario matrix (algos x scenarios x presets x rho_d
+                x seeds) in parallel and print ranked comparison tables
   server        TCP coordinator for a multi-process cluster
   worker        TCP worker process
   theory        Theorem 1/2 quantities for a config (predicted rounds)
@@ -35,6 +38,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "info" => cmd_info(),
         "gen-data" => cmd_gen_data(rest),
         "train" => cmd_train(rest),
+        "sweep" => cmd_sweep(rest),
         "server" => cmd_server(rest),
         "worker" => cmd_worker(rest),
         "theory" => cmd_theory(rest),
@@ -270,6 +274,132 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     if !x.out.is_empty() {
         history.to_csv().save(&x.out)?;
         eprintln!("wrote {}", x.out);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(raw: &[String]) -> Result<()> {
+    let specs = [
+        FlagSpec::opt("config", "TOML file with a [sweep] section (flags override)", ""),
+        FlagSpec::opt("algos", "comma list: acpd,cocoa,cocoa+,disdca", "acpd,cocoa,cocoa+"),
+        FlagSpec::opt(
+            "scenarios",
+            "comma list: lan | straggler:<sigma> | jittery-cloud",
+            "lan,straggler:10,jittery-cloud",
+        ),
+        FlagSpec::opt("presets", "comma list of synthetic presets", "dense-test"),
+        FlagSpec::opt("rho-ds", "comma list of kept coords per message (0=dense)", "0"),
+        FlagSpec::opt("seeds", "comma list of run seeds", "1,2,3"),
+        FlagSpec::opt("workers", "K", "4"),
+        FlagSpec::opt("group", "B (acpd cells)", "2"),
+        FlagSpec::opt("period", "T (acpd cells)", "5"),
+        FlagSpec::opt("h", "local iterations per round", "512"),
+        FlagSpec::opt("lambda", "L2 regularization", "1e-3"),
+        FlagSpec::opt("loss", "square|logistic|smooth-hinge", "square"),
+        FlagSpec::opt("outer-rounds", "L per cell", "20"),
+        FlagSpec::opt("target-gap", "stop cells at this duality gap (0=off)", "0"),
+        FlagSpec::opt("eval-every", "gap eval cadence (rounds)", "1"),
+        FlagSpec::opt("data-seed", "dataset seed", "42"),
+        FlagSpec::opt("n", "override preset sample count (0=preset)", "0"),
+        FlagSpec::opt("d", "override preset dimension (0=preset)", "0"),
+        FlagSpec::opt("threads", "thread-pool size (0=all cores)", "0"),
+        FlagSpec::opt("out-dir", "write cells.csv / ranked.csv / report.json here", ""),
+        FlagSpec::switch("quiet", "suppress the ranked table"),
+        FlagSpec::switch("help", "show flags"),
+    ];
+    let a = Args::parse(raw, &specs)?;
+    if a.get_bool("help") {
+        print!("{}", Args::help_text(&specs));
+        return Ok(());
+    }
+    let config_path = a.get_str("config")?;
+    let mut spec = if config_path.is_empty() {
+        SweepSpec::default()
+    } else {
+        SweepSpec::from_file(&config_path)?
+    };
+    // a flag overrides the config only when explicitly given; with no config
+    // file the flag defaults fully define the spec
+    let explicit = |key: &str| a.opts.contains_key(key) || config_path.is_empty();
+    if explicit("algos") {
+        spec.algorithms = sweep::parse_algorithms(&a.get_str("algos")?)?;
+    }
+    if explicit("scenarios") {
+        spec.scenarios = sweep::parse_scenarios(&a.get_str("scenarios")?)?;
+    }
+    if explicit("presets") {
+        spec.presets = sweep::parse_presets(&a.get_str("presets")?)?;
+    }
+    if explicit("rho-ds") {
+        spec.rho_ds = a.get_list("rho-ds")?;
+    }
+    if explicit("seeds") {
+        spec.seeds = a.get_list("seeds")?;
+    }
+    if explicit("workers") {
+        spec.workers = a.get("workers")?;
+    }
+    if explicit("group") {
+        spec.group = a.get("group")?;
+    }
+    if explicit("period") {
+        spec.period = a.get("period")?;
+    }
+    if explicit("h") {
+        spec.h = a.get("h")?;
+    }
+    if explicit("lambda") {
+        spec.lambda = a.get("lambda")?;
+    }
+    if explicit("loss") {
+        let name = a.get_str("loss")?;
+        spec.loss = acpd::loss::LossKind::from_name(&name)
+            .with_context(|| format!("unknown loss {name:?}"))?;
+    }
+    if explicit("outer-rounds") {
+        spec.outer_rounds = a.get("outer-rounds")?;
+    }
+    if explicit("target-gap") {
+        spec.target_gap = a.get("target-gap")?;
+    }
+    if explicit("eval-every") {
+        spec.eval_every = a.get("eval-every")?;
+    }
+    if explicit("data-seed") {
+        spec.data_seed = a.get("data-seed")?;
+    }
+    if explicit("n") {
+        spec.n_override = a.get("n")?;
+    }
+    if explicit("d") {
+        spec.d_override = a.get("d")?;
+    }
+    if explicit("threads") {
+        spec.threads = a.get("threads")?;
+    }
+
+    let n_cells = spec.cells().len();
+    let threads = spec.effective_threads().min(n_cells.max(1));
+    eprintln!("sweep: {}", spec.describe());
+    eprintln!("sweep: executing {n_cells} cells on {threads} threads...");
+    let t0 = std::time::Instant::now();
+    let report = sweep::run_sweep(&spec)?;
+    eprintln!(
+        "sweep: done in {:.2}s ({} cells)",
+        t0.elapsed().as_secs_f64(),
+        report.cells.len()
+    );
+    if !a.get_bool("quiet") {
+        print!("{}", report.render());
+    }
+    let out_dir = a.get_str("out-dir")?;
+    if !out_dir.is_empty() {
+        let dir = std::path::Path::new(&out_dir);
+        std::fs::create_dir_all(dir)?;
+        report.cells_csv().save(dir.join("cells.csv"))?;
+        report.ranked_csv().save(dir.join("ranked.csv"))?;
+        std::fs::write(dir.join("report.json"), report.to_json())?;
+        eprintln!("wrote {}/cells.csv, ranked.csv, report.json", dir.display());
     }
     Ok(())
 }

@@ -24,6 +24,22 @@
 //! straggler_worker = 0
 //! straggler_factor = 1.0
 //! ```
+//!
+//! Scenario-matrix configs use a separate `[sweep]` section consumed by
+//! [`crate::sweep::SweepSpec::from_toml`] (lists are comma-separated
+//! strings — the TOML subset has no arrays):
+//!
+//! ```toml
+//! [sweep]
+//! algos = "acpd,cocoa,cocoa+"
+//! scenarios = "lan,straggler:10,jittery-cloud"
+//! presets = "rcv1-small"
+//! rho_ds = "0,1000"
+//! seeds = "1,2,3"
+//! workers = 4
+//! target_gap = 1e-4
+//! threads = 0          # 0 = all cores
+//! ```
 
 pub mod schema;
 pub mod toml;

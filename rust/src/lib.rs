@@ -20,8 +20,11 @@
 //! * [`filter`] — top-ρd magnitude filter with error feedback.
 //! * [`protocol`] — Algorithm 1 (server) & Algorithm 2 (worker) state machines.
 //! * [`engine`] — the unified distributed primal-dual engine + baselines.
-//! * [`network`] — α-β network cost model, stragglers, background jitter.
+//! * [`network`] — α-β network cost model, stragglers, background jitter,
+//!   named scenarios (`lan` | `straggler:σ` | `jittery-cloud`).
 //! * [`sim`] — discrete-event cluster simulator (deterministic time axes).
+//! * [`sweep`] — parallel scenario-sweep engine: declarative experiment
+//!   matrices executed on a thread pool, with ranked CSV/JSON reports.
 //! * [`runtime_threads`] — std::thread + mpsc runtime (real concurrency).
 //! * [`transport`] — length-prefixed TCP transport (real multi-process).
 //! * [`runtime`] — PJRT client / artifact manifest / typed executors.
@@ -41,6 +44,7 @@ pub mod runtime;
 pub mod runtime_threads;
 pub mod sim;
 pub mod solver;
+pub mod sweep;
 pub mod testing;
 pub mod transport;
 pub mod util;
@@ -53,6 +57,7 @@ pub mod prelude {
     pub use crate::linalg::{csr::CsrMatrix, sparse::SparseVec};
     pub use crate::loss::LossKind;
     pub use crate::metrics::history::History;
-    pub use crate::network::NetworkModel;
+    pub use crate::network::{NetworkModel, Scenario};
+    pub use crate::sweep::{run_sweep, CellResult, SweepReport, SweepSpec};
     pub use crate::util::rng::Pcg64;
 }

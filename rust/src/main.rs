@@ -4,6 +4,7 @@
 //!   info        show presets, artifact status, build info
 //!   gen-data    write a synthetic dataset in LIBSVM format
 //!   train       run one experiment (sim or threads runtime)
+//!   sweep       run a parallel scenario matrix with ranked reports
 //!   server      TCP coordinator (multi-process real cluster)
 //!   worker      TCP worker process
 //!

@@ -75,6 +75,24 @@ impl NetworkModel {
         }
     }
 
+    /// Paper Fig 3 σ>1 environment as a named scenario: a LAN whose worker 0
+    /// runs `sigma`× slower, in the compute-dominated regime (flop_time high
+    /// enough that the straggler — not the link latency — sets the pace).
+    pub fn straggler_cluster(workers: usize, sigma: f64) -> NetworkModel {
+        let mut m = NetworkModel::lan().with_straggler(workers, 0, sigma);
+        m.flop_time = 2e-7;
+        m
+    }
+
+    /// Paper Fig 5 "real environment": every worker carries background-load
+    /// jitter (shared-tenant cloud), compute-dominated like the straggler
+    /// scenario so the jitter is visible on the time axis.
+    pub fn jittery_cloud() -> NetworkModel {
+        let mut m = NetworkModel::lan().with_jitter(JitterModel::cloud());
+        m.flop_time = 2e-7;
+        m
+    }
+
     /// Paper Fig 3 setup: worker `idx` runs σ× slower than the rest.
     pub fn with_straggler(mut self, workers: usize, idx: usize, sigma: f64) -> NetworkModel {
         let mut s = vec![1.0; workers];
@@ -111,6 +129,72 @@ impl NetworkModel {
         // ±base_dispersion uniform: breaks exact arrival ties
         let disp = 1.0 + self.base_dispersion * (2.0 * rng.next_f64() - 1.0);
         base * slow * jit * disp
+    }
+}
+
+/// A named cluster environment — one axis of the scenario-sweep matrix.
+///
+/// Scenarios are *constructors* for [`NetworkModel`]s: they carry only the
+/// parameters that name the environment (e.g. the straggler σ) and are
+/// instantiated per cell once the worker count is known.  The string forms
+/// (`lan`, `straggler:<sigma>`, `jittery-cloud`) appear in sweep configs,
+/// CLI flags and report rows.
+///
+/// Scenarios model *different machines*, not just different σ: `lan` is
+/// latency-dominated (flop_time 2e-9) while `straggler` and `jittery-cloud`
+/// are compute-dominated (flop_time 2e-7, the regime where σ and jitter are
+/// visible at all — paper Figs 3/5).  Compare algorithms *within* a
+/// scenario column; wall-clock ratios *across* scenario columns also
+/// reflect the regime change, not only the straggler/jitter effect.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// Uniform gigabit LAN (paper Fig 3, σ = 1).
+    Lan,
+    /// Worker 0 runs `sigma`× slower than the rest (paper Fig 3, σ > 1).
+    Straggler { sigma: f64 },
+    /// Background-load jitter on every worker (paper Fig 5 "real env").
+    JitteryCloud,
+}
+
+impl Scenario {
+    /// Stable name used in configs and report rows.
+    pub fn name(&self) -> String {
+        match self {
+            Scenario::Lan => "lan".to_string(),
+            Scenario::Straggler { sigma } => format!("straggler:{sigma}"),
+            Scenario::JitteryCloud => "jittery-cloud".to_string(),
+        }
+    }
+
+    /// Parse `lan` | `straggler` | `straggler:<sigma>` | `jittery-cloud`.
+    pub fn from_name(s: &str) -> Option<Scenario> {
+        match s {
+            "lan" => Some(Scenario::Lan),
+            "jittery-cloud" | "cloud" => Some(Scenario::JitteryCloud),
+            "straggler" => Some(Scenario::Straggler { sigma: 10.0 }),
+            _ => {
+                let sigma: f64 = s.strip_prefix("straggler:")?.parse().ok()?;
+                if sigma >= 1.0 && sigma.is_finite() {
+                    Some(Scenario::Straggler { sigma })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// All parseable scenario spellings (for help/error text).
+    pub fn help_names() -> &'static str {
+        "lan | straggler:<sigma> | jittery-cloud"
+    }
+
+    /// Instantiate the cost model for a `workers`-node cluster.
+    pub fn instantiate(&self, workers: usize) -> NetworkModel {
+        match self {
+            Scenario::Lan => NetworkModel::lan(),
+            Scenario::Straggler { sigma } => NetworkModel::straggler_cluster(workers, *sigma),
+            Scenario::JitteryCloud => NetworkModel::jittery_cloud(),
+        }
     }
 }
 
@@ -159,5 +243,36 @@ mod tests {
     fn no_straggler_out_of_range_panic() {
         let m = NetworkModel::lan().with_straggler(2, 5, 10.0);
         assert_eq!(m.slowdown, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn scenario_names_roundtrip() {
+        let all = [
+            Scenario::Lan,
+            Scenario::Straggler { sigma: 10.0 },
+            Scenario::Straggler { sigma: 2.5 },
+            Scenario::JitteryCloud,
+        ];
+        for s in all {
+            assert_eq!(Scenario::from_name(&s.name()), Some(s.clone()), "{}", s.name());
+        }
+        assert_eq!(
+            Scenario::from_name("straggler"),
+            Some(Scenario::Straggler { sigma: 10.0 })
+        );
+        assert_eq!(Scenario::from_name("nope"), None);
+        assert_eq!(Scenario::from_name("straggler:0.5"), None); // sigma < 1
+        assert_eq!(Scenario::from_name("straggler:abc"), None);
+    }
+
+    #[test]
+    fn scenario_instantiation_matches_named_constructors() {
+        let lan = Scenario::Lan.instantiate(4);
+        assert!(lan.slowdown.is_empty() && lan.jitter.is_none());
+        let st = Scenario::Straggler { sigma: 8.0 }.instantiate(4);
+        assert_eq!(st.slowdown, vec![8.0, 1.0, 1.0, 1.0]);
+        assert!(st.flop_time > lan.flop_time); // compute-dominated regime
+        let cl = Scenario::JitteryCloud.instantiate(4);
+        assert!(cl.jitter.is_some());
     }
 }

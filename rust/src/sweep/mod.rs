@@ -1,0 +1,588 @@
+//! Parallel scenario-sweep engine — the paper's comparison matrices in one
+//! call.
+//!
+//! A [`SweepSpec`] is a declarative experiment grid: algorithms × network
+//! scenarios × dataset presets × ρd values × seeds.  [`run_sweep`] expands
+//! it into cells, executes the cells concurrently on a `std::thread` pool
+//! (the DES in [`crate::sim`] is deterministic per cell, so results are
+//! bit-identical regardless of thread count or completion order — merging
+//! happens by cell *index*, never by arrival order), and aggregates the
+//! per-cell [`CellResult`]s into ranked comparison tables plus CSV/JSON
+//! reports ([`report::SweepReport`]).
+//!
+//! This is how the paper's Figures 3–5 / Table 1 grids are regenerated in
+//! one command: `acpd sweep` on the CLI, or `examples/paper_figures.rs` for
+//! the exact per-figure grids.
+//!
+//! Example sweep config (`[sweep]` section, TOML subset — lists are
+//! comma-separated strings because the in-tree parser has no arrays):
+//!
+//! ```toml
+//! [sweep]
+//! algos = "acpd,cocoa,cocoa+"
+//! scenarios = "lan,straggler:10,jittery-cloud"
+//! presets = "rcv1-small"
+//! rho_ds = "0,1000"
+//! seeds = "1,2,3"
+//! workers = 4
+//! group = 2
+//! period = 10
+//! h = 10000
+//! lambda = 1e-3
+//! outer_rounds = 50
+//! target_gap = 1e-4
+//! threads = 0          # 0 = all cores
+//! ```
+
+pub mod report;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::{Document, Value};
+use crate::data::synthetic::{self, Preset};
+use crate::data::Dataset;
+use crate::engine::{Algorithm, EngineConfig};
+use crate::loss::LossKind;
+use crate::network::{NetworkModel, Scenario};
+use crate::sim;
+
+pub use report::{RankedRow, SweepReport};
+
+/// Declarative scenario matrix.  The grid axes are the five `Vec` fields;
+/// every other field is a shared knob applied to all cells.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    // ---- grid axes (cross product, expanded in this nesting order) ----
+    pub algorithms: Vec<Algorithm>,
+    pub scenarios: Vec<Scenario>,
+    pub presets: Vec<Preset>,
+    /// Kept coordinates per message; 0 = dense.  Applied to every
+    /// algorithm (baselines with ρd > 0 are the paper's filter ablations).
+    pub rho_ds: Vec<usize>,
+    pub seeds: Vec<u64>,
+    // ---- shared engine knobs ----
+    pub workers: usize,
+    /// B — ACPD group size (baselines ignore it; they wait for all K).
+    pub group: usize,
+    /// T — ACPD barrier period (baselines are synchronous, T = 1).
+    pub period: usize,
+    pub h: usize,
+    pub lambda: f64,
+    pub loss: LossKind,
+    pub outer_rounds: usize,
+    /// Stop each cell once the duality gap falls below this (0 = off);
+    /// also the target for the time-to-target-gap column of the report.
+    pub target_gap: f64,
+    pub eval_every: usize,
+    // ---- dataset knobs ----
+    pub data_seed: u64,
+    /// Override the preset's sample count (0 = preset default).
+    pub n_override: usize,
+    /// Override the preset's dimension (0 = preset default).
+    pub d_override: usize,
+    // ---- execution ----
+    /// Thread-pool size; 0 = all available cores.
+    pub threads: usize,
+}
+
+impl Default for SweepSpec {
+    /// A quick demo matrix: 3 algorithms × 3 scenarios × 3 seeds on the
+    /// small dense preset — 27 cells, a few seconds on a laptop.
+    fn default() -> SweepSpec {
+        SweepSpec {
+            algorithms: vec![Algorithm::Acpd, Algorithm::Cocoa, Algorithm::CocoaPlus],
+            scenarios: vec![
+                Scenario::Lan,
+                Scenario::Straggler { sigma: 10.0 },
+                Scenario::JitteryCloud,
+            ],
+            presets: vec![Preset::DenseTest],
+            rho_ds: vec![0],
+            seeds: vec![1, 2, 3],
+            workers: 4,
+            group: 2,
+            period: 5,
+            h: 512,
+            lambda: 1e-3,
+            loss: LossKind::Square,
+            outer_rounds: 20,
+            target_gap: 0.0,
+            eval_every: 1,
+            data_seed: 42,
+            n_override: 0,
+            d_override: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// One point of the expanded matrix (pre-execution).
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// Position in the expanded grid — the deterministic merge key.
+    pub index: usize,
+    pub algorithm: Algorithm,
+    pub scenario: Scenario,
+    pub preset: Preset,
+    pub rho_d: usize,
+    pub seed: u64,
+}
+
+/// Everything the paper's figures need from one executed cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub index: usize,
+    pub algorithm: String,
+    pub scenario: String,
+    pub preset: String,
+    pub rho_d: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub final_gap: f64,
+    pub rounds: u64,
+    /// First (round, time) at/below `target_gap`; `None` if never reached
+    /// (or no target was set).
+    pub round_to_target: Option<u64>,
+    pub time_to_target: Option<f64>,
+    pub wall_time: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub compute_time: f64,
+    pub comm_time: f64,
+    pub eval_points: usize,
+}
+
+/// A cell bound to its validated engine/network configs (internal).
+struct PreparedCell {
+    cell: CellSpec,
+    engine: EngineConfig,
+    net: NetworkModel,
+    ds_idx: usize,
+}
+
+impl SweepSpec {
+    /// Expand the grid into cells, in deterministic nesting order
+    /// (algorithm, scenario, preset, ρd, seed).
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for &algorithm in &self.algorithms {
+            for scenario in &self.scenarios {
+                for &preset in &self.presets {
+                    for &rho_d in &self.rho_ds {
+                        for &seed in &self.seeds {
+                            out.push(CellSpec {
+                                index: out.len(),
+                                algorithm,
+                                scenario: scenario.clone(),
+                                preset,
+                                rho_d,
+                                seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Engine config for one cell (shared knobs + the cell's grid point).
+    pub fn engine_for(&self, cell: &CellSpec) -> EngineConfig {
+        let mut e = match cell.algorithm {
+            Algorithm::Acpd => {
+                EngineConfig::acpd(self.workers, self.group, self.period, self.lambda)
+            }
+            Algorithm::Cocoa => EngineConfig::cocoa(self.workers, self.lambda),
+            Algorithm::CocoaPlus => EngineConfig::cocoa_plus(self.workers, self.lambda),
+            Algorithm::DisDca => EngineConfig::disdca(self.workers, self.lambda),
+        };
+        e.rho_d = cell.rho_d;
+        e.h = self.h;
+        e.loss = self.loss;
+        e.outer_rounds = self.outer_rounds;
+        e.target_gap = self.target_gap;
+        e.eval_every = self.eval_every;
+        e.seed = cell.seed;
+        e
+    }
+
+    /// Generate the dataset for a preset with the spec's n/d overrides.
+    pub fn materialize(&self, preset: Preset) -> Dataset {
+        let mut s = preset.spec();
+        if self.n_override > 0 {
+            s.n = self.n_override;
+        }
+        if self.d_override > 0 {
+            s.d = self.d_override;
+        }
+        synthetic::generate(&s, self.data_seed)
+    }
+
+    /// Pool size after resolving `threads = 0` to the core count.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+
+    /// One-line description for report headers.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} algos x {} scenarios x {} presets x {} rho_d x {} seeds = {} cells \
+             (K={} B={} T={} H={} lambda={:.1e} loss={} L={} target_gap={})",
+            self.algorithms.len(),
+            self.scenarios.len(),
+            self.presets.len(),
+            self.rho_ds.len(),
+            self.seeds.len(),
+            self.algorithms.len()
+                * self.scenarios.len()
+                * self.presets.len()
+                * self.rho_ds.len()
+                * self.seeds.len(),
+            self.workers,
+            self.group,
+            self.period,
+            self.h,
+            self.lambda,
+            self.loss.name(),
+            self.outer_rounds,
+            self.target_gap,
+        )
+    }
+
+    /// Parse a `[sweep]` section (see module docs for the schema).
+    /// Missing keys keep the [`Default`] values.
+    pub fn from_toml(text: &str) -> Result<SweepSpec> {
+        let doc = Document::parse(text)?;
+        SweepSpec::from_doc(&doc)
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<SweepSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read sweep config {}", path.display()))?;
+        SweepSpec::from_toml(&text)
+    }
+
+    pub fn from_doc(doc: &Document) -> Result<SweepSpec> {
+        let mut s = SweepSpec::default();
+        if let Some(v) = scalar_str(doc, "algos") {
+            s.algorithms = parse_algorithms(&v)?;
+        }
+        if let Some(v) = scalar_str(doc, "scenarios") {
+            s.scenarios = parse_scenarios(&v)?;
+        }
+        if let Some(v) = scalar_str(doc, "presets") {
+            s.presets = parse_presets(&v)?;
+        }
+        if let Some(v) = scalar_str(doc, "rho_ds") {
+            s.rho_ds = parse_list::<usize>(&v).context("sweep.rho_ds")?;
+        }
+        if let Some(v) = scalar_str(doc, "seeds") {
+            s.seeds = parse_list::<u64>(&v).context("sweep.seeds")?;
+        }
+        s.workers = doc.get_i64("sweep", "workers", s.workers as i64) as usize;
+        s.group = doc.get_i64("sweep", "group", s.group as i64) as usize;
+        s.period = doc.get_i64("sweep", "period", s.period as i64) as usize;
+        s.h = doc.get_i64("sweep", "h", s.h as i64) as usize;
+        s.lambda = doc.get_f64("sweep", "lambda", s.lambda);
+        let loss_name = doc.get_str("sweep", "loss", s.loss.name());
+        s.loss = LossKind::from_name(&loss_name)
+            .with_context(|| format!("sweep.loss: unknown loss {loss_name:?}"))?;
+        s.outer_rounds = doc.get_i64("sweep", "outer_rounds", s.outer_rounds as i64) as usize;
+        s.target_gap = doc.get_f64("sweep", "target_gap", s.target_gap);
+        s.eval_every = doc.get_i64("sweep", "eval_every", s.eval_every as i64) as usize;
+        s.data_seed = doc.get_i64("sweep", "data_seed", s.data_seed as i64) as u64;
+        s.n_override = doc.get_i64("sweep", "n", s.n_override as i64) as usize;
+        s.d_override = doc.get_i64("sweep", "d", s.d_override as i64) as usize;
+        s.threads = doc.get_i64("sweep", "threads", s.threads as i64) as usize;
+        Ok(s)
+    }
+}
+
+/// Read a `[sweep]` key as a string whatever scalar type it parsed as
+/// (a single-item list like `seeds = 7` arrives as an Int).
+fn scalar_str(doc: &Document, key: &str) -> Option<String> {
+    doc.get("sweep", key).map(|v| match v {
+        Value::Str(s) => s.clone(),
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => f.to_string(),
+        Value::Bool(b) => b.to_string(),
+    })
+}
+
+/// Comma-separated list of `T` (shared by the CLI and the TOML loader).
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(|p| p.parse::<T>().map_err(|e| anyhow::anyhow!("item {p:?}: {e}")))
+        .collect()
+}
+
+/// Comma-separated list of named values resolved through `from_name`.
+fn parse_named<T>(
+    s: &str,
+    choices: &str,
+    from_name: impl Fn(&str) -> Option<T>,
+) -> Result<Vec<T>> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(|p| from_name(p).with_context(|| format!("unknown name {p:?} ({choices})")))
+        .collect()
+}
+
+pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
+    parse_named(s, "acpd|cocoa|cocoa+|disdca", Algorithm::from_name)
+}
+
+pub fn parse_scenarios(s: &str) -> Result<Vec<Scenario>> {
+    parse_named(s, Scenario::help_names(), Scenario::from_name)
+}
+
+pub fn parse_presets(s: &str) -> Result<Vec<Preset>> {
+    parse_named(s, "see `acpd info` for presets", Preset::from_name)
+}
+
+/// Execute every cell of the matrix on a thread pool and aggregate.
+///
+/// Determinism contract: the report depends only on the spec — never on the
+/// pool size, core count, or cell completion order.  Each cell is an
+/// independent deterministic `sim::run` (its own RNG streams, its own
+/// dataset reference), and results land in a slot keyed by cell index.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    let cells = spec.cells();
+    if cells.is_empty() {
+        bail!("empty sweep: every grid axis needs at least one value");
+    }
+
+    // one dataset per distinct preset, generated up front and shared
+    // read-only by every thread
+    let mut datasets: Vec<(Preset, Dataset)> = Vec::new();
+    for &p in &spec.presets {
+        if datasets.iter().any(|(q, _)| *q == p) {
+            continue;
+        }
+        datasets.push((p, spec.materialize(p)));
+    }
+
+    // bind + validate every cell on the caller's thread so pool workers
+    // can never panic on a bad config
+    let prepared: Vec<PreparedCell> = cells
+        .into_iter()
+        .map(|cell| {
+            let engine = spec.engine_for(&cell);
+            let ds_idx = datasets
+                .iter()
+                .position(|(q, _)| *q == cell.preset)
+                .expect("dataset materialized above");
+            engine.validate(datasets[ds_idx].1.n()).with_context(|| {
+                format!(
+                    "cell {} ({} / {} / {})",
+                    cell.index,
+                    cell.algorithm.name(),
+                    cell.scenario.name(),
+                    cell.preset.spec().name
+                )
+            })?;
+            let net = cell.scenario.instantiate(spec.workers);
+            Ok(PreparedCell {
+                cell,
+                engine,
+                net,
+                ds_idx,
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let threads = spec.effective_threads().min(prepared.len()).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; prepared.len()]);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= prepared.len() {
+                    break;
+                }
+                let pc = &prepared[i];
+                let result = run_cell(pc, &datasets[pc.ds_idx].1);
+                slots.lock().unwrap()[i] = Some(result);
+            });
+        }
+    });
+
+    let results: Vec<CellResult> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every cell index was claimed by the pool"))
+        .collect();
+    Ok(SweepReport::new(spec.describe(), results))
+}
+
+fn run_cell(pc: &PreparedCell, ds: &Dataset) -> CellResult {
+    let out = sim::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+    let (round_to_target, time_to_target) = if pc.engine.target_gap > 0.0 {
+        match out.history.time_to_gap(pc.engine.target_gap) {
+            Some((r, t)) => (Some(r), Some(t)),
+            None => (None, None),
+        }
+    } else {
+        (None, None)
+    };
+    CellResult {
+        index: pc.cell.index,
+        algorithm: pc.cell.algorithm.name().to_string(),
+        scenario: pc.cell.scenario.name(),
+        preset: pc.cell.preset.spec().name.to_string(),
+        rho_d: pc.cell.rho_d,
+        seed: pc.cell.seed,
+        workers: pc.engine.workers,
+        final_gap: out.history.last_gap(),
+        rounds: out.stats.rounds,
+        round_to_target,
+        time_to_target,
+        wall_time: out.stats.wall_time,
+        bytes_up: out.stats.bytes_up,
+        bytes_down: out.stats.bytes_down,
+        compute_time: out.stats.compute_time,
+        comm_time: out.stats.comm_time,
+        eval_points: out.history.points.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_expand_in_deterministic_order() {
+        let mut spec = SweepSpec::default();
+        spec.algorithms = vec![Algorithm::Acpd, Algorithm::CocoaPlus];
+        spec.scenarios = vec![Scenario::Lan, Scenario::Straggler { sigma: 4.0 }];
+        spec.presets = vec![Preset::DenseTest];
+        spec.rho_ds = vec![0, 32];
+        spec.seeds = vec![1, 2];
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 1 * 2 * 2);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // seed is the fastest-varying axis, algorithm the slowest
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+        assert_eq!(cells[0].rho_d, 0);
+        assert_eq!(cells[2].rho_d, 32);
+        assert_eq!(cells[0].algorithm, Algorithm::Acpd);
+        assert_eq!(cells[8].algorithm, Algorithm::CocoaPlus);
+    }
+
+    #[test]
+    fn engine_for_respects_algorithm_geometry() {
+        let spec = SweepSpec {
+            workers: 8,
+            group: 3,
+            period: 7,
+            ..SweepSpec::default()
+        };
+        let cells = SweepSpec {
+            algorithms: vec![Algorithm::Acpd, Algorithm::Cocoa],
+            ..spec.clone()
+        }
+        .cells();
+        let acpd_cell = cells.iter().find(|c| c.algorithm == Algorithm::Acpd).unwrap();
+        let cocoa_cell = cells.iter().find(|c| c.algorithm == Algorithm::Cocoa).unwrap();
+        let a = spec.engine_for(acpd_cell);
+        assert_eq!((a.group, a.period), (3, 7));
+        assert!((a.sigma_prime - a.gamma * 3.0).abs() < 1e-12);
+        let c = spec.engine_for(cocoa_cell);
+        assert_eq!((c.group, c.period), (8, 1)); // synchronous baseline
+        assert_eq!(c.seed, cocoa_cell.seed);
+    }
+
+    #[test]
+    fn toml_sweep_section_parses() {
+        let spec = SweepSpec::from_toml(
+            r#"
+[sweep]
+algos = "acpd,cocoa+"
+scenarios = "lan,straggler:4"
+presets = "dense-test"
+rho_ds = "0,32"
+seeds = "7,8"
+workers = 4
+group = 2
+period = 5
+h = 256
+lambda = 1e-3
+outer_rounds = 12
+target_gap = 5e-3
+n = 512
+d = 1000
+threads = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(spec.algorithms, vec![Algorithm::Acpd, Algorithm::CocoaPlus]);
+        assert_eq!(
+            spec.scenarios,
+            vec![Scenario::Lan, Scenario::Straggler { sigma: 4.0 }]
+        );
+        assert_eq!(spec.presets, vec![Preset::DenseTest]);
+        assert_eq!(spec.rho_ds, vec![0, 32]);
+        assert_eq!(spec.seeds, vec![7, 8]);
+        assert_eq!(spec.cells().len(), 16);
+        assert_eq!(spec.threads, 2);
+        assert_eq!((spec.n_override, spec.d_override), (512, 1000));
+        assert!((spec.target_gap - 5e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn toml_single_int_lists_accepted() {
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 7\nrho_ds = 64\n").unwrap();
+        assert_eq!(spec.seeds, vec![7]);
+        assert_eq!(spec.rho_ds, vec![64]);
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        assert!(SweepSpec::from_toml("[sweep]\nalgos = \"sgd\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\nscenarios = \"mars\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\npresets = \"nope\"\n").is_err());
+        assert!(parse_list::<usize>("1,x").is_err());
+    }
+
+    #[test]
+    fn empty_sweep_is_an_error() {
+        let spec = SweepSpec {
+            seeds: vec![],
+            ..SweepSpec::default()
+        };
+        assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn materialize_applies_overrides() {
+        let spec = SweepSpec {
+            n_override: 300,
+            d_override: 77,
+            ..SweepSpec::default()
+        };
+        let ds = spec.materialize(Preset::DenseTest);
+        assert_eq!((ds.n(), ds.d()), (300, 77));
+    }
+}

@@ -1,0 +1,459 @@
+//! Sweep aggregation: ranked comparison tables and CSV/JSON reports.
+//!
+//! Everything here is a pure function of the ordered [`CellResult`] list, so
+//! a report is byte-identical across repeated runs and across thread-pool
+//! sizes (the sweep merges cells by index before aggregation).  Wall-clock
+//! measurements of the sweep itself are deliberately excluded.
+
+use std::fmt::Write as _;
+
+use crate::util::csv::CsvWriter;
+
+use super::CellResult;
+
+/// One row of the ranked comparison table: an algorithm's seed-averaged
+/// standing inside one (scenario, preset, ρd) column of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankedRow {
+    pub scenario: String,
+    pub preset: String,
+    pub rho_d: usize,
+    /// 1-based rank within the (scenario, preset, ρd) group.
+    pub rank: usize,
+    pub algorithm: String,
+    /// Number of seeds averaged.
+    pub seeds: usize,
+    pub mean_final_gap: f64,
+    /// Seed-mean time to the target gap; `None` if any seed missed it
+    /// (a run that never converges must not look fast).
+    pub mean_time_to_target: Option<f64>,
+    pub mean_wall_time: f64,
+    pub mean_bytes_up: f64,
+}
+
+/// Aggregated output of one sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    /// `SweepSpec::describe()` of the grid that produced this.
+    pub description: String,
+    /// Every executed cell, ordered by grid index.
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepReport {
+    pub fn new(description: String, cells: Vec<CellResult>) -> SweepReport {
+        SweepReport { description, cells }
+    }
+
+    /// Per-cell CSV (one row per matrix cell) — the per-figure data file.
+    pub fn cells_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "index",
+            "algorithm",
+            "scenario",
+            "preset",
+            "rho_d",
+            "seed",
+            "workers",
+            "final_gap",
+            "rounds",
+            "round_to_target",
+            "time_to_target_s",
+            "wall_time_s",
+            "bytes_up",
+            "bytes_down",
+            "compute_time_s",
+            "comm_time_s",
+            "eval_points",
+        ]);
+        for c in &self.cells {
+            let rtt = c
+                .round_to_target
+                .map(|r| r.to_string())
+                .unwrap_or_default();
+            let ttt = c
+                .time_to_target
+                .map(|t| t.to_string())
+                .unwrap_or_default();
+            w.rowf(&[
+                &c.index,
+                &c.algorithm,
+                &c.scenario,
+                &c.preset,
+                &c.rho_d,
+                &c.seed,
+                &c.workers,
+                &c.final_gap,
+                &c.rounds,
+                &rtt,
+                &ttt,
+                &c.wall_time,
+                &c.bytes_up,
+                &c.bytes_down,
+                &c.compute_time,
+                &c.comm_time,
+                &c.eval_points,
+            ]);
+        }
+        w
+    }
+
+    /// The ranked comparison table: group cells by (scenario, preset, ρd),
+    /// average each algorithm over seeds, and rank algorithms within each
+    /// group by time-to-target (algorithms that missed the target on any
+    /// seed rank last, ordered by final gap).
+    pub fn ranked(&self) -> Vec<RankedRow> {
+        // first-appearance-ordered grouping => deterministic output
+        let mut groups: Vec<((String, String, usize), Vec<&CellResult>)> = Vec::new();
+        for c in &self.cells {
+            let key = (c.scenario.clone(), c.preset.clone(), c.rho_d);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(c),
+                None => groups.push((key, vec![c])),
+            }
+        }
+        let mut out = Vec::new();
+        for ((scenario, preset, rho_d), members) in groups {
+            let mut algos: Vec<(String, Vec<&CellResult>)> = Vec::new();
+            for c in members {
+                match algos.iter_mut().find(|(a, _)| *a == c.algorithm) {
+                    Some((_, v)) => v.push(c),
+                    None => algos.push((c.algorithm.clone(), vec![c])),
+                }
+            }
+            let mut rows: Vec<RankedRow> = algos
+                .into_iter()
+                .map(|(algorithm, cells)| {
+                    let n = cells.len() as f64;
+                    let mean = |f: &dyn Fn(&CellResult) -> f64| {
+                        cells.iter().map(|&c| f(c)).sum::<f64>() / n
+                    };
+                    let all_hit = cells.iter().all(|c| c.time_to_target.is_some());
+                    let mean_time_to_target = if all_hit && !cells.is_empty() {
+                        Some(
+                            cells
+                                .iter()
+                                .map(|c| c.time_to_target.unwrap())
+                                .sum::<f64>()
+                                / n,
+                        )
+                    } else {
+                        None
+                    };
+                    RankedRow {
+                        scenario: scenario.clone(),
+                        preset: preset.clone(),
+                        rho_d,
+                        rank: 0, // assigned after sorting
+                        algorithm,
+                        seeds: cells.len(),
+                        mean_final_gap: mean(&|c| c.final_gap),
+                        mean_time_to_target,
+                        mean_wall_time: mean(&|c| c.wall_time),
+                        mean_bytes_up: mean(&|c| c.bytes_up as f64),
+                    }
+                })
+                .collect();
+            rows.sort_by(|a, b| {
+                let ka = a.mean_time_to_target.unwrap_or(f64::INFINITY);
+                let kb = b.mean_time_to_target.unwrap_or(f64::INFINITY);
+                ka.partial_cmp(&kb)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| {
+                        a.mean_final_gap
+                            .partial_cmp(&b.mean_final_gap)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .then_with(|| a.algorithm.cmp(&b.algorithm))
+            });
+            for (i, r) in rows.iter_mut().enumerate() {
+                r.rank = i + 1;
+            }
+            out.extend(rows);
+        }
+        out
+    }
+
+    /// Ranked table as CSV.
+    pub fn ranked_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "scenario",
+            "preset",
+            "rho_d",
+            "rank",
+            "algorithm",
+            "seeds",
+            "mean_final_gap",
+            "mean_time_to_target_s",
+            "mean_wall_time_s",
+            "mean_bytes_up",
+        ]);
+        for r in self.ranked() {
+            let ttt = r
+                .mean_time_to_target
+                .map(|t| t.to_string())
+                .unwrap_or_default();
+            w.rowf(&[
+                &r.scenario,
+                &r.preset,
+                &r.rho_d,
+                &r.rank,
+                &r.algorithm,
+                &r.seeds,
+                &r.mean_final_gap,
+                &ttt,
+                &r.mean_wall_time,
+                &r.mean_bytes_up,
+            ]);
+        }
+        w
+    }
+
+    /// Full report as a JSON document (cells + ranked table).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        let _ = write!(s, "  \"description\": {},\n", json_str(&self.description));
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"index\": {}, \"algorithm\": {}, \"scenario\": {}, \"preset\": {}, \
+                 \"rho_d\": {}, \"seed\": {}, \"workers\": {}, \"final_gap\": {}, \
+                 \"rounds\": {}, \"round_to_target\": {}, \"time_to_target_s\": {}, \
+                 \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
+                 \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}}}{}\n",
+                c.index,
+                json_str(&c.algorithm),
+                json_str(&c.scenario),
+                json_str(&c.preset),
+                c.rho_d,
+                c.seed,
+                c.workers,
+                json_f64(c.final_gap),
+                c.rounds,
+                c.round_to_target
+                    .map(|r| r.to_string())
+                    .unwrap_or_else(|| "null".to_string()),
+                c.time_to_target
+                    .map(json_f64)
+                    .unwrap_or_else(|| "null".to_string()),
+                json_f64(c.wall_time),
+                c.bytes_up,
+                c.bytes_down,
+                json_f64(c.compute_time),
+                json_f64(c.comm_time),
+                c.eval_points,
+                if i + 1 < self.cells.len() { "," } else { "" },
+            );
+        }
+        s.push_str("  ],\n  \"ranked\": [\n");
+        let ranked = self.ranked();
+        for (i, r) in ranked.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"scenario\": {}, \"preset\": {}, \"rho_d\": {}, \"rank\": {}, \
+                 \"algorithm\": {}, \"seeds\": {}, \"mean_final_gap\": {}, \
+                 \"mean_time_to_target_s\": {}, \"mean_wall_time_s\": {}, \
+                 \"mean_bytes_up\": {}}}{}\n",
+                json_str(&r.scenario),
+                json_str(&r.preset),
+                r.rho_d,
+                r.rank,
+                json_str(&r.algorithm),
+                r.seeds,
+                json_f64(r.mean_final_gap),
+                r.mean_time_to_target
+                    .map(json_f64)
+                    .unwrap_or_else(|| "null".to_string()),
+                json_f64(r.mean_wall_time),
+                json_f64(r.mean_bytes_up),
+                if i + 1 < ranked.len() { "," } else { "" },
+            );
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Human-readable ranked table, one block per matrix column.
+    pub fn render(&self) -> String {
+        let mut out = format!("sweep: {}\n", self.description);
+        let mut last_key: Option<(String, String, usize)> = None;
+        for r in self.ranked() {
+            let key = (r.scenario.clone(), r.preset.clone(), r.rho_d);
+            if last_key.as_ref() != Some(&key) {
+                let rho = if r.rho_d == 0 {
+                    "dense".to_string()
+                } else {
+                    r.rho_d.to_string()
+                };
+                let _ = write!(
+                    out,
+                    "\n[{} | {} | rho_d={}]\n",
+                    r.scenario, r.preset, rho
+                );
+                last_key = Some(key);
+            }
+            let ttt = r
+                .mean_time_to_target
+                .map(|t| format!("{t:.4}s"))
+                .unwrap_or_else(|| "-".to_string());
+            let _ = write!(
+                out,
+                "  #{} {:<8} gap={:<12.3e} t*={:<10} wall={:<10.3} up={:.3} MB ({} seeds)\n",
+                r.rank,
+                r.algorithm,
+                r.mean_final_gap,
+                ttt,
+                r.mean_wall_time,
+                r.mean_bytes_up / 1e6,
+                r.seeds,
+            );
+        }
+        out
+    }
+}
+
+/// JSON string literal with the escapes the report can actually produce.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite floats via shortest-roundtrip Display; non-finite become null.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(
+        index: usize,
+        algorithm: &str,
+        scenario: &str,
+        seed: u64,
+        final_gap: f64,
+        ttt: Option<f64>,
+    ) -> CellResult {
+        CellResult {
+            index,
+            algorithm: algorithm.to_string(),
+            scenario: scenario.to_string(),
+            preset: "dense-test".to_string(),
+            rho_d: 0,
+            seed,
+            workers: 4,
+            final_gap,
+            rounds: 100,
+            round_to_target: ttt.map(|_| 50),
+            time_to_target: ttt,
+            wall_time: 1.0,
+            bytes_up: 1000,
+            bytes_down: 2000,
+            compute_time: 0.7,
+            comm_time: 0.3,
+            eval_points: 10,
+        }
+    }
+
+    fn report() -> SweepReport {
+        SweepReport::new(
+            "test grid".to_string(),
+            vec![
+                cell(0, "acpd", "lan", 1, 1e-4, Some(2.0)),
+                cell(1, "acpd", "lan", 2, 2e-4, Some(4.0)),
+                cell(2, "cocoa+", "lan", 1, 1e-4, Some(5.0)),
+                cell(3, "cocoa+", "lan", 2, 3e-4, Some(7.0)),
+                cell(4, "acpd", "straggler:10", 1, 1e-4, Some(3.0)),
+                cell(5, "acpd", "straggler:10", 2, 1e-4, Some(5.0)),
+                cell(6, "cocoa+", "straggler:10", 1, 1e-3, None),
+                cell(7, "cocoa+", "straggler:10", 2, 2e-3, Some(30.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn ranking_orders_by_time_to_target() {
+        let ranked = report().ranked();
+        assert_eq!(ranked.len(), 4); // 2 scenarios x 2 algorithms
+        let lan: Vec<&RankedRow> = ranked.iter().filter(|r| r.scenario == "lan").collect();
+        assert_eq!(lan[0].algorithm, "acpd");
+        assert_eq!(lan[0].rank, 1);
+        assert!((lan[0].mean_time_to_target.unwrap() - 3.0).abs() < 1e-12);
+        assert_eq!(lan[1].algorithm, "cocoa+");
+        assert_eq!(lan[1].rank, 2);
+    }
+
+    #[test]
+    fn missed_target_ranks_last() {
+        let ranked = report().ranked();
+        let st: Vec<&RankedRow> = ranked
+            .iter()
+            .filter(|r| r.scenario == "straggler:10")
+            .collect();
+        // cocoa+ missed the target on one seed => mean is None => last
+        assert_eq!(st[0].algorithm, "acpd");
+        assert_eq!(st[1].algorithm, "cocoa+");
+        assert!(st[1].mean_time_to_target.is_none());
+    }
+
+    #[test]
+    fn csv_shapes() {
+        let r = report();
+        let cells = r.cells_csv().to_string();
+        assert_eq!(cells.lines().count(), 9); // header + 8 cells
+        assert!(cells.starts_with("index,algorithm,"));
+        let ranked = r.ranked_csv().to_string();
+        assert_eq!(ranked.lines().count(), 5); // header + 4 rows
+        // missed target renders as an empty cell, not "inf"
+        assert!(ranked.lines().any(|l| l.ends_with(",,1,1000") || l.contains(",,")));
+    }
+
+    #[test]
+    fn json_is_balanced_and_null_safe() {
+        let j = report().to_json();
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces"
+        );
+        assert!(j.contains("\"time_to_target_s\": null"));
+        assert!(!j.contains("inf"), "non-finite leaked into JSON");
+        assert!(j.contains("\"ranked\""));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(1.5), "1.5");
+    }
+
+    #[test]
+    fn render_groups_blocks() {
+        let text = report().render();
+        assert!(text.contains("[lan | dense-test | rho_d=dense]"));
+        assert!(text.contains("[straggler:10 | dense-test | rho_d=dense]"));
+        assert!(text.contains("#1 acpd"));
+    }
+}

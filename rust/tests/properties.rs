@@ -1,0 +1,159 @@
+//! Property tests (via `acpd::testing::forall`) for the two mechanisms the
+//! paper's byte accounting stands on:
+//!
+//! 1. the top-ρd filter with error feedback, *iterated across rounds*:
+//!    every round splits its input exactly (kept + residual == input,
+//!    bit-for-bit), and once inputs stop the residual fully drains within
+//!    ceil(d/k) rounds — the filtered-out mass is delayed, never lost and
+//!    never accumulating without bound;
+//!
+//! 2. the `util::binio` wire codec: random `UpdateMsg`/`DeltaMsg` values
+//!    roundtrip exactly, and `wire_bytes()` — the number the simulator
+//!    charges to the α-β cost model — equals the actual encoded length.
+
+use acpd::filter::{filter_topk, FilterScratch};
+use acpd::linalg::sparse::SparseVec;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use acpd::testing::{forall, gens, Size};
+use acpd::util::rng::Pcg64;
+
+#[test]
+fn prop_error_feedback_conserves_mass_across_rounds() {
+    forall(
+        0xEF_0001,
+        80,
+        |rng, sz| {
+            let d = 4 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let k = 1 + rng.next_below(d as u32) as usize;
+            let rounds = 1 + rng.next_below(12) as usize;
+            let stream_seed = rng.next_u64();
+            (d, k, rounds, stream_seed)
+        },
+        |&(d, k, rounds, stream_seed)| {
+            let mut rng = Pcg64::new(stream_seed);
+            let mut resid = vec![0.0f32; d];
+            let mut scratch = FilterScratch::default();
+            for _ in 0..rounds {
+                // new local update, bounded entries
+                let u: Vec<f32> = (0..d).map(|_| (rng.next_f64() as f32) * 2.0 - 1.0).collect();
+                // error feedback: the filter input is update + carried residual
+                let mut delta: Vec<f32> =
+                    resid.iter().zip(&u).map(|(r, x)| r + x).collect();
+                let before = delta.clone();
+                let sent = filter_topk(&mut delta, k, &mut scratch);
+                // budget
+                if sent.nnz() > k {
+                    return false;
+                }
+                // exact per-round conservation: sent + residual == input.
+                // The filter is pure selection (no arithmetic), so adding the
+                // sent coordinates back into the residual must reproduce the
+                // input bit-for-bit.
+                let mut recon = delta.clone();
+                sent.add_into(&mut recon, 1.0);
+                if recon != before {
+                    return false;
+                }
+                resid = delta;
+            }
+            // drain: with no new input, delta == residual each round and the
+            // filter ships >= min(k, nnz) coordinates verbatim, so the
+            // residual must reach exactly zero within ceil(d/k) rounds —
+            // this is the "never grows unboundedly" half of error feedback.
+            let budget = (d + k - 1) / k + 1;
+            for _ in 0..budget {
+                if resid.iter().all(|&x| x == 0.0) {
+                    break;
+                }
+                let _ = filter_topk(&mut resid, k, &mut scratch);
+            }
+            resid.iter().all(|&x| x == 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_residual_dominated_by_sent_coordinates() {
+    // At every round the filter keeps the largest magnitudes: no residual
+    // entry may exceed the smallest sent entry.  Run the *iterated* system
+    // so the property covers error-feedback inputs, not just fresh vectors.
+    forall(
+        0xEF_0002,
+        80,
+        |rng, sz| {
+            let d = 8 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let k = 1 + rng.next_below((d / 2) as u32) as usize;
+            let stream_seed = rng.next_u64();
+            (d, k, stream_seed)
+        },
+        |&(d, k, stream_seed)| {
+            let mut rng = Pcg64::new(stream_seed);
+            let mut resid = vec![0.0f32; d];
+            let mut scratch = FilterScratch::default();
+            for _ in 0..8 {
+                let mut delta: Vec<f32> = resid
+                    .iter()
+                    .map(|r| r + (rng.next_f64() as f32) * 2.0 - 1.0)
+                    .collect();
+                let sent = filter_topk(&mut delta, k, &mut scratch);
+                let min_sent = sent.val.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+                let max_kept = delta.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+                if sent.nnz() > 0 && max_kept > min_sent {
+                    return false;
+                }
+                resid = delta;
+            }
+            true
+        },
+    );
+}
+
+fn random_sparse(rng: &mut Pcg64, sz: Size) -> SparseVec {
+    let dim = 4 + rng.next_below(sz.0 as u32 * 30 + 1) as usize;
+    let idx = gens::sparse_pattern(rng, Size(sz.0.min(dim)), dim);
+    let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+    SparseVec::new(dim, idx, val)
+}
+
+#[test]
+fn prop_update_msg_wire_bytes_match_encoding() {
+    forall(
+        0xB1_0001,
+        200,
+        |rng, sz| {
+            UpdateMsg::from_sparse(rng.next_below(128), rng.next_u64(), random_sparse(rng, sz))
+        },
+        |msg| {
+            let buf = msg.encode();
+            buf.len() == msg.wire_bytes()
+                && matches!(UpdateMsg::decode(&buf), Ok(back) if back == *msg)
+        },
+    );
+}
+
+#[test]
+fn prop_delta_msg_wire_bytes_match_encoding() {
+    forall(
+        0xB1_0002,
+        200,
+        |rng, sz| {
+            let delta = if rng.next_f64() < 0.5 {
+                ModelDelta::Sparse(random_sparse(rng, sz))
+            } else {
+                let d = 1 + rng.next_below(sz.0 as u32 * 10 + 1) as usize;
+                ModelDelta::Dense((0..d).map(|_| rng.next_normal() as f32).collect())
+            };
+            DeltaMsg {
+                worker: rng.next_below(128),
+                server_round: rng.next_u64(),
+                shutdown: rng.next_f64() < 0.5,
+                delta,
+            }
+        },
+        |msg| {
+            let buf = msg.encode();
+            buf.len() == msg.wire_bytes()
+                && matches!(DeltaMsg::decode(&buf), Ok(back) if back == *msg)
+        },
+    );
+}

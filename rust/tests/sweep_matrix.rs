@@ -1,0 +1,117 @@
+//! Sweep-subsystem integration: the scenario matrix must be (a) bit-identical
+//! across thread-pool sizes — the DES is deterministic per cell and the sweep
+//! merges by cell index, so parallelism can never leak into results — and
+//! (b) scientifically right: the straggler column reproduces the paper's
+//! headline (ACPD beats CoCoA+ when one worker is slow) at matrix scale.
+
+use acpd::data::synthetic::Preset;
+use acpd::engine::Algorithm;
+use acpd::loss::LossKind;
+use acpd::network::Scenario;
+use acpd::sweep::{run_sweep, SweepSpec};
+
+/// 2 algorithms x 2 scenarios x 2 seeds on a small rcv1-shaped problem —
+/// the same shape `sim`'s own straggler test pins down, at matrix scale.
+fn matrix_2x2x2() -> SweepSpec {
+    SweepSpec {
+        algorithms: vec![Algorithm::Acpd, Algorithm::CocoaPlus],
+        scenarios: vec![Scenario::Lan, Scenario::Straggler { sigma: 10.0 }],
+        presets: vec![Preset::Rcv1Small],
+        rho_ds: vec![0], // dense messages: isolate the asynchrony axis
+        seeds: vec![7, 8],
+        workers: 4,
+        group: 2,
+        period: 5,
+        h: 512,
+        lambda: 1e-3,
+        loss: LossKind::Square,
+        outer_rounds: 400, // generous cap; cells stop early at target_gap
+        target_gap: 5e-3,
+        eval_every: 1,
+        data_seed: 11,
+        n_override: 512,
+        d_override: 1000,
+        threads: 1,
+    }
+}
+
+#[test]
+fn sweep_identical_across_thread_pool_sizes() {
+    let mut spec = matrix_2x2x2();
+    spec.threads = 1;
+    let serial = run_sweep(&spec).expect("serial sweep");
+    spec.threads = 4;
+    let parallel = run_sweep(&spec).expect("parallel sweep");
+
+    assert_eq!(serial.cells.len(), 8);
+    assert_eq!(
+        serial.cells, parallel.cells,
+        "cell results depend on thread-pool size"
+    );
+    // the rendered artifacts — what lands on disk — must be byte-identical
+    assert_eq!(
+        serial.cells_csv().to_string(),
+        parallel.cells_csv().to_string()
+    );
+    assert_eq!(
+        serial.ranked_csv().to_string(),
+        parallel.ranked_csv().to_string()
+    );
+    assert_eq!(serial.to_json(), parallel.to_json());
+
+    // and a repeated run with the same pool size is identical too
+    let repeat = run_sweep(&spec).expect("repeat sweep");
+    assert_eq!(parallel.cells, repeat.cells);
+
+    // cells come back in grid order regardless of completion order
+    for (i, c) in parallel.cells.iter().enumerate() {
+        assert_eq!(c.index, i);
+    }
+}
+
+#[test]
+fn straggler_column_reproduces_paper_headline() {
+    let report = run_sweep(&matrix_2x2x2()).expect("sweep");
+
+    // every cell must have converged to the target
+    for c in &report.cells {
+        assert!(
+            c.time_to_target.is_some(),
+            "cell {} ({} / {} / seed {}) missed target gap: final {}",
+            c.index,
+            c.algorithm,
+            c.scenario,
+            c.seed,
+            c.final_gap
+        );
+    }
+
+    // seed-by-seed in the straggler column: ACPD strictly faster
+    for seed in [7u64, 8] {
+        let t = |algo: &str| -> f64 {
+            report
+                .cells
+                .iter()
+                .find(|c| {
+                    c.algorithm == algo && c.seed == seed && c.scenario.starts_with("straggler")
+                })
+                .expect("cell present")
+                .time_to_target
+                .unwrap()
+        };
+        let (ta, tc) = (t("acpd"), t("cocoa+"));
+        assert!(
+            ta < tc,
+            "seed {seed}: ACPD ({ta:.2}s) should beat CoCoA+ ({tc:.2}s) under stragglers"
+        );
+    }
+
+    // and the ranked table agrees: ACPD is #1 in the straggler group
+    let ranked = report.ranked();
+    let top = ranked
+        .iter()
+        .find(|r| r.scenario.starts_with("straggler") && r.rank == 1)
+        .expect("straggler group ranked");
+    assert_eq!(top.algorithm, "acpd");
+    assert_eq!(top.seeds, 2);
+}
