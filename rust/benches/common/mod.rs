@@ -50,6 +50,15 @@ pub fn save(csv: &CsvWriter, name: &str) {
     println!("-> wrote {}", path.display());
 }
 
+/// Save the same table as a sweep-style `report.json` next to the CSV, so
+/// bench medians are machine-trackable across PRs (ROADMAP: bench JSON
+/// trajectory).  `name` should end in `.json`.
+pub fn save_json(csv: &CsvWriter, name: &str, description: &str) {
+    let path = results_dir().join(name);
+    std::fs::write(&path, csv.to_json(description)).expect("save results json");
+    println!("-> wrote {}", path.display());
+}
+
 /// Pretty duration.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {

@@ -74,5 +74,6 @@ fn main() {
         }
     }
     common::save(&csv, "fig4b_scaling.csv");
+    common::save_json(&csv, "fig4b_scaling.json", "fig4b: time-to-target vs worker count");
     println!("\nexpected: speedup grows with K as CoCoA+ turns communication-bound.");
 }

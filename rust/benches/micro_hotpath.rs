@@ -167,29 +167,36 @@ fn main() {
     }
 
     // ---------------------------------------------------------- PJRT
-    if let Some(dir) = acpd::runtime::find_artifacts_dir() {
-        use acpd::runtime::{ArtifactRuntime, PjrtSolver};
-        use std::sync::Arc;
-        let rt = Arc::new(ArtifactRuntime::load_variant(dir, "test").expect("load artifacts"));
-        let mut spec = Preset::DenseTest.spec();
-        spec.n = 1024;
-        let ds = synthetic::generate(&spec, 7);
-        let part = partition_rows(&ds, 4, None).into_iter().next().unwrap();
-        let mut solver =
-            PjrtSolver::new(rt, part, 1e-2, ds.n(), 1.0, 0.5, Pcg64::new(8)).unwrap();
-        let w = vec![0.0f32; ds.d()];
-        let (med, _) = time_it(iters, || solver.solve_epoch(&w, 256));
-        println!(
-            "pjrt_sdca       {:>10}/epoch  (test variant nk=256 d=128 h=256, interpret-lowered)",
-            fmt_secs(med)
-        );
-        csv.rowf(&[&"pjrt_sdca_test", &"s_per_epoch", &med, &"s"]);
-        let (med_obj, _) = time_it(iters, || solver.objective_pieces(&w));
-        println!("pjrt_objectives {:>10}/pass", fmt_secs(med_obj));
-        csv.rowf(&[&"pjrt_objectives_test", &"s_per_pass", &med_obj, &"s"]);
-    } else {
-        println!("pjrt            skipped (run `make artifacts`)");
+    #[cfg(feature = "pjrt")]
+    {
+        if let Some(dir) = acpd::runtime::find_artifacts_dir() {
+            use acpd::runtime::{ArtifactRuntime, PjrtSolver};
+            use std::sync::Arc;
+            let rt =
+                Arc::new(ArtifactRuntime::load_variant(dir, "test").expect("load artifacts"));
+            let mut spec = Preset::DenseTest.spec();
+            spec.n = 1024;
+            let ds = synthetic::generate(&spec, 7);
+            let part = partition_rows(&ds, 4, None).into_iter().next().unwrap();
+            let mut solver =
+                PjrtSolver::new(rt, part, 1e-2, ds.n(), 1.0, 0.5, Pcg64::new(8)).unwrap();
+            let w = vec![0.0f32; ds.d()];
+            let (med, _) = time_it(iters, || solver.solve_epoch(&w, 256));
+            println!(
+                "pjrt_sdca       {:>10}/epoch  (test variant nk=256 d=128 h=256, interpret-lowered)",
+                fmt_secs(med)
+            );
+            csv.rowf(&[&"pjrt_sdca_test", &"s_per_epoch", &med, &"s"]);
+            let (med_obj, _) = time_it(iters, || solver.objective_pieces(&w));
+            println!("pjrt_objectives {:>10}/pass", fmt_secs(med_obj));
+            csv.rowf(&[&"pjrt_objectives_test", &"s_per_pass", &med_obj, &"s"]);
+        } else {
+            println!("pjrt            skipped (run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt            skipped (build with --features pjrt)");
 
     common::save(&csv, "micro_hotpath.csv");
+    common::save_json(&csv, "micro_hotpath.json", "micro_hotpath: hot-path medians");
 }

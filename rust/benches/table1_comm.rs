@@ -76,6 +76,7 @@ fn main() {
         csv.rowf(&[&name, &sa, &bpr, &dense_bytes, &rounds, &time]);
     }
     common::save(&csv, "table1_comm.csv");
+    common::save_json(&csv, "table1_comm.json", "table1: measured communication profile");
     println!(
         "\nexpected: ACPD ~ rho*d*8 bytes (idx+val) per message vs 4d for the\n\
          dense baselines — O(rho d) vs O(d) — at a comparable round count."

@@ -8,7 +8,7 @@ use acpd::data::synthetic::Preset;
 use acpd::data::{libsvm, Dataset};
 use acpd::engine::{Algorithm, EngineConfig};
 use acpd::network::{JitterModel, NetworkModel};
-use acpd::sweep::{self, SweepSpec};
+use acpd::sweep::{self, RuntimeKind, SweepSpec};
 use acpd::util::args::{Args, FlagSpec};
 
 const USAGE: &str = "\
@@ -21,7 +21,9 @@ commands:
   gen-data      write a synthetic dataset in LIBSVM format
   train         run one experiment (sim or threads runtime)
   sweep         run a scenario matrix (algos x scenarios x presets x rho_d
-                x seeds) in parallel and print ranked comparison tables
+                x seeds) in parallel and print ranked comparison tables;
+                --runtime sim|threads|tcp picks the substrate, --parity
+                cross-checks a real runtime against the simulator
   server        TCP coordinator for a multi-process cluster
   worker        TCP worker process
   theory        Theorem 1/2 quantities for a config (predicted rounds)
@@ -302,6 +304,13 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         FlagSpec::opt("data-seed", "dataset seed", "42"),
         FlagSpec::opt("n", "override preset sample count (0=preset)", "0"),
         FlagSpec::opt("d", "override preset dimension (0=preset)", "0"),
+        FlagSpec::opt("runtime", "cell runtime: sim|threads|tcp", "sim"),
+        FlagSpec::switch(
+            "parity",
+            "re-run the matrix on the simulator and cross-check (sim_vs_real)",
+        ),
+        FlagSpec::opt("parity-gap-tol", "parity: absolute final-gap tolerance", "1e-2"),
+        FlagSpec::opt("parity-w-tol", "parity: relative |w| tolerance", "5e-2"),
         FlagSpec::opt("threads", "thread-pool size (0=all cores)", "0"),
         FlagSpec::opt("out-dir", "write cells.csv / ranked.csv / report.json here", ""),
         FlagSpec::switch("quiet", "suppress the ranked table"),
@@ -374,12 +383,17 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
     if explicit("d") {
         spec.d_override = a.get("d")?;
     }
+    if explicit("runtime") {
+        let name = a.get_str("runtime")?;
+        spec.runtime = RuntimeKind::from_name(&name)
+            .with_context(|| format!("unknown runtime {name:?} ({})", RuntimeKind::help_names()))?;
+    }
     if explicit("threads") {
         spec.threads = a.get("threads")?;
     }
 
     let n_cells = spec.cells().len();
-    let threads = spec.effective_threads().min(n_cells.max(1));
+    let threads = spec.pool_threads().min(n_cells.max(1));
     eprintln!("sweep: {}", spec.describe());
     eprintln!("sweep: executing {n_cells} cells on {threads} threads...");
     let t0 = std::time::Instant::now();
@@ -392,6 +406,30 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
     if !a.get_bool("quiet") {
         print!("{}", report.render());
     }
+
+    // --parity: replay the identical matrix on the DES and cross-check the
+    // real runtime's results cell by cell (the paper's simulated-vs-real
+    // validation as a one-flag operation)
+    let parity_rows = if a.get_bool("parity") {
+        if !spec.runtime.is_real() {
+            bail!("--parity needs --runtime threads|tcp (sim would compare against itself)");
+        }
+        let mut sim_spec = spec.clone();
+        sim_spec.runtime = RuntimeKind::Sim;
+        eprintln!("parity: replaying the matrix on the simulator...");
+        let sim_report = sweep::run_sweep(&sim_spec)?;
+        let rows = sweep::parity(
+            &sim_report,
+            &report,
+            a.get("parity-gap-tol")?,
+            a.get("parity-w-tol")?,
+        );
+        print!("{}", sweep::render_parity(&rows));
+        Some(rows)
+    } else {
+        None
+    };
+
     let out_dir = a.get_str("out-dir")?;
     if !out_dir.is_empty() {
         let dir = std::path::Path::new(&out_dir);
@@ -399,7 +437,19 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         report.cells_csv().save(dir.join("cells.csv"))?;
         report.ranked_csv().save(dir.join("ranked.csv"))?;
         std::fs::write(dir.join("report.json"), report.to_json())?;
-        eprintln!("wrote {}/cells.csv, ranked.csv, report.json", dir.display());
+        let mut wrote = "cells.csv, ranked.csv, report.json".to_string();
+        if let Some(rows) = &parity_rows {
+            sweep::parity_csv(rows).save(dir.join("parity.csv"))?;
+            wrote.push_str(", parity.csv");
+        }
+        eprintln!("wrote {}/{{{wrote}}}", dir.display());
+    }
+    if let Some(rows) = &parity_rows {
+        let failed = rows.iter().filter(|r| !r.pass).count();
+        if failed > 0 {
+            bail!("sim_vs_real parity FAILED for {failed}/{} cells", rows.len());
+        }
+        eprintln!("parity: {} cells, all within tolerance", rows.len());
     }
     Ok(())
 }

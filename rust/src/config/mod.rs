@@ -1,7 +1,7 @@
 //! Config system: a TOML-subset parser (offline build — no serde/toml crate)
 //! plus the typed experiment schema and validation.
 //!
-//! Example config (see `configs/` in the repo root):
+//! Example config (see `rust/configs/` for shipped, test-validated ones):
 //!
 //! ```toml
 //! [data]
@@ -38,6 +38,7 @@
 //! seeds = "1,2,3"
 //! workers = 4
 //! target_gap = 1e-4
+//! runtime = "sim"      # sim | threads | tcp (real runtimes, wall clock)
 //! threads = 0          # 0 = all cores
 //! ```
 

@@ -35,6 +35,19 @@ impl ExperimentConfig {
     pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
         let doc = Document::parse(text)?;
 
+        // a [sweep]-only file is a scenario-matrix config, not an
+        // experiment: every experiment key would silently default, so
+        // refuse instead of training an unrelated default run
+        if doc.sections.contains_key("sweep")
+            && !doc.sections.contains_key("data")
+            && !doc.sections.contains_key("algo")
+        {
+            bail!(
+                "this is a sweep config ([sweep] section only) — \
+                 use `acpd sweep --config <file>` instead of train/server/worker"
+            );
+        }
+
         // [data]
         let data = if let Some(path) = doc.get("data", "libsvm").and_then(|v| v.as_str()) {
             DataSource::Libsvm(path.to_string())
@@ -184,6 +197,17 @@ straggler_factor = 10.0
     fn bad_preset_and_algo_rejected() {
         assert!(ExperimentConfig::from_toml("[data]\npreset = \"nope\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[algo]\nname = \"sgd\"\n").is_err());
+    }
+
+    #[test]
+    fn sweep_only_config_rejected() {
+        let e = ExperimentConfig::from_toml("[sweep]\nseeds = \"1,2\"\n").unwrap_err();
+        assert!(format!("{e}").contains("sweep config"), "{e}");
+        // a file that has BOTH an experiment and a [sweep] section is fine
+        assert!(
+            ExperimentConfig::from_toml("[algo]\nname = \"acpd\"\n[sweep]\nseeds = \"1\"\n")
+                .is_ok()
+        );
     }
 
     #[test]

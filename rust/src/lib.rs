@@ -58,6 +58,6 @@ pub mod prelude {
     pub use crate::loss::LossKind;
     pub use crate::metrics::history::History;
     pub use crate::network::{NetworkModel, Scenario};
-    pub use crate::sweep::{run_sweep, CellResult, SweepReport, SweepSpec};
+    pub use crate::sweep::{run_sweep, CellResult, RuntimeKind, SweepReport, SweepSpec};
     pub use crate::util::rng::Pcg64;
 }

@@ -7,11 +7,19 @@
 //! the only compile step, after which the rust binary is self-contained.
 
 pub mod manifest;
+// The PJRT client and the solver built on it need the `xla` crate, which is
+// not part of the offline build; they compile only under `--features pjrt`
+// (see Cargo.toml).  The manifest parser and artifact discovery below stay
+// available unconditionally so `acpd info` and the artifact tooling work.
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod solver;
 
 pub use manifest::{Manifest, ManifestEntry};
+#[cfg(feature = "pjrt")]
 pub use pjrt::ArtifactRuntime;
+#[cfg(feature = "pjrt")]
 pub use solver::PjrtSolver;
 
 /// Conventional artifacts directory (repo-root relative).

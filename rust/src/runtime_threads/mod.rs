@@ -31,6 +31,8 @@ pub struct ThreadRunOutput {
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub wall_time: f64,
+    /// total committed inner iterations (communication rounds)
+    pub rounds: u64,
 }
 
 /// Drive one worker against abstract endpoints.  Reused verbatim by the TCP
@@ -96,6 +98,7 @@ pub fn server_loop(
     let mut history = History::new(cfg.algorithm.name());
     let mut bytes_up = 0u64;
     let mut bytes_down = 0u64;
+    let mut last_eval_round = 0u64;
     loop {
         let Some(msg) = recv() else { break };
         let update = match msg {
@@ -112,8 +115,15 @@ pub fn server_loop(
                 finished,
             } => {
                 // probe the gap at full barriers while all workers are
-                // parked awaiting their replies
-                if full_barrier {
+                // parked awaiting their replies — on the SAME eval_every
+                // cadence as the simulator, so sim-vs-real parity compares
+                // runs with identical evaluation and early-stop schedules
+                let do_eval = full_barrier
+                    && (round - last_eval_round >= cfg.eval_every as u64
+                        || finished
+                        || last_eval_round == 0);
+                if do_eval {
+                    last_eval_round = round;
                     let k = cfg.workers;
                     for wid in 0..k {
                         send(
@@ -263,6 +273,7 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
         bytes_up,
         bytes_down,
         wall_time: start.elapsed().as_secs_f64(),
+        rounds: server.total_rounds(),
     }
 }
 

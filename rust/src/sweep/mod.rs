@@ -14,6 +14,31 @@
 //! one command: `acpd sweep` on the CLI, or `examples/paper_figures.rs` for
 //! the exact per-figure grids.
 //!
+//! ## Runtimes
+//!
+//! Every cell executes on one of three runtimes (`SweepSpec::runtime`,
+//! TOML `runtime = "sim" | "threads" | "tcp"`, CLI `acpd sweep --runtime`):
+//!
+//! * `sim` (default) — the deterministic DES.  Reports are **byte-identical**
+//!   across repeated runs and across thread-pool sizes.
+//! * `threads` — [`crate::runtime_threads`]: real OS threads + mpsc, with
+//!   *physical* straggler/jitter injection (workers actually sleep) and
+//!   wall-clock time axes.
+//! * `tcp` — [`crate::transport`]: a real localhost TCP cluster per cell
+//!   (one coordinator + K workers over length-prefixed socket frames — the
+//!   same framing the multi-process `acpd server`/`acpd worker` CLI uses),
+//!   run on in-process threads so a matrix stays one command.
+//!
+//! Real-runtime cells report genuine wall-clock seconds, so their rows vary
+//! run to run; the merge-by-index determinism guarantee applies to `sim`
+//! cells only.  With `threads = 0` real-runtime cells execute **serially**
+//! (one cell's K+1 OS threads at a time) so the time axes measure the
+//! algorithm, not cell-vs-cell scheduler contention; set `threads`
+//! explicitly to opt into parallel real cells.  [`report::parity`] cross-checks a real-runtime report
+//! against the simulated one cell by cell (final gap / final ‖w‖ within
+//! tolerance, time axes side by side) — `acpd sweep --runtime threads
+//! --parity` prints that table and fails if any cell disagrees.
+//!
 //! Example sweep config (`[sweep]` section, TOML subset — lists are
 //! comma-separated strings because the in-tree parser has no arrays):
 //!
@@ -31,6 +56,7 @@
 //! lambda = 1e-3
 //! outer_rounds = 50
 //! target_gap = 1e-4
+//! runtime = "sim"      # sim | threads | tcp
 //! threads = 0          # 0 = all cores
 //! ```
 
@@ -39,17 +65,62 @@ pub mod report;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::toml::{Document, Value};
 use crate::data::synthetic::{self, Preset};
 use crate::data::Dataset;
 use crate::engine::{Algorithm, EngineConfig};
+use crate::linalg::dense;
 use crate::loss::LossKind;
+use crate::metrics::History;
 use crate::network::{NetworkModel, Scenario};
 use crate::sim;
 
-pub use report::{RankedRow, SweepReport};
+pub use report::{parity, parity_csv, render_parity, ParityRow, RankedRow, SweepReport};
+
+/// Which execution substrate a sweep's cells run on.
+///
+/// All three drive the same [`crate::protocol`] state machines; they differ
+/// in what the time axis means (virtual vs wall clock) and in how
+/// stragglers/jitter are injected (cost model vs physical sleeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// Deterministic discrete-event simulator ([`crate::sim`]).
+    Sim,
+    /// Real OS threads + mpsc channels ([`crate::runtime_threads`]).
+    Threads,
+    /// Real localhost TCP cluster per cell ([`crate::transport`]).
+    Tcp,
+}
+
+impl RuntimeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            RuntimeKind::Sim => "sim",
+            RuntimeKind::Threads => "threads",
+            RuntimeKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RuntimeKind> {
+        Some(match s {
+            "sim" => RuntimeKind::Sim,
+            "threads" => RuntimeKind::Threads,
+            "tcp" => RuntimeKind::Tcp,
+            _ => return None,
+        })
+    }
+
+    pub fn help_names() -> &'static str {
+        "sim | threads | tcp"
+    }
+
+    /// Real runtimes report wall-clock axes and are not bit-reproducible.
+    pub fn is_real(self) -> bool {
+        self != RuntimeKind::Sim
+    }
+}
 
 /// Declarative scenario matrix.  The grid axes are the five `Vec` fields;
 /// every other field is a shared knob applied to all cells.
@@ -77,6 +148,9 @@ pub struct SweepSpec {
     /// also the target for the time-to-target-gap column of the report.
     pub target_gap: f64,
     pub eval_every: usize,
+    /// Execution substrate for every cell (`sim` keeps the byte-identity
+    /// guarantee; `threads`/`tcp` report real wall-clock axes).
+    pub runtime: RuntimeKind,
     // ---- dataset knobs ----
     pub data_seed: u64,
     /// Override the preset's sample count (0 = preset default).
@@ -111,6 +185,7 @@ impl Default for SweepSpec {
             outer_rounds: 20,
             target_gap: 0.0,
             eval_every: 1,
+            runtime: RuntimeKind::Sim,
             data_seed: 42,
             n_override: 0,
             d_override: 0,
@@ -141,6 +216,12 @@ pub struct CellResult {
     pub rho_d: usize,
     pub seed: u64,
     pub workers: usize,
+    /// Which runtime executed this cell (`sim` | `threads` | `tcp`); for
+    /// real runtimes the time columns are wall-clock seconds.
+    pub runtime: String,
+    /// ‖final w‖₂ — a compact fingerprint of the trained model, used by the
+    /// sim-vs-real parity check (`report::parity`).
+    pub w_norm: f64,
     pub final_gap: f64,
     pub rounds: u64,
     /// First (round, time) at/below `target_gap`; `None` if never reached
@@ -232,11 +313,24 @@ impl SweepSpec {
         }
     }
 
+    /// Pool size [`run_sweep`] actually uses.  An explicit `threads` value
+    /// always wins; with `threads = 0`, `sim` cells use all cores while
+    /// real-runtime cells run SERIALLY — a real cell's wall-clock axes are
+    /// the measurement, and K+1 OS threads per concurrent cell would make
+    /// them measure scheduler contention instead of the algorithm.
+    pub fn pool_threads(&self) -> usize {
+        if self.threads == 0 && self.runtime.is_real() {
+            1
+        } else {
+            self.effective_threads()
+        }
+    }
+
     /// One-line description for report headers.
     pub fn describe(&self) -> String {
         format!(
             "{} algos x {} scenarios x {} presets x {} rho_d x {} seeds = {} cells \
-             (K={} B={} T={} H={} lambda={:.1e} loss={} L={} target_gap={})",
+             (runtime={} K={} B={} T={} H={} lambda={:.1e} loss={} L={} target_gap={})",
             self.algorithms.len(),
             self.scenarios.len(),
             self.presets.len(),
@@ -247,6 +341,7 @@ impl SweepSpec {
                 * self.presets.len()
                 * self.rho_ds.len()
                 * self.seeds.len(),
+            self.runtime.name(),
             self.workers,
             self.group,
             self.period,
@@ -300,6 +395,13 @@ impl SweepSpec {
         s.outer_rounds = doc.get_i64("sweep", "outer_rounds", s.outer_rounds as i64) as usize;
         s.target_gap = doc.get_f64("sweep", "target_gap", s.target_gap);
         s.eval_every = doc.get_i64("sweep", "eval_every", s.eval_every as i64) as usize;
+        let rt_name = doc.get_str("sweep", "runtime", s.runtime.name());
+        s.runtime = RuntimeKind::from_name(&rt_name).with_context(|| {
+            format!(
+                "sweep.runtime: unknown runtime {rt_name:?} ({})",
+                RuntimeKind::help_names()
+            )
+        })?;
         s.data_seed = doc.get_i64("sweep", "data_seed", s.data_seed as i64) as u64;
         s.n_override = doc.get_i64("sweep", "n", s.n_override as i64) as usize;
         s.d_override = doc.get_i64("sweep", "d", s.d_override as i64) as usize;
@@ -358,10 +460,12 @@ pub fn parse_presets(s: &str) -> Result<Vec<Preset>> {
 
 /// Execute every cell of the matrix on a thread pool and aggregate.
 ///
-/// Determinism contract: the report depends only on the spec — never on the
-/// pool size, core count, or cell completion order.  Each cell is an
-/// independent deterministic `sim::run` (its own RNG streams, its own
-/// dataset reference), and results land in a slot keyed by cell index.
+/// Determinism contract (`runtime = sim`): the report depends only on the
+/// spec — never on the pool size, core count, or cell completion order.
+/// Each cell is an independent deterministic `sim::run` (its own RNG
+/// streams, its own dataset reference), and results land in a slot keyed by
+/// cell index.  Real-runtime cells (`threads` | `tcp`) keep the index-keyed
+/// merge but report genuine wall-clock measurements, which vary run to run.
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     let cells = spec.cells();
     if cells.is_empty() {
@@ -407,9 +511,11 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         })
         .collect::<Result<_>>()?;
 
-    let threads = spec.effective_threads().min(prepared.len()).max(1);
+    let threads = spec.pool_threads().min(prepared.len()).max(1);
     let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; prepared.len()]);
+    let slots: Mutex<Vec<Option<Result<CellResult>>>> = Mutex::new(
+        (0..prepared.len()).map(|_| None).collect(),
+    );
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -419,7 +525,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
                     break;
                 }
                 let pc = &prepared[i];
-                let result = run_cell(pc, &datasets[pc.ds_idx].1);
+                let result = run_cell(pc, &datasets[pc.ds_idx].1, spec.runtime);
                 slots.lock().unwrap()[i] = Some(result);
             });
         }
@@ -430,21 +536,64 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         .unwrap()
         .into_iter()
         .map(|r| r.expect("every cell index was claimed by the pool"))
-        .collect();
+        .collect::<Result<_>>()?;
     Ok(SweepReport::new(spec.describe(), results))
 }
 
-fn run_cell(pc: &PreparedCell, ds: &Dataset) -> CellResult {
-    let out = sim::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+/// What a runtime hands back for one executed cell, normalized across the
+/// three substrates before it becomes a [`CellResult`].
+struct CellRun {
+    history: History,
+    rounds: u64,
+    wall_time: f64,
+    bytes_up: u64,
+    bytes_down: u64,
+    /// Σ busy compute / Σ message time — the DES cost model measures these;
+    /// the real runtimes cannot separate them and report 0.
+    compute_time: f64,
+    comm_time: f64,
+    w_norm: f64,
+}
+
+fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<CellResult> {
+    let run = match runtime {
+        RuntimeKind::Sim => {
+            let out = sim::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+            CellRun {
+                rounds: out.stats.rounds,
+                wall_time: out.stats.wall_time,
+                bytes_up: out.stats.bytes_up,
+                bytes_down: out.stats.bytes_down,
+                compute_time: out.stats.compute_time,
+                comm_time: out.stats.comm_time,
+                w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+                history: out.history,
+            }
+        }
+        RuntimeKind::Threads => {
+            let out = crate::runtime_threads::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+            CellRun {
+                rounds: out.rounds,
+                wall_time: out.wall_time,
+                bytes_up: out.bytes_up,
+                bytes_down: out.bytes_down,
+                compute_time: 0.0,
+                comm_time: 0.0,
+                w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+                history: out.history,
+            }
+        }
+        RuntimeKind::Tcp => run_cell_tcp(pc, ds)?,
+    };
     let (round_to_target, time_to_target) = if pc.engine.target_gap > 0.0 {
-        match out.history.time_to_gap(pc.engine.target_gap) {
+        match run.history.time_to_gap(pc.engine.target_gap) {
             Some((r, t)) => (Some(r), Some(t)),
             None => (None, None),
         }
     } else {
         (None, None)
     };
-    CellResult {
+    Ok(CellResult {
         index: pc.cell.index,
         algorithm: pc.cell.algorithm.name().to_string(),
         scenario: pc.cell.scenario.name(),
@@ -452,17 +601,69 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset) -> CellResult {
         rho_d: pc.cell.rho_d,
         seed: pc.cell.seed,
         workers: pc.engine.workers,
-        final_gap: out.history.last_gap(),
-        rounds: out.stats.rounds,
+        runtime: runtime.name().to_string(),
+        w_norm: run.w_norm,
+        final_gap: run.history.last_gap(),
+        rounds: run.rounds,
         round_to_target,
         time_to_target,
-        wall_time: out.stats.wall_time,
-        bytes_up: out.stats.bytes_up,
-        bytes_down: out.stats.bytes_down,
-        compute_time: out.stats.compute_time,
-        comm_time: out.stats.comm_time,
-        eval_points: out.history.points.len(),
-    }
+        wall_time: run.wall_time,
+        bytes_up: run.bytes_up,
+        bytes_down: run.bytes_down,
+        compute_time: run.compute_time,
+        comm_time: run.comm_time,
+        eval_points: run.history.points.len(),
+    })
+}
+
+/// One real-TCP cell: a coordinator plus K workers talking length-prefixed
+/// frames over localhost sockets (the same [`crate::transport`] framing the
+/// multi-process `acpd server` / `acpd worker` CLI speaks), driven on
+/// in-process threads so a whole matrix remains a single command.  The
+/// listener is bound to an ephemeral port and handed to the server
+/// race-free; workers connect to its resolved address.
+///
+/// Fail-stop assumption: like the paper's MPI deployment, the protocol has
+/// no timeouts — if a worker dies mid-run (socket error, panic) the server
+/// blocks waiting for its message and the cell hangs rather than erroring.
+/// The preconditions that matter are closed off up front (engine configs
+/// are validated before the pool starts, the listener is bound before any
+/// worker connects), so on localhost this is a theoretical hazard; see
+/// ROADMAP "TCP cell hardening" for the timeout/heartbeat follow-up.
+fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
+    let listener =
+        std::net::TcpListener::bind("127.0.0.1:0").context("bind tcp sweep cell listener")?;
+    let addr = listener.local_addr().context("resolve listener addr")?.to_string();
+    let t0 = std::time::Instant::now();
+    let out = std::thread::scope(|scope| -> Result<crate::transport::TcpServerOutput> {
+        let server =
+            scope.spawn(|| crate::transport::run_server_on(listener, ds.n(), ds.d(), &pc.engine));
+        let mut workers = Vec::new();
+        for wid in 0..pc.engine.workers {
+            let addr = addr.clone();
+            workers.push(scope.spawn(move || {
+                crate::transport::run_worker(&addr, wid, ds, &pc.engine, &pc.net, pc.cell.seed)
+            }));
+        }
+        let out = server
+            .join()
+            .map_err(|_| anyhow!("tcp cell {}: server thread panicked", pc.cell.index))??;
+        for (wid, w) in workers.into_iter().enumerate() {
+            w.join()
+                .map_err(|_| anyhow!("tcp cell {}: worker {wid} panicked", pc.cell.index))??;
+        }
+        Ok(out)
+    })?;
+    Ok(CellRun {
+        rounds: out.rounds,
+        wall_time: t0.elapsed().as_secs_f64(),
+        bytes_up: out.bytes_up,
+        bytes_down: out.bytes_down,
+        compute_time: 0.0,
+        comm_time: 0.0,
+        w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+        history: out.history,
+    })
 }
 
 #[cfg(test)]
@@ -559,11 +760,76 @@ threads = 2
     }
 
     #[test]
+    fn real_runtimes_default_to_serial_pool() {
+        let mut spec = SweepSpec::default();
+        assert!(spec.pool_threads() >= 1); // sim: all cores
+        spec.runtime = RuntimeKind::Threads;
+        assert_eq!(spec.pool_threads(), 1); // real cells serialize
+        spec.runtime = RuntimeKind::Tcp;
+        assert_eq!(spec.pool_threads(), 1);
+        spec.threads = 3; // explicit opt-in to parallel real cells
+        assert_eq!(spec.pool_threads(), 3);
+    }
+
+    #[test]
+    fn toml_runtime_knob_parses() {
+        // default is the deterministic simulator
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 1\n").unwrap();
+        assert_eq!(spec.runtime, RuntimeKind::Sim);
+        for (name, kind) in [
+            ("sim", RuntimeKind::Sim),
+            ("threads", RuntimeKind::Threads),
+            ("tcp", RuntimeKind::Tcp),
+        ] {
+            let spec =
+                SweepSpec::from_toml(&format!("[sweep]\nruntime = \"{name}\"\n")).unwrap();
+            assert_eq!(spec.runtime, kind);
+            assert_eq!(RuntimeKind::from_name(kind.name()), Some(kind));
+        }
+        assert!(!RuntimeKind::Sim.is_real());
+        assert!(RuntimeKind::Threads.is_real() && RuntimeKind::Tcp.is_real());
+    }
+
+    #[test]
     fn bad_names_rejected() {
         assert!(SweepSpec::from_toml("[sweep]\nalgos = \"sgd\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\nscenarios = \"mars\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\npresets = \"nope\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\nruntime = \"mpi\"\n").is_err());
         assert!(parse_list::<usize>("1,x").is_err());
+    }
+
+    /// A tiny matrix end-to-end on each real runtime: cells execute, report
+    /// wall-clock axes, and tag their rows.  (Convergence depth and parity
+    /// are covered at matrix scale in tests/runtimes_parity.rs.)
+    #[test]
+    fn real_runtime_cells_execute() {
+        for runtime in [RuntimeKind::Threads, RuntimeKind::Tcp] {
+            let spec = SweepSpec {
+                algorithms: vec![Algorithm::CocoaPlus],
+                scenarios: vec![Scenario::Lan],
+                presets: vec![Preset::DenseTest],
+                rho_ds: vec![0],
+                seeds: vec![1, 2],
+                workers: 2,
+                h: 64,
+                outer_rounds: 3,
+                runtime,
+                n_override: 64,
+                threads: 2,
+                ..SweepSpec::default()
+            };
+            let report = run_sweep(&spec).expect("real-runtime sweep");
+            assert_eq!(report.cells.len(), 2);
+            for c in &report.cells {
+                assert_eq!(c.runtime, runtime.name());
+                assert!(c.final_gap.is_finite());
+                assert!(c.rounds > 0, "{} cell ran no rounds", runtime.name());
+                assert!(c.bytes_up > 0 && c.bytes_down > 0);
+                assert!(c.wall_time > 0.0);
+                assert!(c.w_norm > 0.0);
+            }
+        }
     }
 
     #[test]

@@ -21,6 +21,9 @@ pub struct RankedRow {
     /// 1-based rank within the (scenario, preset, ρd) group.
     pub rank: usize,
     pub algorithm: String,
+    /// Runtime tag of the member cells (`sim` | `threads` | `tcp`) — tells
+    /// a reader whether the time columns are virtual or wall-clock seconds.
+    pub runtime: String,
     /// Number of seeds averaged.
     pub seeds: usize,
     pub mean_final_gap: f64,
@@ -65,6 +68,8 @@ impl SweepReport {
             "compute_time_s",
             "comm_time_s",
             "eval_points",
+            "runtime",
+            "w_norm",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -93,6 +98,8 @@ impl SweepReport {
                 &c.compute_time,
                 &c.comm_time,
                 &c.eval_points,
+                &c.runtime,
+                &c.w_norm,
             ]);
         }
         w
@@ -100,8 +107,10 @@ impl SweepReport {
 
     /// The ranked comparison table: group cells by (scenario, preset, ρd),
     /// average each algorithm over seeds, and rank algorithms within each
-    /// group by time-to-target (algorithms that missed the target on any
-    /// seed rank last, ordered by final gap).
+    /// group by time-to-target.  Algorithms that missed the target on any
+    /// seed rank last, with a fully deterministic tiebreak chain: mean wall
+    /// time, then mean final gap, then algorithm name — so two missed rows
+    /// can never compare equal and flip order between runs.
     pub fn ranked(&self) -> Vec<RankedRow> {
         // first-appearance-ordered grouping => deterministic output
         let mut groups: Vec<((String, String, usize), Vec<&CellResult>)> = Vec::new();
@@ -145,6 +154,7 @@ impl SweepReport {
                         preset: preset.clone(),
                         rho_d,
                         rank: 0, // assigned after sorting
+                        runtime: cells[0].runtime.clone(),
                         algorithm,
                         seeds: cells.len(),
                         mean_final_gap: mean(&|c| c.final_gap),
@@ -154,11 +164,20 @@ impl SweepReport {
                     }
                 })
                 .collect();
+            // primary key: time-to-target with misses at +inf; tied rows
+            // (both missed, or exactly equal times) fall back to mean wall
+            // time, then mean final gap, then the algorithm name, so the
+            // order is a total, deterministic function of the row values
             rows.sort_by(|a, b| {
                 let ka = a.mean_time_to_target.unwrap_or(f64::INFINITY);
                 let kb = b.mean_time_to_target.unwrap_or(f64::INFINITY);
                 ka.partial_cmp(&kb)
                     .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| {
+                        a.mean_wall_time
+                            .partial_cmp(&b.mean_wall_time)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
                     .then_with(|| {
                         a.mean_final_gap
                             .partial_cmp(&b.mean_final_gap)
@@ -187,6 +206,7 @@ impl SweepReport {
             "mean_time_to_target_s",
             "mean_wall_time_s",
             "mean_bytes_up",
+            "runtime",
         ]);
         for r in self.ranked() {
             let ttt = r
@@ -204,6 +224,7 @@ impl SweepReport {
                 &ttt,
                 &r.mean_wall_time,
                 &r.mean_bytes_up,
+                &r.runtime,
             ]);
         }
         w
@@ -218,7 +239,8 @@ impl SweepReport {
             let _ = write!(
                 s,
                 "    {{\"index\": {}, \"algorithm\": {}, \"scenario\": {}, \"preset\": {}, \
-                 \"rho_d\": {}, \"seed\": {}, \"workers\": {}, \"final_gap\": {}, \
+                 \"rho_d\": {}, \"seed\": {}, \"workers\": {}, \"runtime\": {}, \
+                 \"w_norm\": {}, \"final_gap\": {}, \
                  \"rounds\": {}, \"round_to_target\": {}, \"time_to_target_s\": {}, \
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}}}{}\n",
@@ -229,6 +251,8 @@ impl SweepReport {
                 c.rho_d,
                 c.seed,
                 c.workers,
+                json_str(&c.runtime),
+                json_f64(c.w_norm),
                 json_f64(c.final_gap),
                 c.rounds,
                 c.round_to_target
@@ -252,7 +276,7 @@ impl SweepReport {
             let _ = write!(
                 s,
                 "    {{\"scenario\": {}, \"preset\": {}, \"rho_d\": {}, \"rank\": {}, \
-                 \"algorithm\": {}, \"seeds\": {}, \"mean_final_gap\": {}, \
+                 \"algorithm\": {}, \"runtime\": {}, \"seeds\": {}, \"mean_final_gap\": {}, \
                  \"mean_time_to_target_s\": {}, \"mean_wall_time_s\": {}, \
                  \"mean_bytes_up\": {}}}{}\n",
                 json_str(&r.scenario),
@@ -260,6 +284,7 @@ impl SweepReport {
                 r.rho_d,
                 r.rank,
                 json_str(&r.algorithm),
+                json_str(&r.runtime),
                 r.seeds,
                 json_f64(r.mean_final_gap),
                 r.mean_time_to_target
@@ -313,34 +338,166 @@ impl SweepReport {
     }
 }
 
-/// JSON string literal with the escapes the report can actually produce.
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+/// One matched cell pair of a sim-vs-real cross-check: the same
+/// (algorithm, scenario, preset, ρd, seed) grid point executed on two
+/// runtimes, with the agreement verdict and both time axes side by side.
+#[derive(Debug, Clone)]
+pub struct ParityRow {
+    pub algorithm: String,
+    pub scenario: String,
+    pub preset: String,
+    pub rho_d: usize,
+    pub seed: u64,
+    pub runtime_a: String,
+    pub runtime_b: String,
+    pub final_gap_a: f64,
+    pub final_gap_b: f64,
+    /// |gap_a − gap_b| (absolute — near convergence both gaps are tiny and
+    /// a relative criterion would reject legitimate agreement).
+    pub gap_diff: f64,
+    pub w_norm_a: f64,
+    pub w_norm_b: f64,
+    /// |‖w‖_a − ‖w‖_b| / max(‖w‖_a, ‖w‖_b, ε).
+    pub w_norm_rel_diff: f64,
+    /// Virtual seconds (sim) next to wall-clock seconds (threads/tcp): the
+    /// two time axes the paper's simulated-vs-real comparison is about.
+    pub wall_time_a: f64,
+    pub wall_time_b: f64,
+    /// The sim_vs_real verdict: gap and ‖w‖ agreement within tolerance.
+    pub pass: bool,
+}
+
+/// Cross-check two reports of the SAME grid executed on different runtimes
+/// (canonically `a` = sim, `b` = threads/tcp).  Cells are matched by their
+/// full grid key; cells present on one side only are skipped (they have
+/// nothing to be compared against).  `gap_tol` is an absolute tolerance on
+/// the final duality gap; `w_tol` a relative tolerance on ‖final w‖.
+pub fn parity(a: &SweepReport, b: &SweepReport, gap_tol: f64, w_tol: f64) -> Vec<ParityRow> {
+    let key = |c: &CellResult| {
+        (
+            c.algorithm.clone(),
+            c.scenario.clone(),
+            c.preset.clone(),
+            c.rho_d,
+            c.seed,
+        )
+    };
+    let mut out = Vec::new();
+    for ca in &a.cells {
+        let ka = key(ca);
+        let mut matched = None;
+        for other in &b.cells {
+            if key(other) == ka {
+                matched = Some(other);
+                break;
             }
-            c => out.push(c),
         }
+        let Some(cb) = matched else {
+            continue;
+        };
+        let gap_diff = (ca.final_gap - cb.final_gap).abs();
+        let w_scale = ca.w_norm.abs().max(cb.w_norm.abs()).max(1e-12);
+        let w_norm_rel_diff = (ca.w_norm - cb.w_norm).abs() / w_scale;
+        out.push(ParityRow {
+            algorithm: ca.algorithm.clone(),
+            scenario: ca.scenario.clone(),
+            preset: ca.preset.clone(),
+            rho_d: ca.rho_d,
+            seed: ca.seed,
+            runtime_a: ca.runtime.clone(),
+            runtime_b: cb.runtime.clone(),
+            final_gap_a: ca.final_gap,
+            final_gap_b: cb.final_gap,
+            gap_diff,
+            w_norm_a: ca.w_norm,
+            w_norm_b: cb.w_norm,
+            w_norm_rel_diff,
+            wall_time_a: ca.wall_time,
+            wall_time_b: cb.wall_time,
+            pass: gap_diff <= gap_tol && w_norm_rel_diff <= w_tol,
+        });
     }
-    out.push('"');
     out
+}
+
+/// Parity rows as CSV; the `sim_vs_real` column carries the verdict.
+pub fn parity_csv(rows: &[ParityRow]) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "algorithm",
+        "scenario",
+        "preset",
+        "rho_d",
+        "seed",
+        "runtime_a",
+        "runtime_b",
+        "final_gap_a",
+        "final_gap_b",
+        "gap_diff",
+        "w_norm_a",
+        "w_norm_b",
+        "w_norm_rel_diff",
+        "wall_time_a_s",
+        "wall_time_b_s",
+        "sim_vs_real",
+    ]);
+    for r in rows {
+        let verdict = if r.pass { "pass" } else { "FAIL" };
+        w.rowf(&[
+            &r.algorithm,
+            &r.scenario,
+            &r.preset,
+            &r.rho_d,
+            &r.seed,
+            &r.runtime_a,
+            &r.runtime_b,
+            &r.final_gap_a,
+            &r.final_gap_b,
+            &r.gap_diff,
+            &r.w_norm_a,
+            &r.w_norm_b,
+            &r.w_norm_rel_diff,
+            &r.wall_time_a,
+            &r.wall_time_b,
+            &verdict,
+        ]);
+    }
+    w
+}
+
+/// Human-readable parity table (stdout companion of [`parity_csv`]).
+pub fn render_parity(rows: &[ParityRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<10} {:<16} {:<6} {:>12} {:>12} {:>10} {:>11} {:>11} {:>12}",
+        "algorithm", "scenario", "seed", "gap_a", "gap_b", "w_reldiff", "t_a(s)", "t_b(s)", "sim_vs_real"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<10} {:<16} {:<6} {:>12.3e} {:>12.3e} {:>10.2e} {:>11.3} {:>11.3} {:>12}",
+            r.algorithm,
+            r.scenario,
+            r.seed,
+            r.final_gap_a,
+            r.final_gap_b,
+            r.w_norm_rel_diff,
+            r.wall_time_a,
+            r.wall_time_b,
+            if r.pass { "pass" } else { "FAIL" },
+        );
+    }
+    out
+}
+
+/// JSON string literal (shared escaper — see [`crate::util::json`]).
+fn json_str(s: &str) -> String {
+    crate::util::json::escape(s)
 }
 
 /// Finite floats via shortest-roundtrip Display; non-finite become null.
 fn json_f64(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
+    crate::util::json::f64_or_null(v)
 }
 
 #[cfg(test)]
@@ -363,6 +520,8 @@ mod tests {
             rho_d: 0,
             seed,
             workers: 4,
+            runtime: "sim".to_string(),
+            w_norm: 1.0,
             final_gap,
             rounds: 100,
             round_to_target: ttt.map(|_| 50),
@@ -415,6 +574,72 @@ mod tests {
         assert_eq!(st[0].algorithm, "acpd");
         assert_eq!(st[1].algorithm, "cocoa+");
         assert!(st[1].mean_time_to_target.is_none());
+    }
+
+    #[test]
+    fn missed_target_tiebreak_is_deterministic() {
+        // Two algorithms both miss the target (mean ttt = None = +inf).
+        // Before the fix their relative order was whatever the sort left
+        // them in; now wall time breaks the tie, then the algorithm name.
+        let mut slow = cell(0, "zeta", "lan", 1, 1e-3, None);
+        slow.wall_time = 9.0;
+        let mut fast = cell(1, "alpha", "lan", 1, 1e-3, None);
+        fast.wall_time = 2.0;
+        let by_wall = SweepReport::new("t".into(), vec![slow.clone(), fast.clone()]).ranked();
+        assert_eq!(by_wall[0].algorithm, "alpha"); // lower wall time first
+        assert_eq!(by_wall[1].algorithm, "zeta");
+        assert_eq!((by_wall[0].rank, by_wall[1].rank), (1, 2));
+
+        // fully tied metrics: the config key (algorithm name) decides, and
+        // the order is stable however the cells were listed
+        let a = cell(0, "bbb", "lan", 1, 1e-3, None);
+        let b = cell(1, "aaa", "lan", 1, 1e-3, None);
+        let fwd = SweepReport::new("t".into(), vec![a.clone(), b.clone()]).ranked();
+        let rev = SweepReport::new("t".into(), vec![b, a]).ranked();
+        assert_eq!(fwd[0].algorithm, "aaa");
+        assert_eq!(rev[0].algorithm, "aaa");
+        assert_eq!(
+            fwd.iter().map(|r| r.algorithm.clone()).collect::<Vec<_>>(),
+            rev.iter().map(|r| r.algorithm.clone()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn parity_matches_cells_and_judges_tolerance() {
+        let mut sim = report();
+        for c in &mut sim.cells {
+            c.runtime = "sim".to_string();
+        }
+        let mut real = report();
+        for c in &mut real.cells {
+            c.runtime = "threads".to_string();
+            c.wall_time = 0.25; // wall clock, not virtual seconds
+        }
+        // nudge one cell's gap outside tolerance and one's w_norm
+        real.cells[1].final_gap += 0.5;
+        real.cells[2].w_norm *= 2.0;
+        let rows = parity(&sim, &real, 1e-6, 1e-6);
+        assert_eq!(rows.len(), sim.cells.len());
+        let failed: Vec<usize> = rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.pass)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(failed, vec![1, 2]);
+        // time axes are reported side by side, not compared
+        assert!(rows.iter().all(|r| r.wall_time_a == 1.0 && r.wall_time_b == 0.25));
+        assert!(rows.iter().all(|r| r.runtime_a == "sim" && r.runtime_b == "threads"));
+        // the CSV carries the sim_vs_real verdict column
+        let csv = parity_csv(&rows).to_string();
+        assert!(csv.lines().next().unwrap().ends_with("sim_vs_real"));
+        assert!(csv.contains(",pass") && csv.contains(",FAIL"));
+        // loose tolerances accept everything again
+        assert!(parity(&sim, &real, 1.0, 10.0).iter().all(|r| r.pass));
+        // unmatched cells are skipped
+        let mut partial = sim.clone();
+        partial.cells.truncate(3);
+        assert_eq!(parity(&partial, &real, 1.0, 10.0).len(), 3);
     }
 
     #[test]

@@ -67,6 +67,37 @@ impl CsvWriter {
         out
     }
 
+    /// Sweep-style JSON view of the table (`{"description": ..., "rows":
+    /// [{col: value, ...}, ...]}`), the same report.json shape the sweep
+    /// engine emits — so bench outputs become machine-trackable across PRs
+    /// next to sweep reports.  Cells that round-trip through `f64` (the
+    /// common case: they were Display-formatted from f64) are emitted as
+    /// JSON numbers; everything else as strings.
+    pub fn to_json(&self, description: &str) -> String {
+        let json_escape = crate::util::json::escape;
+        fn json_cell(cell: &str) -> String {
+            match cell.parse::<f64>() {
+                Ok(v) if v.is_finite() && format!("{v}") == cell => cell.to_string(),
+                _ => crate::util::json::escape(cell),
+            }
+        }
+        let mut s = String::from("{\n");
+        let _ = writeln!(s, "  \"description\": {},", json_escape(description));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str("    {");
+            for (j, (col, cell)) in self.header.iter().zip(r).enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                let _ = write!(s, "{}: {}", json_escape(col), json_cell(cell));
+            }
+            let _ = writeln!(s, "}}{}", if i + 1 < self.rows.len() { "," } else { "" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         if let Some(dir) = path.parent() {
@@ -102,6 +133,19 @@ mod tests {
     fn arity_checked() {
         let mut w = CsvWriter::new(&["a", "b"]);
         w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn json_view_types_cells() {
+        let mut w = CsvWriter::new(&["bench", "value"]);
+        w.row(&["sdca".into(), "1.5".into()]);
+        w.row(&["odd \"name\"".into(), "not-a-number".into()]);
+        let j = w.to_json("micro");
+        assert!(j.contains("\"description\": \"micro\""));
+        assert!(j.contains("\"value\": 1.5"), "{j}");
+        assert!(j.contains("\"value\": \"not-a-number\""), "{j}");
+        assert!(j.contains("\\\"name\\\""), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
     #[test]

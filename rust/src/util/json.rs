@@ -1,0 +1,58 @@
+//! Minimal JSON emission helpers (serde-free, offline build).
+//!
+//! Shared by the sweep report writer ([`crate::sweep::report`]) and the
+//! CSV-to-JSON bench trajectory view ([`crate::util::csv::CsvWriter::to_json`])
+//! so the crate has exactly one string-escaping implementation.
+
+use std::fmt::Write as _;
+
+/// JSON string literal with full control-character coverage.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite floats via shortest-roundtrip Display (always a valid JSON
+/// number); non-finite become `null`.
+pub fn f64_or_null(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_controls() {
+        assert_eq!(escape("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(escape("t\tr\r"), "\"t\\tr\\r\"");
+        assert_eq!(escape("\u{1}"), "\"\\u0001\"");
+        assert_eq!(escape("plain"), "\"plain\"");
+    }
+
+    #[test]
+    fn floats() {
+        assert_eq!(f64_or_null(1.5), "1.5");
+        assert_eq!(f64_or_null(f64::INFINITY), "null");
+        assert_eq!(f64_or_null(f64::NAN), "null");
+    }
+}

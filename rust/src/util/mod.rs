@@ -8,4 +8,5 @@ pub mod args;
 pub mod binio;
 pub mod clock;
 pub mod csv;
+pub mod json;
 pub mod rng;

@@ -160,15 +160,41 @@ fn error_feedback_beats_dropping() {
     assert!(b.final_residual.iter().all(|&r| r == 0.0));
 }
 
-/// All shipped configs must parse, validate and load data.
+/// All shipped configs must parse and validate — experiment configs as
+/// `ExperimentConfig` (engines checked against their preset's n), sweep
+/// configs ([sweep]-only files) as `SweepSpec` with valid per-cell engines.
 #[test]
 fn shipped_configs_are_valid() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
     let mut seen = 0;
     for entry in std::fs::read_dir(&dir).expect("configs/ exists") {
         let path = entry.unwrap().path();
-        if path.extension().map(|e| e == "toml").unwrap_or(false) {
-            seen += 1;
+        if !path.extension().map(|e| e == "toml").unwrap_or(false) {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = acpd::config::toml::Document::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let is_sweep = doc.sections.contains_key("sweep")
+            && !doc.sections.contains_key("data")
+            && !doc.sections.contains_key("algo");
+        if is_sweep {
+            let spec = acpd::sweep::SweepSpec::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            let cells = spec.cells();
+            assert!(!cells.is_empty(), "{}: empty sweep grid", path.display());
+            for cell in &cells {
+                let n = if spec.n_override > 0 {
+                    spec.n_override
+                } else {
+                    cell.preset.spec().n
+                };
+                spec.engine_for(cell)
+                    .validate(n)
+                    .unwrap_or_else(|e| panic!("{} cell {}: {e:#}", path.display(), cell.index));
+            }
+        } else {
             let cfg = acpd::config::ExperimentConfig::from_file(&path)
                 .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
             // engine must validate against its own preset's n

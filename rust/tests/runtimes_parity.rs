@@ -1,15 +1,19 @@
 //! Runtime parity: the DES simulator, the thread runtime and the TCP
 //! runtime drive the SAME protocol state machines — for synchronous
 //! configurations (B = K) the commit composition is identical, so all
-//! three must converge to (numerically) the same model.
+//! three must converge to (numerically) the same model.  The matrix-scale
+//! tests at the bottom replay whole sweep grids across runtimes and assert
+//! the `sim_vs_real` parity column passes.
 
 use std::net::TcpListener;
 use std::thread;
 
 use acpd::data::synthetic::{self, Preset};
 use acpd::data::Dataset;
-use acpd::engine::EngineConfig;
-use acpd::network::NetworkModel;
+use acpd::engine::{Algorithm, EngineConfig};
+use acpd::loss::LossKind;
+use acpd::network::{NetworkModel, Scenario};
+use acpd::sweep::{parity, run_sweep, RuntimeKind, SweepSpec};
 
 fn ds() -> Dataset {
     let mut spec = Preset::Rcv1Small.spec();
@@ -123,4 +127,82 @@ fn acpd_converges_on_all_three_runtimes() {
         w.join().unwrap();
     }
     assert!(tcp.history.last_gap() < 1e-3, "tcp {:.3e}", tcp.history.last_gap());
+}
+
+/// A synchronous sweep grid (B = K baselines): the commit composition on
+/// the thread runtime is identical to the simulator's, so every cell's
+/// final gap and ‖w‖ must agree tightly despite one time axis being
+/// virtual and the other wall clock.
+fn sync_matrix(runtime: RuntimeKind) -> SweepSpec {
+    SweepSpec {
+        algorithms: vec![Algorithm::Cocoa, Algorithm::CocoaPlus],
+        scenarios: vec![Scenario::Lan],
+        presets: vec![Preset::DenseTest],
+        rho_ds: vec![0],
+        seeds: vec![1, 2],
+        workers: 3,
+        group: 3,
+        period: 1,
+        h: 256,
+        lambda: 1e-2,
+        loss: LossKind::Square,
+        outer_rounds: 15,
+        target_gap: 0.0,
+        eval_every: 1,
+        runtime,
+        data_seed: 7,
+        n_override: 300,
+        d_override: 0,
+        threads: 2,
+    }
+}
+
+#[test]
+fn sweep_matrix_parity_sim_vs_threads() {
+    let sim_report = run_sweep(&sync_matrix(RuntimeKind::Sim)).expect("sim sweep");
+    let thr_report = run_sweep(&sync_matrix(RuntimeKind::Threads)).expect("threads sweep");
+    assert_eq!(sim_report.cells.len(), 4);
+    assert!(sim_report.cells.iter().all(|c| c.runtime == "sim"));
+    assert!(thr_report.cells.iter().all(|c| c.runtime == "threads"));
+
+    // identical protocol trajectory => same rounds and byte accounting
+    for (s, t) in sim_report.cells.iter().zip(&thr_report.cells) {
+        assert_eq!((s.rounds, s.bytes_up, s.bytes_down), (t.rounds, t.bytes_up, t.bytes_down));
+    }
+
+    // the sim_vs_real column: final gap within 1e-5 absolute, |w| within
+    // 1e-5 relative (only gap-probe merge order separates the two runs)
+    let rows = parity(&sim_report, &thr_report, 1e-5, 1e-5);
+    assert_eq!(rows.len(), 4, "every cell must be matched across runtimes");
+    for r in &rows {
+        assert!(
+            r.pass,
+            "{} / {} seed {}: sim gap {:.6e} vs threads gap {:.6e} (w rel diff {:.2e})",
+            r.algorithm, r.scenario, r.seed, r.final_gap_a, r.final_gap_b, r.w_norm_rel_diff
+        );
+    }
+    // and the cells converged at all (the parity is about a nontrivial run)
+    assert!(sim_report.cells.iter().all(|c| c.final_gap < 0.1));
+}
+
+#[test]
+fn sweep_matrix_parity_sim_vs_tcp() {
+    let mut spec = sync_matrix(RuntimeKind::Tcp);
+    // keep the TCP grid lean: one algorithm, both seeds
+    spec.algorithms = vec![Algorithm::CocoaPlus];
+    let tcp_report = run_sweep(&spec).expect("tcp sweep");
+    let mut sim_spec = spec.clone();
+    sim_spec.runtime = RuntimeKind::Sim;
+    let sim_report = run_sweep(&sim_spec).expect("sim sweep");
+
+    let rows = parity(&sim_report, &tcp_report, 1e-5, 1e-5);
+    assert_eq!(rows.len(), 2);
+    for r in &rows {
+        assert!(
+            r.pass,
+            "{} seed {}: sim gap {:.6e} vs tcp gap {:.6e}",
+            r.algorithm, r.seed, r.final_gap_a, r.final_gap_b
+        );
+        assert_eq!((r.runtime_a.as_str(), r.runtime_b.as_str()), ("sim", "tcp"));
+    }
 }

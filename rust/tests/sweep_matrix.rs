@@ -8,7 +8,7 @@ use acpd::data::synthetic::Preset;
 use acpd::engine::Algorithm;
 use acpd::loss::LossKind;
 use acpd::network::Scenario;
-use acpd::sweep::{run_sweep, SweepSpec};
+use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
 
 /// 2 algorithms x 2 scenarios x 2 seeds on a small rcv1-shaped problem —
 /// the same shape `sim`'s own straggler test pins down, at matrix scale.
@@ -28,6 +28,7 @@ fn matrix_2x2x2() -> SweepSpec {
         outer_rounds: 400, // generous cap; cells stop early at target_gap
         target_gap: 5e-3,
         eval_every: 1,
+        runtime: RuntimeKind::Sim,
         data_seed: 11,
         n_override: 512,
         d_override: 1000,
