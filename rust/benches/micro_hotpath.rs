@@ -2,13 +2,21 @@
 //!
 //! Times every hot path in isolation:
 //!   * SDCA epoch (ns per coordinate step, per nonzero touched)
+//!   * CSR row kernels (row_dot / row_axpy, ns per nonzero)
 //!   * top-k threshold selection (quickselect vs full sort)
+//!   * the top-ρd filter on sparse inputs at d ∈ {1e5, 1e6} (O(nnz) select)
+//!   * the server commit path at d ∈ {1e5, 1e6} with fixed nnz — the
+//!     commit-log design goal is a per-commit cost independent of d, so the
+//!     two medians (and the emitted d-ratio) should sit within ~2x
 //!   * SparseVec/message codec throughput
 //!   * duality-gap evaluation (full data pass)
 //!   * DES engine round throughput (protocol + network model only)
 //!   * PJRT execute latency per artifact (if artifacts are built)
 //!
 //!   cargo bench --bench micro_hotpath
+//!
+//! Medians land in `results/micro_hotpath.{csv,json}`; `scripts/bench_gate`
+//! compares the JSON against a committed `BENCH_BASELINE.json`.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -17,9 +25,11 @@ use acpd::data::partition::partition_rows;
 use acpd::data::synthetic::{self, Preset};
 use acpd::engine::EngineConfig;
 use acpd::filter::{filter_topk, FilterScratch};
+use acpd::linalg::sparse::SparseVec;
 use acpd::loss::LossKind;
 use acpd::network::NetworkModel;
 use acpd::protocol::messages::UpdateMsg;
+use acpd::protocol::server::{ServerAction, ServerConfig, ServerState};
 use acpd::solver::sdca::SdcaSolver;
 use acpd::solver::LocalSolver;
 use acpd::util::csv::CsvWriter;
@@ -61,6 +71,39 @@ fn main() {
         csv.rowf(&[&"sdca_epoch", &"ns_per_nz", &(per_nz * 1e9), &"ns"]);
     }
 
+    // ---------------------------------------------------------- row kernels
+    {
+        let mut spec = Preset::Rcv1Small.spec();
+        spec.n = 4_000;
+        let ds = synthetic::generate(&spec, 8);
+        let m = &ds.features;
+        let w = vec![0.01f32; ds.d()];
+        let (med_dot, _) = time_it(iters, || {
+            let mut acc = 0.0f64;
+            for r in 0..m.n_rows {
+                acc += m.row_dot(r, &w);
+            }
+            acc
+        });
+        let mut wbuf = vec![0.0f32; ds.d()];
+        let (med_axpy, _) = time_it(iters, || {
+            for r in 0..m.n_rows {
+                m.row_axpy(r, 1e-9, &mut wbuf);
+            }
+            std::hint::black_box(wbuf[0])
+        });
+        let dot_nz = med_dot / ds.nnz() as f64 * 1e9;
+        let axpy_nz = med_axpy / ds.nnz() as f64 * 1e9;
+        println!(
+            "row_kernels     dot {:>6.2} ns/nz   axpy {:>6.2} ns/nz   (nnz={})",
+            dot_nz,
+            axpy_nz,
+            ds.nnz()
+        );
+        csv.rowf(&[&"row_dot", &"ns_per_nz", &dot_nz, &"ns"]);
+        csv.rowf(&[&"row_axpy", &"ns_per_nz", &axpy_nz, &"ns"]);
+    }
+
     // ---------------------------------------------------------- top-k
     for d in [47_236usize, 400_000] {
         let mut rng = Pcg64::new(2);
@@ -86,6 +129,92 @@ fn main() {
         );
         csv.rowf(&[&format!("topk_d{d}"), &"quickselect_s", &qs, &"s"]);
         csv.rowf(&[&format!("topk_d{d}"), &"sort_s", &med_sort, &"s"]);
+    }
+
+    // -------------------------------------------- filter on sparse inputs
+    // the production shape: a mostly-zero residual+update vector.  The
+    // selection pass is O(nnz); the remaining cost is the O(d) memory-
+    // bandwidth sweeps (clone is subtracted like the top-k bench above).
+    for d in [100_000usize, 1_000_000] {
+        let nnz = 5_000;
+        let k = 1_000;
+        let mut rng = Pcg64::new(14);
+        let mut vals = vec![0.0f32; d];
+        let sv = rand_sparse_strided(&mut rng, d, nnz);
+        for (&i, &v) in sv.idx.iter().zip(&sv.val) {
+            vals[i as usize] = v;
+        }
+        let mut scratch = FilterScratch::default();
+        let (med_f, _) = time_it(iters, || {
+            let mut v = vals.clone();
+            filter_topk(&mut v, k, &mut scratch)
+        });
+        let (med_clone, _) = time_it(iters, || vals.clone());
+        let sel = med_f - med_clone;
+        println!(
+            "filter d={d:<7}  select+split {:>10}   (nnz={nnz}, k={k})",
+            fmt_secs(sel)
+        );
+        csv.rowf(&[&format!("filter_sparse_d{d}"), &"select_s", &sel, &"s"]);
+    }
+
+    // ------------------------------------------------ server commit path
+    // K workers stream fixed-nnz sparse updates through the full barrier
+    // protocol; with the sparse commit log the per-commit cost depends on
+    // the communicated nnz, NOT on d — the d-ratio row pins that claim.
+    {
+        let (k, b, t, nnz) = (8usize, 4usize, 10usize, 1_000usize);
+        let commits_target = common::scaled(2_000, 200);
+        let mut per_commit = Vec::new();
+        for d in [100_000usize, 1_000_000] {
+            let mut rng = Pcg64::new(9);
+            let pool: Vec<SparseVec> = (0..128)
+                .map(|_| rand_sparse_strided(&mut rng, d, nnz))
+                .collect();
+            let (med, _) = time_it(iters.min(10), || {
+                let mut s = ServerState::new(
+                    ServerConfig {
+                        workers: k,
+                        group: b,
+                        period: t,
+                        outer_rounds: 1_000_000,
+                        gamma: 0.5,
+                    },
+                    d,
+                );
+                let mut sent = vec![false; k];
+                let mut commits = 0usize;
+                let mut pi = 0usize;
+                while commits < commits_target {
+                    for wid in 0..k {
+                        if sent[wid] {
+                            continue;
+                        }
+                        let sv = pool[pi % pool.len()].clone();
+                        pi += 1;
+                        sent[wid] = true;
+                        let msg = UpdateMsg::from_sparse(wid as u32, 0, sv);
+                        if let ServerAction::Commit { replies, .. } = s.on_update(msg) {
+                            commits += 1;
+                            for r in &replies {
+                                sent[r.worker as usize] = false;
+                            }
+                            std::hint::black_box(&replies);
+                        }
+                    }
+                }
+                s.total_rounds()
+            });
+            let us = med / commits_target as f64 * 1e6;
+            per_commit.push(us);
+            println!(
+                "server_commit d={d:<7}  {us:>8.1} µs/commit  (K={k} B={b} T={t} nnz={nnz})"
+            );
+            csv.rowf(&[&format!("server_commit_d{d}"), &"us_per_commit", &us, &"us"]);
+        }
+        let ratio = per_commit[1] / per_commit[0].max(1e-12);
+        println!("server_commit   d=1e6 / d=1e5 cost ratio: {ratio:.2}x (goal: ~1, was ~10x dense)");
+        csv.rowf(&[&"server_commit", &"d_ratio_1e6_over_1e5", &ratio, &"x"]);
     }
 
     // ---------------------------------------------------------- codec
@@ -199,4 +328,15 @@ fn main() {
 
     common::save(&csv, "micro_hotpath.csv");
     common::save_json(&csv, "micro_hotpath.json", "micro_hotpath: hot-path medians");
+}
+
+/// Random sparse vector with exactly `nnz` nonzeros, one per stride bucket
+/// (strictly increasing indices without an O(d) shuffle per draw).
+fn rand_sparse_strided(rng: &mut Pcg64, d: usize, nnz: usize) -> SparseVec {
+    let stride = d / nnz;
+    let idx: Vec<u32> = (0..nnz)
+        .map(|i| (i * stride + rng.next_below(stride as u32) as usize) as u32)
+        .collect();
+    let val: Vec<f32> = (0..nnz).map(|_| rng.next_normal() as f32).collect();
+    SparseVec::new(d, idx, val)
 }

@@ -242,7 +242,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
             let out = acpd::sim::run(&x.ds, &x.engine, &x.net, x.seed);
             eprintln!(
                 "sim: {} rounds, virtual {:.3}s, {:.2} MB up / {:.2} MB down, \
-                 q_k = {:?}, max staleness {}",
+                 q_k = {:?}, max staleness {}, peak log {}",
                 out.stats.rounds,
                 out.stats.wall_time,
                 out.stats.bytes_up as f64 / 1e6,
@@ -252,18 +252,21 @@ fn cmd_train(raw: &[String]) -> Result<()> {
                     .iter()
                     .map(|q| (q * 100.0).round() / 100.0)
                     .collect::<Vec<_>>(),
-                out.stats.max_staleness
+                out.stats.max_staleness,
+                out.stats.peak_log_entries
             );
             out.history
         }
         "threads" => {
             let out = acpd::runtime_threads::run(&x.ds, &x.engine, &x.net, x.seed);
             eprintln!(
-                "threads: wall {:.3}s, {:.2} MB up / {:.2} MB down, max staleness {}",
+                "threads: wall {:.3}s, {:.2} MB up / {:.2} MB down, \
+                 max staleness {}, peak log {}",
                 out.wall_time,
                 out.bytes_up as f64 / 1e6,
                 out.bytes_down as f64 / 1e6,
-                out.max_staleness
+                out.max_staleness,
+                out.peak_log_entries
             );
             out.history
         }

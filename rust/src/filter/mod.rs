@@ -4,7 +4,8 @@
 //! by magnitude as a [`SparseVec`] for the wire and leave the complement in
 //! place as the error-feedback residual:
 //!
-//!   c_k   = ρd-th largest |Δw_k|          (quickselect, expected O(d))
+//!   c_k   = ρd-th largest |Δw_k|          (quickselect over the nnz
+//!                                          nonzeros, expected O(nnz))
 //!   M_k   = |Δw_k| ≥ c_k
 //!   F(Δw) = Δw ∘ M_k       (sent, exactly ≤ ρd entries — ties truncated
 //!                           deterministically by lowest index, matching the
@@ -22,6 +23,16 @@ pub struct FilterScratch {
 /// Split `delta_w` in place: returns the filtered top-k sparse vector and
 /// leaves the residual in `delta_w`.  `k >= d` (or `k == 0` meaning dense)
 /// short-circuits to "send everything".
+///
+/// Selection cost is O(nnz), not O(d): one fused pass gathers the nonzero
+/// magnitudes into the reused scratch (its length IS the nnz count — no
+/// separate counting sweep), quickselect then runs over those nnz
+/// candidates only.  Since the d − nnz zeros occupy the bottom ranks, the
+/// k-th largest magnitude over all d values equals the k-th largest
+/// nonzero whenever k ≤ nnz — and k > nnz is exactly the ship-it-whole
+/// fast path.  On the duplicate-heavy inputs this filter used to see
+/// (mostly exact zeros) this also sidesteps the quickselect equal-band
+/// entirely.
 pub fn filter_topk(
     delta_w: &mut [f32],
     k: usize,
@@ -29,40 +40,37 @@ pub fn filter_topk(
 ) -> SparseVec {
     let d = delta_w.len();
     if k == 0 || k >= d {
-        let full = SparseVec::from_dense(delta_w);
-        delta_w.fill(0.0);
-        return full;
+        return take_all(delta_w);
     }
-    // early exit: if the update already has <= k nonzeros, ship it whole
-    // (skips the selection pass — common for very sparse local updates)
-    let nnz = delta_w.iter().filter(|&&v| v != 0.0).count();
-    if nnz <= k {
-        let full = SparseVec::from_dense(delta_w);
-        delta_w.fill(0.0);
-        return full;
+    let buf = &mut scratch.buf;
+    buf.clear();
+    buf.extend(delta_w.iter().filter(|&&v| v != 0.0).map(|v| v.abs()));
+    if buf.len() <= k {
+        // at most k nonzeros: ship the whole update, residual empty
+        return take_all(delta_w);
     }
-    let c = topk::topk_threshold(delta_w, k, &mut scratch.buf);
+    // c > 0 always holds here: every candidate is a nonzero magnitude
+    let c = topk::kth_largest_in_place(buf, k);
     let mut idx = Vec::with_capacity(k);
     let mut val = Vec::with_capacity(k);
-    if c == 0.0 {
-        // fewer than k nonzeros in total: ship all nonzeros, residual empty.
-        for (i, v) in delta_w.iter_mut().enumerate() {
-            if *v != 0.0 {
-                idx.push(i as u32);
-                val.push(*v);
-                *v = 0.0;
-            }
-        }
-        return SparseVec::new(d, idx, val);
-    }
     for (i, v) in delta_w.iter_mut().enumerate() {
-        if v.abs() >= c && idx.len() < k {
+        if v.abs() >= c {
             idx.push(i as u32);
             val.push(*v);
             *v = 0.0;
+            if idx.len() == k {
+                break; // ties beyond the budget stay in the residual
+            }
         }
     }
     SparseVec::new(d, idx, val)
+}
+
+/// Ship every nonzero and clear the residual (dense mode / sparser-than-k).
+fn take_all(delta_w: &mut [f32]) -> SparseVec {
+    let full = SparseVec::from_dense(delta_w);
+    delta_w.fill(0.0);
+    full
 }
 
 #[cfg(test)]

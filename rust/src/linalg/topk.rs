@@ -7,27 +7,37 @@
 //! two-way schemes degrade to O(d²) (found + fixed in §Perf) — and is
 //! allocation-free over a scratch buffer the worker reuses across rounds.
 
+/// k-th largest element of an already-populated buffer, selected in place
+/// (the buffer is clobbered).  k is 1-based and clamped to [1, len].
+///
+/// This is the filter's O(nnz) entry point: the caller fills `v` with only
+/// the candidates that can matter (e.g. the nonzero magnitudes of a mostly
+/// zero update), so selection cost scales with the candidates, not with the
+/// full dimension.
+pub fn kth_largest_in_place(v: &mut [f32], k: usize) -> f32 {
+    assert!(!v.is_empty(), "kth_largest on empty slice");
+    let k = k.clamp(1, v.len());
+    // k-th largest == (len - k)-th smallest (0-based)
+    let target = v.len() - k;
+    select_nth(v, target)
+}
+
 /// k-th largest value of `vals` (1-based k), by magnitude-agnostic ordering
 /// of the raw values.  `scratch` is clobbered.  k is clamped to [1, len].
 pub fn kth_largest(vals: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     assert!(!vals.is_empty(), "kth_largest on empty slice");
-    let k = k.clamp(1, vals.len());
     scratch.clear();
     scratch.extend_from_slice(vals);
-    // k-th largest == (len - k)-th smallest (0-based)
-    let target = scratch.len() - k;
-    select_nth(scratch, target)
+    kth_largest_in_place(scratch, k)
 }
 
 /// k-th largest |v|: the threshold `c_k` such that
 /// `|{i : |v_i| >= c_k}| >= k` with equality unless ties.
 pub fn topk_threshold(vals: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     assert!(!vals.is_empty());
-    let k = k.clamp(1, vals.len());
     scratch.clear();
     scratch.extend(vals.iter().map(|v| v.abs()));
-    let target = scratch.len() - k;
-    select_nth(scratch, target)
+    kth_largest_in_place(scratch, k)
 }
 
 /// Quickselect for the `target`-th smallest (0-based) via 3-way partition.
@@ -132,6 +142,34 @@ mod tests {
         assert_eq!(kth_largest(&vals, 3, &mut scratch), 1.0);
         let vals2 = vec![-2.0, 2.0, -2.0, 1.0];
         assert_eq!(topk_threshold(&vals2, 2, &mut scratch), 2.0);
+    }
+
+    #[test]
+    fn nonzeros_only_select_matches_full_select() {
+        // the filter's O(nnz) path: for k <= nnz, the k-th largest magnitude
+        // over ALL d values equals the k-th largest over just the nonzeros
+        // (zeros occupy the bottom d - nnz ranks)
+        let mut rng = Pcg64::new(17);
+        let mut scratch = Vec::new();
+        for _ in 0..100 {
+            let d = 20 + rng.next_below(400) as usize;
+            let mut vals = vec![0.0f32; d];
+            let nnz = 2 + rng.next_below((d / 2) as u32) as usize;
+            for _ in 0..nnz {
+                let i = rng.next_below(d as u32) as usize;
+                vals[i] = rng.next_normal() as f32;
+            }
+            let nnz_actual = vals.iter().filter(|&&v| v != 0.0).count();
+            if nnz_actual < 2 {
+                continue;
+            }
+            let k = 1 + rng.next_below(nnz_actual as u32 - 1) as usize;
+            let full = topk_threshold(&vals, k, &mut scratch);
+            let mut nz: Vec<f32> =
+                vals.iter().filter(|&&v| v != 0.0).map(|v| v.abs()).collect();
+            let sparse = kth_largest_in_place(&mut nz, k);
+            assert_eq!(full, sparse, "d={d} nnz={nnz_actual} k={k}");
+        }
     }
 
     #[test]

@@ -22,9 +22,11 @@ pub struct UpdateMsg {
 }
 
 impl UpdateMsg {
-    /// Wrap a filtered update, choosing the smaller wire encoding.
+    /// Wrap a filtered update, choosing the smaller wire encoding via the
+    /// shared [`ModelDelta::prefers_sparse`] rule (at the exact tie point
+    /// dense wins: equal payload, smaller headers).
     pub fn from_sparse(worker: u32, round: u64, sv: SparseVec) -> UpdateMsg {
-        let update = if 8 * sv.nnz() <= 4 * sv.dim {
+        let update = if ModelDelta::prefers_sparse(sv.nnz(), sv.dim) {
             ModelDelta::Sparse(sv)
         } else {
             ModelDelta::Dense(sv.to_dense())
@@ -66,11 +68,39 @@ impl ModelDelta {
         }
     }
 
+    /// Visit every carried nonzero as `(index, value)`, in index order.
+    /// This is the server commit path's O(nnz) ingestion primitive: a dense
+    /// delta is walked once skipping exact zeros, a sparse one touches only
+    /// its nnz pairs — never a full-dimension materialization.
+    pub fn for_each_nonzero(&self, mut f: impl FnMut(usize, f32)) {
+        match self {
+            ModelDelta::Sparse(s) => {
+                for (&i, &v) in s.idx.iter().zip(&s.val) {
+                    f(i as usize, v);
+                }
+            }
+            ModelDelta::Dense(d) => {
+                for (i, &v) in d.iter().enumerate() {
+                    if v != 0.0 {
+                        f(i, v);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The shared wire rule: sparse costs 8 B/nz, dense 4 B/coord.  Both
+    /// [`ModelDelta::from_dense`] and the server's lazy reply
+    /// materialization decide through this one predicate, so the encoding
+    /// choice cannot drift between the two paths.
+    pub fn prefers_sparse(nnz: usize, dim: usize) -> bool {
+        8 * nnz < 4 * dim
+    }
+
     /// Choose the smaller encoding of an accumulated dense delta.
     pub fn from_dense(delta: &[f32]) -> ModelDelta {
         let nnz = delta.iter().filter(|&&v| v != 0.0).count();
-        // sparse costs 8 bytes/nz, dense 4 bytes/coord
-        if 8 * nnz < 4 * delta.len() {
+        if Self::prefers_sparse(nnz, delta.len()) {
             ModelDelta::Sparse(SparseVec::from_dense(delta))
         } else {
             ModelDelta::Dense(delta.to_vec())
@@ -401,6 +431,17 @@ mod tests {
         ));
         let full: Vec<f32> = (0..1000).map(|i| i as f32 + 1.0).collect();
         assert!(matches!(ModelDelta::from_dense(&full), ModelDelta::Dense(_)));
+    }
+
+    #[test]
+    fn for_each_nonzero_skips_exact_zeros() {
+        let sparse = ModelDelta::Sparse(SparseVec::new(6, vec![1, 4], vec![2.0, -3.0]));
+        let dense = ModelDelta::Dense(vec![0.0, 2.0, 0.0, 0.0, -3.0, 0.0]);
+        for delta in [sparse, dense] {
+            let mut seen = Vec::new();
+            delta.for_each_nonzero(|i, v| seen.push((i, v)));
+            assert_eq!(seen, vec![(1, 2.0), (4, -3.0)]);
+        }
     }
 
     #[test]

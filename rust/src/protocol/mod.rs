@@ -1,7 +1,9 @@
 //! The paper's contribution as runtime-agnostic state machines.
 //!
 //! [`server::ServerState`] implements Algorithm 1 (straggler-agnostic,
-//! group-wise aggregation with a T-periodic full barrier);
+//! group-wise aggregation with a T-periodic full barrier) over a sparse
+//! commit log, so per-commit cost scales with the bytes actually
+//! communicated (ρd-sparse group deltas), not the model dimension d;
 //! [`worker::WorkerState`] implements Algorithm 2 (local subproblem +
 //! bandwidth filter with error feedback).  Neither knows about time,
 //! threads or sockets: the DES simulator, the thread runtime and the TCP

@@ -1,17 +1,36 @@
 //! Algorithm 1 — the straggler-agnostic server, as a pure state machine.
 //!
-//! The server holds the global model `w`, one pending-delta accumulator
-//! `Δw̃_k` per worker, and the current group set Φ.  `on_update` ingests one
-//! worker message; when the barrier condition is met ( |Φ| ≥ B normally,
-//! |Φ| = K on every T-th inner iteration ) it commits the group:
+//! The server holds the global model `w`, a shared **sparse commit log**,
+//! and the current group set Φ.  `on_update` ingests one worker message;
+//! when the barrier condition is met ( |Φ| ≥ B normally, |Φ| = K on every
+//! T-th inner iteration ) it commits the group:
 //!
-//!   w ← w + γ Σ_{k∈Φ} F(Δw_k)          (line 10)
-//!   Δw̃_j ← Δw̃_j + γ F(Δw_k)  ∀j,k∈Φ   (line 8)
-//!   reply Δw̃_k to k ∈ Φ; Δw̃_k ← 0     (line 11)
+//!   e      = γ Σ_{k∈Φ} F(Δw_k)           (the commit's aggregated delta)
+//!   w ← w + e                            (line 10)
+//!   log.push(e)                          (line 8, shared by every worker)
+//!   reply Δw̃_k = Σ log[cursor_k..] to k ∈ Φ; cursor_k ← len   (line 11)
+//!
+//! The paper's per-worker accumulator Δw̃_k is never stored: it is
+//! *materialized lazily* as the sum of log entries since worker k's last
+//! inclusion (tracked by a per-worker log cursor), and entries every worker
+//! has advanced past are truncated.  This turns per-commit cost from
+//! O(B·d + K·nnz) dense folds into O(members · nnz_committed), and server
+//! memory from O(K·d) to O(d + live-log) — the live log is bounded by the
+//! full-barrier period T, since a full barrier advances every cursor to the
+//! log head and empties it.  Replies are byte-identical to what dense
+//! accumulators with the same commit arithmetic would produce (same values,
+//! same sparse/dense encoding choice); `tests/server_equiv.rs` pins this
+//! against such a dense reference.  Commit arithmetic is Algorithm 1's
+//! group sum — the aggregated entry is applied to w and shared — which
+//! regroups float additions at last-ulp relative to folding members into w
+//! one at a time (the pre-commit-log implementation detail).
 //!
 //! The runtime (sim / threads / tcp) decides *when* messages arrive; the
 //! state machine only decides *what happens*.
 
+use std::collections::VecDeque;
+
+use crate::linalg::sparse::SparseVec;
 use crate::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
 
 /// What the server wants the runtime to do after ingesting a message.
@@ -47,8 +66,18 @@ pub struct ServerState {
     cfg: ServerConfig,
     /// global model w
     w: Vec<f32>,
-    /// per-worker pending delta Δw̃_k (dense accumulators)
-    pending: Vec<Vec<f32>>,
+    /// sparse commit log: entry e = γ Σ_{k∈Φ_e} F(Δw_k), oldest first.
+    /// `log[0]` is commit number `log_base`; the log covers commits
+    /// [log_base, total_rounds).
+    log: VecDeque<SparseVec>,
+    log_base: u64,
+    /// per-worker cursor: commits [0, cursor[k]) are already folded into
+    /// worker k's local model (shipped in earlier replies)
+    cursor: Vec<u64>,
+    /// dense accumulation scratch, all-zero between operations
+    scratch: Vec<f32>,
+    /// indices written to `scratch` by the operation in flight
+    touched: Vec<u32>,
     /// messages of the current group, at most one per worker
     inbox: Vec<Option<ModelDelta>>,
     in_group: usize,
@@ -64,6 +93,8 @@ pub struct ServerState {
     last_included: Vec<u64>,
     /// max observed staleness (rounds between inclusions)
     max_staleness: u64,
+    /// high-water mark of live log entries (memory diagnostics)
+    peak_log_entries: usize,
     finished: bool,
     /// true once a stop was requested (target gap reached)
     stop_requested: bool,
@@ -75,7 +106,11 @@ impl ServerState {
         assert!(cfg.period >= 1);
         ServerState {
             w: vec![0.0; dim],
-            pending: vec![vec![0.0; dim]; cfg.workers],
+            log: VecDeque::new(),
+            log_base: 0,
+            cursor: vec![0; cfg.workers],
+            scratch: vec![0.0; dim],
+            touched: Vec::new(),
             inbox: vec![None; cfg.workers],
             in_group: 0,
             t: 0,
@@ -84,6 +119,7 @@ impl ServerState {
             participation: vec![0; cfg.workers],
             last_included: vec![0; cfg.workers],
             max_staleness: 0,
+            peak_log_entries: 0,
             finished: false,
             stop_requested: false,
             cfg,
@@ -108,6 +144,17 @@ impl ServerState {
 
     pub fn max_staleness(&self) -> u64 {
         self.max_staleness
+    }
+
+    /// Commit-log entries currently held live (memory diagnostics; bounded
+    /// by the full-barrier period T).
+    pub fn live_log_entries(&self) -> usize {
+        self.log.len()
+    }
+
+    /// High-water mark of [`Self::live_log_entries`] over the run.
+    pub fn peak_log_entries(&self) -> usize {
+        self.peak_log_entries
     }
 
     /// Empirical inclusion frequency of each worker (the paper's q_k).
@@ -157,17 +204,26 @@ impl ServerState {
     fn commit_group(&mut self) -> ServerAction {
         let gamma = self.cfg.gamma;
         let full_barrier = self.is_full_barrier();
-        // lines 8 + 10: fold every received update into w and ALL pending Δw̃
         let members: Vec<usize> = (0..self.cfg.workers)
             .filter(|&k| self.inbox[k].is_some())
             .collect();
+        // lines 8 + 10: aggregate the group ONCE into a sparse log entry —
+        // O(Σ member nnz), never O(B·d) — then fold it into w and share it
+        // with every worker through the log instead of K dense accumulators.
+        let scratch = &mut self.scratch;
+        let touched = &mut self.touched;
         for &k in &members {
             let f = self.inbox[k].take().unwrap();
-            f.add_scaled_into(&mut self.w, gamma);
-            for pend in self.pending.iter_mut() {
-                f.add_scaled_into(pend, gamma);
-            }
+            f.for_each_nonzero(|i, v| {
+                scratch[i] += gamma * v;
+                touched.push(i as u32);
+            });
         }
+        let (idx, val) = drain_scratch_sorted(scratch, touched);
+        let entry = SparseVec::new(self.w.len(), idx, val);
+        entry.add_into(&mut self.w, 1.0);
+        self.log.push_back(entry);
+        self.peak_log_entries = self.peak_log_entries.max(self.log.len());
         self.in_group = 0;
         self.total_rounds += 1;
 
@@ -190,12 +246,13 @@ impl ServerState {
             self.stop_requested && full_barrier || self.l >= self.cfg.outer_rounds;
         self.finished = finished;
 
-        // line 11: reply with (and reset) Δw̃_k for members
+        // line 11: materialize Δw̃_k = Σ log[cursor_k..] for each member and
+        // advance its cursor past the log head
         let replies: Vec<DeltaMsg> = members
             .iter()
             .map(|&k| {
-                let delta = ModelDelta::from_dense(&self.pending[k]);
-                self.pending[k].fill(0.0);
+                let delta = self.materialize_since(self.cursor[k]);
+                self.cursor[k] = self.total_rounds;
                 DeltaMsg {
                     worker: k as u32,
                     server_round: self.total_rounds,
@@ -204,6 +261,7 @@ impl ServerState {
                 }
             })
             .collect();
+        self.truncate_log();
         ServerAction::Commit {
             replies,
             round: self.total_rounds,
@@ -212,12 +270,81 @@ impl ServerState {
         }
     }
 
-    /// Invariant: w == Σ over history of γF committed; equivalently each
-    /// pending Δw̃_k replays exactly the commits since k's last inclusion.
-    /// Exposed for tests/diagnostics.
-    pub fn pending_norm(&self, k: usize) -> f64 {
-        crate::linalg::dense::norm2_sq(&self.pending[k]).sqrt()
+    /// Sum of log entries in [from, total_rounds), encoded exactly as the
+    /// dense accumulator would have been: nonzeros in index order, sparse
+    /// vs dense chosen by the shared [`ModelDelta::prefers_sparse`] wire
+    /// rule.  Cost O(window nnz) (+ O(d) only when the reply is genuinely
+    /// dense, i.e. proportional to its payload).
+    fn materialize_since(&mut self, from: u64) -> ModelDelta {
+        let d = self.w.len();
+        debug_assert!(from >= self.log_base, "cursor behind truncated log");
+        let start = (from - self.log_base) as usize;
+        let scratch = &mut self.scratch;
+        let touched = &mut self.touched;
+        for e in self.log.iter().skip(start) {
+            for (&i, &v) in e.idx.iter().zip(&e.val) {
+                scratch[i as usize] += v;
+                touched.push(i);
+            }
+        }
+        let (idx, val) = drain_scratch_sorted(scratch, touched);
+        if ModelDelta::prefers_sparse(idx.len(), d) {
+            ModelDelta::Sparse(SparseVec::new(d, idx, val))
+        } else {
+            // exact-zero sums were dropped above; vec![0.0] restores them as
+            // the same +0.0 the dense accumulator would have held
+            let mut dense = vec![0.0f32; d];
+            for (&i, &v) in idx.iter().zip(&val) {
+                dense[i as usize] = v;
+            }
+            ModelDelta::Dense(dense)
+        }
     }
+
+    /// Drop log entries every worker has advanced past.
+    fn truncate_log(&mut self) {
+        let min_cursor = self.cursor.iter().copied().min().unwrap_or(0);
+        while self.log_base < min_cursor && !self.log.is_empty() {
+            self.log.pop_front();
+            self.log_base += 1;
+        }
+    }
+
+    /// Invariant: w == Σ over history of committed entries; equivalently each
+    /// lazily-materialized Δw̃_k replays exactly the commits since k's last
+    /// inclusion.  Exposed for tests/diagnostics (allocates O(d); not a hot
+    /// path).
+    pub fn pending_norm(&self, k: usize) -> f64 {
+        let start = (self.cursor[k] - self.log_base) as usize;
+        let mut acc = vec![0.0f32; self.w.len()];
+        for e in self.log.iter().skip(start) {
+            e.add_into(&mut acc, 1.0);
+        }
+        crate::linalg::dense::norm2_sq(&acc).sqrt()
+    }
+}
+
+/// Drain an accumulation out of `scratch`: sort+dedup the touched indices,
+/// gather the nonzero values in index order as parallel (idx, val) arrays,
+/// and restore the shared invariant that `scratch` is all-zero and
+/// `touched` empty between operations.  Exact-zero sums (cancellations) are
+/// dropped, matching what `ModelDelta::from_dense` does to a dense
+/// accumulator.
+fn drain_scratch_sorted(scratch: &mut [f32], touched: &mut Vec<u32>) -> (Vec<u32>, Vec<f32>) {
+    touched.sort_unstable();
+    touched.dedup();
+    let mut idx = Vec::with_capacity(touched.len());
+    let mut val = Vec::with_capacity(touched.len());
+    for &i in touched.iter() {
+        let v = scratch[i as usize];
+        scratch[i as usize] = 0.0;
+        if v != 0.0 {
+            idx.push(i);
+            val.push(v);
+        }
+    }
+    touched.clear();
+    (idx, val)
 }
 
 #[cfg(test)]
@@ -284,7 +411,7 @@ mod tests {
         } else {
             panic!()
         }
-        // next group from workers 2,3: their pending also holds round 1
+        // next group from workers 2,3: their replies also hold round 1
         let _ = s.on_update(upd(2, 4, 2, 2.0));
         if let ServerAction::Commit { replies, .. } = s.on_update(upd(3, 4, 3, 2.0)) {
             for r in &replies {
@@ -295,7 +422,8 @@ mod tests {
         } else {
             panic!()
         }
-        // worker 0 was not in the second commit: its pending holds round 2 only
+        // worker 0 was not in the second commit: its lazily-materialized
+        // delta holds round 2 only
         assert!((s.pending_norm(0) - (1.0f64 + 1.0).sqrt()).abs() < 1e-6);
     }
 
@@ -391,5 +519,45 @@ mod tests {
         assert!(s.max_staleness() <= 2, "staleness {}", s.max_staleness());
         let q = s.participation_rates();
         assert!(q[0] > q[1]);
+    }
+
+    #[test]
+    fn log_truncates_at_full_barriers() {
+        // B=1, T=3, K=2: the log grows while worker 1 lags, and every full
+        // barrier (all cursors advanced) must drain it completely.
+        let mut s = server(2, 1, 3);
+        for cycle in 0..3 {
+            let _ = s.on_update(upd(0, 4, 0, 0.1)); // t=0 commit
+            assert_eq!(s.live_log_entries(), 1, "cycle {cycle}");
+            let _ = s.on_update(upd(0, 4, 0, 0.1)); // t=1 commit
+            assert_eq!(s.live_log_entries(), 2, "cycle {cycle}");
+            let _ = s.on_update(upd(0, 4, 0, 0.1)); // t=2: waits for worker 1
+            let _ = s.on_update(upd(1, 4, 1, 0.1)); // full barrier commit
+            assert_eq!(s.live_log_entries(), 0, "cycle {cycle}");
+        }
+        // live log never exceeded the full-barrier period T
+        assert!(s.peak_log_entries() <= 3);
+        assert_eq!(s.total_rounds(), 9);
+    }
+
+    #[test]
+    fn exact_cancellation_is_dropped_from_replies() {
+        // workers 0 and 1 send exactly opposite updates in one group: the
+        // aggregated entry is empty, and the replies must be empty-sparse
+        // (the dense accumulator would have held exact zeros everywhere).
+        let mut s = server(2, 2, 10);
+        let _ = s.on_update(upd(0, 4, 2, 1.5));
+        match s.on_update(upd(1, 4, 2, -1.5)) {
+            ServerAction::Commit { replies, .. } => {
+                for r in &replies {
+                    assert_eq!(r.delta.nnz(), 0);
+                    assert!(matches!(&r.delta, ModelDelta::Sparse(sv) if sv.nnz() == 0));
+                }
+            }
+            _ => panic!(),
+        }
+        assert_eq!(s.w(), &[0.0; 4]);
+        // nothing to keep live: the entry is empty but still counted
+        assert_eq!(s.total_rounds(), 1);
     }
 }

@@ -33,6 +33,8 @@ pub struct ThreadRunOutput {
     pub wall_time: f64,
     /// total committed inner iterations (communication rounds)
     pub rounds: u64,
+    /// high-water mark of live commit-log entries on the server
+    pub peak_log_entries: usize,
 }
 
 /// Drive one worker against abstract endpoints.  Reused verbatim by the TCP
@@ -274,6 +276,7 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
         bytes_down,
         wall_time: start.elapsed().as_secs_f64(),
         rounds: server.total_rounds(),
+        peak_log_entries: server.peak_log_entries(),
     }
 }
 

@@ -72,6 +72,9 @@ pub struct SimStats {
     /// final virtual time (s)
     pub wall_time: f64,
     pub rounds: u64,
+    /// high-water mark of live commit-log entries on the server (bounded by
+    /// the full-barrier period T; the O(d + live-log) memory story)
+    pub peak_log_entries: usize,
 }
 
 pub struct SimOutput {
@@ -270,6 +273,7 @@ pub fn run_with_solvers(
         comm_time,
         wall_time: now,
         rounds: server.total_rounds(),
+        peak_log_entries: server.peak_log_entries(),
     };
     // assemble final global dual state + leftover residual mass
     let mut final_alpha = vec![0.0f32; ds.n()];
@@ -395,6 +399,14 @@ mod tests {
             "staleness {} > T-1 = {}",
             out.stats.max_staleness,
             cfg.period - 1
+        );
+        // the live commit log is bounded by the same period: every full
+        // barrier advances all cursors and drains it
+        assert!(
+            out.stats.peak_log_entries <= cfg.period,
+            "peak log {} > T = {}",
+            out.stats.peak_log_entries,
+            cfg.period
         );
     }
 

@@ -95,6 +95,8 @@ pub struct TcpServerOutput {
     pub participation: Vec<f64>,
     /// total committed inner iterations (communication rounds)
     pub rounds: u64,
+    /// high-water mark of live commit-log entries on the server
+    pub peak_log_entries: usize,
 }
 
 /// Run the coordinator: accept K workers on `addr`, drive the protocol to
@@ -184,6 +186,7 @@ pub fn run_server_on(
         bytes_down,
         participation: server.participation_rates(),
         rounds: server.total_rounds(),
+        peak_log_entries: server.peak_log_entries(),
     })
 }
 

@@ -51,6 +51,10 @@ fn sim_and_threads_agree_for_synchronous_config() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max_w_diff < 1e-4, "final w diverged: {max_w_diff}");
+    // synchronous (B = K, T = 1): every commit is a full barrier, so the
+    // server's commit log drains each round on both runtimes
+    assert_eq!(sim.stats.peak_log_entries, 1);
+    assert_eq!(thr.peak_log_entries, 1);
 }
 
 #[test]

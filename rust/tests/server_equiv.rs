@@ -1,0 +1,293 @@
+//! Dense-pending vs commit-log server equivalence.
+//!
+//! The production [`ServerState`] materializes each worker's Δw̃_k lazily
+//! from a shared sparse commit log.  This suite pins that mechanism against
+//! the obvious reference implementation — one dense O(d) accumulator per
+//! worker, folded and reset eagerly — across randomized straggler arrival
+//! orders, group sizes, periods and dimensions:
+//!
+//!   * every action matches (Wait vs Commit, round, full_barrier, finished),
+//!   * every reply is **byte-identical on the wire** (same values, same
+//!     sparse/dense encoding choice, same frame bytes),
+//!   * the final model `w` is bit-for-bit identical.
+//!
+//! Both sides share the spec-level commit semantics of Algorithm 1: a
+//! commit applies the group's aggregated delta e = γ Σ_{k∈Φ} F(Δw_k)
+//! (line 8's group sum) to `w` and to every worker's pending state.  What
+//! differs — and what this test exercises — is the entire delivery
+//! mechanism: log cursors vs dense accumulators, lazy materialization vs
+//! eager reset, and log truncation.
+
+use acpd::linalg::sparse::SparseVec;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use acpd::protocol::server::{ServerAction, ServerConfig, ServerState};
+use acpd::testing::forall;
+use acpd::util::rng::Pcg64;
+
+/// Reference server: one dense pending accumulator per worker (the design
+/// the commit log replaced), same barrier logic, O(K·d) per commit.
+struct DensePendingServer {
+    cfg: ServerConfig,
+    w: Vec<f32>,
+    pending: Vec<Vec<f32>>,
+    inbox: Vec<Option<ModelDelta>>,
+    in_group: usize,
+    t: usize,
+    l: usize,
+    total_rounds: u64,
+    finished: bool,
+}
+
+impl DensePendingServer {
+    fn new(cfg: ServerConfig, dim: usize) -> Self {
+        DensePendingServer {
+            w: vec![0.0; dim],
+            pending: vec![vec![0.0; dim]; cfg.workers],
+            inbox: vec![None; cfg.workers],
+            in_group: 0,
+            t: 0,
+            l: 0,
+            total_rounds: 0,
+            finished: false,
+            cfg,
+        }
+    }
+
+    fn is_full_barrier(&self) -> bool {
+        self.t == self.cfg.period - 1
+    }
+
+    fn barrier_met(&self) -> bool {
+        if self.is_full_barrier() {
+            self.in_group == self.cfg.workers
+        } else {
+            self.in_group >= self.cfg.group.min(self.cfg.workers)
+        }
+    }
+
+    /// Returns None for Wait, or (replies, round, full_barrier, finished).
+    fn on_update(&mut self, msg: UpdateMsg) -> Option<(Vec<DeltaMsg>, u64, bool, bool)> {
+        assert!(!self.finished);
+        let k = msg.worker as usize;
+        assert!(self.inbox[k].is_none());
+        self.inbox[k] = Some(msg.update);
+        self.in_group += 1;
+        if !self.barrier_met() {
+            return None;
+        }
+        let gamma = self.cfg.gamma;
+        let full_barrier = self.is_full_barrier();
+        let members: Vec<usize> = (0..self.cfg.workers)
+            .filter(|&k| self.inbox[k].is_some())
+            .collect();
+        // aggregate the group delta once (Algorithm 1 line 8's group sum)…
+        let mut g = vec![0.0f32; self.w.len()];
+        for &k in &members {
+            let f = self.inbox[k].take().unwrap();
+            f.add_scaled_into(&mut g, gamma);
+        }
+        // …then fold it into w and EVERY worker's dense pending accumulator
+        for (wi, gi) in self.w.iter_mut().zip(&g) {
+            *wi += *gi;
+        }
+        for pend in self.pending.iter_mut() {
+            for (p, gi) in pend.iter_mut().zip(&g) {
+                *p += *gi;
+            }
+        }
+        self.in_group = 0;
+        self.total_rounds += 1;
+        if full_barrier {
+            self.t = 0;
+            self.l += 1;
+        } else {
+            self.t += 1;
+        }
+        let finished = self.l >= self.cfg.outer_rounds;
+        self.finished = finished;
+        let replies: Vec<DeltaMsg> = members
+            .iter()
+            .map(|&k| {
+                let delta = ModelDelta::from_dense(&self.pending[k]);
+                self.pending[k].fill(0.0);
+                DeltaMsg {
+                    worker: k as u32,
+                    server_round: self.total_rounds,
+                    shutdown: finished,
+                    delta,
+                }
+            })
+            .collect();
+        Some((replies, self.total_rounds, full_barrier, finished))
+    }
+}
+
+fn random_update(rng: &mut Pcg64, worker: usize, d: usize, max_nnz: usize) -> UpdateMsg {
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(rng.next_below(max_nnz.min(d) as u32 + 1) as usize);
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+    UpdateMsg::from_sparse(worker as u32, 0, SparseVec::new(d, idx, val))
+}
+
+#[derive(Debug)]
+struct Case {
+    workers: usize,
+    group: usize,
+    period: usize,
+    outer_rounds: usize,
+    d: usize,
+    max_nnz: usize,
+    stream_seed: u64,
+}
+
+#[test]
+fn prop_log_server_matches_dense_reference() {
+    forall(
+        0x10C_0001,
+        60,
+        |rng, sz| {
+            let workers = 1 + rng.next_below(5) as usize;
+            let group = 1 + rng.next_below(workers as u32) as usize;
+            let period = 1 + rng.next_below(4) as usize;
+            let outer_rounds = 1 + rng.next_below(3) as usize;
+            let d = 1 + rng.next_below(sz.0 as u32 * 3 + 1) as usize;
+            // max_nnz past d/2 forces dense-encoded member updates too
+            let max_nnz = 1 + rng.next_below(d as u32) as usize;
+            Case {
+                workers,
+                group,
+                period,
+                outer_rounds,
+                d,
+                max_nnz,
+                stream_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let cfg = ServerConfig {
+                workers: case.workers,
+                group: case.group,
+                period: case.period,
+                outer_rounds: case.outer_rounds,
+                gamma: 0.5,
+            };
+            let mut log_srv = ServerState::new(cfg.clone(), case.d);
+            let mut dense_srv = DensePendingServer::new(cfg, case.d);
+            let mut rng = Pcg64::new(case.stream_seed);
+            let mut sent = vec![false; case.workers];
+            let mut guard = 0usize;
+            while !log_srv.finished() {
+                guard += 1;
+                if guard > 5_000 {
+                    return false; // stuck: barrier never met
+                }
+                // random straggler order: any worker without an in-flight
+                // update may send next
+                let free: Vec<usize> =
+                    (0..case.workers).filter(|&i| !sent[i]).collect();
+                if free.is_empty() {
+                    return false; // unreachable if barriers fire correctly
+                }
+                let wid = free[rng.next_below(free.len() as u32) as usize];
+                let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
+                sent[wid] = true;
+                let a = log_srv.on_update(msg.clone());
+                let b = dense_srv.on_update(msg);
+                match (a, b) {
+                    (ServerAction::Wait, None) => {}
+                    (
+                        ServerAction::Commit {
+                            replies,
+                            round,
+                            full_barrier,
+                            finished,
+                        },
+                        Some((ref_replies, ref_round, ref_full, ref_fin)),
+                    ) => {
+                        if (round, full_barrier, finished)
+                            != (ref_round, ref_full, ref_fin)
+                        {
+                            return false;
+                        }
+                        if replies.len() != ref_replies.len() {
+                            return false;
+                        }
+                        for (r, rr) in replies.iter().zip(&ref_replies) {
+                            // equal as values AND byte-identical on the wire
+                            if r != rr || r.encode() != rr.encode() {
+                                return false;
+                            }
+                            sent[r.worker as usize] = false;
+                        }
+                    }
+                    _ => return false, // one committed, the other waited
+                }
+            }
+            if !dense_srv.finished {
+                return false;
+            }
+            // bit-for-bit identical final model
+            log_srv.w() == dense_srv.w.as_slice()
+        },
+    );
+}
+
+/// Deterministic pin of the scenario the log exists for: a straggler that
+/// misses many commits must receive, in one reply, exactly the sum of every
+/// commit since its last inclusion — byte-identical to the dense reference.
+#[test]
+fn straggler_reply_replays_missed_commits() {
+    let cfg = ServerConfig {
+        workers: 3,
+        group: 1,
+        period: 4,
+        outer_rounds: 2,
+        gamma: 1.0,
+    };
+    let d = 16;
+    let mut log_srv = ServerState::new(cfg.clone(), d);
+    let mut dense_srv = DensePendingServer::new(cfg, d);
+    let mut rng = Pcg64::new(99);
+    let mut sent = vec![false; 3];
+    // worker 0 races ahead; workers 1-2 only show up at full barriers
+    loop {
+        let wid = if !sent[0] {
+            0
+        } else if !sent[1] {
+            1
+        } else {
+            2
+        };
+        let msg = random_update(&mut rng, wid, d, 5);
+        sent[wid] = true;
+        let a = log_srv.on_update(msg.clone());
+        let b = dense_srv.on_update(msg);
+        match (a, b) {
+            (ServerAction::Wait, None) => {}
+            (
+                ServerAction::Commit {
+                    replies, finished, ..
+                },
+                Some((ref_replies, _, _, ref_fin)),
+            ) => {
+                assert_eq!(finished, ref_fin);
+                assert_eq!(replies.len(), ref_replies.len());
+                for (r, rr) in replies.iter().zip(&ref_replies) {
+                    assert_eq!(r, rr, "reply for worker {}", r.worker);
+                    assert_eq!(r.encode(), rr.encode());
+                    sent[r.worker as usize] = false;
+                }
+                if finished {
+                    break;
+                }
+            }
+            (a, b) => panic!("action mismatch: {a:?} vs {:?}", b.is_some()),
+        }
+    }
+    assert_eq!(log_srv.w(), dense_srv.w.as_slice());
+    // the straggler pattern actually exercised lazy materialization: the
+    // log had to hold the non-full-barrier commits of each outer round
+    assert_eq!(log_srv.peak_log_entries(), 4);
+}
