@@ -8,6 +8,10 @@
 //!   * the server commit path at d ∈ {1e5, 1e6} with fixed nnz — the
 //!     commit-log design goal is a per-commit cost independent of d, so the
 //!     two medians (and the emitted d-ratio) should sit within ~2x
+//!   * one full worker round (incremental re-centre + sparse epoch +
+//!     indexed filter + message) at d ∈ {1e5, 1e6} with fixed row nnz and
+//!     H — the O(touched) worker contract says the cost (and the emitted
+//!     d-ratio) is independent of d
 //!   * SparseVec/message codec throughput
 //!   * duality-gap evaluation (full data pass)
 //!   * DES engine round throughput (protocol + network model only)
@@ -23,13 +27,16 @@ mod common;
 
 use acpd::data::partition::partition_rows;
 use acpd::data::synthetic::{self, Preset};
+use acpd::data::Dataset;
 use acpd::engine::EngineConfig;
 use acpd::filter::{filter_topk, FilterScratch};
+use acpd::linalg::csr::CsrMatrix;
 use acpd::linalg::sparse::SparseVec;
 use acpd::loss::LossKind;
 use acpd::network::NetworkModel;
-use acpd::protocol::messages::UpdateMsg;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
 use acpd::protocol::server::{ServerAction, ServerConfig, ServerState};
+use acpd::protocol::worker::WorkerState;
 use acpd::solver::sdca::SdcaSolver;
 use acpd::solver::LocalSolver;
 use acpd::util::csv::CsvWriter;
@@ -217,6 +224,53 @@ fn main() {
         csv.rowf(&[&"server_commit", &"d_ratio_1e6_over_1e5", &ratio, &"x"]);
     }
 
+    // ------------------------------------------------ worker round
+    // One full steady-state worker round — incremental w_eff re-centre,
+    // sparse epoch, residual fold, indexed filter, message build — at
+    // d ∈ {1e5, 1e6} over the SAME row structure: fixed nnz/row, fixed H,
+    // and a fixed pool of distinct columns (so the residual support
+    // saturates at the same size at both d).  The O(touched) contract says
+    // the per-round cost is independent of d; the emitted ratio row pins
+    // it in CI (bench_gate --filter :x:).  The dense design paid four
+    // O(d) passes + an O(d) allocation per round (~10x here).
+    {
+        let (n, row_nnz, pool, h, rho_d) = (512usize, 64usize, 4096usize, 256usize, 500usize);
+        let rounds = common::scaled(200, 30);
+        let mut per_round = Vec::new();
+        for d in [100_000usize, 1_000_000] {
+            let ds = worker_round_dataset(d, n, row_nnz, pool, 23);
+            let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+            let solver =
+                SdcaSolver::new(part, LossKind::Square, 1e-4, n, 1.0, 0.5, Pcg64::new(7));
+            let mut worker = WorkerState::new(0, Box::new(solver), 0.5, h, rho_d);
+            let reply = DeltaMsg {
+                worker: 0,
+                server_round: 0,
+                shutdown: false,
+                delta: ModelDelta::Sparse(SparseVec::empty(d)),
+            };
+            let (med, _) = time_it(iters.min(10), || {
+                for _ in 0..rounds {
+                    let msg = worker.compute_round();
+                    std::hint::black_box(msg.update.nnz());
+                    worker.apply_delta(&reply);
+                }
+                worker.rounds_completed()
+            });
+            let us = med / rounds as f64 * 1e6;
+            per_round.push(us);
+            println!(
+                "worker_round d={d:<7}  {us:>8.1} µs/round  (H={h} nnz/row={row_nnz} rho_d={rho_d})"
+            );
+            csv.rowf(&[&format!("worker_round_d{d}"), &"us_per_round", &us, &"us"]);
+        }
+        let ratio = per_round[1] / per_round[0].max(1e-12);
+        println!(
+            "worker_round    d=1e6 / d=1e5 cost ratio: {ratio:.2}x (goal: ~1, was ~10x dense)"
+        );
+        csv.rowf(&[&"worker_round", &"d_ratio_1e6_over_1e5", &ratio, &"x"]);
+    }
+
     // ---------------------------------------------------------- codec
     {
         let d = 3_231_961usize;
@@ -328,6 +382,35 @@ fn main() {
 
     common::save(&csv, "micro_hotpath.csv");
     common::save_json(&csv, "micro_hotpath.json", "micro_hotpath: hot-path medians");
+}
+
+/// Dataset for the worker-round bench: every row draws `row_nnz` distinct
+/// columns from a fixed pool of `pool` columns spread evenly over [0, d).
+/// Holding the pool fixed across d keeps the residual-support size (and so
+/// the filter's candidate list) identical at d = 1e5 and 1e6 — the bench
+/// then isolates the d-dependence the O(touched) contract forbids.
+fn worker_round_dataset(d: usize, n: usize, row_nnz: usize, pool: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let stride = (d / pool) as u32;
+    let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+        .map(|_| {
+            let mut slots: Vec<u32> = (0..pool as u32).collect();
+            rng.shuffle(&mut slots);
+            slots.truncate(row_nnz);
+            slots.sort_unstable();
+            let idx: Vec<u32> = slots.iter().map(|&p| p * stride).collect();
+            let val: Vec<f32> = (0..row_nnz).map(|_| rng.next_normal() as f32).collect();
+            (idx, val)
+        })
+        .collect();
+    let labels: Vec<f32> = (0..n)
+        .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    Dataset {
+        features: CsrMatrix::from_rows(d, &rows),
+        labels,
+        name: format!("worker-round-bench-d{d}"),
+    }
 }
 
 /// Random sparse vector with exactly `nnz` nonzeros, one per stride bucket

@@ -1,8 +1,8 @@
 //! The bandwidth filter F (Algorithm 2, lines 7-12, practical variant).
 //!
-//! Given the accumulated primal update Δw_k (dense), keep the top-ρd entries
-//! by magnitude as a [`SparseVec`] for the wire and leave the complement in
-//! place as the error-feedback residual:
+//! Given the accumulated primal update Δw_k (dense storage), keep the
+//! top-ρd entries by magnitude as a [`SparseVec`] for the wire and leave
+//! the complement in place as the error-feedback residual:
 //!
 //!   c_k   = ρd-th largest |Δw_k|          (quickselect over the nnz
 //!                                          nonzeros, expected O(nnz))
@@ -11,6 +11,18 @@
 //!                           deterministically by lowest index, matching the
 //!                           "ρd largest values" budget of line 7)
 //!   Δw    ← Δw ∘ ¬M_k      (kept locally; conservation: F + resid = Δw)
+//!
+//! Two entry points share the selection logic:
+//!
+//! * [`filter_topk`] — dense: gathers candidates by scanning all d slots
+//!   (selection itself is O(nnz), but the gather pays an O(d) memory sweep).
+//!   Kept as the reference/oracle and for callers without index bookkeeping.
+//! * [`filter_topk_indexed`] — **O(support)**: the caller maintains a
+//!   sorted index list covering every nonzero of `delta_w`
+//!   (see [`crate::protocol::worker`]); gather, selection and the residual
+//!   split all walk that explicit candidate list, never the d slots.  The
+//!   list is compacted to the exact residual support on return.  Output is
+//!   byte-identical to [`filter_topk`] on the same dense input.
 
 use crate::linalg::{sparse::SparseVec, topk};
 
@@ -66,11 +78,73 @@ pub fn filter_topk(
     SparseVec::new(d, idx, val)
 }
 
+/// [`filter_topk`] over an explicit candidate list: `support` is a sorted,
+/// deduplicated index list covering every nonzero of `delta_w` (it may
+/// also carry indices whose slot has gone back to exact zero — they are
+/// dropped here).  All passes walk `support`, so the cost is
+/// O(|support|), independent of d.  On return `support` holds exactly the
+/// residual's nonzero indices, still sorted.
+///
+/// Byte-identity contract: given the same `delta_w` contents and a valid
+/// `support`, the returned [`SparseVec`] is identical to what
+/// [`filter_topk`] produces — same candidate multiset ⇒ same quickselect
+/// threshold, and the selection pass visits candidates in the same
+/// ascending-index order with the same tie-truncation rule.
+pub fn filter_topk_indexed(
+    delta_w: &mut [f32],
+    support: &mut Vec<u32>,
+    k: usize,
+    scratch: &mut FilterScratch,
+) -> SparseVec {
+    debug_assert!(support.windows(2).all(|w| w[0] < w[1]), "support not sorted");
+    let d = delta_w.len();
+    // drop support entries whose slot cancelled back to exact zero, so the
+    // candidate multiset matches the dense gather's (nonzeros only)
+    support.retain(|&j| delta_w[j as usize] != 0.0);
+    if k == 0 || k >= d {
+        return take_all_indexed(delta_w, support);
+    }
+    let buf = &mut scratch.buf;
+    buf.clear();
+    buf.extend(support.iter().map(|&j| delta_w[j as usize].abs()));
+    if buf.len() <= k {
+        return take_all_indexed(delta_w, support);
+    }
+    let c = topk::kth_largest_in_place(buf, k);
+    let mut idx = Vec::with_capacity(k);
+    let mut val = Vec::with_capacity(k);
+    for &j in support.iter() {
+        let v = &mut delta_w[j as usize];
+        if v.abs() >= c {
+            idx.push(j);
+            val.push(*v);
+            *v = 0.0;
+            if idx.len() == k {
+                break; // ties beyond the budget stay in the residual
+            }
+        }
+    }
+    // shipped slots are now exact zeros: compact them out of the support
+    support.retain(|&j| delta_w[j as usize] != 0.0);
+    SparseVec::new(d, idx, val)
+}
+
 /// Ship every nonzero and clear the residual (dense mode / sparser-than-k).
 fn take_all(delta_w: &mut [f32]) -> SparseVec {
     let full = SparseVec::from_dense(delta_w);
     delta_w.fill(0.0);
     full
+}
+
+/// [`take_all`] over the support list: O(|support|), not O(d).  The
+/// support is already compacted to exact nonzeros by the caller.
+fn take_all_indexed(delta_w: &mut [f32], support: &mut Vec<u32>) -> SparseVec {
+    let mut val = Vec::with_capacity(support.len());
+    for &j in support.iter() {
+        val.push(delta_w[j as usize]);
+        delta_w[j as usize] = 0.0;
+    }
+    SparseVec::new(delta_w.len(), std::mem::take(support), val)
 }
 
 #[cfg(test)]
@@ -102,6 +176,45 @@ mod tests {
         }
     }
 
+    /// The indexed filter is byte-identical to the dense one for every
+    /// (input, k), including supports that carry stale (zero-slot) indices,
+    /// and compacts the support to the exact residual nonzeros.
+    #[test]
+    fn indexed_filter_matches_dense_filter() {
+        let mut rng = Pcg64::new(17);
+        let mut s1 = FilterScratch::default();
+        let mut s2 = FilterScratch::default();
+        for case in 0..80 {
+            let d = 10 + rng.next_below(300) as usize;
+            // mostly-sparse input with exact zeros sprinkled in
+            let orig: Vec<f32> = (0..d)
+                .map(|_| {
+                    if rng.next_f64() < 0.6 {
+                        0.0
+                    } else {
+                        rng.next_normal() as f32
+                    }
+                })
+                .collect();
+            let k = rng.next_below(d as u32 + 2) as usize; // includes 0 and > d
+            let mut dense_in = orig.clone();
+            let mut idx_in = orig.clone();
+            // support: all nonzeros plus some stale zero-slot indices
+            let mut support: Vec<u32> = (0..d as u32)
+                .filter(|&j| orig[j as usize] != 0.0 || rng.next_f64() < 0.1)
+                .collect();
+            let a = filter_topk(&mut dense_in, k, &mut s1);
+            let b = filter_topk_indexed(&mut idx_in, &mut support, k, &mut s2);
+            assert_eq!(a, b, "case {case} (d={d}, k={k})");
+            assert_eq!(a.to_dense().len(), d);
+            assert_eq!(dense_in, idx_in, "residuals differ (case {case})");
+            let expect_support: Vec<u32> = (0..d as u32)
+                .filter(|&j| idx_in[j as usize] != 0.0)
+                .collect();
+            assert_eq!(support, expect_support, "support not compacted (case {case})");
+        }
+    }
+
     #[test]
     fn exact_k_without_ties() {
         let mut w: Vec<f32> = (1..=10).map(|i| i as f32).collect();
@@ -119,6 +232,12 @@ mod tests {
         let f = filter_topk(&mut w, 4, &mut s);
         assert_eq!(f.nnz(), 4);
         assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 2);
+        // indexed: same ties, same truncation
+        let mut w2 = vec![1.0f32; 6];
+        let mut support: Vec<u32> = (0..6).collect();
+        let f2 = filter_topk_indexed(&mut w2, &mut support, 4, &mut s);
+        assert_eq!(f, f2);
+        assert_eq!(support, vec![4, 5]);
     }
 
     #[test]
@@ -128,6 +247,13 @@ mod tests {
         let f = filter_topk(&mut w, 0, &mut s); // k=0 => dense mode
         assert_eq!(f.nnz(), 2);
         assert!(w.iter().all(|&x| x == 0.0));
+        // indexed dense mode: ships everything, clears the support
+        let mut w2 = vec![1.0, 0.0, -2.0];
+        let mut support = vec![0u32, 1, 2];
+        let f2 = filter_topk_indexed(&mut w2, &mut support, 0, &mut s);
+        assert_eq!(f, f2);
+        assert!(support.is_empty());
+        assert!(w2.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -10,9 +10,39 @@
 //!   5. on reply, w_k ← w_k + Δw̃_k                          (lines 13-14)
 //!
 //! The compute backend is any [`LocalSolver`] (pure-rust CSR or PJRT/HLO).
+//!
+//! ## O(touched) round invariant
+//!
+//! A steady-state `compute_round` performs **no full-d scans and no O(d)
+//! allocations**; its cost is O(touched + nnz(resid) + nnz(sent)), where
+//! `touched` is the epoch's distinct coordinate support (≤ H · nnz_row):
+//!
+//! * the epoch Δw arrives as a touched-support
+//!   [`SparseVec`](crate::linalg::sparse::SparseVec) from the solver
+//!   ([`LocalSolver::solve_epoch_incremental`]) and is folded into the
+//!   residual at that support only;
+//! * `w_eff` is a *maintained* buffer: `w_eff[j] = w_k[j] + γ·resid[j]` is
+//!   re-evaluated exactly at the coordinates where `w_k` moved (reply nnz)
+//!   or `resid` moved (touched ∪ sent ∪ the error-feedback drop), never
+//!   over all d — the per-round dirty list doubles as the solver's
+//!   incremental re-centring hint;
+//! * the residual carries a sorted nonzero-index `support` list, so
+//!   [`filter_topk_indexed`] gathers/selects/splits over an explicit
+//!   candidate list.
+//!
+//! The only remaining Θ(d) work is proportional to an actual Θ(d) payload
+//! (a dense-encoded message or reply, i.e. nnz ≥ d/2 — dense mode ρd = 0).
+//!
+//! Bit-identity contract: the sparse-path worker produces **byte-identical
+//! `UpdateMsg` encodings and bit-identical `w_k` / `resid` / `alpha`**
+//! versus a dense-reference worker (O(d) recompute of `w_eff` via
+//! `dense::add_scaled`, dense epoch via
+//! `SdcaSolver::solve_epoch_with_schedule_dense`, dense
+//! [`filter_topk`](crate::filter::filter_topk)) —
+//! pinned by `tests/worker_equiv.rs` across randomized rounds, losses,
+//! ρd values (incl. dense mode) and error-feedback settings.
 
-use crate::filter::{filter_topk, FilterScratch};
-use crate::linalg::dense;
+use crate::filter::{filter_topk_indexed, FilterScratch};
 use crate::protocol::messages::{DeltaMsg, UpdateMsg};
 use crate::solver::LocalSolver;
 
@@ -27,9 +57,18 @@ pub struct WorkerState {
     rho_d: usize,
     /// Δw_k — accumulated-but-unsent update (error feedback).
     resid: Vec<f32>,
+    /// sorted indices covering every nonzero of `resid` (compacted to the
+    /// exact nonzero support by each round's filter pass)
+    support: Vec<u32>,
+    /// merge scratch for `support` (kept to avoid per-round allocation)
+    support_scratch: Vec<u32>,
     /// w_k — local copy of the global model (updated only via Δw̃_k).
     w_k: Vec<f32>,
+    /// maintained `w_k + γ·resid` (see module docs; NOT recomputed densely)
     w_eff: Vec<f32>,
+    /// coordinates where `w_eff` was re-evaluated since the last epoch —
+    /// the solver's incremental re-centring hint
+    dirty: Vec<u32>,
     scratch: FilterScratch,
     round: u64,
     /// paper §III-B2 practical variant: keep the filtered-out residual
@@ -37,6 +76,58 @@ pub struct WorkerState {
     error_feedback: bool,
     /// set when the server's reply carried `shutdown`
     done: bool,
+}
+
+/// Re-evaluate one maintained `w_eff` slot and mark it dirty.  The
+/// expression matches `dense::add_scaled` elementwise (`a + scale * b`), so
+/// a maintained slot is bit-identical to the dense recompute.
+#[inline]
+fn refresh_w_eff(
+    w_eff: &mut [f32],
+    w_k: &[f32],
+    gamma: f32,
+    resid: &[f32],
+    dirty: &mut Vec<u32>,
+    j: u32,
+) {
+    let i = j as usize;
+    w_eff[i] = w_k[i] + gamma * resid[i];
+    dirty.push(j);
+}
+
+/// `dst ∪= add` for sorted deduplicated u32 lists, via `scratch` (no
+/// allocation once the buffers are warm).
+fn merge_union(dst: &mut Vec<u32>, add: &[u32], scratch: &mut Vec<u32>) {
+    if add.is_empty() {
+        return;
+    }
+    if dst.is_empty() {
+        dst.extend_from_slice(add);
+        return;
+    }
+    scratch.clear();
+    scratch.reserve(dst.len() + add.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < dst.len() && j < add.len() {
+        match dst[i].cmp(&add[j]) {
+            std::cmp::Ordering::Less => {
+                scratch.push(dst[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                scratch.push(add[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                scratch.push(dst[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    scratch.extend_from_slice(&dst[i..]);
+    scratch.extend_from_slice(&add[j..]);
+    std::mem::swap(dst, scratch);
 }
 
 impl WorkerState {
@@ -55,8 +146,12 @@ impl WorkerState {
             h,
             rho_d,
             resid: vec![0.0; d],
+            support: Vec::new(),
+            support_scratch: Vec::new(),
             w_k: vec![0.0; d],
+            // invariant w_eff == w_k + γ·resid holds trivially at 0
             w_eff: vec![0.0; d],
+            dirty: Vec::new(),
             scratch: FilterScratch::default(),
             round: 0,
             error_feedback: true,
@@ -70,25 +165,66 @@ impl WorkerState {
     }
 
     /// Lines 3-9: one local round; returns the filtered update to send.
+    /// O(touched + nnz(resid) + nnz(sent)) — see module docs.
     pub fn compute_round(&mut self) -> UpdateMsg {
         debug_assert!(!self.done);
-        dense::add_scaled(&self.w_k, self.gamma, &self.resid, &mut self.w_eff);
-        let dw = self.solver.solve_epoch(&self.w_eff, self.h);
-        for (r, &x) in self.resid.iter_mut().zip(&dw) {
-            *r += x;
+        // line 4: the subproblem is centred on the MAINTAINED w_eff; the
+        // dirty list tells the solver where it moved since last epoch
+        let dw = self
+            .solver
+            .solve_epoch_incremental(&self.w_eff, self.h, Some(&self.dirty));
+        self.dirty.clear();
+        // line 6: fold the epoch delta into the residual at its support
+        for (&j, &x) in dw.idx.iter().zip(&dw.val) {
+            self.resid[j as usize] += x;
         }
-        let filtered = filter_topk(&mut self.resid, self.rho_d, &mut self.scratch);
+        merge_union(&mut self.support, &dw.idx, &mut self.support_scratch);
+        // lines 7-12: split over the explicit candidate list
+        let filtered =
+            filter_topk_indexed(&mut self.resid, &mut self.support, self.rho_d, &mut self.scratch);
+        // re-centre w_eff wherever resid moved (epoch fold + sent slots)
+        for &j in dw.idx.iter().chain(&filtered.idx) {
+            refresh_w_eff(
+                &mut self.w_eff,
+                &self.w_k,
+                self.gamma,
+                &self.resid,
+                &mut self.dirty,
+                j,
+            );
+        }
         if !self.error_feedback {
-            self.resid.fill(0.0); // ablation: drop the unsent mass
+            // ablation: drop the unsent mass (support = exact nonzeros here)
+            for &j in &self.support {
+                self.resid[j as usize] = 0.0;
+                refresh_w_eff(
+                    &mut self.w_eff,
+                    &self.w_k,
+                    self.gamma,
+                    &self.resid,
+                    &mut self.dirty,
+                    j,
+                );
+            }
+            self.support.clear();
         }
         self.round += 1;
         UpdateMsg::from_sparse(self.id as u32, self.round, filtered)
     }
 
-    /// Lines 13-14: fold the server's Δw̃_k into the local model.
+    /// Lines 13-14: fold the server's Δw̃_k into the local model.  Cost is
+    /// proportional to the reply payload (its nnz; Θ(d) only for a reply
+    /// that is itself dense-encoded).
     pub fn apply_delta(&mut self, msg: &DeltaMsg) {
         debug_assert_eq!(msg.worker as usize, self.id);
         msg.delta.add_into(&mut self.w_k);
+        // w_k moved at the reply's nonzeros: re-centre w_eff there
+        let (w_eff, w_k, resid, dirty) =
+            (&mut self.w_eff, &self.w_k, &self.resid, &mut self.dirty);
+        let gamma = self.gamma;
+        msg.delta.for_each_nonzero(|j, _| {
+            refresh_w_eff(w_eff, w_k, gamma, resid, dirty, j as u32);
+        });
         if msg.shutdown {
             self.done = true;
         }
@@ -115,15 +251,20 @@ impl WorkerState {
         &self.resid
     }
 
+    /// Sorted indices of the residual's nonzeros (diagnostics/tests; this
+    /// is the filter's candidate list).
+    pub fn residual_support(&self) -> &[u32] {
+        &self.support
+    }
+
     pub fn rounds_completed(&self) -> u64 {
         self.round
     }
 
-    /// Mean nonzeros per local row (the simulator's compute-cost input).
+    /// Mean nonzeros per local row (the simulator's compute-cost input),
+    /// straight from the solver's partition CSR.
     pub fn mean_row_nnz(&self) -> f64 {
-        // dim() * density is not available on the trait; approximate from n.
-        // (The sim uses Partition stats directly; this is a fallback.)
-        self.solver.n_local().max(1) as f64
+        self.solver.mean_row_nnz()
     }
 }
 
@@ -131,6 +272,7 @@ impl WorkerState {
 mod tests {
     use super::*;
     use crate::data::{partition::partition_rows, synthetic, synthetic::Preset};
+    use crate::linalg::dense;
     use crate::loss::LossKind;
     use crate::protocol::messages::ModelDelta;
     use crate::solver::sdca::SdcaSolver;
@@ -154,6 +296,28 @@ mod tests {
         assert_eq!(msg.round, 1);
         // error feedback holds the rest
         assert!(dense::norm2_sq(w.residual()) > 0.0);
+    }
+
+    #[test]
+    fn residual_support_tracks_exact_nonzeros() {
+        let mut w = make_worker(16);
+        for _ in 0..4 {
+            let _ = w.compute_round();
+            let expect: Vec<u32> = w
+                .residual()
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(j, _)| j as u32)
+                .collect();
+            assert_eq!(w.residual_support(), expect.as_slice());
+            w.apply_delta(&DeltaMsg {
+                worker: 0,
+                server_round: 0,
+                shutdown: false,
+                delta: ModelDelta::Dense(vec![0.0; 200]),
+            });
+        }
     }
 
     #[test]
@@ -204,6 +368,17 @@ mod tests {
         let mut w = make_worker(0); // rho_d = 0 => dense
         let _ = w.compute_round();
         assert_eq!(dense::norm2_sq(w.residual()), 0.0);
+        assert!(w.residual_support().is_empty());
+    }
+
+    #[test]
+    fn mean_row_nnz_comes_from_the_csr() {
+        let w = make_worker(10);
+        let p = w.solver().partition();
+        let expect = p.features.nnz() as f64 / p.n_local() as f64;
+        assert_eq!(w.mean_row_nnz(), expect);
+        // a real per-row figure, not the old n_local fallback
+        assert!(w.mean_row_nnz() < p.n_local() as f64);
     }
 
     #[test]
@@ -230,5 +405,18 @@ mod tests {
             delta: ModelDelta::Dense(vec![0.25; 200]),
         });
         assert!(w.w_k().iter().all(|&x| (x - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn merge_union_is_a_sorted_set_union() {
+        let mut scratch = Vec::new();
+        let mut dst = vec![1u32, 4, 9];
+        merge_union(&mut dst, &[0, 4, 5, 12], &mut scratch);
+        assert_eq!(dst, vec![0, 1, 4, 5, 9, 12]);
+        merge_union(&mut dst, &[], &mut scratch);
+        assert_eq!(dst, vec![0, 1, 4, 5, 9, 12]);
+        let mut empty: Vec<u32> = Vec::new();
+        merge_union(&mut empty, &[3, 7], &mut scratch);
+        assert_eq!(empty, vec![3, 7]);
     }
 }

@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 
 use super::pjrt::{literal_f32, literal_i32, to_f32_vec, ArtifactRuntime};
 use crate::data::partition::Partition;
+use crate::linalg::sparse::SparseVec;
 use crate::solver::LocalSolver;
 use crate::util::rng::Pcg64;
 
@@ -146,7 +147,17 @@ impl LocalSolver for PjrtSolver {
     /// is executed in chunks, re-centring `w_eff + u` between chunks exactly
     /// like one long epoch would (the margin source accumulates through
     /// delta_w, scaled back by sigma').
-    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> Vec<f32> {
+    ///
+    /// The incremental re-centring hint is ignored: this backend uploads
+    /// the full dense `w_eff` literal per chunk regardless, and the dense
+    /// device Δw is gathered into the trait's sparse delta at the end
+    /// (`SparseVec::from_dense` — the trait's canonical densification).
+    fn solve_epoch_incremental(
+        &mut self,
+        w_eff: &[f32],
+        h: usize,
+        _changed: Option<&[u32]>,
+    ) -> SparseVec {
         assert_eq!(w_eff.len(), self.d);
         let chunks = (h / self.h_artifact).max(1);
         assert_eq!(
@@ -169,7 +180,7 @@ impl LocalSolver for PjrtSolver {
                 *w += self.gamma * self.sigma_prime * x;
             }
         }
-        total_dw
+        SparseVec::from_dense(&total_dw)
     }
 
     fn alpha(&self) -> &[f32] {

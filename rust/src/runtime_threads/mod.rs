@@ -6,7 +6,9 @@
 //! the paper uses ("forcing worker 1 to sleep at each iteration").  The
 //! duality gap is probed at full barriers through GapRequest/GapPieces
 //! control messages — what a real deployment's allreduce would do — so the
-//! server never touches worker memory.
+//! server never touches worker memory.  Workers run the same O(touched)
+//! [`WorkerState`] rounds as the simulator, so their *measured* wall-clock
+//! compute reflects H · nnz/row work, not hidden O(d) passes.
 
 use std::sync::mpsc;
 use std::thread;

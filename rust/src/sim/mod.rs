@@ -7,7 +7,10 @@
 //! produces bit-identical gap curves, byte counts and time axes.  The same
 //! [`protocol`] state machines also run under real threads/TCP
 //! ([`crate::runtime_threads`], [`crate::transport`]) — the sim decides
-//! *when*, the protocol decides *what*.
+//! *when*, the protocol decides *what*.  Worker rounds are O(touched), not
+//! O(d) ([`crate::protocol::worker`]), so driving the high-dimensional
+//! presets through the DES costs what the cost model charges: H · nnz/row
+//! flops per epoch, ρd-proportional messages.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -126,11 +129,6 @@ pub fn run_with_solvers(
 
     let mut root_rng = Pcg64::with_stream(seed, 0x51u64);
     let parts = partition_rows(ds, k, Some(seed ^ 0xACDC));
-    // mean nnz/row per worker for the compute-cost model
-    let nnz_means: Vec<f64> = parts
-        .iter()
-        .map(|p| p.features.nnz() as f64 / p.n_local().max(1) as f64)
-        .collect();
 
     let mut workers: Vec<WorkerState> = parts
         .into_iter()
@@ -142,6 +140,10 @@ pub fn run_with_solvers(
             ws
         })
         .collect();
+    // mean nnz/row per worker for the compute-cost model — reported by the
+    // solver itself (LocalSolver::mean_row_nnz, backed by the CSR), so the
+    // cost input stays honest for any backend
+    let nnz_means: Vec<f64> = workers.iter().map(|w| w.mean_row_nnz()).collect();
 
     let mut server = ServerState::new(
         ServerConfig {

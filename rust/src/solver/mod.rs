@@ -10,20 +10,46 @@
 pub mod objective;
 pub mod sdca;
 
+use crate::linalg::sparse::SparseVec;
 use objective::ObjectivePieces;
 
 /// A stateful local solver bound to one worker's partition.
 ///
 /// The solver owns the local dual variables α_[k]; each `solve_epoch` runs H
 /// local iterations of the subproblem G_k^{σ'} centred at `w_eff` (Algorithm
-/// 2 line 4) and returns the epoch's primal update
-/// `Δw = (1/λn) A_[k]^T Δα` as a dense d-vector.
+/// 2 line 4) and returns the epoch's primal update `Δw = (1/λn) A_[k]^T Δα`
+/// as a **touched-support sparse delta**: exact zeros are dropped, so the
+/// result is bit-identical to `SparseVec::from_dense` of the dense epoch Δw
+/// (an epoch of H sparse coordinate steps touches O(H · nnz_row)
+/// coordinates, not d — the whole worker round is engineered to cost
+/// O(touched), see [`crate::protocol::worker`]).
 ///
 /// Deliberately NOT `Send`: the PJRT client is `Rc`-based, so solvers are
 /// constructed *inside* the thread that drives them (the thread/TCP runtimes
 /// take a `Send` factory, not a solver).
 pub trait LocalSolver {
-    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> Vec<f32>;
+    /// One epoch centred at `w_eff`, with no promise about how `w_eff`
+    /// relates to earlier calls (sparse backends must do a full O(d)
+    /// re-centre).  Provided in terms of [`Self::solve_epoch_incremental`].
+    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> SparseVec {
+        self.solve_epoch_incremental(w_eff, h, None)
+    }
+
+    /// Like [`Self::solve_epoch`], with an incremental re-centring hint.
+    ///
+    /// `changed = Some(idx)` promises that `w_eff` differs from the `w_eff`
+    /// of the immediately preceding `solve_epoch*` call on this solver at
+    /// most at the coordinates in `idx` (before the first call, the
+    /// baseline is the all-zeros vector — what a freshly constructed worker
+    /// holds).  Sparse backends use the hint to re-centre in
+    /// O(|idx| + touched) instead of O(d); the returned delta is identical
+    /// either way.  `changed = None` makes no promise (full re-centre).
+    fn solve_epoch_incremental(
+        &mut self,
+        w_eff: &[f32],
+        h: usize,
+        changed: Option<&[u32]>,
+    ) -> SparseVec;
 
     /// Local dual variables (length = local sample count).
     fn alpha(&self) -> &[f32];
@@ -35,6 +61,13 @@ pub trait LocalSolver {
 
     /// The data shard this solver is bound to (global-id mapping etc.).
     fn partition(&self) -> &crate::data::partition::Partition;
+
+    /// Mean nonzeros per local row, straight from the partition's CSR —
+    /// the simulator's compute-cost input (H · nnz/row flops per epoch).
+    fn mean_row_nnz(&self) -> f64 {
+        let p = self.partition();
+        p.features.nnz() as f64 / p.n_local().max(1) as f64
+    }
 
     /// This partition's duality-gap contributions at global model `w`
     /// (loss sum, conjugate sum, Aᵀα) — what a worker answers to the

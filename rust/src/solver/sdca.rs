@@ -6,9 +6,34 @@
 //! sparse dot + one sparse axpy over the sampled row — the memory-access
 //! pattern the paper's C++ worker has, and the hot path of the whole system
 //! (see micro_hotpath bench + EXPERIMENTS.md §Perf).
+//!
+//! ## O(touched) epoch bookkeeping
+//!
+//! An epoch's sparse axpys touch only the distinct columns of its accepted
+//! rows (≤ H · nnz_row, usually ≪ d), so the per-epoch bookkeeping is kept
+//! at that order too:
+//!
+//! * a **coordinate generation-stamp array** records the distinct touched
+//!   columns as the axpys land (`stamp[j] == epoch_id` ⇔ already recorded),
+//!   so the epoch Δw is drained as a [`SparseVec`] over the touched support
+//!   only — never an O(d) subtract-and-collect or a fresh `vec![0.0; d]`;
+//! * `v` is re-centred **incrementally**: at epoch start only the previous
+//!   epoch's touched columns (where `v` drifted) and the caller-declared
+//!   `w_eff` changes are re-assigned from `w_eff` (the
+//!   [`LocalSolver::solve_epoch_incremental`] contract); `None` falls back
+//!   to the full O(d) copy;
+//! * the γ-retention of line 5 snapshots α only for the epoch's **distinct
+//!   sampled rows** (a second stamp array over rows), not all n_local.
+//!
+//! Everything is bit-identical to the dense-reference epoch
+//! ([`SdcaSolver::solve_epoch_with_schedule_dense`]): untouched columns hold
+//! `v[j] == w_eff[j]` exactly, so the dense Δw is an exact ±0.0 there and
+//! `SparseVec::from_dense` drops it; `tests/worker_equiv.rs` and the
+//! properties suite pin the equivalence.
 
 use super::LocalSolver;
 use crate::data::partition::Partition;
+use crate::linalg::sparse::SparseVec;
 use crate::loss::{Loss, LossKind};
 use crate::util::rng::Pcg64;
 
@@ -31,10 +56,24 @@ pub struct SdcaSolver {
     /// the server applies its own γ, keeping w = (1/λn)Aα globally).
     gamma: f64,
     rng: Pcg64,
-    /// reused margin-source buffer (d)
+    /// reused margin-source buffer (d); outside an epoch it mirrors the last
+    /// epoch's `w_eff` except at `touched`
     v: Vec<f32>,
-    /// α snapshot at epoch start (for the γ-scaling of line 5)
-    alpha_pre: Vec<f32>,
+    /// column generation stamps: `stamp[j] == epoch_id` ⇔ j ∈ `touched`
+    stamp: Vec<u32>,
+    /// distinct columns the last epoch's axpys touched (sorted after drain)
+    touched: Vec<u32>,
+    /// row generation stamps for the α snapshot (first sampling this epoch)
+    row_stamp: Vec<u32>,
+    /// row generation stamps for column recording (first *accepted* step)
+    row_rec: Vec<u32>,
+    /// (row, α at epoch start) for each distinct row sampled this epoch
+    alpha_snap: Vec<(u32, f32)>,
+    /// current epoch generation (stamps from other generations are stale)
+    epoch_id: u32,
+    /// set by the dense-reference epoch, which bypasses the touched
+    /// bookkeeping: the next incremental call must do a full re-centre
+    needs_full_resync: bool,
 }
 
 impl SdcaSolver {
@@ -61,22 +100,168 @@ impl SdcaSolver {
             gamma,
             rng,
             v: vec![0.0; d],
-            alpha_pre: vec![0.0; n_local],
+            stamp: vec![0; d],
+            touched: Vec::new(),
+            row_stamp: vec![0; n_local],
+            row_rec: vec![0; n_local],
+            alpha_snap: Vec::new(),
+            epoch_id: 0,
+            needs_full_resync: false,
+        }
+    }
+
+    /// Re-establish `v == w_eff` (bitwise) and open a new epoch generation.
+    fn begin_epoch(&mut self, w_eff: &[f32], changed: Option<&[u32]>) {
+        debug_assert_eq!(w_eff.len(), self.v.len());
+        let changed = if self.needs_full_resync { None } else { changed };
+        self.needs_full_resync = false;
+        match changed {
+            None => self.v.copy_from_slice(w_eff),
+            Some(dirty) => {
+                // v diverged from the previous w_eff only at `touched`;
+                // w_eff moved only at `dirty` — reset the union.
+                for &j in &self.touched {
+                    self.v[j as usize] = w_eff[j as usize];
+                }
+                for &j in dirty {
+                    self.v[j as usize] = w_eff[j as usize];
+                }
+            }
+        }
+        self.touched.clear();
+        self.alpha_snap.clear();
+        if self.epoch_id == u32::MAX {
+            // generation wrap (once per 2^32 epochs): invalidate all stamps
+            self.stamp.fill(0);
+            self.row_stamp.fill(0);
+            self.row_rec.fill(0);
+            self.epoch_id = 0;
+        }
+        self.epoch_id += 1;
+    }
+
+    /// Record row `i`'s α snapshot (first sampling) — must run before any
+    /// step of the epoch mutates `alpha[i]`.
+    #[inline]
+    fn snap_row(&mut self, i: usize) {
+        if self.row_stamp[i] != self.epoch_id {
+            self.row_stamp[i] = self.epoch_id;
+            self.alpha_snap.push((i as u32, self.alpha[i]));
+        }
+    }
+
+    /// Record row `i`'s column support into `touched` (first accepted step).
+    #[inline]
+    fn record_row_cols(&mut self, i: usize) {
+        if self.row_rec[i] != self.epoch_id {
+            self.row_rec[i] = self.epoch_id;
+            let (cols, _) = self.part.features.row(i);
+            for &j in cols {
+                if self.stamp[j as usize] != self.epoch_id {
+                    self.stamp[j as usize] = self.epoch_id;
+                    self.touched.push(j);
+                }
+            }
         }
     }
 
     /// Run one epoch over an explicit coordinate schedule (shared with the
-    /// PJRT path for the cross-solver equivalence test).
-    pub fn solve_epoch_with_schedule(&mut self, w_eff: &[f32], idx: &[i32]) -> Vec<f32> {
-        debug_assert_eq!(w_eff.len(), self.v.len());
+    /// PJRT path for the cross-solver equivalence test).  `changed` is the
+    /// [`LocalSolver::solve_epoch_incremental`] re-centring hint.
+    pub fn solve_epoch_with_schedule(
+        &mut self,
+        w_eff: &[f32],
+        idx: &[i32],
+        changed: Option<&[u32]>,
+    ) -> SparseVec {
+        self.begin_epoch(w_eff, changed);
         let scale = (self.sigma_prime / self.lam_n) as f32;
         let c = self.sigma_prime / self.lam_n;
-        self.v.copy_from_slice(w_eff);
-        self.alpha_pre.copy_from_slice(&self.alpha);
         match self.loss_kind {
             // §Perf: monomorphized square-loss inner loop — the closed-form
             // step inlines into the sparse dot/axpy, no virtual call per
             // coordinate (≈1.4x epoch throughput; see EXPERIMENTS.md §Perf).
+            LossKind::Square => {
+                for &ii in idx {
+                    let i = ii as usize;
+                    self.snap_row(i);
+                    let z = self.part.features.row_dot(i, &self.v);
+                    let delta = (self.part.labels[i] as f64 - self.alpha[i] as f64 - z)
+                        / (1.0 + c * self.sqnorms[i] as f64);
+                    if delta != 0.0 {
+                        self.alpha[i] += delta as f32;
+                        self.record_row_cols(i);
+                        self.part
+                            .features
+                            .row_axpy(i, scale * delta as f32, &mut self.v);
+                    }
+                }
+            }
+            _ => {
+                for &ii in idx {
+                    let i = ii as usize;
+                    self.snap_row(i);
+                    let z = self.part.features.row_dot(i, &self.v);
+                    let delta = self.loss.cd_step(
+                        self.alpha[i] as f64,
+                        self.part.labels[i] as f64,
+                        z,
+                        self.sqnorms[i] as f64,
+                        c,
+                    );
+                    if delta != 0.0 {
+                        self.alpha[i] += delta as f32;
+                        self.record_row_cols(i);
+                        self.part
+                            .features
+                            .row_axpy(i, scale * delta as f32, &mut self.v);
+                    }
+                }
+            }
+        }
+        // line 5: retained dual state is α_pre + γΔα — only the epoch's
+        // distinct sampled rows can have moved (α never holds -0.0, so the
+        // skipped rows are bit-identical to the dense all-rows loop)
+        let g = self.gamma as f32;
+        if g != 1.0 {
+            for &(i, pre) in &self.alpha_snap {
+                let a = &mut self.alpha[i as usize];
+                *a = pre + g * (*a - pre);
+            }
+        }
+        // u = v - w_eff = (σ'/λn) A^T Δα  ⇒  Δw = u / σ' (unscaled; the
+        // server applies its γ on aggregation, line 10).  Untouched columns
+        // hold v[j] == w_eff[j] bitwise, so their dense Δw is an exact zero
+        // — draining the touched support (exact-zero cancellations dropped,
+        // same `!= 0.0` rule as `SparseVec::from_dense`) reproduces the
+        // dense epoch delta bit-for-bit.
+        let inv_sigma = 1.0 / self.sigma_prime as f32;
+        self.touched.sort_unstable();
+        let mut out_idx = Vec::with_capacity(self.touched.len());
+        let mut out_val = Vec::with_capacity(self.touched.len());
+        for &j in &self.touched {
+            let dv = (self.v[j as usize] - w_eff[j as usize]) * inv_sigma;
+            if dv != 0.0 {
+                out_idx.push(j);
+                out_val.push(dv);
+            }
+        }
+        SparseVec::new(self.part.features.n_cols, out_idx, out_val)
+    }
+
+    /// Dense-reference epoch: the pre-O(touched) implementation — full O(d)
+    /// re-centre, no stamp bookkeeping, all-rows γ-retention, O(d) dense
+    /// collect.  Same per-step arithmetic as the production path; kept as
+    /// the oracle for the equivalence tests (`tests/worker_equiv.rs`,
+    /// `tests/properties.rs`) and the bench's reference worker.  NOT on the
+    /// production path.
+    pub fn solve_epoch_with_schedule_dense(&mut self, w_eff: &[f32], idx: &[i32]) -> Vec<f32> {
+        debug_assert_eq!(w_eff.len(), self.v.len());
+        let scale = (self.sigma_prime / self.lam_n) as f32;
+        let c = self.sigma_prime / self.lam_n;
+        self.v.copy_from_slice(w_eff);
+        let alpha_pre = self.alpha.clone();
+        match self.loss_kind {
             LossKind::Square => {
                 for &ii in idx {
                     let i = ii as usize;
@@ -111,15 +296,15 @@ impl SdcaSolver {
                 }
             }
         }
-        // line 5: retained dual state is α_pre + γΔα
         let g = self.gamma as f32;
         if g != 1.0 {
-            for (a, &pre) in self.alpha.iter_mut().zip(&self.alpha_pre) {
+            for (a, &pre) in self.alpha.iter_mut().zip(&alpha_pre) {
                 *a = pre + g * (*a - pre);
             }
         }
-        // u = v - w_eff = (σ'/λn) A^T Δα  ⇒  Δw = u / σ' (unscaled; the
-        // server applies its γ on aggregation, line 10)
+        // the touched list no longer describes v's divergence from w_eff:
+        // force the next incremental call to re-centre fully
+        self.needs_full_resync = true;
         let inv_sigma = 1.0 / self.sigma_prime as f32;
         self.v
             .iter()
@@ -154,9 +339,14 @@ impl SdcaSolver {
 }
 
 impl LocalSolver for SdcaSolver {
-    fn solve_epoch(&mut self, w_eff: &[f32], h: usize) -> Vec<f32> {
+    fn solve_epoch_incremental(
+        &mut self,
+        w_eff: &[f32],
+        h: usize,
+        changed: Option<&[u32]>,
+    ) -> SparseVec {
         let idx = self.draw_schedule(h);
-        self.solve_epoch_with_schedule(w_eff, &idx)
+        self.solve_epoch_with_schedule(w_eff, &idx, changed)
     }
 
     fn alpha(&self) -> &[f32] {
@@ -191,6 +381,10 @@ mod tests {
     use crate::linalg::dense;
 
     fn solver(h_seed: u64) -> SdcaSolver {
+        solver_with(h_seed, LossKind::Square, 1.0)
+    }
+
+    fn solver_with(h_seed: u64, loss: LossKind, gamma: f64) -> SdcaSolver {
         let mut spec = Preset::Rcv1Small.spec();
         spec.n = 256;
         spec.d = 400;
@@ -198,11 +392,11 @@ mod tests {
         let parts = partition_rows(&ds, 1, None);
         SdcaSolver::new(
             parts.into_iter().next().unwrap(),
-            LossKind::Square,
+            loss,
             0.01,
             256,
             1.0,
-            1.0,
+            gamma,
             Pcg64::new(h_seed),
         )
     }
@@ -212,7 +406,7 @@ mod tests {
         let mut s = solver(1);
         let w = vec![0.0f32; 400];
         let alpha_before = s.alpha().to_vec();
-        let dw = s.solve_epoch(&w, 300);
+        let dw = s.solve_epoch(&w, 300).to_dense();
         let dalpha: Vec<f32> = s
             .alpha()
             .iter()
@@ -273,7 +467,70 @@ mod tests {
         let mut s = solver(3);
         let w = vec![0.0f32; 400];
         let dw = s.solve_epoch(&w, 0);
-        assert!(dw.iter().all(|&x| x == 0.0));
+        assert_eq!(dw.nnz(), 0);
         assert!(s.alpha().iter().all(|&a| a == 0.0));
+    }
+
+    /// The O(touched) epoch must reproduce the dense-reference epoch
+    /// bit-for-bit: same Δw (as `from_dense` of the dense one), same α —
+    /// across several epochs, losses and γ values, with the incremental
+    /// re-centring path exercised via a moving w_eff.
+    #[test]
+    fn sparse_epoch_matches_dense_reference_bitwise() {
+        for (loss, gamma) in [
+            (LossKind::Square, 1.0),
+            (LossKind::Square, 0.5),
+            (LossKind::Logistic, 0.5),
+            (LossKind::SmoothHinge, 0.75),
+        ] {
+            let mut sparse = solver_with(11, loss, gamma);
+            let mut dense_ref = solver_with(11, loss, gamma);
+            let mut w_eff = vec![0.0f32; 400];
+            let mut dirty: Vec<u32> = Vec::new();
+            for round in 0..4 {
+                let idx = sparse.draw_schedule(200);
+                let idx2 = dense_ref.draw_schedule(200);
+                assert_eq!(idx, idx2);
+                let dw = sparse.solve_epoch_with_schedule(&w_eff, &idx, Some(&dirty));
+                let dw_dense = dense_ref.solve_epoch_with_schedule_dense(&w_eff, &idx);
+                assert_eq!(
+                    dw,
+                    SparseVec::from_dense(&dw_dense),
+                    "round {round} ({loss:?}, γ={gamma})"
+                );
+                assert_eq!(sparse.alpha(), dense_ref.alpha(), "round {round}");
+                // move w_eff at the delta's support (what the worker does)
+                dirty.clear();
+                for (&j, &x) in dw.idx.iter().zip(&dw.val) {
+                    w_eff[j as usize] += 0.5 * x;
+                    dirty.push(j);
+                }
+            }
+        }
+    }
+
+    /// A dense-reference epoch invalidates the incremental baseline; the
+    /// next incremental call must still be correct (full re-centre forced).
+    #[test]
+    fn incremental_after_dense_reference_is_safe() {
+        let mut a = solver(21);
+        let mut b = solver(21);
+        let w0 = vec![0.0f32; 400];
+        let idx = a.draw_schedule(150);
+        let _ = b.draw_schedule(150);
+        // a: dense-reference epoch; b: sparse epoch — same state after
+        let _ = a.solve_epoch_with_schedule_dense(&w0, &idx);
+        let _ = b.solve_epoch_with_schedule(&w0, &idx, Some(&[]));
+        // second epoch from a DIFFERENT w_eff with an (unsound-looking)
+        // empty hint: a must fall back to a full re-centre and match b,
+        // which gets the honest full hint
+        let w1: Vec<f32> = (0..400).map(|j| (j % 7) as f32 * 0.01).collect();
+        let all: Vec<u32> = (0..400).collect();
+        let idx = a.draw_schedule(150);
+        let _ = b.draw_schedule(150);
+        let da = a.solve_epoch_with_schedule(&w1, &idx, Some(&[]));
+        let db = b.solve_epoch_with_schedule(&w1, &idx, Some(&all));
+        assert_eq!(da, db);
+        assert_eq!(a.alpha(), b.alpha());
     }
 }

@@ -6,7 +6,10 @@
 //! it into cells, executes the cells concurrently on a `std::thread` pool
 //! (the DES in [`crate::sim`] is deterministic per cell, so results are
 //! bit-identical regardless of thread count or completion order — merging
-//! happens by cell *index*, never by arrival order), and aggregates the
+//! happens by cell *index*, never by arrival order; cells are handed to
+//! the pool largest-estimated-cost first (LPT by n · nnz/row · H · L), so
+//! one huge cell no longer serializes the tail of a big grid), and
+//! aggregates the
 //! per-cell [`CellResult`]s into ranked comparison tables plus CSV/JSON
 //! reports ([`report::SweepReport`]).
 //!
@@ -512,6 +515,12 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         .collect::<Result<_>>()?;
 
     let threads = spec.pool_threads().min(prepared.len()).max(1);
+    // LPT scheduling: hand cells to the pool largest-estimated-cost first,
+    // so a big cell starts immediately instead of serializing the tail of
+    // an otherwise-finished grid.  Results still land in index-keyed slots,
+    // so the report bytes are identical for ANY execution order — the
+    // determinism contract is untouched.
+    let order = execution_order(&prepared, &datasets);
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<Result<CellResult>>>> = Mutex::new(
         (0..prepared.len()).map(|_| None).collect(),
@@ -520,10 +529,11 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= prepared.len() {
+                let oi = next.fetch_add(1, Ordering::Relaxed);
+                if oi >= order.len() {
                     break;
                 }
+                let i = order[oi];
                 let pc = &prepared[i];
                 let result = run_cell(pc, &datasets[pc.ds_idx].1, spec.runtime);
                 slots.lock().unwrap()[i] = Some(result);
@@ -538,6 +548,30 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         .map(|r| r.expect("every cell index was claimed by the pool"))
         .collect::<Result<_>>()?;
     Ok(SweepReport::new(spec.describe(), results))
+}
+
+/// Estimated compute cost of one cell — total nnz · H · L, the work the
+/// DES charges its solvers (n · nnz/row · H flops per outer round, L outer
+/// rounds).  Only *relative* order matters: it decides which cells start
+/// first (LPT), never what they produce.
+fn cell_cost(pc: &PreparedCell, datasets: &[(Preset, Dataset)]) -> f64 {
+    datasets[pc.ds_idx].1.nnz() as f64
+        * pc.engine.h as f64
+        * pc.engine.outer_rounds.max(1) as f64
+}
+
+/// Pool execution order: cells sorted by estimated cost descending
+/// (longest-processing-time-first), ties broken by ascending cell index so
+/// the order itself is deterministic.
+fn execution_order(prepared: &[PreparedCell], datasets: &[(Preset, Dataset)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..prepared.len()).collect();
+    order.sort_by(|&a, &b| {
+        cell_cost(&prepared[b], datasets)
+            .partial_cmp(&cell_cost(&prepared[a], datasets))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
 }
 
 /// What a runtime hands back for one executed cell, normalized across the
@@ -830,6 +864,55 @@ threads = 2
                 assert!(c.w_norm > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn lpt_execution_order_front_loads_expensive_cells() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan],
+            presets: vec![Preset::DenseTest],
+            rho_ds: vec![0],
+            seeds: vec![1, 2, 3, 4],
+            n_override: 64,
+            ..SweepSpec::default()
+        };
+        let datasets = vec![(Preset::DenseTest, spec.materialize(Preset::DenseTest))];
+        // alternate a 10x outer-round knob so costs differ cell to cell
+        let prepared: Vec<PreparedCell> = spec
+            .cells()
+            .into_iter()
+            .map(|cell| {
+                let mut engine = spec.engine_for(&cell);
+                engine.outer_rounds = if cell.seed % 2 == 0 { 50 } else { 5 };
+                let net = cell.scenario.instantiate(spec.workers);
+                PreparedCell {
+                    cell,
+                    engine,
+                    net,
+                    ds_idx: 0,
+                }
+            })
+            .collect();
+        // expensive cells (seeds 2, 4 -> indices 1, 3) start first; equal
+        // costs tie-break by ascending index — fully deterministic
+        assert_eq!(execution_order(&prepared, &datasets), vec![1, 3, 0, 2]);
+        // and with uniform costs the order degenerates to plain index order
+        let uniform: Vec<PreparedCell> = spec
+            .cells()
+            .into_iter()
+            .map(|cell| {
+                let engine = spec.engine_for(&cell);
+                let net = cell.scenario.instantiate(spec.workers);
+                PreparedCell {
+                    cell,
+                    engine,
+                    net,
+                    ds_idx: 0,
+                }
+            })
+            .collect();
+        assert_eq!(execution_order(&uniform, &datasets), vec![0, 1, 2, 3]);
     }
 
     #[test]

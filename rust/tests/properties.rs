@@ -9,11 +9,22 @@
 //!
 //! 2. the `util::binio` wire codec: random `UpdateMsg`/`DeltaMsg` values
 //!    roundtrip exactly, and `wire_bytes()` — the number the simulator
-//!    charges to the α-β cost model — equals the actual encoded length.
+//!    charges to the α-β cost model — equals the actual encoded length;
+//!
+//! 3. the O(touched) epoch delta: the touched-index support the solver
+//!    reports covers every coordinate the dense-reference epoch moved (no
+//!    silently dropped coordinates — exact `SparseVec::from_dense`
+//!    equality), and the dense-mode (ρd = 0) worker ships everything with
+//!    an identically-zero residual every round.
 
+use acpd::data::{partition::partition_rows, synthetic, synthetic::Preset};
 use acpd::filter::{filter_topk, FilterScratch};
 use acpd::linalg::sparse::SparseVec;
+use acpd::loss::LossKind;
 use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use acpd::protocol::worker::WorkerState;
+use acpd::solver::sdca::SdcaSolver;
+use acpd::solver::LocalSolver;
 use acpd::testing::{forall, gens, Size};
 use acpd::util::rng::Pcg64;
 
@@ -129,6 +140,106 @@ fn prop_update_msg_wire_bytes_match_encoding() {
                 && matches!(UpdateMsg::decode(&buf), Ok(back) if back == *msg)
         },
     );
+}
+
+fn solver_pair(d: usize, n: usize, data_seed: u64, rng_seed: u64) -> (SdcaSolver, SdcaSolver) {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = n;
+    spec.d = d;
+    let ds = synthetic::generate(&spec, data_seed);
+    let build = |seed| {
+        let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+        SdcaSolver::new(part, LossKind::Square, 0.01, n, 1.0, 1.0, Pcg64::new(seed))
+    };
+    (build(rng_seed), build(rng_seed))
+}
+
+/// Mass-conservation prerequisite for the sparse worker path: the epoch
+/// delta's touched support must cover EVERY coordinate the epoch actually
+/// moved.  A dropped coordinate would silently leak update mass out of the
+/// `sent + residual == (1/λn)AᵀΔα` ledger, so we require exact equality
+/// with `from_dense` of the dense-reference epoch — values and support.
+#[test]
+fn prop_epoch_delta_support_covers_dense_reference() {
+    forall(
+        0xDE17_0001,
+        30,
+        |rng, sz| {
+            let d = 16 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let n = 16 + rng.next_below(48) as usize;
+            let h = 1 + rng.next_below(96) as usize;
+            let epochs = 1 + rng.next_below(3) as usize;
+            (d, n, h, epochs, rng.next_u64(), rng.next_u64())
+        },
+        |&(d, n, h, epochs, data_seed, rng_seed)| {
+            let (mut sparse, mut dense_ref) = solver_pair(d, n, data_seed, rng_seed);
+            let w_eff = vec![0.0f32; d];
+            for _ in 0..epochs {
+                let idx = sparse.draw_schedule(h);
+                if idx != dense_ref.draw_schedule(h) {
+                    return false;
+                }
+                let sv = sparse.solve_epoch_with_schedule(&w_eff, &idx, None);
+                let dw = dense_ref.solve_epoch_with_schedule_dense(&w_eff, &idx);
+                // exact support + value equality; in particular every
+                // nonzero of the dense delta appears in the sparse support
+                if sv != SparseVec::from_dense(&dw) {
+                    return false;
+                }
+                if sparse.alpha() != dense_ref.alpha() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Dense-mode (ρd = 0) regression pin: every round ships the WHOLE
+/// accumulated update — the residual and its support are identically empty
+/// after every round, and the conservation ledger closes with the sent
+/// mass alone.
+#[test]
+fn dense_mode_ships_everything_every_round() {
+    let d = 300;
+    let n = 96;
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = n;
+    spec.d = d;
+    let ds = synthetic::generate(&spec, 7);
+    let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+    let solver = SdcaSolver::new(part, LossKind::Square, 0.01, n, 1.0, 1.0, Pcg64::new(3));
+    let mut w = WorkerState::new(0, Box::new(solver), 1.0, 128, 0);
+    let mut sent = vec![0.0f32; d];
+    for round in 1..=5 {
+        let msg = w.compute_round();
+        assert_eq!(msg.round, round);
+        msg.update.add_scaled_into(&mut sent, 1.0);
+        assert!(
+            w.residual().iter().all(|&x| x == 0.0),
+            "round {round}: dense mode left residual mass"
+        );
+        assert!(w.residual_support().is_empty(), "round {round}");
+        w.apply_delta(&DeltaMsg {
+            worker: 0,
+            server_round: round,
+            shutdown: false,
+            delta: ModelDelta::Sparse(SparseVec::empty(d)),
+        });
+    }
+    // ledger: with zero residual, Σ sent == (1/λn) Aᵀα exactly up to f32
+    let mut expect = vec![0.0f32; d];
+    ds.features.t_matvec(w.alpha(), &mut expect);
+    let lam_n = 0.01 * n as f64;
+    for e in &mut expect {
+        *e /= lam_n as f32;
+    }
+    let max_diff = sent
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "dense-mode conservation violated: {max_diff}");
 }
 
 #[test]

@@ -65,8 +65,10 @@ fn pjrt_solver_matches_rust_solver() {
 
         let mut w_eff = vec![0.0f32; ds.d()];
         for round in 0..3 {
-            let dw_rust = rust_solver.solve_epoch(&w_eff, 256);
-            let dw_pjrt = pjrt_solver.solve_epoch(&w_eff, 256);
+            // epoch deltas arrive as touched-support sparse vectors now;
+            // densify for the elementwise comparison (test-scale d)
+            let dw_rust = rust_solver.solve_epoch(&w_eff, 256).to_dense();
+            let dw_pjrt = pjrt_solver.solve_epoch(&w_eff, 256).to_dense();
             let max_dw = dw_rust
                 .iter()
                 .zip(&dw_pjrt)

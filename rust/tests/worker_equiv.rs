@@ -1,0 +1,255 @@
+//! Sparse-path vs dense-reference worker equivalence.
+//!
+//! The production [`WorkerState`] runs O(touched) rounds: the solver
+//! returns a touched-support sparse epoch delta, `w_eff = w_k + γ·Δw_k` is
+//! a maintained buffer re-evaluated only where its inputs moved, and the
+//! top-ρd filter selects over an explicit residual support list.  This
+//! suite pins that machinery against the obvious reference implementation
+//! — dense O(d) recompute of `w_eff` every round, dense epoch Δw, dense
+//! residual fold, dense candidate gather — across randomized dimensions,
+//! ρd budgets (including ρd = 0 dense mode), epoch lengths, losses, γ
+//! values, error-feedback settings and randomized (sparse and dense)
+//! server replies:
+//!
+//!   * every outgoing `UpdateMsg` is **byte-identical on the wire**
+//!     (same values, same sparse/dense encoding choice, same frame bytes),
+//!   * `w_k`, the residual Δw_k and the dual variables α are **bit-for-bit
+//!     identical** after every round,
+//!   * the maintained residual support is exactly the residual's nonzeros.
+//!
+//! This is the worker-side twin of `tests/server_equiv.rs`.
+
+use acpd::data::{partition::partition_rows, synthetic, synthetic::Preset, Dataset};
+use acpd::filter::{filter_topk, FilterScratch};
+use acpd::linalg::{dense, sparse::SparseVec};
+use acpd::loss::LossKind;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use acpd::protocol::worker::WorkerState;
+use acpd::solver::sdca::SdcaSolver;
+use acpd::solver::LocalSolver;
+use acpd::testing::forall;
+use acpd::util::rng::Pcg64;
+
+/// Reference worker: the pre-O(touched) implementation — every pass dense.
+/// Same per-step arithmetic (it drives the same `SdcaSolver` through the
+/// dense-reference epoch), entirely different bookkeeping.
+struct DenseRefWorker {
+    id: usize,
+    solver: SdcaSolver,
+    gamma: f32,
+    h: usize,
+    rho_d: usize,
+    resid: Vec<f32>,
+    w_k: Vec<f32>,
+    w_eff: Vec<f32>,
+    scratch: FilterScratch,
+    round: u64,
+    error_feedback: bool,
+}
+
+impl DenseRefWorker {
+    fn new(id: usize, solver: SdcaSolver, gamma: f32, h: usize, rho_d: usize) -> Self {
+        let d = solver.partition().features.n_cols;
+        DenseRefWorker {
+            id,
+            solver,
+            gamma,
+            h,
+            rho_d,
+            resid: vec![0.0; d],
+            w_k: vec![0.0; d],
+            w_eff: vec![0.0; d],
+            scratch: FilterScratch::default(),
+            round: 0,
+            error_feedback: true,
+        }
+    }
+
+    fn compute_round(&mut self) -> UpdateMsg {
+        // full O(d) recompute of the centring point
+        dense::add_scaled(&self.w_k, self.gamma, &self.resid, &mut self.w_eff);
+        let idx = self.solver.draw_schedule(self.h);
+        let dw = self.solver.solve_epoch_with_schedule_dense(&self.w_eff, &idx);
+        for (r, &x) in self.resid.iter_mut().zip(&dw) {
+            *r += x;
+        }
+        let filtered = filter_topk(&mut self.resid, self.rho_d, &mut self.scratch);
+        if !self.error_feedback {
+            self.resid.fill(0.0);
+        }
+        self.round += 1;
+        UpdateMsg::from_sparse(self.id as u32, self.round, filtered)
+    }
+
+    fn apply_delta(&mut self, msg: &DeltaMsg) {
+        msg.delta.add_into(&mut self.w_k);
+    }
+}
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    d: usize,
+    h: usize,
+    rho_d: usize,
+    loss: LossKind,
+    gamma: f32,
+    error_feedback: bool,
+    rounds: usize,
+    seed: u64,
+    reply_seed: u64,
+}
+
+fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = n;
+    spec.d = d;
+    synthetic::generate(&spec, seed)
+}
+
+fn make_pair(case: &Case) -> (WorkerState, DenseRefWorker) {
+    let ds = dataset(case.n, case.d, case.seed ^ 0xDA7A);
+    let lambda = 0.01;
+    let build = || {
+        let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+        SdcaSolver::new(
+            part,
+            case.loss,
+            lambda,
+            ds.n(),
+            1.0,
+            case.gamma as f64,
+            Pcg64::new(case.seed),
+        )
+    };
+    let mut prod = WorkerState::new(0, Box::new(build()), case.gamma, case.h, case.rho_d);
+    prod.set_error_feedback(case.error_feedback);
+    let mut dref = DenseRefWorker::new(0, build(), case.gamma, case.h, case.rho_d);
+    dref.error_feedback = case.error_feedback;
+    (prod, dref)
+}
+
+/// A random server reply: sparse or dense encoding, random support/values,
+/// sometimes empty — the same message is applied to both workers.
+fn random_reply(rng: &mut Pcg64, d: usize) -> DeltaMsg {
+    let nnz = rng.next_below(d as u32 + 1) as usize;
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(nnz);
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| (rng.next_normal() as f32) * 0.1).collect();
+    let sv = SparseVec::new(d, idx, val);
+    let delta = if rng.next_f64() < 0.5 {
+        ModelDelta::Sparse(sv)
+    } else {
+        ModelDelta::Dense(sv.to_dense())
+    };
+    DeltaMsg {
+        worker: 0,
+        server_round: 0,
+        shutdown: false,
+        delta,
+    }
+}
+
+fn drive_and_compare(case: &Case) -> bool {
+    let (mut prod, mut dref) = make_pair(case);
+    let mut reply_rng = Pcg64::new(case.reply_seed);
+    for round in 0..case.rounds {
+        let a = prod.compute_round();
+        let b = dref.compute_round();
+        // byte-identical wire frames (covers values AND encoding choice)
+        if a.encode() != b.encode() {
+            eprintln!("round {round}: UpdateMsg frames differ");
+            return false;
+        }
+        // bit-identical local state
+        if prod.w_k() != dref.w_k.as_slice()
+            || prod.residual() != dref.resid.as_slice()
+            || prod.alpha() != dref.solver.alpha()
+        {
+            eprintln!("round {round}: state diverged");
+            return false;
+        }
+        // the maintained support is exactly the residual's nonzeros
+        let expect: Vec<u32> = prod
+            .residual()
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(j, _)| j as u32)
+            .collect();
+        if prod.residual_support() != expect.as_slice() {
+            eprintln!("round {round}: support drifted from the nonzero set");
+            return false;
+        }
+        let reply = random_reply(&mut reply_rng, case.d);
+        prod.apply_delta(&reply);
+        dref.apply_delta(&reply);
+    }
+    prod.w_k() == dref.w_k.as_slice()
+}
+
+#[test]
+fn prop_sparse_worker_matches_dense_reference() {
+    forall(
+        0x30_0B_0001,
+        40,
+        |rng, sz| {
+            let d = 16 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let n = 16 + rng.next_below(48) as usize;
+            let h = 1 + rng.next_below(64) as usize;
+            // 0 = dense mode; otherwise any budget up to ~d
+            let rho_d = rng.next_below(d as u32 + 1) as usize;
+            let loss = match rng.next_below(3) {
+                0 => LossKind::Square,
+                1 => LossKind::Logistic,
+                _ => LossKind::SmoothHinge,
+            };
+            let gamma = if rng.next_f64() < 0.5 { 1.0 } else { 0.5 };
+            Case {
+                n,
+                d,
+                h,
+                rho_d,
+                loss,
+                gamma,
+                error_feedback: rng.next_f64() < 0.75,
+                rounds: 2 + rng.next_below(4) as usize,
+                seed: rng.next_u64(),
+                reply_seed: rng.next_u64(),
+            }
+        },
+        drive_and_compare,
+    );
+}
+
+/// Deterministic pin of the two regimes the randomized sweep can
+/// under-sample: dense mode (ρd = 0 — every message ships the whole Δw_k,
+/// residual must stay identically zero) and error-feedback off.
+#[test]
+fn dense_mode_and_ef_off_pins() {
+    for (rho_d, error_feedback) in [(0usize, true), (0, false), (12, false)] {
+        let case = Case {
+            n: 48,
+            d: 160,
+            h: 96,
+            rho_d,
+            loss: LossKind::Square,
+            gamma: 0.5,
+            error_feedback,
+            rounds: 5,
+            seed: 0xC0FFEE,
+            reply_seed: 0xBEEF,
+        };
+        assert!(
+            drive_and_compare(&case),
+            "pin failed: rho_d={rho_d} ef={error_feedback}"
+        );
+        // dense mode / EF-off leave no residual behind by construction
+        let (mut prod, _) = make_pair(&case);
+        let _ = prod.compute_round();
+        assert_eq!(dense::norm2_sq(prod.residual()), 0.0);
+        assert!(prod.residual_support().is_empty());
+    }
+}
