@@ -9,9 +9,13 @@
 //! The equivalent one-off CLI form of the Fig 3 grid:
 //!
 //!   acpd sweep --algos acpd,cocoa,cocoa+ --scenarios lan,straggler:10 \
-//!        --presets rcv1-small --rho-ds 1000 --seeds 1,2,3 --target-gap 1e-4
+//!        --datasets rcv1-small --rho-ds 1000 --seeds 1,2,3 --target-gap 1e-4
+//!
+//! (and Fig 4b's whole K ∈ {2,4,8,16} scaling curve is a single matrix:
+//! `--workers 2,4,8,16 --group 0` — group 0 keeps B = K/2 per point)
 
 use acpd::data::synthetic::Preset;
+use acpd::data::DatasetSource;
 use acpd::engine::Algorithm;
 use acpd::network::Scenario;
 use acpd::sweep::{run_sweep, SweepReport, SweepSpec};
@@ -30,10 +34,10 @@ fn out_dir() -> std::path::PathBuf {
 /// T = 10, time-to-1e-4-gap as the headline metric.
 fn base() -> SweepSpec {
     let mut s = SweepSpec::default();
-    s.presets = vec![Preset::Rcv1Small];
-    s.workers = 4;
-    s.group = 2;
-    s.period = 10;
+    s.datasets = vec![DatasetSource::Preset(Preset::Rcv1Small)];
+    s.workers = vec![4];
+    s.groups = vec![2];
+    s.periods = vec![10];
     s.lambda = 1e-4;
     s.target_gap = 1e-4;
     s.seeds = vec![1, 2, 3];
@@ -85,30 +89,19 @@ fn main() -> anyhow::Result<()> {
     save(&r4a, "fig4a")?;
 
     // ---- Fig 4b: worker scaling K in {2, 4, 8, 16} ----------------------
-    // workers is a shared knob, so scaling is one sweep per K; the cells
-    // carry a `workers` column and are merged into a single report.
-    let mut all_cells = Vec::new();
-    for k in [2usize, 4, 8, 16] {
-        let mut s = base();
-        s.algorithms = vec![Algorithm::Acpd, Algorithm::CocoaPlus];
-        s.scenarios = vec![Scenario::Straggler { sigma: 10.0 }];
-        s.rho_ds = vec![1000];
-        s.workers = k;
-        s.group = (k / 2).max(1);
-        eprintln!("[fig4b K={k}] {}", s.describe());
-        let r = run_sweep(&s)?;
-        let offset = all_cells.len();
-        all_cells.extend(r.cells.into_iter().map(|mut c| {
-            c.index += offset; // keep indices unique across the K sub-grids
-            c
-        }));
-    }
-    let r4b = SweepReport::new("fig4b: worker scaling K in {2,4,8,16}".to_string(), all_cells);
-    // ranked()/to_json() group by (scenario, preset, rho_d) — averaging
-    // across different K under one key would be meaningless — so fig4b
-    // ships the per-cell CSV only (speedup curves live there).
-    r4b.cells_csv().save(out_dir().join("fig4b_cells.csv"))?;
-    eprintln!("wrote results/paper/fig4b_cells.csv");
+    // workers is a grid axis, so the whole scaling curve is ONE matrix;
+    // group = 0 keeps the paper's B = K/2 coupling per point, and the
+    // ranked table yields one comparison block per K (speedup curves come
+    // from the per-cell CSV's workers column).
+    let mut fig4b = base();
+    fig4b.algorithms = vec![Algorithm::Acpd, Algorithm::CocoaPlus];
+    fig4b.scenarios = vec![Scenario::Straggler { sigma: 10.0 }];
+    fig4b.rho_ds = vec![1000];
+    fig4b.workers = vec![2, 4, 8, 16];
+    fig4b.groups = vec![0]; // auto: B = max(K/2, 1) at every K
+    eprintln!("[fig4b] {}", fig4b.describe());
+    let r4b = run_sweep(&fig4b)?;
+    save(&r4b, "fig4b")?;
 
     // ---- Fig 5 / Table I: "real environment" (background jitter) -------
     let mut fig5 = base();

@@ -1,0 +1,173 @@
+//! The self-describing CLI catalog: everything `acpd` can be pointed at —
+//! dataset sources, sweep grid axes with their defaults, network scenarios
+//! and cell runtimes — rendered as one plain-text block.
+//!
+//! [`render`] is a pure function of compiled-in tables
+//! ([`Preset::all_names`], [`Scenario::help_names`],
+//! [`SweepSpec::default`]), so `acpd info` output is deterministic and the
+//! exact text is pinned by a snapshot test in this module: adding a preset,
+//! an axis or a runtime without updating the user-facing catalog fails the
+//! build.  Environment-dependent information (PJRT artifact status) is
+//! printed by the CLI *after* this block and is deliberately not part of
+//! the snapshot.
+
+use std::fmt::Write as _;
+
+use crate::data::synthetic::Preset;
+use crate::data::DatasetSource;
+use crate::network::Scenario;
+use crate::sweep::SweepSpec;
+
+/// Join displayable items with commas (the list syntax configs/flags use).
+fn join(items: impl Iterator<Item = String>) -> String {
+    items.collect::<Vec<_>>().join(",")
+}
+
+/// Render the full catalog (see module docs).
+pub fn render() -> String {
+    let mut s = String::new();
+    let d = SweepSpec::default();
+
+    s.push_str("dataset sources (sweep `datasets`, train `--preset` / `--data`):\n");
+    for &name in Preset::all_names() {
+        let spec = Preset::from_name(name).expect("all_names entries parse").spec();
+        let _ = writeln!(
+            s,
+            "  {:<13} synthetic  n={:<8} d={:<8} ~{} nnz/row",
+            name, spec.n, spec.d, spec.nnz_per_row
+        );
+    }
+    let _ = writeln!(
+        s,
+        "  {:<13} on-disk LIBSVM corpus (e.g. rcv1:data/rcv1_train.binary);",
+        "<name>:<path>"
+    );
+    s.push_str("                parsed once per sweep, rows unit-normalized (Assumption 1)\n");
+
+    s.push_str("\nsweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):\n");
+    let axes: [(&str, &str, String); 8] = [
+        (
+            "algos",
+            "acpd | cocoa | cocoa+ | disdca",
+            join(d.algorithms.iter().map(|a| a.name().to_string())),
+        ),
+        (
+            "scenarios",
+            Scenario::help_names(),
+            join(d.scenarios.iter().map(|x| x.name())),
+        ),
+        (
+            "datasets",
+            DatasetSource::help_syntax(),
+            join(d.datasets.iter().map(|x| x.name())),
+        ),
+        (
+            "workers",
+            "K - cluster sizes",
+            join(d.workers.iter().map(|v| v.to_string())),
+        ),
+        (
+            "group",
+            "B - acpd group sizes (0 = K/2; baselines run B = K)",
+            join(d.groups.iter().map(|v| v.to_string())),
+        ),
+        (
+            "period",
+            "T - acpd barrier periods (baselines run T = 1)",
+            join(d.periods.iter().map(|v| v.to_string())),
+        ),
+        (
+            "rho_ds",
+            "kept coordinates per message (0 = dense)",
+            join(d.rho_ds.iter().map(|v| v.to_string())),
+        ),
+        (
+            "seeds",
+            "run seeds",
+            join(d.seeds.iter().map(|v| v.to_string())),
+        ),
+    ];
+    for (key, what, default) in axes {
+        let _ = writeln!(s, "  {:<10} {:<52} default {}", key, what, default);
+    }
+    s.push_str(
+        "  equivalent cells deduplicate: a baseline appears once per\n  \
+         (algorithm, scenario, dataset, K, rho_d, seed) whatever group/period span\n",
+    );
+
+    s.push_str("\nnetwork scenarios (per-cell cost models):\n");
+    s.push_str("  lan             uniform gigabit LAN (latency-dominated)\n");
+    s.push_str("  straggler:<s>   worker 0 runs s x slower (compute-dominated, Fig 3)\n");
+    s.push_str("  jittery-cloud   background-load jitter on every worker (Fig 5)\n");
+
+    s.push_str("\ncell runtimes (`runtime` key / `--runtime`):\n");
+    s.push_str("  sim             deterministic DES; reports byte-identical across runs [default]\n");
+    s.push_str("  threads         real OS threads, physical straggler sleeps, wall-clock axes\n");
+    s.push_str("  tcp             real localhost TCP cluster per cell (server/worker framing)\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::RuntimeKind;
+
+    /// Full-text snapshot of `acpd info`'s catalog block.  If this fails,
+    /// the catalog changed: check the new text reads right, then update the
+    /// snapshot to match.
+    #[test]
+    fn catalog_snapshot() {
+        let expected = "\
+dataset sources (sweep `datasets`, train `--preset` / `--data`):
+  rcv1-small    synthetic  n=20000    d=47236    ~74 nnz/row
+  url-small     synthetic  n=30000    d=200000   ~115 nnz/row
+  kdd-small     synthetic  n=40000    d=400000   ~29 nnz/row
+  rcv1-full     synthetic  n=677399   d=47236    ~74 nnz/row
+  dense-e2e     synthetic  n=8192     d=1024     ~1024 nnz/row
+  dense-test    synthetic  n=1024     d=128      ~128 nnz/row
+  <name>:<path> on-disk LIBSVM corpus (e.g. rcv1:data/rcv1_train.binary);
+                parsed once per sweep, rows unit-normalized (Assumption 1)
+
+sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
+  algos      acpd | cocoa | cocoa+ | disdca                       default acpd,cocoa,cocoa+
+  scenarios  lan | straggler:<sigma> | jittery-cloud              default lan,straggler:10,jittery-cloud
+  datasets   <preset> | <name>:<path> (LIBSVM file)               default dense-test
+  workers    K - cluster sizes                                    default 4
+  group      B - acpd group sizes (0 = K/2; baselines run B = K)  default 2
+  period     T - acpd barrier periods (baselines run T = 1)       default 5
+  rho_ds     kept coordinates per message (0 = dense)             default 0
+  seeds      run seeds                                            default 1,2,3
+  equivalent cells deduplicate: a baseline appears once per
+  (algorithm, scenario, dataset, K, rho_d, seed) whatever group/period span
+
+network scenarios (per-cell cost models):
+  lan             uniform gigabit LAN (latency-dominated)
+  straggler:<s>   worker 0 runs s x slower (compute-dominated, Fig 3)
+  jittery-cloud   background-load jitter on every worker (Fig 5)
+
+cell runtimes (`runtime` key / `--runtime`):
+  sim             deterministic DES; reports byte-identical across runs [default]
+  threads         real OS threads, physical straggler sleeps, wall-clock axes
+  tcp             real localhost TCP cluster per cell (server/worker framing)
+";
+        assert_eq!(render(), expected);
+    }
+
+    /// The catalog must track the live tables — every preset, scenario
+    /// spelling and runtime name appears verbatim.
+    #[test]
+    fn catalog_covers_live_tables() {
+        let text = render();
+        for &name in Preset::all_names() {
+            assert!(text.contains(name), "preset {name} missing from catalog");
+        }
+        assert!(text.contains(Scenario::help_names()));
+        assert!(text.contains(DatasetSource::help_syntax()));
+        for rt in [RuntimeKind::Sim, RuntimeKind::Threads, RuntimeKind::Tcp] {
+            assert!(text.contains(rt.name()), "runtime {} missing", rt.name());
+        }
+        for axis in ["algos", "scenarios", "datasets", "workers", "group", "period", "rho_ds", "seeds"] {
+            assert!(text.contains(&format!("  {axis}")), "axis {axis} missing");
+        }
+    }
+}

@@ -17,13 +17,15 @@ acpd — Straggler-Agnostic Communication-Efficient Distributed Primal-Dual (Huo
 usage: acpd <command> [flags]
 
 commands:
-  info          presets, artifact status, build info
+  info          full catalog: dataset sources, sweep axes, scenarios,
+                runtimes, artifact status
   gen-data      write a synthetic dataset in LIBSVM format
   train         run one experiment (sim or threads runtime)
-  sweep         run a scenario matrix (algos x scenarios x presets x rho_d
-                x seeds) in parallel and print ranked comparison tables;
-                --runtime sim|threads|tcp picks the substrate, --parity
-                cross-checks a real runtime against the simulator
+  sweep         run a scenario matrix (algos x scenarios x datasets x
+                workers x group x period x rho_d x seeds) in parallel and
+                print ranked comparison tables; --runtime sim|threads|tcp
+                picks the substrate, --parity cross-checks a real runtime
+                against the simulator
   server        TCP coordinator for a multi-process cluster
   worker        TCP worker process
   theory        Theorem 1/2 quantities for a config (predicted rounds)
@@ -54,14 +56,10 @@ pub fn dispatch(args: &[String]) -> Result<()> {
 
 fn cmd_info() -> Result<()> {
     println!("acpd {} ({})", env!("CARGO_PKG_VERSION"), env!("CARGO_PKG_DESCRIPTION"));
-    println!("\nsynthetic presets:");
-    for &name in Preset::all_names() {
-        let spec = Preset::from_name(name).unwrap().spec();
-        println!(
-            "  {:<12} n={:<9} d={:<9} ~{} nnz/row",
-            name, spec.n, spec.d, spec.nnz_per_row
-        );
-    }
+    println!();
+    // the catalog itself is a pure function in the library (snapshot-tested
+    // there); only the artifact probe below depends on the environment
+    print!("{}", acpd::catalog::render());
     match acpd::runtime::find_artifacts_dir() {
         Some(dir) => {
             let m = acpd::runtime::Manifest::load(&dir)?;
@@ -172,7 +170,7 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
                         Preset::from_name(&p).with_context(|| format!("unknown preset {p:?}"))?,
                     )
                 }
-                path => DataSource::Libsvm(path.to_string()),
+                path => DataSource::libsvm_path(path),
             };
             ExperimentConfig {
                 data,
@@ -292,12 +290,21 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
             "comma list: lan | straggler:<sigma> | jittery-cloud",
             "lan,straggler:10,jittery-cloud",
         ),
-        FlagSpec::opt("presets", "comma list of synthetic presets", "dense-test"),
+        FlagSpec::opt(
+            "datasets",
+            "comma list of dataset sources: <preset> | <name>:<path> (LIBSVM)",
+            "",
+        ),
+        FlagSpec::opt(
+            "presets",
+            "legacy alias of --datasets (synthetic preset names)",
+            "dense-test",
+        ),
         FlagSpec::opt("rho-ds", "comma list of kept coords per message (0=dense)", "0"),
         FlagSpec::opt("seeds", "comma list of run seeds", "1,2,3"),
-        FlagSpec::opt("workers", "K", "4"),
-        FlagSpec::opt("group", "B (acpd cells)", "2"),
-        FlagSpec::opt("period", "T (acpd cells)", "5"),
+        FlagSpec::opt("workers", "comma list of K values (grid axis)", "4"),
+        FlagSpec::opt("group", "comma list of B values (acpd; 0 = K/2)", "2"),
+        FlagSpec::opt("period", "comma list of T values (acpd)", "5"),
         FlagSpec::opt("h", "local iterations per round", "512"),
         FlagSpec::opt("lambda", "L2 regularization", "1e-3"),
         FlagSpec::opt("loss", "square|logistic|smooth-hinge", "square"),
@@ -339,8 +346,13 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
     if explicit("scenarios") {
         spec.scenarios = sweep::parse_scenarios(&a.get_str("scenarios")?)?;
     }
-    if explicit("presets") {
-        spec.presets = sweep::parse_presets(&a.get_str("presets")?)?;
+    if a.opts.contains_key("datasets") && a.opts.contains_key("presets") {
+        bail!("--datasets and --presets are the same axis — pass only one");
+    }
+    if a.opts.contains_key("datasets") {
+        spec.datasets = sweep::parse_sources(&a.get_str("datasets")?)?;
+    } else if explicit("presets") {
+        spec.datasets = sweep::parse_sources(&a.get_str("presets")?)?;
     }
     if explicit("rho-ds") {
         spec.rho_ds = a.get_list("rho-ds")?;
@@ -349,13 +361,13 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         spec.seeds = a.get_list("seeds")?;
     }
     if explicit("workers") {
-        spec.workers = a.get("workers")?;
+        spec.workers = a.get_list("workers")?;
     }
     if explicit("group") {
-        spec.group = a.get("group")?;
+        spec.groups = a.get_list("group")?;
     }
     if explicit("period") {
-        spec.period = a.get("period")?;
+        spec.periods = a.get_list("period")?;
     }
     if explicit("h") {
         spec.h = a.get("h")?;

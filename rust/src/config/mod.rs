@@ -27,20 +27,27 @@
 //!
 //! Scenario-matrix configs use a separate `[sweep]` section consumed by
 //! [`crate::sweep::SweepSpec::from_toml`] (lists are comma-separated
-//! strings — the TOML subset has no arrays):
+//! strings — the TOML subset has no arrays; bare scalars like
+//! `workers = 4` are one-element lists, so legacy configs parse
+//! unchanged):
 //!
 //! ```toml
 //! [sweep]
 //! algos = "acpd,cocoa,cocoa+"
 //! scenarios = "lan,straggler:10,jittery-cloud"
-//! presets = "rcv1-small"
+//! datasets = "rcv1-small,rcv1:data/rcv1_train.binary"  # preset | name:path
 //! rho_ds = "0,1000"
 //! seeds = "1,2,3"
-//! workers = 4
+//! workers = "4,8,16"   # K axis (scaling curves in one grid)
+//! group = 2            # B axis; 0 = K/2 per cell (baselines dedup)
+//! period = 10          # T axis (baselines dedup)
 //! target_gap = 1e-4
 //! runtime = "sim"      # sim | threads | tcp (real runtimes, wall clock)
 //! threads = 0          # 0 = all cores
 //! ```
+//!
+//! (`presets` is the legacy spelling of `datasets`; both parse, setting
+//! both is an error.)
 
 pub mod schema;
 pub mod toml;

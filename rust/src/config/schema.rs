@@ -10,14 +10,10 @@ use crate::engine::{Algorithm, EngineConfig};
 use crate::loss::LossKind;
 use crate::network::{JitterModel, NetworkModel};
 
-/// Where the samples come from.
-#[derive(Debug, Clone)]
-pub enum DataSource {
-    /// Named synthetic preset (DESIGN.md §3).
-    Preset(Preset),
-    /// A LIBSVM file on disk.
-    Libsvm(String),
-}
+/// Where the samples come from — the shared [`crate::data::DatasetSource`]
+/// (synthetic preset or named on-disk LIBSVM corpus), re-exported under the
+/// schema's historical name.
+pub use crate::data::DatasetSource as DataSource;
 
 /// Complete experiment description (data + algorithm + cluster).
 #[derive(Debug, Clone)]
@@ -50,7 +46,14 @@ impl ExperimentConfig {
 
         // [data]
         let data = if let Some(path) = doc.get("data", "libsvm").and_then(|v| v.as_str()) {
-            DataSource::Libsvm(path.to_string())
+            // optional `name` key labels report rows; default: the file stem
+            match doc.get("data", "name").and_then(|v| v.as_str()) {
+                Some(name) => DataSource::Libsvm {
+                    name: name.to_string(),
+                    path: path.to_string(),
+                },
+                None => DataSource::libsvm_path(path),
+            }
         } else {
             let name = doc.get_str("data", "preset", "rcv1-small");
             let preset = Preset::from_name(&name)
@@ -132,10 +135,7 @@ impl ExperimentConfig {
 
     /// Materialize the dataset described by `[data]`.
     pub fn load_data(&self) -> Result<Dataset> {
-        let mut ds = match &self.data {
-            DataSource::Preset(p) => p.generate(self.data_seed),
-            DataSource::Libsvm(path) => crate::data::libsvm::read(path, 0)?,
-        };
+        let mut ds = self.data.load(self.data_seed, 0, 0)?;
         if self.normalize {
             ds.normalize();
         }

@@ -1,1 +1,24 @@
-// paper's L3 coordination contribution
+//! Coordination layer index — the paper's Layer-3 contribution in one
+//! place.
+//!
+//! ACPD's coordination logic is deliberately split so that one pair of
+//! state machines serves every deployment:
+//!
+//! * [`crate::protocol::server`] — Algorithm 1: the group-commit server
+//!   (wait for any B of K workers, commit their γ-scaled sum, bound
+//!   staleness with the period-T full barrier).  Since PR 3 it is a sparse
+//!   commit log: O(members · nnz) per commit, O(d + live log) memory.
+//! * [`crate::protocol::worker`] — Algorithm 2: the local-solve /
+//!   filter / error-feedback loop, O(touched) per steady-state round
+//!   since PR 4.
+//! * Drivers that own *time and delivery*, never algorithm logic:
+//!   [`crate::sim`] (deterministic DES), [`crate::runtime_threads`]
+//!   (real OS threads + mpsc), [`crate::transport`] (real TCP cluster).
+//!
+//! This module re-exports the two state machines so readers looking for
+//! "the coordinator" find the actual implementation; the drivers are what
+//! you run (`sim::run`, `runtime_threads::run`, `transport::run_server`).
+//! See `ARCHITECTURE.md` §Protocol for the message flow between them.
+
+pub use crate::protocol::server::{ServerConfig, ServerState};
+pub use crate::protocol::worker::WorkerState;

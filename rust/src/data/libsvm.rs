@@ -131,8 +131,74 @@ mod tests {
     fn parse_rejects_malformed() {
         assert!(parse_line("1 0:1").is_err()); // 0-based index
         assert!(parse_line("1 5:1 3:1").is_err()); // unsorted
+        assert!(parse_line("1 3:1 3:2").is_err()); // duplicate (not strictly inc.)
         assert!(parse_line("x 1:1").is_err()); // bad label
         assert!(parse_line("1 3:abc").is_err()); // bad value
+        assert!(parse_line("1 3").is_err()); // feature token without ':'
+    }
+
+    fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("acpd_libsvm_edge_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    /// File-level: comments and blank lines (also between samples) are
+    /// skipped without producing phantom rows, and CRLF endings parse.
+    #[test]
+    fn read_skips_comments_and_blank_lines() {
+        let p = write_tmp(
+            "comments.svm",
+            "# header comment\n\n+1 1:0.5 2:0.5\r\n   \n# mid comment\n-1 3:1\n\n",
+        );
+        let ds = read(&p, 0).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.labels, vec![1.0, -1.0]);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.nnz(), 3);
+    }
+
+    /// `d_hint` can only widen the dimension: a hint smaller than the
+    /// maximum observed feature id is raised to it, never truncates data.
+    #[test]
+    fn d_hint_never_truncates_below_max_index() {
+        let p = write_tmp("dhint.svm", "+1 2:1 5:1\n-1 1:1\n");
+        assert_eq!(read(&p, 0).unwrap().d(), 5); // inferred
+        assert_eq!(read(&p, 3).unwrap().d(), 5); // hint too small -> max idx
+        assert_eq!(read(&p, 9).unwrap().d(), 9); // hint widens
+        // all indices stay in range either way
+        read(&p, 3).unwrap().validate().unwrap();
+    }
+
+    /// 1-based contract at file level: index 0 is rejected with the file
+    /// and line number in the error chain, as are other malformed lines.
+    #[test]
+    fn read_errors_carry_file_and_line() {
+        for (name, content, lineno) in [
+            ("zero.svm", "+1 1:1\n+1 0:1\n", 2),
+            ("unsorted.svm", "+1 5:1 3:1\n", 1),
+            ("badlabel.svm", "+1 1:1\nx 1:1\n", 2),
+            ("badvalue.svm", "+1 1:1\n+1 1:1\n-1 2:zz\n", 3),
+        ] {
+            let p = write_tmp(name, content);
+            let err = format!("{:#}", read(&p, 0).unwrap_err());
+            assert!(err.contains(name), "{err}");
+            assert!(err.contains(&format!(":{lineno}")), "{name}: {err}");
+        }
+        // and a missing file is an error, not a panic
+        assert!(read("/nonexistent/acpd/nope.svm", 0).is_err());
+    }
+
+    /// Explicit zero-valued features are dropped on read (they carry no
+    /// information and would break nnz accounting downstream).
+    #[test]
+    fn explicit_zero_values_dropped() {
+        let p = write_tmp("zeros.svm", "+1 1:0 2:1 3:0.0\n");
+        let ds = read(&p, 0).unwrap();
+        assert_eq!(ds.nnz(), 1);
+        assert_eq!(ds.d(), 3); // the max index still sets the dimension
     }
 
     #[test]

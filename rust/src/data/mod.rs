@@ -1,9 +1,14 @@
 //! Datasets: LIBSVM parsing, synthetic generators matched to the paper's
-//! corpora (RCV1 / URL / KDD shape statistics), and sample partitioning.
+//! corpora (RCV1 / URL / KDD shape statistics), dataset-source resolution
+//! (`<preset>` | `<name>:<path>` strings → [`Dataset`]s), and sample
+//! partitioning.
 
 pub mod libsvm;
 pub mod partition;
+pub mod source;
 pub mod synthetic;
+
+pub use source::DatasetSource;
 
 use crate::linalg::csr::CsrMatrix;
 

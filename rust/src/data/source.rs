@@ -1,0 +1,196 @@
+//! Dataset sources: where the samples of an experiment or sweep cell come
+//! from — a named synthetic preset or an on-disk LIBSVM corpus.
+//!
+//! [`DatasetSource`] is the one type every entry point shares: experiment
+//! configs (`[data]` section, `acpd train --preset/--data`), sweep grids
+//! (`[sweep] datasets = ...`, `acpd sweep --datasets`) and the CLI catalog
+//! (`acpd info`).  The string forms are:
+//!
+//! * `<preset>` — a synthetic preset name ([`Preset::all_names`]), e.g.
+//!   `rcv1-small`;
+//! * `<name>:<path>` — a LIBSVM file on disk with a short display name,
+//!   e.g. `rcv1:data/rcv1_train.binary`.  The name is what report rows and
+//!   ranked tables carry in their `dataset` column; the file is parsed by
+//!   [`crate::data::libsvm::read`] (once per sweep, never once per cell).
+//!
+//! This is how the paper's *actual* RCV1 / URL / KDD corpora slot into the
+//! same comparison grids as the synthetic generators (Table 1's dataset ×
+//! algorithm shape as one config file).
+
+use anyhow::{bail, Context, Result};
+
+use super::synthetic::{self, Preset};
+use super::Dataset;
+
+/// Where the samples come from: a synthetic preset or a LIBSVM file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetSource {
+    /// Named synthetic generator preset (paper-shaped statistics).
+    Preset(Preset),
+    /// A LIBSVM file on disk; `name` is the short label report rows carry.
+    Libsvm { name: String, path: String },
+}
+
+impl DatasetSource {
+    /// Parse the string form: `<preset>` or `<name>:<path>`.
+    pub fn from_name(s: &str) -> Result<DatasetSource> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty dataset source ({})", Self::help_syntax());
+        }
+        if let Some((name, path)) = s.split_once(':') {
+            let (name, path) = (name.trim(), path.trim());
+            if name.is_empty() || path.is_empty() {
+                bail!("bad LIBSVM source {s:?} ({})", Self::help_syntax());
+            }
+            return Ok(DatasetSource::Libsvm {
+                name: name.to_string(),
+                path: path.to_string(),
+            });
+        }
+        match Preset::from_name(s) {
+            Some(p) => Ok(DatasetSource::Preset(p)),
+            None => bail!(
+                "unknown dataset source {s:?} ({}); presets: {:?}",
+                Self::help_syntax(),
+                Preset::all_names()
+            ),
+        }
+    }
+
+    /// A LIBSVM source with the display name derived from the file stem
+    /// (legacy `--data <path>` / `[data] libsvm = <path>` spelling).
+    pub fn libsvm_path(path: &str) -> DatasetSource {
+        let name = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .filter(|s| !s.is_empty())
+            .unwrap_or("libsvm")
+            .to_string();
+        DatasetSource::Libsvm {
+            name,
+            path: path.to_string(),
+        }
+    }
+
+    /// The short label report rows carry in their `dataset` column.
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSource::Preset(p) => p.spec().name.to_string(),
+            DatasetSource::Libsvm { name, .. } => name.clone(),
+        }
+    }
+
+    /// Accepted string forms (for help/error text).
+    pub fn help_syntax() -> &'static str {
+        "<preset> | <name>:<path> (LIBSVM file)"
+    }
+
+    /// Materialize the dataset.
+    ///
+    /// * Preset: deterministic in (`spec`, `data_seed`); `n_override` /
+    ///   `d_override` replace the preset's sample count / dimension (0 =
+    ///   preset default).  Rows come out of the generator unit-normalized
+    ///   already — no extra pass, so preset bytes are identical to a
+    ///   direct [`synthetic::generate`] call.
+    /// * LIBSVM: the file is read once; `n_override` keeps only the first
+    ///   n rows (fast sweeps over a corpus prefix), `d_override` acts as
+    ///   the `d_hint` (forces the dimension when the split may not touch
+    ///   the highest feature id — never *below* the max observed index).
+    ///   `data_seed` is unused: the corpus is what it is.
+    ///
+    /// Row normalization (paper Assumption 1) for LIBSVM data is the
+    /// *caller's* decision (`ExperimentConfig.normalize`, sweeps always
+    /// normalize) — this keeps raw reads raw.
+    pub fn load(&self, data_seed: u64, n_override: usize, d_override: usize) -> Result<Dataset> {
+        match self {
+            DatasetSource::Preset(p) => {
+                let mut spec = p.spec();
+                if n_override > 0 {
+                    spec.n = n_override;
+                }
+                if d_override > 0 {
+                    spec.d = d_override;
+                }
+                Ok(synthetic::generate(&spec, data_seed))
+            }
+            DatasetSource::Libsvm { name, path } => {
+                let mut ds = super::libsvm::read(path, d_override)
+                    .with_context(|| format!("dataset source {name:?}"))?;
+                if n_override > 0 && n_override < ds.n() {
+                    ds.features.truncate_rows(n_override);
+                    ds.labels.truncate(n_override);
+                }
+                ds.name = name.clone();
+                Ok(ds)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_preset_and_libsvm_forms() {
+        assert_eq!(
+            DatasetSource::from_name("dense-test").unwrap(),
+            DatasetSource::Preset(Preset::DenseTest)
+        );
+        assert_eq!(
+            DatasetSource::from_name(" rcv1:data/rcv1_train.binary ").unwrap(),
+            DatasetSource::Libsvm {
+                name: "rcv1".into(),
+                path: "data/rcv1_train.binary".into()
+            }
+        );
+        assert!(DatasetSource::from_name("nope").is_err());
+        assert!(DatasetSource::from_name("").is_err());
+        assert!(DatasetSource::from_name(":path").is_err());
+        assert!(DatasetSource::from_name("name:").is_err());
+    }
+
+    #[test]
+    fn names_match_report_labels() {
+        assert_eq!(
+            DatasetSource::Preset(Preset::Rcv1Small).name(),
+            "rcv1-small"
+        );
+        assert_eq!(
+            DatasetSource::from_name("url:a/b.svm").unwrap().name(),
+            "url"
+        );
+        assert_eq!(DatasetSource::libsvm_path("data/rcv1_train.svm").name(), "rcv1_train");
+    }
+
+    #[test]
+    fn preset_load_matches_direct_generate() {
+        let src = DatasetSource::Preset(Preset::DenseTest);
+        let a = src.load(42, 300, 77).unwrap();
+        let mut spec = Preset::DenseTest.spec();
+        spec.n = 300;
+        spec.d = 77;
+        let b = synthetic::generate(&spec, 42);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn libsvm_load_truncates_and_renames() {
+        let dir = std::env::temp_dir().join("acpd_source_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.svm");
+        std::fs::write(&p, "+1 1:0.5 3:1\n-1 2:2\n+1 1:1\n").unwrap();
+        let src = DatasetSource::from_name(&format!("tiny:{}", p.display())).unwrap();
+        let full = src.load(0, 0, 0).unwrap();
+        assert_eq!((full.n(), full.d()), (3, 3));
+        assert_eq!(full.name, "tiny");
+        let cut = src.load(0, 2, 10).unwrap();
+        assert_eq!((cut.n(), cut.d()), (2, 10)); // d_override as d_hint
+        assert_eq!(cut.labels, vec![1.0, -1.0]);
+        // n_override larger than the file is a no-op, not an error
+        assert_eq!(src.load(0, 50, 0).unwrap().n(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

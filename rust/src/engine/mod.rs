@@ -12,6 +12,17 @@
 //!
 //! (CoCoA+ ≡ DisDCA's practical variant, as the paper notes; they are kept
 //! as distinct config points and cross-checked equivalent in tests.)
+//!
+//! [`EngineConfig`] is the single source of truth every runtime consumes:
+//! the DES ([`crate::sim`]), the thread runtime
+//! ([`crate::runtime_threads`]) and the TCP cluster ([`crate::transport`])
+//! all instantiate the same server/worker state machines from it, which is
+//! why sim-vs-real parity checks are meaningful.  In sweep grids
+//! ([`crate::sweep`]) K, B and T are per-cell *axes*: the sweep resolves a
+//! grid point to an `EngineConfig` via `SweepSpec::engine_for`, with
+//! baselines always synchronous (B = K, T = 1) whatever the axes say —
+//! the geometry column of the table above is a hard property of the
+//! constructors, not a convention.
 
 pub mod theory;
 

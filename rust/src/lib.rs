@@ -11,27 +11,36 @@
 //!
 //! ## Layout
 //!
+//! (`ARCHITECTURE.md` at the repo root walks these layers and the data
+//! flow between them; the list below is the module index.)
+//!
 //! * [`util`] — RNG, clocks, binary wire codec, CSV, CLI args.
 //! * [`config`] — TOML-subset config system, experiment presets.
 //! * [`linalg`] — sparse vectors, CSR matrices, dense ops, quickselect.
-//! * [`data`] — LIBSVM parser, synthetic dataset generators, partitioning.
+//! * [`data`] — LIBSVM parser, synthetic dataset generators, dataset
+//!   sources (`<preset>` | `<name>:<path>`), partitioning.
 //! * [`loss`] — square / logistic / smooth-hinge losses + conjugates.
 //! * [`solver`] — local SDCA solver (Eq. 8), primal/dual objectives.
 //! * [`filter`] — top-ρd magnitude filter with error feedback.
 //! * [`protocol`] — Algorithm 1 (server) & Algorithm 2 (worker) state machines.
+//! * [`coordinator`] — index/re-exports of the coordination layer.
 //! * [`engine`] — the unified distributed primal-dual engine + baselines.
 //! * [`network`] — α-β network cost model, stragglers, background jitter,
 //!   named scenarios (`lan` | `straggler:σ` | `jittery-cloud`).
 //! * [`sim`] — discrete-event cluster simulator (deterministic time axes).
 //! * [`sweep`] — parallel scenario-sweep engine: declarative experiment
-//!   matrices executed on a thread pool, with ranked CSV/JSON reports.
+//!   matrices (8 grid axes incl. dataset sources and K/B/T) executed on a
+//!   thread pool, with ranked CSV/JSON reports.
 //! * [`runtime_threads`] — std::thread + mpsc runtime (real concurrency).
 //! * [`transport`] — length-prefixed TCP transport (real multi-process).
 //! * [`runtime`] — PJRT client / artifact manifest / typed executors.
 //! * [`metrics`] — convergence histories, comm/comp breakdowns, reports.
 //! * [`testing`] — mini property-testing harness used across the test suite.
+//! * [`catalog`] — the self-describing `acpd info` catalog (snapshot-tested).
 
+pub mod catalog;
 pub mod config;
+pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod filter;

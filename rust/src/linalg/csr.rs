@@ -67,6 +67,20 @@ impl CsrMatrix {
         self.values.len()
     }
 
+    /// Keep only the first `n` rows (no-op when `n >= n_rows`).  O(1) row
+    /// bookkeeping plus the nonzero truncation — used by dataset sources to
+    /// run on a corpus prefix without re-parsing.
+    pub fn truncate_rows(&mut self, n: usize) {
+        if n >= self.n_rows {
+            return;
+        }
+        self.n_rows = n;
+        self.indptr.truncate(n + 1);
+        let nnz = *self.indptr.last().expect("indptr never empty");
+        self.indices.truncate(nnz);
+        self.values.truncate(nnz);
+    }
+
     #[inline]
     pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
         let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);

@@ -1,7 +1,8 @@
 //! `acpd` — launcher CLI for the ACPD reproduction.
 //!
 //! Subcommands:
-//!   info        show presets, artifact status, build info
+//!   info        full catalog (dataset sources, sweep axes, scenarios,
+//!               runtimes) + artifact status
 //!   gen-data    write a synthetic dataset in LIBSVM format
 //!   train       run one experiment (sim or threads runtime)
 //!   sweep       run a parallel scenario matrix with ranked reports

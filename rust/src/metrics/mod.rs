@@ -1,4 +1,20 @@
-//! Experiment metrics: convergence histories and comm/comp breakdowns.
+//! Experiment metrics: convergence histories and classification quality.
+//!
+//! Two halves:
+//!
+//! * [`history`] — [`History`]: one [`HistoryPoint`] per evaluated
+//!   communication round (duality gap, virtual/wall time, cumulative
+//!   bytes, compute/comm split).  This is the common currency of the
+//!   stack: every runtime (`sim`, `runtime_threads`, `transport`) emits
+//!   one, the sweep turns its tail into [`crate::sweep::CellResult`]
+//!   columns (final gap, time-to-target, byte totals), and the paper's
+//!   figures are plots of its columns.
+//! * [`classification`] — train/test accuracy and error of a trained `w`
+//!   against a labelled dataset (the paper's generalization checks).
+//!
+//! Everything here is passive bookkeeping: metrics never influence the
+//! protocol (the one exception — early stopping at `target_gap` — is
+//! driven by the *engine config* reading the gap, not by this module).
 
 pub mod classification;
 pub mod history;

@@ -1,21 +1,49 @@
 //! Parallel scenario-sweep engine — the paper's comparison matrices in one
 //! call.
 //!
-//! A [`SweepSpec`] is a declarative experiment grid: algorithms × network
-//! scenarios × dataset presets × ρd values × seeds.  [`run_sweep`] expands
-//! it into cells, executes the cells concurrently on a `std::thread` pool
+//! A [`SweepSpec`] is a declarative experiment grid over **eight axes**:
+//! algorithms × network scenarios × dataset sources × workers (K) ×
+//! group (B) × period (T) × ρd values × seeds.  [`run_sweep`] expands it
+//! into cells, executes the cells concurrently on a `std::thread` pool
 //! (the DES in [`crate::sim`] is deterministic per cell, so results are
 //! bit-identical regardless of thread count or completion order — merging
 //! happens by cell *index*, never by arrival order; cells are handed to
 //! the pool largest-estimated-cost first (LPT by n · nnz/row · H · L), so
 //! one huge cell no longer serializes the tail of a big grid), and
-//! aggregates the
-//! per-cell [`CellResult`]s into ranked comparison tables plus CSV/JSON
-//! reports ([`report::SweepReport`]).
+//! aggregates the per-cell [`CellResult`]s into ranked comparison tables
+//! plus CSV/JSON reports ([`report::SweepReport`]).
 //!
 //! This is how the paper's Figures 3–5 / Table 1 grids are regenerated in
 //! one command: `acpd sweep` on the CLI, or `examples/paper_figures.rs` for
 //! the exact per-figure grids.
+//!
+//! ## Dataset sources
+//!
+//! The dataset axis takes [`DatasetSource`] strings: a synthetic preset
+//! name (`dense-test`, `rcv1-small`, ... — see `acpd info`) or a named
+//! on-disk LIBSVM corpus `<name>:<path>` (e.g.
+//! `rcv1:data/rcv1_train.binary`), so the paper's *real* RCV1/URL/KDD
+//! files slot into the same grids as the generators.  Each distinct source
+//! is materialized **once per sweep** — a corpus is parsed once and shared
+//! read-only by every cell, never re-parsed per cell.  LIBSVM rows are
+//! unit-normalized on load (paper Assumption 1; the synthetic generators
+//! already emit unit rows).  Report rows carry the source's short name in
+//! a `dataset` column plus its n/d/nnz provenance.
+//!
+//! ## Engine-knob axes and cell deduplication
+//!
+//! `workers`, `group` and `period` are grid axes, not shared scalars —
+//! `workers = "2,4,8,16"` expresses the paper's Fig 4b scaling curve as a
+//! single matrix.  A `group` value of `0` means "half the cell's K"
+//! (B = max(K/2, 1), the paper's default coupling), which is how one grid
+//! sweeps K with the matching B per point.  The synchronous baselines
+//! (CoCoA, CoCoA+, DisDCA) ignore B and T — they always run B = K, T = 1 —
+//! so the expansion **deduplicates**: a baseline appears exactly once per
+//! (algorithm, scenario, dataset, K, ρd, seed) no matter how many group ×
+//! period points the grid spans, and two ACPD grid points that resolve to
+//! the same effective (B, T) collapse too.  Dedup keeps the first grid
+//! point in nesting order, so expansion stays a deterministic pure
+//! function of the spec and merge-by-index reproducibility is untouched.
 //!
 //! ## Runtimes
 //!
@@ -43,18 +71,20 @@
 //! --parity` prints that table and fails if any cell disagrees.
 //!
 //! Example sweep config (`[sweep]` section, TOML subset — lists are
-//! comma-separated strings because the in-tree parser has no arrays):
+//! comma-separated strings because the in-tree parser has no arrays;
+//! single scalars like `workers = 4` are accepted as one-element lists, so
+//! legacy single-value configs keep parsing unchanged):
 //!
 //! ```toml
 //! [sweep]
 //! algos = "acpd,cocoa,cocoa+"
 //! scenarios = "lan,straggler:10,jittery-cloud"
-//! presets = "rcv1-small"
+//! datasets = "rcv1-small,rcv1:data/rcv1_train.binary"
 //! rho_ds = "0,1000"
 //! seeds = "1,2,3"
-//! workers = 4
-//! group = 2
-//! period = 10
+//! workers = "4,8,16"   # K axis
+//! group = 2            # B axis (0 = K/2 per cell; baselines dedup)
+//! period = 10          # T axis (baselines dedup)
 //! h = 10000
 //! lambda = 1e-3
 //! outer_rounds = 50
@@ -65,14 +95,15 @@
 
 pub mod report;
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::toml::{Document, Value};
-use crate::data::synthetic::{self, Preset};
-use crate::data::Dataset;
+use crate::data::synthetic::Preset;
+use crate::data::{Dataset, DatasetSource};
 use crate::engine::{Algorithm, EngineConfig};
 use crate::linalg::dense;
 use crate::loss::LossKind;
@@ -125,24 +156,29 @@ impl RuntimeKind {
     }
 }
 
-/// Declarative scenario matrix.  The grid axes are the five `Vec` fields;
+/// Declarative scenario matrix.  The grid axes are the eight `Vec` fields;
 /// every other field is a shared knob applied to all cells.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
-    // ---- grid axes (cross product, expanded in this nesting order) ----
+    // ---- grid axes (cross product, expanded in this nesting order:
+    //      algorithm, scenario, dataset, workers, group, period, ρd, seed;
+    //      equivalent cells are deduplicated — see the module docs) ----
     pub algorithms: Vec<Algorithm>,
     pub scenarios: Vec<Scenario>,
-    pub presets: Vec<Preset>,
+    /// Dataset sources: synthetic presets and/or named LIBSVM files.
+    pub datasets: Vec<DatasetSource>,
+    /// K — cluster sizes.
+    pub workers: Vec<usize>,
+    /// B — ACPD group sizes; 0 = max(K/2, 1) per cell (baselines ignore
+    /// this axis: they always wait for all K).
+    pub groups: Vec<usize>,
+    /// T — ACPD barrier periods (baselines are synchronous, T = 1).
+    pub periods: Vec<usize>,
     /// Kept coordinates per message; 0 = dense.  Applied to every
     /// algorithm (baselines with ρd > 0 are the paper's filter ablations).
     pub rho_ds: Vec<usize>,
     pub seeds: Vec<u64>,
     // ---- shared engine knobs ----
-    pub workers: usize,
-    /// B — ACPD group size (baselines ignore it; they wait for all K).
-    pub group: usize,
-    /// T — ACPD barrier period (baselines are synchronous, T = 1).
-    pub period: usize,
     pub h: usize,
     pub lambda: f64,
     pub loss: LossKind,
@@ -156,9 +192,11 @@ pub struct SweepSpec {
     pub runtime: RuntimeKind,
     // ---- dataset knobs ----
     pub data_seed: u64,
-    /// Override the preset's sample count (0 = preset default).
+    /// Override the source's sample count (0 = source default; LIBSVM
+    /// sources keep their first n rows).
     pub n_override: usize,
-    /// Override the preset's dimension (0 = preset default).
+    /// Override the source's dimension (0 = source default; LIBSVM
+    /// sources treat this as the `d_hint`).
     pub d_override: usize,
     // ---- execution ----
     /// Thread-pool size; 0 = all available cores.
@@ -176,12 +214,12 @@ impl Default for SweepSpec {
                 Scenario::Straggler { sigma: 10.0 },
                 Scenario::JitteryCloud,
             ],
-            presets: vec![Preset::DenseTest],
+            datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+            workers: vec![4],
+            groups: vec![2],
+            periods: vec![5],
             rho_ds: vec![0],
             seeds: vec![1, 2, 3],
-            workers: 4,
-            group: 2,
-            period: 5,
             h: 512,
             lambda: 1e-3,
             loss: LossKind::Square,
@@ -197,6 +235,20 @@ impl Default for SweepSpec {
     }
 }
 
+/// The (B, T) an algorithm actually runs at a grid point: baselines are
+/// synchronous whatever the group/period axes say (B = K, T = 1), and the
+/// ACPD auto-group value 0 resolves to the paper's B = max(K/2, 1)
+/// coupling.  This is the equivalence the cell deduplication keys on.
+fn effective_geometry(algorithm: Algorithm, k: usize, group: usize, period: usize) -> (usize, usize) {
+    match algorithm {
+        Algorithm::Acpd => {
+            let b = if group == 0 { (k / 2).max(1) } else { group };
+            (b, period)
+        }
+        Algorithm::Cocoa | Algorithm::CocoaPlus | Algorithm::DisDca => (k, 1),
+    }
+}
+
 /// One point of the expanded matrix (pre-execution).
 #[derive(Debug, Clone)]
 pub struct CellSpec {
@@ -204,9 +256,15 @@ pub struct CellSpec {
     pub index: usize,
     pub algorithm: Algorithm,
     pub scenario: Scenario,
-    pub preset: Preset,
+    pub source: DatasetSource,
     pub rho_d: usize,
     pub seed: u64,
+    /// K for this cell (the workers-axis value).
+    pub workers: usize,
+    /// Effective B the engine runs (auto-group resolved; baselines: K).
+    pub group: usize,
+    /// Effective T (baselines: 1).
+    pub period: usize,
 }
 
 /// Everything the paper's figures need from one executed cell.
@@ -215,10 +273,18 @@ pub struct CellResult {
     pub index: usize,
     pub algorithm: String,
     pub scenario: String,
-    pub preset: String,
+    /// Dataset source name (synthetic preset or named LIBSVM corpus).
+    pub dataset: String,
+    /// Dataset provenance: samples / features / nonzeros actually run.
+    pub n: usize,
+    pub d: usize,
+    pub nnz: usize,
     pub rho_d: usize,
     pub seed: u64,
     pub workers: usize,
+    /// Effective B / T the cell's engine ran (baselines: B = K, T = 1).
+    pub group: usize,
+    pub period: usize,
     /// Which runtime executed this cell (`sim` | `threads` | `tcp`); for
     /// real runtimes the time columns are wall-clock seconds.
     pub runtime: String,
@@ -249,22 +315,59 @@ struct PreparedCell {
 
 impl SweepSpec {
     /// Expand the grid into cells, in deterministic nesting order
-    /// (algorithm, scenario, preset, ρd, seed).
+    /// (algorithm, scenario, dataset, workers, group, period, ρd, seed),
+    /// with equivalent cells deduplicated: two grid points whose engine
+    /// geometry resolves identically ([`effective_geometry`] — baselines
+    /// ignore the group/period axes, ACPD auto-group resolves per K) keep
+    /// only the first in nesting order, and repeated values on any axis
+    /// collapse to their first occurrence.
     pub fn cells(&self) -> Vec<CellSpec> {
+        // a repeated value anywhere on an axis is the same grid point —
+        // canonicalize each position to the first equal value so a typo'd
+        // `workers = "8,8"` or a repeated seed/source doesn't double every
+        // cell (and skew the ranked table's seed averages)
+        fn canon<T: PartialEq>(axis: &[T], i: usize) -> usize {
+            axis[..i].iter().position(|q| *q == axis[i]).unwrap_or(i)
+        }
         let mut out = Vec::new();
-        for &algorithm in &self.algorithms {
-            for scenario in &self.scenarios {
-                for &preset in &self.presets {
-                    for &rho_d in &self.rho_ds {
-                        for &seed in &self.seeds {
-                            out.push(CellSpec {
-                                index: out.len(),
-                                algorithm,
-                                scenario: scenario.clone(),
-                                preset,
-                                rho_d,
-                                seed,
-                            });
+        // key: canonical axis positions + resolved geometry, so dedup only
+        // ever merges grid points of the same underlying run
+        let mut seen: HashSet<(usize, usize, usize, usize, usize, usize, usize, usize)> =
+            HashSet::new();
+        for (ai, &algorithm) in self.algorithms.iter().enumerate() {
+            let ai = canon(&self.algorithms, ai);
+            for (si, scenario) in self.scenarios.iter().enumerate() {
+                let si = canon(&self.scenarios, si);
+                for (di, source) in self.datasets.iter().enumerate() {
+                    let di = canon(&self.datasets, di);
+                    for (wi, &k) in self.workers.iter().enumerate() {
+                        let wi = canon(&self.workers, wi);
+                        // groups/periods need no canon: their values fold
+                        // into the key through the effective geometry
+                        for &g in &self.groups {
+                            for &t in &self.periods {
+                                let (b_eff, t_eff) = effective_geometry(algorithm, k, g, t);
+                                for (ri, &rho_d) in self.rho_ds.iter().enumerate() {
+                                    let ri = canon(&self.rho_ds, ri);
+                                    for (qi, &seed) in self.seeds.iter().enumerate() {
+                                        let qi = canon(&self.seeds, qi);
+                                        if !seen.insert((ai, si, di, wi, ri, qi, b_eff, t_eff)) {
+                                            continue;
+                                        }
+                                        out.push(CellSpec {
+                                            index: out.len(),
+                                            algorithm,
+                                            scenario: scenario.clone(),
+                                            source: source.clone(),
+                                            rho_d,
+                                            seed,
+                                            workers: k,
+                                            group: b_eff,
+                                            period: t_eff,
+                                        });
+                                    }
+                                }
+                            }
                         }
                     }
                 }
@@ -273,15 +376,28 @@ impl SweepSpec {
         out
     }
 
-    /// Engine config for one cell (shared knobs + the cell's grid point).
+    /// Number of raw grid points before deduplication.
+    pub fn grid_points(&self) -> usize {
+        self.algorithms.len()
+            * self.scenarios.len()
+            * self.datasets.len()
+            * self.workers.len()
+            * self.groups.len()
+            * self.periods.len()
+            * self.rho_ds.len()
+            * self.seeds.len()
+    }
+
+    /// Engine config for one cell (shared knobs + the cell's grid point —
+    /// K/B/T come from the cell, not from shared scalars).
     pub fn engine_for(&self, cell: &CellSpec) -> EngineConfig {
         let mut e = match cell.algorithm {
             Algorithm::Acpd => {
-                EngineConfig::acpd(self.workers, self.group, self.period, self.lambda)
+                EngineConfig::acpd(cell.workers, cell.group, cell.period, self.lambda)
             }
-            Algorithm::Cocoa => EngineConfig::cocoa(self.workers, self.lambda),
-            Algorithm::CocoaPlus => EngineConfig::cocoa_plus(self.workers, self.lambda),
-            Algorithm::DisDca => EngineConfig::disdca(self.workers, self.lambda),
+            Algorithm::Cocoa => EngineConfig::cocoa(cell.workers, self.lambda),
+            Algorithm::CocoaPlus => EngineConfig::cocoa_plus(cell.workers, self.lambda),
+            Algorithm::DisDca => EngineConfig::disdca(cell.workers, self.lambda),
         };
         e.rho_d = cell.rho_d;
         e.h = self.h;
@@ -293,16 +409,18 @@ impl SweepSpec {
         e
     }
 
-    /// Generate the dataset for a preset with the spec's n/d overrides.
-    pub fn materialize(&self, preset: Preset) -> Dataset {
-        let mut s = preset.spec();
-        if self.n_override > 0 {
-            s.n = self.n_override;
+    /// Materialize one dataset source with the spec's n/d overrides.
+    /// Synthetic presets are byte-identical to a direct
+    /// [`crate::data::synthetic::generate`] call; LIBSVM corpora are
+    /// unit-normalized (Assumption 1) and validated after the read.
+    pub fn materialize(&self, source: &DatasetSource) -> Result<Dataset> {
+        let mut ds = source.load(self.data_seed, self.n_override, self.d_override)?;
+        if matches!(source, DatasetSource::Libsvm { .. }) {
+            ds.normalize();
+            ds.validate()
+                .with_context(|| format!("dataset source {:?}", source.name()))?;
         }
-        if self.d_override > 0 {
-            s.d = self.d_override;
-        }
-        synthetic::generate(&s, self.data_seed)
+        Ok(ds)
     }
 
     /// Pool size after resolving `threads = 0` to the core count.
@@ -329,25 +447,36 @@ impl SweepSpec {
         }
     }
 
-    /// One-line description for report headers.
+    /// One-line description for report headers.  Pure function of the spec
+    /// (dedup counts included), so reports stay reproducible.
     pub fn describe(&self) -> String {
+        self.describe_for(self.cells().len())
+    }
+
+    /// [`describe`](Self::describe) with an already-known deduped cell
+    /// count, so callers that just expanded the grid (like [`run_sweep`])
+    /// don't expand it a second time for the header line.
+    fn describe_for(&self, cells: usize) -> String {
+        let raw = self.grid_points();
+        let dedup = if cells < raw {
+            format!(" (deduped from {raw} grid points)")
+        } else {
+            String::new()
+        };
         format!(
-            "{} algos x {} scenarios x {} presets x {} rho_d x {} seeds = {} cells \
-             (runtime={} K={} B={} T={} H={} lambda={:.1e} loss={} L={} target_gap={})",
+            "{} algos x {} scenarios x {} datasets x {} K x {} B x {} T x {} rho_d x {} seeds \
+             = {} cells{} (runtime={} H={} lambda={:.1e} loss={} L={} target_gap={})",
             self.algorithms.len(),
             self.scenarios.len(),
-            self.presets.len(),
+            self.datasets.len(),
+            self.workers.len(),
+            self.groups.len(),
+            self.periods.len(),
             self.rho_ds.len(),
             self.seeds.len(),
-            self.algorithms.len()
-                * self.scenarios.len()
-                * self.presets.len()
-                * self.rho_ds.len()
-                * self.seeds.len(),
+            cells,
+            dedup,
             self.runtime.name(),
-            self.workers,
-            self.group,
-            self.period,
             self.h,
             self.lambda,
             self.loss.name(),
@@ -378,8 +507,10 @@ impl SweepSpec {
         if let Some(v) = scalar_str(doc, "scenarios") {
             s.scenarios = parse_scenarios(&v)?;
         }
-        if let Some(v) = scalar_str(doc, "presets") {
-            s.presets = parse_presets(&v)?;
+        // `datasets` is the full-syntax key; `presets` is the legacy
+        // spelling (synthetic names only by convention, same parser)
+        if let Some(v) = axis_key(doc, "presets", "datasets")? {
+            s.datasets = parse_sources(&v)?;
         }
         if let Some(v) = scalar_str(doc, "rho_ds") {
             s.rho_ds = parse_list::<usize>(&v).context("sweep.rho_ds")?;
@@ -387,9 +518,15 @@ impl SweepSpec {
         if let Some(v) = scalar_str(doc, "seeds") {
             s.seeds = parse_list::<u64>(&v).context("sweep.seeds")?;
         }
-        s.workers = doc.get_i64("sweep", "workers", s.workers as i64) as usize;
-        s.group = doc.get_i64("sweep", "group", s.group as i64) as usize;
-        s.period = doc.get_i64("sweep", "period", s.period as i64) as usize;
+        if let Some(v) = scalar_str(doc, "workers") {
+            s.workers = parse_list::<usize>(&v).context("sweep.workers")?;
+        }
+        if let Some(v) = axis_key(doc, "group", "groups")? {
+            s.groups = parse_list::<usize>(&v).context("sweep.group")?;
+        }
+        if let Some(v) = axis_key(doc, "period", "periods")? {
+            s.periods = parse_list::<usize>(&v).context("sweep.period")?;
+        }
         s.h = doc.get_i64("sweep", "h", s.h as i64) as usize;
         s.lambda = doc.get_f64("sweep", "lambda", s.lambda);
         let loss_name = doc.get_str("sweep", "loss", s.loss.name());
@@ -422,6 +559,17 @@ fn scalar_str(doc: &Document, key: &str) -> Option<String> {
         Value::Float(f) => f.to_string(),
         Value::Bool(b) => b.to_string(),
     })
+}
+
+/// An axis readable under a singular (legacy scalar) or plural (list) key;
+/// setting both is ambiguous and rejected.
+fn axis_key(doc: &Document, singular: &str, plural: &str) -> Result<Option<String>> {
+    match (scalar_str(doc, singular), scalar_str(doc, plural)) {
+        (Some(_), Some(_)) => bail!(
+            "sweep.{singular} and sweep.{plural} are the same axis — set only one"
+        ),
+        (a, b) => Ok(a.or(b)),
+    }
 }
 
 /// Comma-separated list of `T` (shared by the CLI and the TOML loader).
@@ -457,8 +605,13 @@ pub fn parse_scenarios(s: &str) -> Result<Vec<Scenario>> {
     parse_named(s, Scenario::help_names(), Scenario::from_name)
 }
 
-pub fn parse_presets(s: &str) -> Result<Vec<Preset>> {
-    parse_named(s, "see `acpd info` for presets", Preset::from_name)
+/// Comma-separated dataset sources (`<preset>` | `<name>:<path>`).
+pub fn parse_sources(s: &str) -> Result<Vec<DatasetSource>> {
+    s.split(',')
+        .map(|p| p.trim())
+        .filter(|p| !p.is_empty())
+        .map(DatasetSource::from_name)
+        .collect()
 }
 
 /// Execute every cell of the matrix on a thread pool and aggregate.
@@ -475,14 +628,26 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         bail!("empty sweep: every grid axis needs at least one value");
     }
 
-    // one dataset per distinct preset, generated up front and shared
-    // read-only by every thread
-    let mut datasets: Vec<(Preset, Dataset)> = Vec::new();
-    for &p in &spec.presets {
-        if datasets.iter().any(|(q, _)| *q == p) {
+    // one dataset per distinct source, materialized up front (a LIBSVM
+    // corpus is parsed ONCE per sweep) and shared read-only by every thread.
+    // Two DIFFERENT sources must not share a display name: report rows,
+    // ranked-table groups and parity keys are name-keyed, so a collision
+    // would silently average/cross-match different corpora as one dataset.
+    let mut datasets: Vec<(DatasetSource, Dataset)> = Vec::new();
+    for src in &spec.datasets {
+        if datasets.iter().any(|(q, _)| q == src) {
             continue;
         }
-        datasets.push((p, spec.materialize(p)));
+        if let Some((other, _)) = datasets.iter().find(|(q, _)| q.name() == src.name()) {
+            bail!(
+                "dataset sources {other:?} and {src:?} share the display name {:?} — \
+                 report rows and ranked/parity keys are name-keyed, so give each \
+                 source a distinct name",
+                src.name()
+            );
+        }
+        let ds = spec.materialize(src)?;
+        datasets.push((src.clone(), ds));
     }
 
     // bind + validate every cell on the caller's thread so pool workers
@@ -493,18 +658,27 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             let engine = spec.engine_for(&cell);
             let ds_idx = datasets
                 .iter()
-                .position(|(q, _)| *q == cell.preset)
+                .position(|(q, _)| *q == cell.source)
                 .expect("dataset materialized above");
             engine.validate(datasets[ds_idx].1.n()).with_context(|| {
+                // a fixed B colliding with a smaller K from the workers
+                // axis is the likely cause — point at the auto-group knob
+                let hint = if cell.group > cell.workers {
+                    " (hint: in workers-axis grids use group = 0 to derive B = K/2 per cell)"
+                } else {
+                    ""
+                };
                 format!(
-                    "cell {} ({} / {} / {})",
+                    "cell {} ({} / {} / {} / K={}){}",
                     cell.index,
                     cell.algorithm.name(),
                     cell.scenario.name(),
-                    cell.preset.spec().name
+                    cell.source.name(),
+                    cell.workers,
+                    hint
                 )
             })?;
-            let net = cell.scenario.instantiate(spec.workers);
+            let net = cell.scenario.instantiate(cell.workers);
             Ok(PreparedCell {
                 cell,
                 engine,
@@ -547,14 +721,15 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         .into_iter()
         .map(|r| r.expect("every cell index was claimed by the pool"))
         .collect::<Result<_>>()?;
-    Ok(SweepReport::new(spec.describe(), results))
+    let description = spec.describe_for(results.len());
+    Ok(SweepReport::new(description, results))
 }
 
 /// Estimated compute cost of one cell — total nnz · H · L, the work the
 /// DES charges its solvers (n · nnz/row · H flops per outer round, L outer
 /// rounds).  Only *relative* order matters: it decides which cells start
 /// first (LPT), never what they produce.
-fn cell_cost(pc: &PreparedCell, datasets: &[(Preset, Dataset)]) -> f64 {
+fn cell_cost(pc: &PreparedCell, datasets: &[(DatasetSource, Dataset)]) -> f64 {
     datasets[pc.ds_idx].1.nnz() as f64
         * pc.engine.h as f64
         * pc.engine.outer_rounds.max(1) as f64
@@ -563,7 +738,10 @@ fn cell_cost(pc: &PreparedCell, datasets: &[(Preset, Dataset)]) -> f64 {
 /// Pool execution order: cells sorted by estimated cost descending
 /// (longest-processing-time-first), ties broken by ascending cell index so
 /// the order itself is deterministic.
-fn execution_order(prepared: &[PreparedCell], datasets: &[(Preset, Dataset)]) -> Vec<usize> {
+fn execution_order(
+    prepared: &[PreparedCell],
+    datasets: &[(DatasetSource, Dataset)],
+) -> Vec<usize> {
     let mut order: Vec<usize> = (0..prepared.len()).collect();
     order.sort_by(|&a, &b| {
         cell_cost(&prepared[b], datasets)
@@ -631,10 +809,15 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         index: pc.cell.index,
         algorithm: pc.cell.algorithm.name().to_string(),
         scenario: pc.cell.scenario.name(),
-        preset: pc.cell.preset.spec().name.to_string(),
+        dataset: pc.cell.source.name(),
+        n: ds.n(),
+        d: ds.d(),
+        nnz: ds.nnz(),
         rho_d: pc.cell.rho_d,
         seed: pc.cell.seed,
         workers: pc.engine.workers,
+        group: pc.engine.group,
+        period: pc.engine.period,
         runtime: runtime.name().to_string(),
         w_norm: run.w_norm,
         final_gap: run.history.last_gap(),
@@ -704,12 +887,16 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
 mod tests {
     use super::*;
 
+    fn preset(p: Preset) -> DatasetSource {
+        DatasetSource::Preset(p)
+    }
+
     #[test]
     fn cells_expand_in_deterministic_order() {
         let mut spec = SweepSpec::default();
         spec.algorithms = vec![Algorithm::Acpd, Algorithm::CocoaPlus];
         spec.scenarios = vec![Scenario::Lan, Scenario::Straggler { sigma: 4.0 }];
-        spec.presets = vec![Preset::DenseTest];
+        spec.datasets = vec![preset(Preset::DenseTest)];
         spec.rho_ds = vec![0, 32];
         spec.seeds = vec![1, 2];
         let cells = spec.cells();
@@ -727,22 +914,90 @@ mod tests {
     }
 
     #[test]
-    fn engine_for_respects_algorithm_geometry() {
+    fn workers_axis_expands_with_auto_group() {
         let spec = SweepSpec {
-            workers: 8,
-            group: 3,
-            period: 7,
+            algorithms: vec![Algorithm::Acpd, Algorithm::CocoaPlus],
+            scenarios: vec![Scenario::Lan],
+            workers: vec![2, 4, 8],
+            groups: vec![0], // auto: B = max(K/2, 1)
+            periods: vec![10],
+            seeds: vec![1],
             ..SweepSpec::default()
         };
-        let cells = SweepSpec {
-            algorithms: vec![Algorithm::Acpd, Algorithm::Cocoa],
-            ..spec.clone()
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 3); // one cell per (algo, K)
+        let acpd: Vec<&CellSpec> = cells
+            .iter()
+            .filter(|c| c.algorithm == Algorithm::Acpd)
+            .collect();
+        assert_eq!(
+            acpd.iter().map(|c| (c.workers, c.group, c.period)).collect::<Vec<_>>(),
+            vec![(2, 1, 10), (4, 2, 10), (8, 4, 10)]
+        );
+        let base: Vec<&CellSpec> = cells
+            .iter()
+            .filter(|c| c.algorithm == Algorithm::CocoaPlus)
+            .collect();
+        // baselines: B = K, T = 1 whatever the axes say
+        assert_eq!(
+            base.iter().map(|c| (c.workers, c.group, c.period)).collect::<Vec<_>>(),
+            vec![(2, 2, 1), (4, 4, 1), (8, 8, 1)]
+        );
+    }
+
+    #[test]
+    fn baselines_dedup_across_group_and_period_axes() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd, Algorithm::Cocoa, Algorithm::CocoaPlus],
+            scenarios: vec![Scenario::Lan],
+            workers: vec![4, 8],
+            groups: vec![2, 4],
+            periods: vec![5, 10],
+            rho_ds: vec![0],
+            seeds: vec![1, 2],
+            ..SweepSpec::default()
+        };
+        let cells = spec.cells();
+        // ACPD: full 2 K x 2 B x 2 T x 2 seeds = 16; each baseline: one
+        // cell per (K, seed) = 4 — not 16
+        let acpd = cells.iter().filter(|c| c.algorithm == Algorithm::Acpd).count();
+        let cocoa = cells.iter().filter(|c| c.algorithm == Algorithm::Cocoa).count();
+        let plus = cells.iter().filter(|c| c.algorithm == Algorithm::CocoaPlus).count();
+        assert_eq!((acpd, cocoa, plus), (16, 4, 4));
+        assert_eq!(cells.len(), 24);
+        assert_eq!(spec.grid_points(), 3 * 2 * 2 * 2 * 2);
+        assert!(spec.describe().contains("= 24 cells (deduped from 48 grid points)"));
+        // indices stay dense after dedup — the merge key has no holes
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
         }
-        .cells();
+        // equivalent ACPD points dedup too: group 0 (auto=2 at K=4) vs 2
+        let spec2 = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan],
+            workers: vec![4],
+            groups: vec![0, 2],
+            periods: vec![5],
+            seeds: vec![1],
+            ..SweepSpec::default()
+        };
+        assert_eq!(spec2.cells().len(), 1);
+    }
+
+    #[test]
+    fn engine_for_respects_algorithm_geometry() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd, Algorithm::Cocoa],
+            workers: vec![8],
+            groups: vec![3],
+            periods: vec![7],
+            ..SweepSpec::default()
+        };
+        let cells = spec.cells();
         let acpd_cell = cells.iter().find(|c| c.algorithm == Algorithm::Acpd).unwrap();
         let cocoa_cell = cells.iter().find(|c| c.algorithm == Algorithm::Cocoa).unwrap();
         let a = spec.engine_for(acpd_cell);
-        assert_eq!((a.group, a.period), (3, 7));
+        assert_eq!((a.workers, a.group, a.period), (8, 3, 7));
         assert!((a.sigma_prime - a.gamma * 3.0).abs() < 1e-12);
         let c = spec.engine_for(cocoa_cell);
         assert_eq!((c.group, c.period), (8, 1)); // synchronous baseline
@@ -756,10 +1011,10 @@ mod tests {
 [sweep]
 algos = "acpd,cocoa+"
 scenarios = "lan,straggler:4"
-presets = "dense-test"
+datasets = "dense-test,rcv1:data/rcv1_train.binary"
 rho_ds = "0,32"
 seeds = "7,8"
-workers = 4
+workers = "4,8"
 group = 2
 period = 5
 h = 256
@@ -777,20 +1032,63 @@ threads = 2
             spec.scenarios,
             vec![Scenario::Lan, Scenario::Straggler { sigma: 4.0 }]
         );
-        assert_eq!(spec.presets, vec![Preset::DenseTest]);
+        assert_eq!(
+            spec.datasets,
+            vec![
+                preset(Preset::DenseTest),
+                DatasetSource::Libsvm {
+                    name: "rcv1".into(),
+                    path: "data/rcv1_train.binary".into()
+                }
+            ]
+        );
         assert_eq!(spec.rho_ds, vec![0, 32]);
         assert_eq!(spec.seeds, vec![7, 8]);
-        assert_eq!(spec.cells().len(), 16);
+        assert_eq!(spec.workers, vec![4, 8]);
+        assert_eq!((spec.groups.clone(), spec.periods.clone()), (vec![2], vec![5]));
+        // acpd expands fully; cocoa+ dedups over nothing here (1 B x 1 T)
+        assert_eq!(spec.cells().len(), 2 * 2 * 2 * 2 * 2 * 2);
         assert_eq!(spec.threads, 2);
         assert_eq!((spec.n_override, spec.d_override), (512, 1000));
         assert!((spec.target_gap - 5e-3).abs() < 1e-15);
     }
 
     #[test]
+    fn toml_legacy_keys_still_parse() {
+        // the pre-axis schema: presets key, scalar workers/group/period
+        let legacy = SweepSpec::from_toml(
+            "[sweep]\npresets = \"dense-test\"\nworkers = 4\ngroup = 2\nperiod = 5\n",
+        )
+        .unwrap();
+        assert_eq!(legacy.datasets, vec![preset(Preset::DenseTest)]);
+        assert_eq!(legacy.workers, vec![4]);
+        assert_eq!(legacy.groups, vec![2]);
+        assert_eq!(legacy.periods, vec![5]);
+        // and it means exactly what the new-style spelling means
+        let modern = SweepSpec::from_toml(
+            "[sweep]\ndatasets = \"dense-test\"\nworkers = \"4\"\ngroups = \"2\"\nperiods = \"5\"\n",
+        )
+        .unwrap();
+        assert_eq!(legacy.datasets, modern.datasets);
+        assert_eq!(
+            (legacy.workers.clone(), legacy.groups.clone(), legacy.periods.clone()),
+            (modern.workers.clone(), modern.groups.clone(), modern.periods.clone())
+        );
+        // setting both spellings of one axis is ambiguous
+        assert!(SweepSpec::from_toml("[sweep]\ngroup = 2\ngroups = \"2,4\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\nperiod = 5\nperiods = \"5\"\n").is_err());
+        assert!(
+            SweepSpec::from_toml("[sweep]\npresets = \"dense-test\"\ndatasets = \"dense-test\"\n")
+                .is_err()
+        );
+    }
+
+    #[test]
     fn toml_single_int_lists_accepted() {
-        let spec = SweepSpec::from_toml("[sweep]\nseeds = 7\nrho_ds = 64\n").unwrap();
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 7\nrho_ds = 64\nworkers = 8\n").unwrap();
         assert_eq!(spec.seeds, vec![7]);
         assert_eq!(spec.rho_ds, vec![64]);
+        assert_eq!(spec.workers, vec![8]);
     }
 
     #[test]
@@ -828,6 +1126,7 @@ threads = 2
     fn bad_names_rejected() {
         assert!(SweepSpec::from_toml("[sweep]\nalgos = \"sgd\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\nscenarios = \"mars\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\ndatasets = \"nope\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\npresets = \"nope\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\nruntime = \"mpi\"\n").is_err());
         assert!(parse_list::<usize>("1,x").is_err());
@@ -842,10 +1141,10 @@ threads = 2
             let spec = SweepSpec {
                 algorithms: vec![Algorithm::CocoaPlus],
                 scenarios: vec![Scenario::Lan],
-                presets: vec![Preset::DenseTest],
+                datasets: vec![preset(Preset::DenseTest)],
                 rho_ds: vec![0],
                 seeds: vec![1, 2],
-                workers: 2,
+                workers: vec![2],
                 h: 64,
                 outer_rounds: 3,
                 runtime,
@@ -862,6 +1161,7 @@ threads = 2
                 assert!(c.bytes_up > 0 && c.bytes_down > 0);
                 assert!(c.wall_time > 0.0);
                 assert!(c.w_norm > 0.0);
+                assert_eq!((c.dataset.as_str(), c.n), ("dense-test", 64));
             }
         }
     }
@@ -871,13 +1171,14 @@ threads = 2
         let spec = SweepSpec {
             algorithms: vec![Algorithm::Acpd],
             scenarios: vec![Scenario::Lan],
-            presets: vec![Preset::DenseTest],
+            datasets: vec![preset(Preset::DenseTest)],
             rho_ds: vec![0],
             seeds: vec![1, 2, 3, 4],
             n_override: 64,
             ..SweepSpec::default()
         };
-        let datasets = vec![(Preset::DenseTest, spec.materialize(Preset::DenseTest))];
+        let src = preset(Preset::DenseTest);
+        let datasets = vec![(src.clone(), spec.materialize(&src).unwrap())];
         // alternate a 10x outer-round knob so costs differ cell to cell
         let prepared: Vec<PreparedCell> = spec
             .cells()
@@ -885,7 +1186,7 @@ threads = 2
             .map(|cell| {
                 let mut engine = spec.engine_for(&cell);
                 engine.outer_rounds = if cell.seed % 2 == 0 { 50 } else { 5 };
-                let net = cell.scenario.instantiate(spec.workers);
+                let net = cell.scenario.instantiate(cell.workers);
                 PreparedCell {
                     cell,
                     engine,
@@ -903,7 +1204,7 @@ threads = 2
             .into_iter()
             .map(|cell| {
                 let engine = spec.engine_for(&cell);
-                let net = cell.scenario.instantiate(spec.workers);
+                let net = cell.scenario.instantiate(cell.workers);
                 PreparedCell {
                     cell,
                     engine,
@@ -917,11 +1218,18 @@ threads = 2
 
     #[test]
     fn empty_sweep_is_an_error() {
-        let spec = SweepSpec {
-            seeds: vec![],
-            ..SweepSpec::default()
-        };
-        assert!(run_sweep(&spec).is_err());
+        for spec in [
+            SweepSpec {
+                seeds: vec![],
+                ..SweepSpec::default()
+            },
+            SweepSpec {
+                workers: vec![],
+                ..SweepSpec::default()
+            },
+        ] {
+            assert!(run_sweep(&spec).is_err());
+        }
     }
 
     #[test]
@@ -931,7 +1239,89 @@ threads = 2
             d_override: 77,
             ..SweepSpec::default()
         };
-        let ds = spec.materialize(Preset::DenseTest);
+        let ds = spec.materialize(&preset(Preset::DenseTest)).unwrap();
         assert_eq!((ds.n(), ds.d()), (300, 77));
+    }
+
+    #[test]
+    fn missing_libsvm_source_is_an_error() {
+        let spec = SweepSpec {
+            datasets: vec![DatasetSource::Libsvm {
+                name: "ghost".into(),
+                path: "/nonexistent/ghost.svm".into(),
+            }],
+            ..SweepSpec::default()
+        };
+        let err = run_sweep(&spec).unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+
+    /// Two DIFFERENT sources under one display name would be silently
+    /// merged by the name-keyed ranked/parity grouping — rejected up front.
+    #[test]
+    fn colliding_dataset_display_names_rejected() {
+        let spec = SweepSpec {
+            datasets: vec![
+                preset(Preset::DenseTest),
+                DatasetSource::Libsvm {
+                    name: "dense-test".into(), // clashes with the preset
+                    path: "/tmp/whatever.svm".into(),
+                },
+            ],
+            ..SweepSpec::default()
+        };
+        let err = run_sweep(&spec).unwrap_err();
+        assert!(format!("{err}").contains("display name"), "{err}");
+        // listing the SAME source twice is not a collision, just a dedup
+        let dup = SweepSpec {
+            datasets: vec![preset(Preset::DenseTest), preset(Preset::DenseTest)],
+            n_override: 64,
+            h: 32,
+            outer_rounds: 2,
+            seeds: vec![1],
+            scenarios: vec![Scenario::Lan],
+            algorithms: vec![Algorithm::CocoaPlus],
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&dup).expect("duplicate source entries dedup");
+        assert_eq!(report.cells.len(), 1);
+    }
+
+    /// Duplicate values on ANY axis collapse to one grid point instead of
+    /// silently doubling every cell (and inflating seed averages).
+    #[test]
+    fn duplicate_axis_values_do_not_double_cells() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan, Scenario::Lan],
+            workers: vec![8, 8],
+            seeds: vec![1, 1],
+            ..SweepSpec::default()
+        };
+        assert_eq!(spec.cells().len(), 1);
+        assert!(
+            spec.describe().contains("deduped from 8 grid points"),
+            "{}",
+            spec.describe()
+        );
+    }
+
+    /// A fixed B colliding with a smaller K on the workers axis errors
+    /// loudly (no silent point-dropping) and the message points at the
+    /// auto-group knob that expresses per-K coupling.
+    #[test]
+    fn group_exceeding_small_k_errors_with_auto_group_hint() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan],
+            workers: vec![2, 4],
+            groups: vec![4],
+            n_override: 64,
+            seeds: vec![1],
+            ..SweepSpec::default()
+        };
+        let err = format!("{:#}", run_sweep(&spec).unwrap_err());
+        assert!(err.contains("group = 0"), "{err}");
+        assert!(err.contains("K=2"), "{err}");
     }
 }

@@ -4,6 +4,14 @@
 //! a report is byte-identical across repeated runs and across thread-pool
 //! sizes (the sweep merges cells by index before aggregation).  Wall-clock
 //! measurements of the sweep itself are deliberately excluded.
+//!
+//! Report geometry mirrors the grid axes: cell rows carry the `dataset`
+//! column (source name + n/d/nnz provenance) and the effective `workers` /
+//! `group` / `period` the cell ran; the ranked table groups by
+//! (scenario, dataset, ρd, workers) — one comparison column per matrix
+//! point, so a worker-scaling grid yields one ranked block per K instead of
+//! a meaningless cross-K average — and averages seeds within each
+//! (algorithm, B, T) row of a group.
 
 use std::fmt::Write as _;
 
@@ -11,16 +19,23 @@ use crate::util::csv::CsvWriter;
 
 use super::CellResult;
 
-/// One row of the ranked comparison table: an algorithm's seed-averaged
-/// standing inside one (scenario, preset, ρd) column of the matrix.
+/// One row of the ranked comparison table: an algorithm configuration's
+/// seed-averaged standing inside one (scenario, dataset, ρd, workers)
+/// column of the matrix.  ACPD rows at different effective (B, T) grid
+/// points are distinct rows ranked against each other and the baselines.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RankedRow {
     pub scenario: String,
-    pub preset: String,
+    pub dataset: String,
     pub rho_d: usize,
-    /// 1-based rank within the (scenario, preset, ρd) group.
+    /// K of this comparison column.
+    pub workers: usize,
+    /// 1-based rank within the (scenario, dataset, ρd, workers) group.
     pub rank: usize,
     pub algorithm: String,
+    /// Effective B / T of the member cells (baselines: B = K, T = 1).
+    pub group: usize,
+    pub period: usize,
     /// Runtime tag of the member cells (`sim` | `threads` | `tcp`) — tells
     /// a reader whether the time columns are virtual or wall-clock seconds.
     pub runtime: String,
@@ -54,10 +69,15 @@ impl SweepReport {
             "index",
             "algorithm",
             "scenario",
-            "preset",
+            "dataset",
+            "n",
+            "d",
+            "nnz",
             "rho_d",
             "seed",
             "workers",
+            "group",
+            "period",
             "final_gap",
             "rounds",
             "round_to_target",
@@ -84,10 +104,15 @@ impl SweepReport {
                 &c.index,
                 &c.algorithm,
                 &c.scenario,
-                &c.preset,
+                &c.dataset,
+                &c.n,
+                &c.d,
+                &c.nnz,
                 &c.rho_d,
                 &c.seed,
                 &c.workers,
+                &c.group,
+                &c.period,
                 &c.final_gap,
                 &c.rounds,
                 &rtt,
@@ -105,34 +130,38 @@ impl SweepReport {
         w
     }
 
-    /// The ranked comparison table: group cells by (scenario, preset, ρd),
-    /// average each algorithm over seeds, and rank algorithms within each
-    /// group by time-to-target.  Algorithms that missed the target on any
-    /// seed rank last, with a fully deterministic tiebreak chain: mean wall
-    /// time, then mean final gap, then algorithm name — so two missed rows
-    /// can never compare equal and flip order between runs.
+    /// The ranked comparison table: group cells by (scenario, dataset, ρd,
+    /// workers), average each (algorithm, B, T) configuration over seeds,
+    /// and rank configurations within each group by time-to-target.
+    /// Configurations that missed the target on any seed rank last, with a
+    /// fully deterministic tiebreak chain: mean wall time, then mean final
+    /// gap, then algorithm name, then B, then T — so two missed rows can
+    /// never compare equal and flip order between runs.
     pub fn ranked(&self) -> Vec<RankedRow> {
         // first-appearance-ordered grouping => deterministic output
-        let mut groups: Vec<((String, String, usize), Vec<&CellResult>)> = Vec::new();
+        type GroupKey = (String, String, usize, usize);
+        let mut groups: Vec<(GroupKey, Vec<&CellResult>)> = Vec::new();
         for c in &self.cells {
-            let key = (c.scenario.clone(), c.preset.clone(), c.rho_d);
+            let key = (c.scenario.clone(), c.dataset.clone(), c.rho_d, c.workers);
             match groups.iter_mut().find(|(k, _)| *k == key) {
                 Some((_, v)) => v.push(c),
                 None => groups.push((key, vec![c])),
             }
         }
         let mut out = Vec::new();
-        for ((scenario, preset, rho_d), members) in groups {
-            let mut algos: Vec<(String, Vec<&CellResult>)> = Vec::new();
+        for ((scenario, dataset, rho_d, workers), members) in groups {
+            // row identity inside a group: algorithm + effective geometry
+            let mut algos: Vec<((String, usize, usize), Vec<&CellResult>)> = Vec::new();
             for c in members {
-                match algos.iter_mut().find(|(a, _)| *a == c.algorithm) {
+                let id = (c.algorithm.clone(), c.group, c.period);
+                match algos.iter_mut().find(|(a, _)| *a == id) {
                     Some((_, v)) => v.push(c),
-                    None => algos.push((c.algorithm.clone(), vec![c])),
+                    None => algos.push((id, vec![c])),
                 }
             }
             let mut rows: Vec<RankedRow> = algos
                 .into_iter()
-                .map(|(algorithm, cells)| {
+                .map(|((algorithm, group, period), cells)| {
                     let n = cells.len() as f64;
                     let mean = |f: &dyn Fn(&CellResult) -> f64| {
                         cells.iter().map(|&c| f(c)).sum::<f64>() / n
@@ -151,11 +180,14 @@ impl SweepReport {
                     };
                     RankedRow {
                         scenario: scenario.clone(),
-                        preset: preset.clone(),
+                        dataset: dataset.clone(),
                         rho_d,
+                        workers,
                         rank: 0, // assigned after sorting
                         runtime: cells[0].runtime.clone(),
                         algorithm,
+                        group,
+                        period,
                         seeds: cells.len(),
                         mean_final_gap: mean(&|c| c.final_gap),
                         mean_time_to_target,
@@ -166,8 +198,9 @@ impl SweepReport {
                 .collect();
             // primary key: time-to-target with misses at +inf; tied rows
             // (both missed, or exactly equal times) fall back to mean wall
-            // time, then mean final gap, then the algorithm name, so the
-            // order is a total, deterministic function of the row values
+            // time, then mean final gap, then the configuration key
+            // (algorithm name, B, T), so the order is a total,
+            // deterministic function of the row values
             rows.sort_by(|a, b| {
                 let ka = a.mean_time_to_target.unwrap_or(f64::INFINITY);
                 let kb = b.mean_time_to_target.unwrap_or(f64::INFINITY);
@@ -184,6 +217,8 @@ impl SweepReport {
                             .unwrap_or(std::cmp::Ordering::Equal)
                     })
                     .then_with(|| a.algorithm.cmp(&b.algorithm))
+                    .then_with(|| a.group.cmp(&b.group))
+                    .then_with(|| a.period.cmp(&b.period))
             });
             for (i, r) in rows.iter_mut().enumerate() {
                 r.rank = i + 1;
@@ -197,10 +232,13 @@ impl SweepReport {
     pub fn ranked_csv(&self) -> CsvWriter {
         let mut w = CsvWriter::new(&[
             "scenario",
-            "preset",
+            "dataset",
             "rho_d",
+            "workers",
             "rank",
             "algorithm",
+            "group",
+            "period",
             "seeds",
             "mean_final_gap",
             "mean_time_to_target_s",
@@ -215,10 +253,13 @@ impl SweepReport {
                 .unwrap_or_default();
             w.rowf(&[
                 &r.scenario,
-                &r.preset,
+                &r.dataset,
                 &r.rho_d,
+                &r.workers,
                 &r.rank,
                 &r.algorithm,
+                &r.group,
+                &r.period,
                 &r.seeds,
                 &r.mean_final_gap,
                 &ttt,
@@ -238,19 +279,25 @@ impl SweepReport {
         for (i, c) in self.cells.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"index\": {}, \"algorithm\": {}, \"scenario\": {}, \"preset\": {}, \
-                 \"rho_d\": {}, \"seed\": {}, \"workers\": {}, \"runtime\": {}, \
-                 \"w_norm\": {}, \"final_gap\": {}, \
+                "    {{\"index\": {}, \"algorithm\": {}, \"scenario\": {}, \"dataset\": {}, \
+                 \"n\": {}, \"d\": {}, \"nnz\": {}, \
+                 \"rho_d\": {}, \"seed\": {}, \"workers\": {}, \"group\": {}, \"period\": {}, \
+                 \"runtime\": {}, \"w_norm\": {}, \"final_gap\": {}, \
                  \"rounds\": {}, \"round_to_target\": {}, \"time_to_target_s\": {}, \
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
-                json_str(&c.preset),
+                json_str(&c.dataset),
+                c.n,
+                c.d,
+                c.nnz,
                 c.rho_d,
                 c.seed,
                 c.workers,
+                c.group,
+                c.period,
                 json_str(&c.runtime),
                 json_f64(c.w_norm),
                 json_f64(c.final_gap),
@@ -275,15 +322,19 @@ impl SweepReport {
         for (i, r) in ranked.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"scenario\": {}, \"preset\": {}, \"rho_d\": {}, \"rank\": {}, \
-                 \"algorithm\": {}, \"runtime\": {}, \"seeds\": {}, \"mean_final_gap\": {}, \
+                "    {{\"scenario\": {}, \"dataset\": {}, \"rho_d\": {}, \"workers\": {}, \
+                 \"rank\": {}, \"algorithm\": {}, \"group\": {}, \"period\": {}, \
+                 \"runtime\": {}, \"seeds\": {}, \"mean_final_gap\": {}, \
                  \"mean_time_to_target_s\": {}, \"mean_wall_time_s\": {}, \
                  \"mean_bytes_up\": {}}}{}\n",
                 json_str(&r.scenario),
-                json_str(&r.preset),
+                json_str(&r.dataset),
                 r.rho_d,
+                r.workers,
                 r.rank,
                 json_str(&r.algorithm),
+                r.group,
+                r.period,
                 json_str(&r.runtime),
                 r.seeds,
                 json_f64(r.mean_final_gap),
@@ -302,9 +353,9 @@ impl SweepReport {
     /// Human-readable ranked table, one block per matrix column.
     pub fn render(&self) -> String {
         let mut out = format!("sweep: {}\n", self.description);
-        let mut last_key: Option<(String, String, usize)> = None;
+        let mut last_key: Option<(String, String, usize, usize)> = None;
         for r in self.ranked() {
-            let key = (r.scenario.clone(), r.preset.clone(), r.rho_d);
+            let key = (r.scenario.clone(), r.dataset.clone(), r.rho_d, r.workers);
             if last_key.as_ref() != Some(&key) {
                 let rho = if r.rho_d == 0 {
                     "dense".to_string()
@@ -313,8 +364,8 @@ impl SweepReport {
                 };
                 let _ = write!(
                     out,
-                    "\n[{} | {} | rho_d={}]\n",
-                    r.scenario, r.preset, rho
+                    "\n[{} | {} | rho_d={} | K={}]\n",
+                    r.scenario, r.dataset, rho, r.workers
                 );
                 last_key = Some(key);
             }
@@ -324,9 +375,11 @@ impl SweepReport {
                 .unwrap_or_else(|| "-".to_string());
             let _ = write!(
                 out,
-                "  #{} {:<8} gap={:<12.3e} t*={:<10} wall={:<10.3} up={:.3} MB ({} seeds)\n",
+                "  #{} {:<8} B={:<3} T={:<4} gap={:<12.3e} t*={:<10} wall={:<10.3} up={:.3} MB ({} seeds)\n",
                 r.rank,
                 r.algorithm,
+                r.group,
+                r.period,
                 r.mean_final_gap,
                 ttt,
                 r.mean_wall_time,
@@ -339,15 +392,19 @@ impl SweepReport {
 }
 
 /// One matched cell pair of a sim-vs-real cross-check: the same
-/// (algorithm, scenario, preset, ρd, seed) grid point executed on two
-/// runtimes, with the agreement verdict and both time axes side by side.
+/// (algorithm, scenario, dataset, K, B, T, ρd, seed) grid point executed
+/// on two runtimes, with the agreement verdict and both time axes side by
+/// side.
 #[derive(Debug, Clone)]
 pub struct ParityRow {
     pub algorithm: String,
     pub scenario: String,
-    pub preset: String,
+    pub dataset: String,
     pub rho_d: usize,
     pub seed: u64,
+    pub workers: usize,
+    pub group: usize,
+    pub period: usize,
     pub runtime_a: String,
     pub runtime_b: String,
     pub final_gap_a: f64,
@@ -369,17 +426,22 @@ pub struct ParityRow {
 
 /// Cross-check two reports of the SAME grid executed on different runtimes
 /// (canonically `a` = sim, `b` = threads/tcp).  Cells are matched by their
-/// full grid key; cells present on one side only are skipped (they have
-/// nothing to be compared against).  `gap_tol` is an absolute tolerance on
-/// the final duality gap; `w_tol` a relative tolerance on ‖final w‖.
+/// full grid key — including the effective (K, B, T), so two ACPD geometry
+/// points of one grid can never cross-match; cells present on one side only
+/// are skipped (they have nothing to be compared against).  `gap_tol` is an
+/// absolute tolerance on the final duality gap; `w_tol` a relative
+/// tolerance on ‖final w‖.
 pub fn parity(a: &SweepReport, b: &SweepReport, gap_tol: f64, w_tol: f64) -> Vec<ParityRow> {
     let key = |c: &CellResult| {
         (
             c.algorithm.clone(),
             c.scenario.clone(),
-            c.preset.clone(),
+            c.dataset.clone(),
             c.rho_d,
             c.seed,
+            c.workers,
+            c.group,
+            c.period,
         )
     };
     let mut out = Vec::new();
@@ -401,9 +463,12 @@ pub fn parity(a: &SweepReport, b: &SweepReport, gap_tol: f64, w_tol: f64) -> Vec
         out.push(ParityRow {
             algorithm: ca.algorithm.clone(),
             scenario: ca.scenario.clone(),
-            preset: ca.preset.clone(),
+            dataset: ca.dataset.clone(),
             rho_d: ca.rho_d,
             seed: ca.seed,
+            workers: ca.workers,
+            group: ca.group,
+            period: ca.period,
             runtime_a: ca.runtime.clone(),
             runtime_b: cb.runtime.clone(),
             final_gap_a: ca.final_gap,
@@ -425,9 +490,12 @@ pub fn parity_csv(rows: &[ParityRow]) -> CsvWriter {
     let mut w = CsvWriter::new(&[
         "algorithm",
         "scenario",
-        "preset",
+        "dataset",
         "rho_d",
         "seed",
+        "workers",
+        "group",
+        "period",
         "runtime_a",
         "runtime_b",
         "final_gap_a",
@@ -445,9 +513,12 @@ pub fn parity_csv(rows: &[ParityRow]) -> CsvWriter {
         w.rowf(&[
             &r.algorithm,
             &r.scenario,
-            &r.preset,
+            &r.dataset,
             &r.rho_d,
             &r.seed,
+            &r.workers,
+            &r.group,
+            &r.period,
             &r.runtime_a,
             &r.runtime_b,
             &r.final_gap_a,
@@ -516,10 +587,15 @@ mod tests {
             index,
             algorithm: algorithm.to_string(),
             scenario: scenario.to_string(),
-            preset: "dense-test".to_string(),
+            dataset: "dense-test".to_string(),
+            n: 1024,
+            d: 128,
+            nnz: 1024 * 128,
             rho_d: 0,
             seed,
             workers: 4,
+            group: 2,
+            period: 5,
             runtime: "sim".to_string(),
             w_norm: 1.0,
             final_gap,
@@ -561,6 +637,7 @@ mod tests {
         assert!((lan[0].mean_time_to_target.unwrap() - 3.0).abs() < 1e-12);
         assert_eq!(lan[1].algorithm, "cocoa+");
         assert_eq!(lan[1].rank, 2);
+        assert_eq!((lan[0].dataset.as_str(), lan[0].workers), ("dense-test", 4));
     }
 
     #[test]
@@ -579,8 +656,7 @@ mod tests {
     #[test]
     fn missed_target_tiebreak_is_deterministic() {
         // Two algorithms both miss the target (mean ttt = None = +inf).
-        // Before the fix their relative order was whatever the sort left
-        // them in; now wall time breaks the tie, then the algorithm name.
+        // Wall time breaks the tie, then the configuration key.
         let mut slow = cell(0, "zeta", "lan", 1, 1e-3, None);
         slow.wall_time = 9.0;
         let mut fast = cell(1, "alpha", "lan", 1, 1e-3, None);
@@ -601,6 +677,58 @@ mod tests {
         assert_eq!(
             fwd.iter().map(|r| r.algorithm.clone()).collect::<Vec<_>>(),
             rev.iter().map(|r| r.algorithm.clone()).collect::<Vec<_>>(),
+        );
+
+        // same algorithm at two geometries, fully tied metrics: B then T
+        let mut b2 = cell(0, "acpd", "lan", 1, 1e-3, None);
+        b2.group = 4;
+        let b1 = cell(1, "acpd", "lan", 1, 1e-3, None); // B=2
+        let rows = SweepReport::new("t".into(), vec![b2, b1]).ranked();
+        assert_eq!((rows[0].group, rows[1].group), (2, 4));
+    }
+
+    #[test]
+    fn ranked_groups_split_by_workers_and_geometry() {
+        // fig4b shape: same algorithm pair at K=2 and K=4 → one ranked
+        // block per K, never a cross-K average
+        let mut cells = vec![
+            cell(0, "acpd", "straggler:10", 1, 1e-4, Some(2.0)),
+            cell(1, "cocoa+", "straggler:10", 1, 1e-4, Some(4.0)),
+            cell(2, "acpd", "straggler:10", 1, 1e-4, Some(1.0)),
+            cell(3, "cocoa+", "straggler:10", 1, 1e-4, Some(2.0)),
+        ];
+        for c in &mut cells[..2] {
+            c.workers = 2;
+            c.group = 1;
+        }
+        for c in &mut cells[2..] {
+            c.workers = 4;
+        }
+        let ranked = SweepReport::new("t".into(), cells).ranked();
+        assert_eq!(ranked.len(), 4);
+        let k2: Vec<&RankedRow> = ranked.iter().filter(|r| r.workers == 2).collect();
+        let k4: Vec<&RankedRow> = ranked.iter().filter(|r| r.workers == 4).collect();
+        assert_eq!((k2.len(), k4.len()), (2, 2));
+        assert_eq!((k2[0].rank, k2[1].rank), (1, 2)); // ranks restart per K
+        assert_eq!((k4[0].rank, k4[1].rank), (1, 2));
+        assert_eq!(k2[0].seeds, 1);
+
+        // two ACPD geometries inside ONE (scenario, dataset, ρd, K) group
+        // are distinct rows ranked against the baseline
+        let mut g = vec![
+            cell(0, "acpd", "lan", 1, 1e-4, Some(2.0)), // B=2 T=5
+            cell(1, "acpd", "lan", 1, 1e-4, Some(3.0)),
+            cell(2, "cocoa+", "lan", 1, 1e-4, Some(4.0)),
+        ];
+        g[1].period = 10;
+        let ranked = SweepReport::new("t".into(), g).ranked();
+        assert_eq!(ranked.len(), 3);
+        assert_eq!(
+            ranked
+                .iter()
+                .map(|r| (r.rank, r.algorithm.as_str(), r.group, r.period))
+                .collect::<Vec<_>>(),
+            vec![(1, "acpd", 2, 5), (2, "acpd", 2, 10), (3, "cocoa+", 2, 5)]
         );
     }
 
@@ -640,6 +768,12 @@ mod tests {
         let mut partial = sim.clone();
         partial.cells.truncate(3);
         assert_eq!(parity(&partial, &real, 1.0, 10.0).len(), 3);
+        // a different effective geometry is a different grid point: no match
+        let mut other_geom = real.clone();
+        for c in &mut other_geom.cells {
+            c.period = 9;
+        }
+        assert!(parity(&sim, &other_geom, 1.0, 10.0).is_empty());
     }
 
     #[test]
@@ -647,11 +781,14 @@ mod tests {
         let r = report();
         let cells = r.cells_csv().to_string();
         assert_eq!(cells.lines().count(), 9); // header + 8 cells
-        assert!(cells.starts_with("index,algorithm,"));
+        assert!(cells.starts_with("index,algorithm,scenario,dataset,n,d,nnz,"));
+        let header_cols = cells.lines().next().unwrap().split(',').count();
+        assert!(cells.lines().skip(1).all(|l| l.split(',').count() == header_cols));
         let ranked = r.ranked_csv().to_string();
         assert_eq!(ranked.lines().count(), 5); // header + 4 rows
+        assert!(ranked.starts_with("scenario,dataset,rho_d,workers,rank,algorithm,group,period,"));
         // missed target renders as an empty cell, not "inf"
-        assert!(ranked.lines().any(|l| l.ends_with(",,1,1000") || l.contains(",,")));
+        assert!(ranked.lines().any(|l| l.contains(",,")));
     }
 
     #[test]
@@ -663,6 +800,8 @@ mod tests {
             "unbalanced braces"
         );
         assert!(j.contains("\"time_to_target_s\": null"));
+        assert!(j.contains("\"dataset\": \"dense-test\""));
+        assert!(j.contains("\"nnz\": 131072"));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }
@@ -677,8 +816,9 @@ mod tests {
     #[test]
     fn render_groups_blocks() {
         let text = report().render();
-        assert!(text.contains("[lan | dense-test | rho_d=dense]"));
-        assert!(text.contains("[straggler:10 | dense-test | rho_d=dense]"));
+        assert!(text.contains("[lan | dense-test | rho_d=dense | K=4]"));
+        assert!(text.contains("[straggler:10 | dense-test | rho_d=dense | K=4]"));
         assert!(text.contains("#1 acpd"));
+        assert!(text.contains("B=2"));
     }
 }

@@ -4,6 +4,21 @@
 //! drawn by `gen`; on failure it retries with progressively "smaller"
 //! regenerated inputs (generator-driven shrinking) and reports the seed so
 //! the case is replayable.
+//!
+//! Conventions used across the suite (`tests/invariants.rs`,
+//! `tests/properties.rs`, `tests/server_equiv.rs`, `tests/worker_equiv.rs`):
+//!
+//! * the first argument is a fixed, arbitrary hex seed unique to the test —
+//!   runs are deterministic, there is no global entropy source;
+//! * generators take `(&mut Pcg64, Size)` and scale their structure
+//!   (vector length, dimension, magnitude) by the [`Size`] hint, which is
+//!   what makes shrinking meaningful;
+//! * to replay a reported failure, paste the printed `case_seed` back as
+//!   the seed with `cases = 1`.
+//!
+//! The equivalence suites build on this to pin the optimized sparse
+//! server/worker against dense references — see `ARCHITECTURE.md`
+//! §Invariants for which property pins which complexity contract.
 
 use crate::util::rng::Pcg64;
 

@@ -8,7 +8,16 @@
 //! [`crate::runtime_threads::server_loop`] over socket-reader threads.
 //!
 //! `examples/real_cluster.rs` and the `acpd server` / `acpd worker` CLI
-//! subcommands run this across OS processes on localhost (or a real LAN).
+//! subcommands run this across OS processes on localhost (or a real LAN);
+//! `acpd sweep --runtime tcp` spawns one such cluster per sweep cell on
+//! in-process threads ([`crate::sweep`]).
+//!
+//! Like the paper's MPI deployment this transport is **fail-stop**: there
+//! are no timeouts or heartbeats, so a worker that dies mid-run leaves the
+//! server blocked on its socket rather than erroring (ROADMAP "TCP cell
+//! hardening" tracks the follow-up).  Byte accounting is identical to the
+//! other runtimes because all three charge [`ToServerMsg`]/[`ToWorkerMsg`]
+//! `wire_bytes()` — the frames on these sockets are those exact bytes.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};

@@ -17,7 +17,8 @@
 //!    equality), and the dense-mode (ρd = 0) worker ships everything with
 //!    an identically-zero residual every round.
 
-use acpd::data::{partition::partition_rows, synthetic, synthetic::Preset};
+use acpd::data::{libsvm, partition::partition_rows, synthetic, synthetic::Preset, Dataset};
+use acpd::linalg::csr::CsrMatrix;
 use acpd::filter::{filter_topk, FilterScratch};
 use acpd::linalg::sparse::SparseVec;
 use acpd::loss::LossKind;
@@ -240,6 +241,58 @@ fn dense_mode_ships_everything_every_round() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max_diff < 1e-4, "dense-mode conservation violated: {max_diff}");
+}
+
+/// LIBSVM write→read round trip: for ANY dataset (random sparsity
+/// patterns, empty rows included, ±1 labels) the file format is lossless —
+/// f32 values print in shortest-roundtrip form, so the features come back
+/// bit-identical, and `d_hint = d` preserves trailing all-zero columns.
+#[test]
+fn prop_libsvm_write_read_roundtrip() {
+    let dir = std::env::temp_dir().join("acpd_libsvm_roundtrip_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        0x11B5_4321,
+        50,
+        |rng, sz| {
+            let d = 2 + rng.next_below(sz.0 as u32 * 8 + 1) as usize;
+            let n = 1 + rng.next_below(sz.0 as u32 + 1) as usize;
+            let rows: Vec<(Vec<u32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let idx = gens::sparse_pattern(rng, Size(sz.0.min(d)), d);
+                    let val: Vec<f32> = idx
+                        .iter()
+                        .map(|_| {
+                            let v = rng.next_normal() as f32;
+                            if v == 0.0 {
+                                1.0
+                            } else {
+                                v
+                            }
+                        })
+                        .collect();
+                    (idx, val)
+                })
+                .collect();
+            let labels: Vec<f32> = (0..n)
+                .map(|_| if rng.next_f64() < 0.5 { 1.0 } else { -1.0 })
+                .collect();
+            let ds = Dataset {
+                features: CsrMatrix::from_rows(d, &rows),
+                labels,
+                name: "prop".into(),
+            };
+            (ds, rng.next_u64())
+        },
+        |(ds, tag)| {
+            let path = dir.join(format!("case_{tag:016x}.svm"));
+            libsvm::write(ds, &path).unwrap();
+            let back = libsvm::read(&path, ds.d()).unwrap();
+            let _ = std::fs::remove_file(&path);
+            back.features == ds.features && back.labels == ds.labels
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

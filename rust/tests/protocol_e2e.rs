@@ -188,7 +188,12 @@ fn shipped_configs_are_valid() {
                 let n = if spec.n_override > 0 {
                     spec.n_override
                 } else {
-                    cell.preset.spec().n
+                    match &cell.source {
+                        acpd::data::DatasetSource::Preset(p) => p.spec().n,
+                        // file-backed sources can't be sized statically;
+                        // shipped configs only reference presets anyway
+                        acpd::data::DatasetSource::Libsvm { .. } => 1_000_000,
+                    }
                 };
                 spec.engine_for(cell)
                     .validate(n)
@@ -200,7 +205,7 @@ fn shipped_configs_are_valid() {
             // engine must validate against its own preset's n
             let n = match &cfg.data {
                 acpd::config::schema::DataSource::Preset(p) => p.spec().n,
-                acpd::config::schema::DataSource::Libsvm(_) => 1_000_000,
+                acpd::config::schema::DataSource::Libsvm { .. } => 1_000_000,
             };
             cfg.engine.validate(n).unwrap();
         }

@@ -141,12 +141,12 @@ fn sync_matrix(runtime: RuntimeKind) -> SweepSpec {
     SweepSpec {
         algorithms: vec![Algorithm::Cocoa, Algorithm::CocoaPlus],
         scenarios: vec![Scenario::Lan],
-        presets: vec![Preset::DenseTest],
+        datasets: vec![acpd::data::DatasetSource::Preset(Preset::DenseTest)],
         rho_ds: vec![0],
         seeds: vec![1, 2],
-        workers: 3,
-        group: 3,
-        period: 1,
+        workers: vec![3],
+        groups: vec![3],
+        periods: vec![1],
         h: 256,
         lambda: 1e-2,
         loss: LossKind::Square,
