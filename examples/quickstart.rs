@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             PjrtSolver::new(rt.clone(), part, lambda, n, sigma, gamma, rng)
                 .expect("artifact shapes must fit the partition"),
         )
-    });
+    })?;
 
     println!("\nduality-gap trajectory (every 10th round):");
     print!("{}", out.history.render(10));

@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
                 PjrtSolver::new(rt.clone(), part, lambda, n, sigma, gamma, rng)
                     .expect("artifact shapes must fit"),
             )
-        });
+        })?;
     let host_secs = t0.elapsed().as_secs_f64();
 
     println!("\nPJRT path — gap trajectory:");

@@ -35,7 +35,7 @@ use acpd::linalg::sparse::SparseVec;
 use acpd::loss::LossKind;
 use acpd::network::NetworkModel;
 use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
-use acpd::protocol::server::{ServerAction, ServerConfig, ServerState};
+use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
 use acpd::protocol::worker::WorkerState;
 use acpd::solver::sdca::SdcaSolver;
 use acpd::solver::LocalSolver;
@@ -186,6 +186,7 @@ fn main() {
                         period: t,
                         outer_rounds: 1_000_000,
                         gamma: 0.5,
+                        policy: FailPolicy::FailFast,
                     },
                     d,
                 );

@@ -99,6 +99,12 @@ pub fn render() -> String {
     s.push_str("  lan             uniform gigabit LAN (latency-dominated)\n");
     s.push_str("  straggler:<s>   worker 0 runs s x slower (compute-dominated, Fig 3)\n");
     s.push_str("  jittery-cloud   background-load jitter on every worker (Fig 5)\n");
+    s.push_str("  kill:<w>@<r>    fault injection: worker w dies before its r-th send\n");
+    s.push_str("  flaky:<p>       fault injection: geometric(p) death round per worker\n");
+    s.push_str(
+        "  fault scenarios honor `fail_policy` (fail_fast = cell errors [default];\n  \
+         degrade = continue while live workers >= B, losses recorded in reports)\n",
+    );
 
     s.push_str("\ncell runtimes (`runtime` key / `--runtime`):\n");
     s.push_str("  sim             deterministic DES; reports byte-identical across runs [default]\n");
@@ -130,7 +136,7 @@ dataset sources (sweep `datasets`, train `--preset` / `--data`):
 
 sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
   algos      acpd | cocoa | cocoa+ | disdca                       default acpd,cocoa,cocoa+
-  scenarios  lan | straggler:<sigma> | jittery-cloud              default lan,straggler:10,jittery-cloud
+  scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> default lan,straggler:10,jittery-cloud
   datasets   <preset> | <name>:<path> (LIBSVM file)               default dense-test
   workers    K - cluster sizes                                    default 4
   group      B - acpd group sizes (0 = K/2; baselines run B = K)  default 2
@@ -144,6 +150,10 @@ network scenarios (per-cell cost models):
   lan             uniform gigabit LAN (latency-dominated)
   straggler:<s>   worker 0 runs s x slower (compute-dominated, Fig 3)
   jittery-cloud   background-load jitter on every worker (Fig 5)
+  kill:<w>@<r>    fault injection: worker w dies before its r-th send
+  flaky:<p>       fault injection: geometric(p) death round per worker
+  fault scenarios honor `fail_policy` (fail_fast = cell errors [default];
+  degrade = continue while live workers >= B, losses recorded in reports)
 
 cell runtimes (`runtime` key / `--runtime`):
   sim             deterministic DES; reports byte-identical across runs [default]

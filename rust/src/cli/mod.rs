@@ -8,7 +8,9 @@ use acpd::data::synthetic::Preset;
 use acpd::data::{libsvm, Dataset};
 use acpd::engine::{Algorithm, EngineConfig};
 use acpd::network::{JitterModel, NetworkModel};
+use acpd::protocol::server::FailPolicy;
 use acpd::sweep::{self, RuntimeKind, SweepSpec};
+use acpd::transport::TransportConfig;
 use acpd::util::args::{Args, FlagSpec};
 
 const USAGE: &str = "\
@@ -121,6 +123,8 @@ fn experiment_flags() -> Vec<FlagSpec> {
         FlagSpec::opt("straggler-worker", "slow worker index", "0"),
         FlagSpec::opt("straggler-factor", "slowdown sigma (1=off)", "1"),
         FlagSpec::switch("jitter", "background-load jitter (fig 5 mode)"),
+        FlagSpec::opt("kill", "inject fault: <wid>@<round> (worker dies before that send)", ""),
+        FlagSpec::opt("fail-policy", "fail_fast|degrade on worker loss", "fail_fast"),
         FlagSpec::switch("no-error-feedback", "drop filtered residual (ablation)"),
         FlagSpec::opt("runtime", "sim|threads", "sim"),
         FlagSpec::opt("out", "write history CSV here", ""),
@@ -213,6 +217,18 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
     if a.get_bool("jitter") {
         cfg.network = cfg.network.with_jitter(JitterModel::cloud());
     }
+    let kill = a.get_str("kill")?;
+    if !kill.is_empty() {
+        let (wid, round) = kill
+            .split_once('@')
+            .and_then(|(w, r)| Some((w.parse::<usize>().ok()?, r.parse::<u64>().ok()?)))
+            .filter(|&(_, r)| r >= 1)
+            .with_context(|| format!("--kill wants <wid>@<round> with round >= 1, got {kill:?}"))?;
+        cfg.network = cfg.network.with_kill(wid, round);
+    }
+    let fp = a.get_str("fail-policy")?;
+    cfg.engine.fail_policy = FailPolicy::from_name(&fp)
+        .with_context(|| format!("unknown fail policy {fp:?} ({})", FailPolicy::help_names()))?;
     if a.get_bool("no-error-feedback") {
         cfg.engine.error_feedback = false;
     }
@@ -229,6 +245,20 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
     }))
 }
 
+/// Degraded-run accounting on stderr (silent for fault-free runs).
+fn print_failures(failures: &[acpd::protocol::server::WorkerFailure], live: usize) {
+    if failures.is_empty() {
+        return;
+    }
+    for f in failures {
+        eprintln!(
+            "worker {} LOST at round {} ({}) — continued degraded",
+            f.worker, f.round, f.reason
+        );
+    }
+    eprintln!("live workers at finish: {live}");
+}
+
 fn cmd_train(raw: &[String]) -> Result<()> {
     let Some(x) = parse_experiment(raw, &[])? else {
         return Ok(());
@@ -237,7 +267,9 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     eprintln!("engine: {}", x.engine.describe());
     let history = match x.runtime.as_str() {
         "sim" => {
-            let out = acpd::sim::run(&x.ds, &x.engine, &x.net, x.seed);
+            // try_run: a kill/flaky fault under fail_fast is a clean error,
+            // not a panic
+            let out = acpd::sim::try_run(&x.ds, &x.engine, &x.net, x.seed)?;
             eprintln!(
                 "sim: {} rounds, virtual {:.3}s, {:.2} MB up / {:.2} MB down, \
                  q_k = {:?}, max staleness {}, peak log {}",
@@ -253,10 +285,11 @@ fn cmd_train(raw: &[String]) -> Result<()> {
                 out.stats.max_staleness,
                 out.stats.peak_log_entries
             );
+            print_failures(&out.stats.failures, out.stats.live_workers);
             out.history
         }
         "threads" => {
-            let out = acpd::runtime_threads::run(&x.ds, &x.engine, &x.net, x.seed);
+            let out = acpd::runtime_threads::run(&x.ds, &x.engine, &x.net, x.seed)?;
             eprintln!(
                 "threads: wall {:.3}s, {:.2} MB up / {:.2} MB down, \
                  max staleness {}, peak log {}",
@@ -266,6 +299,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
                 out.max_staleness,
                 out.peak_log_entries
             );
+            print_failures(&out.failures, out.live_workers);
             out.history
         }
         other => bail!("unknown runtime {other:?} (sim|threads)"),
@@ -287,7 +321,7 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         FlagSpec::opt("algos", "comma list: acpd,cocoa,cocoa+,disdca", "acpd,cocoa,cocoa+"),
         FlagSpec::opt(
             "scenarios",
-            "comma list: lan | straggler:<sigma> | jittery-cloud",
+            "comma list: lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p>",
             "lan,straggler:10,jittery-cloud",
         ),
         FlagSpec::opt(
@@ -315,6 +349,11 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         FlagSpec::opt("n", "override preset sample count (0=preset)", "0"),
         FlagSpec::opt("d", "override preset dimension (0=preset)", "0"),
         FlagSpec::opt("runtime", "cell runtime: sim|threads|tcp", "sim"),
+        FlagSpec::opt(
+            "fail-policy",
+            "fail_fast|degrade when a fault scenario loses a worker",
+            "fail_fast",
+        ),
         FlagSpec::switch(
             "parity",
             "re-run the matrix on the simulator and cross-check (sim_vs_real)",
@@ -402,6 +441,11 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         let name = a.get_str("runtime")?;
         spec.runtime = RuntimeKind::from_name(&name)
             .with_context(|| format!("unknown runtime {name:?} ({})", RuntimeKind::help_names()))?;
+    }
+    if explicit("fail-policy") {
+        let name = a.get_str("fail-policy")?;
+        spec.fail_policy = FailPolicy::from_name(&name)
+            .with_context(|| format!("unknown fail policy {name:?} ({})", FailPolicy::help_names()))?;
     }
     if explicit("threads") {
         spec.threads = a.get("threads")?;
@@ -493,8 +537,32 @@ fn cmd_theory(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The TCP liveness deadlines as CLI flags (seconds; 0 disables a deadline
+/// is deliberately NOT offered — every run stays bounded).
+fn transport_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::opt("hello-timeout", "seconds to wait for a worker hello", "10"),
+        FlagSpec::opt("read-timeout", "per-read liveness deadline (seconds)", "30"),
+        FlagSpec::opt("accept-deadline", "seconds to wait for all K workers", "30"),
+    ]
+}
+
+fn parse_transport(a: &Args) -> Result<TransportConfig> {
+    let secs = |key: &str| -> Result<std::time::Duration> {
+        let v: f64 = a.get(key)?;
+        anyhow::ensure!(v > 0.0 && v.is_finite(), "--{key} must be a positive number of seconds");
+        Ok(std::time::Duration::from_secs_f64(v))
+    };
+    Ok(TransportConfig {
+        hello_timeout: secs("hello-timeout")?,
+        read_timeout: secs("read-timeout")?,
+        accept_deadline: secs("accept-deadline")?,
+    })
+}
+
 fn cmd_server(raw: &[String]) -> Result<()> {
-    let extra = [FlagSpec::opt("addr", "listen address", "127.0.0.1:7777")];
+    let mut extra = vec![FlagSpec::opt("addr", "listen address", "127.0.0.1:7777")];
+    extra.extend(transport_flags());
     let mut specs = experiment_flags();
     specs.extend_from_slice(&extra);
     let a = Args::parse(raw, &specs)?;
@@ -503,11 +571,12 @@ fn cmd_server(raw: &[String]) -> Result<()> {
         return Ok(());
     }
     let addr = a.get_str("addr")?;
+    let tcfg = parse_transport(&a)?;
     let Some(x) = parse_experiment(raw, &extra)? else {
         return Ok(());
     };
     eprintln!("server on {addr}: {}", x.engine.describe());
-    let out = acpd::transport::run_server(&addr, x.ds.n(), x.ds.d(), &x.engine)?;
+    let out = acpd::transport::run_server(&addr, x.ds.n(), x.ds.d(), &x.engine, &tcfg)?;
     let stride = (out.history.points.len() / 20).max(1);
     print!("{}", out.history.render(stride));
     eprintln!(
@@ -516,6 +585,7 @@ fn cmd_server(raw: &[String]) -> Result<()> {
         out.bytes_down as f64 / 1e6,
         out.participation
     );
+    print_failures(&out.failures, out.live_workers);
     if !x.out.is_empty() {
         out.history.to_csv().save(&x.out)?;
         eprintln!("wrote {}", x.out);
@@ -524,10 +594,11 @@ fn cmd_server(raw: &[String]) -> Result<()> {
 }
 
 fn cmd_worker(raw: &[String]) -> Result<()> {
-    let extra = [
+    let mut extra = vec![
         FlagSpec::opt("addr", "server address", "127.0.0.1:7777"),
         FlagSpec::req("id", "worker index in [0, K)"),
     ];
+    extra.extend(transport_flags());
     let mut specs = experiment_flags();
     specs.extend_from_slice(&extra);
     let a = Args::parse(raw, &specs)?;
@@ -537,9 +608,10 @@ fn cmd_worker(raw: &[String]) -> Result<()> {
     }
     let addr = a.get_str("addr")?;
     let id: usize = a.get("id")?;
+    let tcfg = parse_transport(&a)?;
     let Some(x) = parse_experiment(raw, &extra)? else {
         return Ok(());
     };
     eprintln!("worker {id} -> {addr}");
-    acpd::transport::run_worker(&addr, id, &x.ds, &x.engine, &x.net, x.seed)
+    acpd::transport::run_worker(&addr, id, &x.ds, &x.engine, &x.net, x.seed, &tcfg)
 }

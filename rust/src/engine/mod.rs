@@ -27,6 +27,7 @@
 pub mod theory;
 
 use crate::loss::LossKind;
+use crate::protocol::server::FailPolicy;
 
 /// Which published algorithm a config point corresponds to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +97,12 @@ pub struct EngineConfig {
     /// filtered-out residual `Δw ∘ ¬M` locally and fold it into the next
     /// round.  `false` = drop it (ablation; breaks mass conservation).
     pub error_feedback: bool,
+    /// Reaction to a lost worker: error the run (`fail_fast`, default) or
+    /// drop it from the barrier set and continue while live ≥ B
+    /// (`degrade`).  Consumed by all three runtimes via [`ServerState`].
+    ///
+    /// [`ServerState`]: crate::protocol::server::ServerState
+    pub fail_policy: FailPolicy,
 }
 
 impl EngineConfig {
@@ -118,6 +125,7 @@ impl EngineConfig {
             eval_every: 1,
             seed: 42,
             error_feedback: true,
+            fail_policy: FailPolicy::FailFast,
         }
     }
 
@@ -139,6 +147,7 @@ impl EngineConfig {
             eval_every: 1,
             seed: 42,
             error_feedback: true,
+            fail_policy: FailPolicy::FailFast,
         }
     }
 

@@ -42,6 +42,53 @@ impl JitterModel {
     }
 }
 
+/// Fault-injection plan: which workers die, and when.  Carried by the
+/// [`NetworkModel`] so every runtime (sim / threads / tcp) injects the SAME
+/// deterministic deaths for a given seed — what makes degraded runs
+/// cross-checkable by `report::parity`.
+///
+/// A "kill at round r" means the worker completes its r-th local solve and
+/// dies *before sending* that update — a crash between compute and send,
+/// observable identically in all three runtimes (the simulator drops the
+/// message, a thread/TCP worker exits without sending).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicit deterministic kills: (worker id, 1-based local round).
+    pub kills: Vec<(usize, u64)>,
+    /// Per-round death probability for EVERY worker (0 = off): each worker
+    /// draws its kill round once from a geometric distribution, seeded from
+    /// the run seed on a dedicated stream so the draw perturbs no other RNG
+    /// consumer.
+    pub flaky_p: f64,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.flaky_p <= 0.0
+    }
+
+    /// The local round before whose send worker `wid` dies, if any.
+    /// Deterministic in (plan, wid, seed); identical across runtimes.
+    pub fn kill_round_for(&self, wid: usize, seed: u64) -> Option<u64> {
+        if let Some(&(_, r)) = self.kills.iter().find(|&&(w, _)| w == wid) {
+            return Some(r.max(1));
+        }
+        if self.flaky_p > 0.0 {
+            if self.flaky_p >= 1.0 {
+                return Some(1);
+            }
+            // dedicated stream: a pure constructor, so existing solver /
+            // jitter split sequences are untouched (byte-identity of the
+            // fault-free path)
+            let mut rng = Pcg64::with_stream(seed, 0xFA17 ^ wid as u64);
+            let u = rng.next_f64().min(1.0 - 1e-12);
+            let r = ((1.0 - u).ln() / (1.0 - self.flaky_p).ln()).floor() as u64 + 1;
+            return Some(r.max(1));
+        }
+        None
+    }
+}
+
 /// Cluster cost model.
 #[derive(Debug, Clone)]
 pub struct NetworkModel {
@@ -60,6 +107,8 @@ pub struct NetworkModel {
     /// produce exact arrival ties that lock workers into fixed groups — a
     /// resonance a physical cluster cannot exhibit.
     pub base_dispersion: f64,
+    /// Fault-injection plan (worker deaths); default: no faults.
+    pub faults: FaultPlan,
 }
 
 impl NetworkModel {
@@ -72,7 +121,20 @@ impl NetworkModel {
             slowdown: Vec::new(),
             jitter: None,
             base_dispersion: 0.01,
+            faults: FaultPlan::default(),
         }
+    }
+
+    /// Kill worker `wid` just before it sends its `round`-th update.
+    pub fn with_kill(mut self, wid: usize, round: u64) -> NetworkModel {
+        self.faults.kills.push((wid, round));
+        self
+    }
+
+    /// Give every worker a per-round death probability `p`.
+    pub fn with_flaky(mut self, p: f64) -> NetworkModel {
+        self.faults.flaky_p = p;
+        self
     }
 
     /// Paper Fig 3 σ>1 environment as a named scenario: a LAN whose worker 0
@@ -154,6 +216,12 @@ pub enum Scenario {
     Straggler { sigma: f64 },
     /// Background-load jitter on every worker (paper Fig 5 "real env").
     JitteryCloud,
+    /// Fault injection: worker `worker` dies just before sending its
+    /// `round`-th update, on a uniform LAN (isolates the fault effect).
+    Kill { worker: usize, round: u64 },
+    /// Fault injection: every worker carries per-round death probability
+    /// `p` (non-persistent-failure churn model), on a uniform LAN.
+    Flaky { p: f64 },
 }
 
 impl Scenario {
@@ -163,16 +231,37 @@ impl Scenario {
             Scenario::Lan => "lan".to_string(),
             Scenario::Straggler { sigma } => format!("straggler:{sigma}"),
             Scenario::JitteryCloud => "jittery-cloud".to_string(),
+            Scenario::Kill { worker, round } => format!("kill:{worker}@{round}"),
+            Scenario::Flaky { p } => format!("flaky:{p}"),
         }
     }
 
-    /// Parse `lan` | `straggler` | `straggler:<sigma>` | `jittery-cloud`.
+    /// Parse `lan` | `straggler` | `straggler:<sigma>` | `jittery-cloud`
+    /// | `kill:<wid>@<round>` | `flaky:<p>`.
     pub fn from_name(s: &str) -> Option<Scenario> {
         match s {
             "lan" => Some(Scenario::Lan),
             "jittery-cloud" | "cloud" => Some(Scenario::JitteryCloud),
             "straggler" => Some(Scenario::Straggler { sigma: 10.0 }),
             _ => {
+                if let Some(rest) = s.strip_prefix("kill:") {
+                    let (w, r) = rest.split_once('@')?;
+                    let worker: usize = w.parse().ok()?;
+                    let round: u64 = r.parse().ok()?;
+                    return if round >= 1 {
+                        Some(Scenario::Kill { worker, round })
+                    } else {
+                        None
+                    };
+                }
+                if let Some(rest) = s.strip_prefix("flaky:") {
+                    let p: f64 = rest.parse().ok()?;
+                    return if p > 0.0 && p <= 1.0 && p.is_finite() {
+                        Some(Scenario::Flaky { p })
+                    } else {
+                        None
+                    };
+                }
                 let sigma: f64 = s.strip_prefix("straggler:")?.parse().ok()?;
                 if sigma >= 1.0 && sigma.is_finite() {
                     Some(Scenario::Straggler { sigma })
@@ -185,7 +274,7 @@ impl Scenario {
 
     /// All parseable scenario spellings (for help/error text).
     pub fn help_names() -> &'static str {
-        "lan | straggler:<sigma> | jittery-cloud"
+        "lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p>"
     }
 
     /// Instantiate the cost model for a `workers`-node cluster.
@@ -194,6 +283,8 @@ impl Scenario {
             Scenario::Lan => NetworkModel::lan(),
             Scenario::Straggler { sigma } => NetworkModel::straggler_cluster(workers, *sigma),
             Scenario::JitteryCloud => NetworkModel::jittery_cloud(),
+            Scenario::Kill { worker, round } => NetworkModel::lan().with_kill(*worker, *round),
+            Scenario::Flaky { p } => NetworkModel::lan().with_flaky(*p),
         }
     }
 }
@@ -252,6 +343,8 @@ mod tests {
             Scenario::Straggler { sigma: 10.0 },
             Scenario::Straggler { sigma: 2.5 },
             Scenario::JitteryCloud,
+            Scenario::Kill { worker: 2, round: 5 },
+            Scenario::Flaky { p: 0.05 },
         ];
         for s in all {
             assert_eq!(Scenario::from_name(&s.name()), Some(s.clone()), "{}", s.name());
@@ -263,6 +356,10 @@ mod tests {
         assert_eq!(Scenario::from_name("nope"), None);
         assert_eq!(Scenario::from_name("straggler:0.5"), None); // sigma < 1
         assert_eq!(Scenario::from_name("straggler:abc"), None);
+        assert_eq!(Scenario::from_name("kill:0@0"), None); // rounds are 1-based
+        assert_eq!(Scenario::from_name("kill:0"), None);
+        assert_eq!(Scenario::from_name("flaky:0"), None);
+        assert_eq!(Scenario::from_name("flaky:1.5"), None);
     }
 
     #[test]
@@ -274,5 +371,42 @@ mod tests {
         assert!(st.flop_time > lan.flop_time); // compute-dominated regime
         let cl = Scenario::JitteryCloud.instantiate(4);
         assert!(cl.jitter.is_some());
+        let kl = Scenario::Kill { worker: 1, round: 3 }.instantiate(4);
+        assert_eq!(kl.faults.kills, vec![(1, 3)]);
+        assert_eq!(kl.flop_time, lan.flop_time); // uniform-LAN base
+        let fl = Scenario::Flaky { p: 0.1 }.instantiate(4);
+        assert_eq!(fl.faults.flaky_p, 0.1);
+    }
+
+    #[test]
+    fn fault_plan_kill_rounds_are_deterministic() {
+        let plan = FaultPlan {
+            kills: vec![(1, 4)],
+            flaky_p: 0.0,
+        };
+        assert_eq!(plan.kill_round_for(1, 7), Some(4));
+        assert_eq!(plan.kill_round_for(0, 7), None);
+        assert!(FaultPlan::default().is_empty());
+        assert!(FaultPlan::default().kill_round_for(0, 7).is_none());
+
+        // flaky draws: 1-based, deterministic per (wid, seed), and the same
+        // from two identical plans (the cross-runtime parity requirement)
+        let flaky = FaultPlan {
+            kills: Vec::new(),
+            flaky_p: 0.2,
+        };
+        for wid in 0..8 {
+            let a = flaky.kill_round_for(wid, 42).unwrap();
+            let b = flaky.kill_round_for(wid, 42).unwrap();
+            assert_eq!(a, b);
+            assert!(a >= 1);
+        }
+        // different seeds decorrelate the draws
+        let r1: Vec<_> = (0..8).map(|w| flaky.kill_round_for(w, 1)).collect();
+        let r2: Vec<_> = (0..8).map(|w| flaky.kill_round_for(w, 2)).collect();
+        assert_ne!(r1, r2);
+        // p = 1 kills on the first round
+        let certain = FaultPlan { kills: Vec::new(), flaky_p: 1.0 };
+        assert_eq!(certain.kill_round_for(3, 9), Some(1));
     }
 }

@@ -33,6 +33,51 @@ use std::collections::VecDeque;
 use crate::linalg::sparse::SparseVec;
 use crate::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
 
+/// How the server reacts when a runtime reports a worker lost
+/// ([`ServerState::on_worker_lost`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FailPolicy {
+    /// Error the run with the worker id and reason (default): a dead worker
+    /// is a bug or an operational incident, never a silent hang.
+    #[default]
+    FailFast,
+    /// Straggler-agnostic continuation: drop the worker from the barrier
+    /// set and keep committing as long as live workers ≥ B, recording the
+    /// failure.  The run still errors if live workers fall below B.
+    Degrade,
+}
+
+impl FailPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailPolicy::FailFast => "fail_fast",
+            FailPolicy::Degrade => "degrade",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<FailPolicy> {
+        match s {
+            "fail_fast" | "fail-fast" => Ok(FailPolicy::FailFast),
+            "degrade" => Ok(FailPolicy::Degrade),
+            other => anyhow::bail!("unknown fail policy '{other}' (use {})", Self::help_names()),
+        }
+    }
+
+    pub fn help_names() -> &'static str {
+        "fail_fast | degrade"
+    }
+}
+
+/// One observed worker loss: who, when (committed-round clock), and the
+/// transport/runtime reason string.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    /// `total_rounds` at the moment the loss was observed.
+    pub round: u64,
+    pub reason: String,
+}
+
 /// What the server wants the runtime to do after ingesting a message.
 #[derive(Debug)]
 pub enum ServerAction {
@@ -60,6 +105,8 @@ pub struct ServerConfig {
     pub outer_rounds: usize,
     /// γ — aggregation scale.
     pub gamma: f32,
+    /// Reaction to a lost worker (fail-fast error vs B-of-K degradation).
+    pub policy: FailPolicy,
 }
 
 pub struct ServerState {
@@ -95,6 +142,10 @@ pub struct ServerState {
     max_staleness: u64,
     /// high-water mark of live log entries (memory diagnostics)
     peak_log_entries: usize,
+    /// per-worker liveness: flipped off by [`Self::on_worker_lost`]
+    live: Vec<bool>,
+    /// every observed worker loss, in arrival order
+    failures: Vec<WorkerFailure>,
     finished: bool,
     /// true once a stop was requested (target gap reached)
     stop_requested: bool,
@@ -120,6 +171,8 @@ impl ServerState {
             last_included: vec![0; cfg.workers],
             max_staleness: 0,
             peak_log_entries: 0,
+            live: vec![true; cfg.workers],
+            failures: Vec::new(),
             finished: false,
             stop_requested: false,
             cfg,
@@ -171,6 +224,21 @@ impl ServerState {
         self.stop_requested = true;
     }
 
+    /// Is worker k still in the barrier set?
+    pub fn is_live(&self, k: usize) -> bool {
+        self.live[k]
+    }
+
+    /// Workers still in the barrier set (== K until a loss is observed).
+    pub fn live_workers(&self) -> usize {
+        self.live.iter().filter(|&&a| a).count()
+    }
+
+    /// Every worker loss observed so far, in arrival order.
+    pub fn failures(&self) -> &[WorkerFailure] {
+        &self.failures
+    }
+
     /// Is the current inner iteration a full-barrier one?
     fn is_full_barrier(&self) -> bool {
         self.t == self.cfg.period - 1 || self.stop_requested
@@ -178,7 +246,9 @@ impl ServerState {
 
     fn barrier_met(&self) -> bool {
         if self.is_full_barrier() {
-            self.in_group == self.cfg.workers
+            // a full barrier waits for every LIVE worker (== K while
+            // healthy, so the fault-free path is unchanged)
+            self.in_group == self.live_workers()
         } else {
             self.in_group >= self.cfg.group.min(self.cfg.workers)
         }
@@ -189,6 +259,11 @@ impl ServerState {
         assert!(!self.finished, "update after shutdown");
         let k = msg.worker as usize;
         assert!(k < self.cfg.workers, "worker id {k} out of range");
+        if !self.live[k] {
+            // an update can race ahead of its loss notice; the worker is
+            // already out of the barrier set, so the message is dropped
+            return ServerAction::Wait;
+        }
         assert!(
             self.inbox[k].is_none(),
             "worker {k} sent twice within one group (protocol violation)"
@@ -199,6 +274,54 @@ impl ServerState {
             return ServerAction::Wait;
         }
         self.commit_group()
+    }
+
+    /// Ingest a worker-loss notice from the runtime.  Under
+    /// [`FailPolicy::FailFast`] this errors with the worker id and reason;
+    /// under [`FailPolicy::Degrade`] the worker leaves the barrier set and
+    /// the run continues while live workers ≥ B — dropping a worker can
+    /// complete a pending full barrier, in which case the commit is
+    /// returned exactly as from [`Self::on_update`].
+    pub fn on_worker_lost(&mut self, k: usize, reason: &str) -> anyhow::Result<ServerAction> {
+        anyhow::ensure!(k < self.cfg.workers, "worker id {k} out of range");
+        if self.finished || !self.live[k] {
+            // late or duplicate notice (e.g. socket teardown after
+            // shutdown): nothing left to react to
+            return Ok(ServerAction::Wait);
+        }
+        self.live[k] = false;
+        self.failures.push(WorkerFailure {
+            worker: k,
+            round: self.total_rounds,
+            reason: reason.to_string(),
+        });
+        // a pending update from the dead worker must not enter a commit
+        if self.inbox[k].take().is_some() {
+            self.in_group -= 1;
+        }
+        match self.cfg.policy {
+            FailPolicy::FailFast => anyhow::bail!(
+                "worker {k} lost at round {}: {reason} (policy fail_fast)",
+                self.total_rounds
+            ),
+            FailPolicy::Degrade => {
+                let live = self.live_workers();
+                anyhow::ensure!(
+                    live >= self.cfg.group,
+                    "worker {k} lost at round {}: {reason} — {live} live workers < group size B={}",
+                    self.total_rounds,
+                    self.cfg.group
+                );
+                if self.in_group > 0 && self.barrier_met() {
+                    // the dead worker was the last one a full barrier was
+                    // waiting on
+                    return Ok(self.commit_group());
+                }
+                // the dead worker may have been the log's laggard
+                self.truncate_log();
+                Ok(ServerAction::Wait)
+            }
+        }
     }
 
     fn commit_group(&mut self) -> ServerAction {
@@ -301,9 +424,18 @@ impl ServerState {
         }
     }
 
-    /// Drop log entries every worker has advanced past.
+    /// Drop log entries every live worker has advanced past.  Dead workers
+    /// never receive another reply, so their cursors must not pin the log
+    /// (a degraded run would otherwise leak one entry per commit).
     fn truncate_log(&mut self) {
-        let min_cursor = self.cursor.iter().copied().min().unwrap_or(0);
+        let min_cursor = self
+            .cursor
+            .iter()
+            .zip(&self.live)
+            .filter(|&(_, &alive)| alive)
+            .map(|(&c, _)| c)
+            .min()
+            .unwrap_or(self.total_rounds);
         while self.log_base < min_cursor && !self.log.is_empty() {
             self.log.pop_front();
             self.log_base += 1;
@@ -360,6 +492,10 @@ mod tests {
     }
 
     fn server(k: usize, b: usize, t: usize) -> ServerState {
+        server_with_policy(k, b, t, FailPolicy::FailFast)
+    }
+
+    fn server_with_policy(k: usize, b: usize, t: usize, policy: FailPolicy) -> ServerState {
         ServerState::new(
             ServerConfig {
                 workers: k,
@@ -367,6 +503,7 @@ mod tests {
                 period: t,
                 outer_rounds: 100,
                 gamma: 0.5,
+                policy,
             },
             4,
         )
@@ -457,6 +594,7 @@ mod tests {
                 period: 1,
                 outer_rounds: 2,
                 gamma: 1.0,
+                policy: FailPolicy::FailFast,
             },
             4,
         );
@@ -559,5 +697,112 @@ mod tests {
         assert_eq!(s.w(), &[0.0; 4]);
         // nothing to keep live: the entry is empty but still counted
         assert_eq!(s.total_rounds(), 1);
+    }
+
+    #[test]
+    fn fail_fast_errors_with_worker_id_and_reason() {
+        let mut s = server(3, 2, 10);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let err = s.on_worker_lost(1, "read timeout").unwrap_err().to_string();
+        assert!(err.contains("worker 1"), "{err}");
+        assert!(err.contains("read timeout"), "{err}");
+        // the loss is recorded even though the run errors
+        assert_eq!(s.failures().len(), 1);
+        assert_eq!(s.live_workers(), 2);
+    }
+
+    #[test]
+    fn degrade_discards_pending_inbox_and_continues() {
+        let mut s = server_with_policy(3, 2, 10, FailPolicy::Degrade);
+        // worker 1's update is pending when it dies: it must leave the group
+        assert!(matches!(s.on_update(upd(1, 4, 1, 5.0)), ServerAction::Wait));
+        assert!(matches!(
+            s.on_worker_lost(1, "socket died").unwrap(),
+            ServerAction::Wait
+        ));
+        assert!(!s.is_live(1));
+        assert_eq!(s.live_workers(), 2);
+        // the next B=2 commit is formed by the survivors only
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        match s.on_update(upd(2, 4, 2, 1.0)) {
+            ServerAction::Commit { replies, .. } => {
+                let mut ws: Vec<u32> = replies.iter().map(|r| r.worker).collect();
+                ws.sort_unstable();
+                assert_eq!(ws, vec![0, 2]);
+            }
+            _ => panic!("survivors must still commit"),
+        }
+        // worker 1's pending 5.0 never entered w
+        assert_eq!(s.w(), &[0.5, 0.0, 0.5, 0.0]);
+        assert_eq!(s.failures(), &[WorkerFailure {
+            worker: 1,
+            round: 0,
+            reason: "socket died".to_string(),
+        }]);
+    }
+
+    #[test]
+    fn degrade_loss_completes_pending_full_barrier() {
+        let mut s = server_with_policy(3, 2, 2, FailPolicy::Degrade);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let _ = s.on_update(upd(1, 4, 1, 1.0)); // t=0 commit (B=2)
+        // t=1 is a full barrier: two check in, the third dies
+        assert!(matches!(s.on_update(upd(0, 4, 0, 1.0)), ServerAction::Wait));
+        assert!(matches!(s.on_update(upd(1, 4, 1, 1.0)), ServerAction::Wait));
+        match s.on_worker_lost(2, "killed").unwrap() {
+            ServerAction::Commit { full_barrier, replies, .. } => {
+                assert!(full_barrier);
+                assert_eq!(replies.len(), 2);
+            }
+            _ => panic!("loss of the awaited worker must release the barrier"),
+        }
+        assert_eq!(s.outer_round(), 1);
+    }
+
+    #[test]
+    fn degrade_errors_when_live_falls_below_group() {
+        let mut s = server_with_policy(3, 2, 10, FailPolicy::Degrade);
+        assert!(matches!(
+            s.on_worker_lost(0, "killed").unwrap(),
+            ServerAction::Wait
+        ));
+        let err = s.on_worker_lost(1, "killed").unwrap_err().to_string();
+        assert!(err.contains("live workers < group size"), "{err}");
+    }
+
+    #[test]
+    fn late_or_duplicate_loss_notice_is_a_noop() {
+        let mut s = server_with_policy(2, 1, 10, FailPolicy::Degrade);
+        let _ = s.on_worker_lost(1, "killed").unwrap();
+        // duplicate notice: no second failure record, no error
+        assert!(matches!(
+            s.on_worker_lost(1, "killed again").unwrap(),
+            ServerAction::Wait
+        ));
+        assert_eq!(s.failures().len(), 1);
+        // an update racing ahead of the (already-processed) loss is dropped
+        assert!(matches!(s.on_update(upd(1, 4, 1, 9.0)), ServerAction::Wait));
+        assert_eq!(s.w(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn degrade_does_not_pin_log_on_dead_cursor() {
+        // B=1, T=100, K=2: worker 1 dies immediately; worker 0 keeps
+        // committing alone.  The dead cursor must not pin the commit log.
+        let mut s = server_with_policy(2, 1, 100, FailPolicy::Degrade);
+        let _ = s.on_worker_lost(1, "killed").unwrap();
+        for _ in 0..10 {
+            let _ = s.on_update(upd(0, 4, 0, 0.1));
+        }
+        assert_eq!(s.live_log_entries(), 0, "log leaked on a dead cursor");
+    }
+
+    #[test]
+    fn fail_policy_names_roundtrip() {
+        for p in [FailPolicy::FailFast, FailPolicy::Degrade] {
+            assert_eq!(FailPolicy::from_name(p.name()).unwrap(), p);
+        }
+        assert!(FailPolicy::from_name("nope").is_err());
+        assert_eq!(FailPolicy::default(), FailPolicy::FailFast);
     }
 }

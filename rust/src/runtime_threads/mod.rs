@@ -19,7 +19,7 @@ use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
 use crate::network::NetworkModel;
 use crate::protocol::messages::{GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
-use crate::protocol::server::{ServerAction, ServerConfig, ServerState};
+use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
 use crate::solver::objective::{combine, ObjectivePieces};
 use crate::solver::sdca::SdcaSolver;
@@ -37,22 +37,48 @@ pub struct ThreadRunOutput {
     pub rounds: u64,
     /// high-water mark of live commit-log entries on the server
     pub peak_log_entries: usize,
+    /// every observed worker loss (empty on a healthy run)
+    pub failures: Vec<WorkerFailure>,
+    /// workers still in the barrier set at the end (== K when healthy)
+    pub live_workers: usize,
+}
+
+/// What the server's message pump delivers: either a protocol message or a
+/// runtime-detected worker loss (socket death, read timeout, injected
+/// fault).  Both the thread and TCP runtimes feed [`server_loop`] through
+/// this type, so dead workers follow one code path everywhere.
+#[derive(Debug)]
+pub enum ServerEvent {
+    Msg(ToServerMsg),
+    WorkerLost { wid: usize, reason: String },
 }
 
 /// Drive one worker against abstract endpoints.  Reused verbatim by the TCP
 /// worker process; the solver is built by the caller *inside* its thread
 /// (LocalSolver is deliberately !Send — see solver/mod.rs).
+///
+/// `kill_round` injects a fault: the worker completes that (1-based) local
+/// solve and exits *without sending it*, returning the failure reason — the
+/// caller decides how the loss becomes observable (an explicit
+/// [`ServerEvent::WorkerLost`] on a channel, or simply dropping the TCP
+/// socket).  Normal termination returns `None`.
 pub fn worker_loop(
     mut state: WorkerState,
     slowdown: f64,
     jitter: Option<crate::network::JitterModel>,
     mut jitter_rng: Pcg64,
+    kill_round: Option<u64>,
     send: impl Fn(ToServerMsg),
     recv: impl Fn() -> Option<ToWorkerMsg>,
-) {
+) -> Option<String> {
+    let mut round: u64 = 0;
     loop {
         let t0 = Instant::now();
         let msg = state.compute_round();
+        round += 1;
+        if kill_round == Some(round) {
+            return Some(format!("injected fault: died before sending update {round}"));
+        }
         let elapsed = t0.elapsed().as_secs_f64();
         // physical straggler/jitter injection (paper: "forcing worker 1 to
         // sleep at each iteration")
@@ -80,37 +106,44 @@ pub fn worker_loop(
                     state.apply_delta(&delta);
                     break;
                 }
-                None => return, // channel closed
+                None => return None, // channel closed (server gone)
             }
         }
         if state.done() {
-            return;
+            return None;
         }
     }
 }
 
 /// Server loop over abstract endpoints; shared by the thread and TCP
 /// runtimes.  Returns (history, final w, server state, bytes up, bytes down).
+///
+/// Errors when the [`ServerState`] rejects a worker loss — immediately
+/// under `fail_fast`, or when live workers fall below B under `degrade` —
+/// so a dead worker surfaces as a cell error instead of a blocked recv.
 pub fn server_loop(
     mut server: ServerState,
     cfg: &EngineConfig,
     n: usize,
-    recv: impl Fn() -> Option<ToServerMsg>,
+    recv: impl Fn() -> Option<ServerEvent>,
     send: impl Fn(usize, ToWorkerMsg),
-) -> (History, Vec<f32>, ServerState, u64, u64) {
+) -> anyhow::Result<(History, Vec<f32>, ServerState, u64, u64)> {
     let start = Instant::now();
     let mut history = History::new(cfg.algorithm.name());
     let mut bytes_up = 0u64;
     let mut bytes_down = 0u64;
     let mut last_eval_round = 0u64;
     loop {
-        let Some(msg) = recv() else { break };
-        let update = match msg {
-            ToServerMsg::Update(u) => u,
-            ToServerMsg::GapPieces(_) => panic!("unsolicited gap pieces"),
+        let Some(ev) = recv() else { break };
+        let action = match ev {
+            ServerEvent::Msg(ToServerMsg::Update(u)) => {
+                bytes_up += u.wire_bytes() as u64;
+                server.on_update(u)
+            }
+            ServerEvent::Msg(ToServerMsg::GapPieces(_)) => panic!("unsolicited gap pieces"),
+            ServerEvent::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
         };
-        bytes_up += update.wire_bytes() as u64;
-        match server.on_update(update) {
+        match action {
             ServerAction::Wait => {}
             ServerAction::Commit {
                 replies,
@@ -128,33 +161,55 @@ pub fn server_loop(
                         || last_eval_round == 0);
                 if do_eval {
                     last_eval_round = round;
-                    let k = cfg.workers;
-                    for wid in 0..k {
-                        send(
-                            wid,
-                            ToWorkerMsg::GapRequest(GapRequestMsg {
-                                w: server.w().to_vec(),
-                            }),
-                        );
+                    // probe only live workers; a degraded gap sums the
+                    // surviving partitions' pieces (normalized by global n,
+                    // so the dead partition's loss mass is simply absent)
+                    let mut awaiting = vec![false; cfg.workers];
+                    for wid in 0..cfg.workers {
+                        if server.is_live(wid) {
+                            awaiting[wid] = true;
+                            send(
+                                wid,
+                                ToWorkerMsg::GapRequest(GapRequestMsg {
+                                    w: server.w().to_vec(),
+                                }),
+                            );
+                        }
                     }
+                    let mut expected = awaiting.iter().filter(|&&a| a).count();
                     let mut merged = ObjectivePieces::default();
                     let mut got = 0;
-                    while got < k {
+                    while got < expected {
                         match recv() {
-                            Some(ToServerMsg::GapPieces(p)) => {
+                            Some(ServerEvent::Msg(ToServerMsg::GapPieces(p))) => {
                                 got += 1;
+                                if let Some(a) = awaiting.get_mut(p.worker as usize) {
+                                    *a = false;
+                                }
                                 merged = merged.merge(&ObjectivePieces {
                                     loss_sum: p.loss_sum,
                                     conj_sum: p.conj_sum,
                                     v: p.v,
                                 });
                             }
-                            Some(ToServerMsg::Update(_)) => {
+                            Some(ServerEvent::Msg(ToServerMsg::Update(_))) => {
                                 panic!("update during gap collection (barrier broken)")
+                            }
+                            Some(ServerEvent::WorkerLost { wid, reason }) => {
+                                // during collection every inbox slot is
+                                // empty, so the loss can never commit — it
+                                // either errors (policy) or shrinks the set
+                                // of probes still awaited
+                                let act = server.on_worker_lost(wid, &reason)?;
+                                debug_assert!(matches!(act, ServerAction::Wait));
+                                if awaiting.get(wid).copied().unwrap_or(false) {
+                                    awaiting[wid] = false;
+                                    expected -= 1;
+                                }
                             }
                             None => {
                                 let w = server.w().to_vec();
-                                return (history, w, server, bytes_up, bytes_down);
+                                return Ok((history, w, server, bytes_up, bytes_down));
                             }
                         }
                     }
@@ -186,13 +241,22 @@ pub fn server_loop(
         }
     }
     let w = server.w().to_vec();
-    (history, w, server, bytes_up, bytes_down)
+    Ok((history, w, server, bytes_up, bytes_down))
 }
 
 /// Run a full experiment on OS threads.  The convergence path is identical
 /// to [`crate::sim::run`]; only the time axis differs (wall clock).
-pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> ThreadRunOutput {
-    cfg.validate(ds.n()).expect("invalid engine config");
+///
+/// Errors on an invalid config or when a worker loss terminates the run
+/// (see [`server_loop`]); worker threads are always joined first, so an
+/// error never leaks a hung thread.
+pub fn run(
+    ds: &Dataset,
+    cfg: &EngineConfig,
+    net: &NetworkModel,
+    seed: u64,
+) -> anyhow::Result<ThreadRunOutput> {
+    cfg.validate(ds.n())?;
     let k = cfg.workers;
     let d = ds.d();
     let rho_d = cfg.message_coords(d);
@@ -204,7 +268,7 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
     let mut jitter_rngs: Vec<Pcg64> =
         (0..k).map(|wid| root_rng.split(0x9999 + wid as u64)).collect();
 
-    let (to_server_tx, to_server_rx) = mpsc::channel::<ToServerMsg>();
+    let (to_server_tx, to_server_rx) = mpsc::channel::<ServerEvent>();
     let mut worker_txs = Vec::new();
     let mut handles = Vec::new();
     let start = Instant::now();
@@ -218,6 +282,7 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
         let jitter_rng = std::mem::replace(&mut jitter_rngs[wid], Pcg64::new(0));
         let slowdown = net.slowdown.get(wid).copied().unwrap_or(1.0);
         let jitter = net.jitter.clone();
+        let kill_round = net.faults.kill_round_for(wid, seed);
         let (loss, lambda, sigma, gamma, h, n_global, error_feedback) = (
             cfg.loss,
             cfg.lambda,
@@ -232,16 +297,23 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
             let solver = SdcaSolver::new(p, loss, lambda, n_global, sigma, gamma, solver_rng);
             let mut state = WorkerState::new(wid, Box::new(solver), gamma as f32, h, rho_d_msg);
             state.set_error_feedback(error_feedback);
-            worker_loop(
+            let up_msg = up.clone();
+            let died = worker_loop(
                 state,
                 slowdown,
                 jitter,
                 jitter_rng,
+                kill_round,
                 move |m| {
-                    let _ = up.send(m);
+                    let _ = up_msg.send(ServerEvent::Msg(m));
                 },
                 move || rx.recv().ok(),
             );
+            // an injected death becomes an explicit loss notice — the
+            // in-process analogue of a TCP reader seeing the socket die
+            if let Some(reason) = died {
+                let _ = up.send(ServerEvent::WorkerLost { wid, reason });
+            }
         }));
     }
     drop(to_server_tx);
@@ -253,10 +325,11 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
             period: cfg.period,
             outer_rounds: cfg.outer_rounds,
             gamma: cfg.gamma as f32,
+            policy: cfg.fail_policy,
         },
         d,
     );
-    let (history, final_w, server, bytes_up, bytes_down) = server_loop(
+    let result = server_loop(
         server,
         cfg,
         ds.n(),
@@ -265,11 +338,14 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
             let _ = worker_txs[wid].send(msg);
         },
     );
+    // unblock and join every worker BEFORE surfacing a server error, so a
+    // failed cell never leaks parked threads
     drop(worker_txs);
     for h in handles {
         let _ = h.join();
     }
-    ThreadRunOutput {
+    let (history, final_w, server, bytes_up, bytes_down) = result?;
+    Ok(ThreadRunOutput {
         history,
         final_w,
         participation: server.participation_rates(),
@@ -279,7 +355,9 @@ pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> T
         wall_time: start.elapsed().as_secs_f64(),
         rounds: server.total_rounds(),
         peak_log_entries: server.peak_log_entries(),
-    }
+        failures: server.failures().to_vec(),
+        live_workers: server.live_workers(),
+    })
 }
 
 #[cfg(test)]
@@ -300,7 +378,7 @@ mod tests {
         let mut cfg = EngineConfig::acpd(4, 2, 4, 1e-2);
         cfg.h = 256;
         cfg.outer_rounds = 8;
-        let out = run(&ds, &cfg, &NetworkModel::lan(), 3);
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 3).unwrap();
         assert!(!out.history.points.is_empty());
         assert!(
             out.history.last_gap() < 0.05,
@@ -308,6 +386,8 @@ mod tests {
             out.history.last_gap()
         );
         assert!(out.bytes_up > 0 && out.bytes_down > 0);
+        assert!(out.failures.is_empty());
+        assert_eq!(out.live_workers, 4);
     }
 
     #[test]
@@ -316,7 +396,7 @@ mod tests {
         let mut cfg = EngineConfig::cocoa_plus(3, 1e-2);
         cfg.h = 256;
         cfg.outer_rounds = 30;
-        let out = run(&ds, &cfg, &NetworkModel::lan(), 5);
+        let out = run(&ds, &cfg, &NetworkModel::lan(), 5).unwrap();
         assert!(out.history.last_gap() < 0.02, "gap {}", out.history.last_gap());
         assert!(out.participation.iter().all(|&q| (q - 1.0).abs() < 1e-9));
     }
@@ -332,8 +412,39 @@ mod tests {
         cfg.outer_rounds = 12;
         // worker 0 sleeps 3x its compute time: correctness must be unchanged
         let net = NetworkModel::lan().with_straggler(3, 0, 3.0);
-        let out = run(&ds, &cfg, &net, 9);
+        let out = run(&ds, &cfg, &net, 9).unwrap();
         assert!(out.history.last_gap() < 0.1, "gap {}", out.history.last_gap());
         assert!(out.max_staleness <= (cfg.period - 1) as u64);
+    }
+
+    #[test]
+    fn threads_kill_fail_fast_surfaces_error() {
+        let ds = small_ds();
+        let mut cfg = EngineConfig::acpd(3, 2, 3, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 12;
+        let net = NetworkModel::lan().with_kill(1, 2);
+        let err = run(&ds, &cfg, &net, 9).unwrap_err().to_string();
+        assert!(err.contains("worker 1"), "{err}");
+        assert!(err.contains("fail_fast"), "{err}");
+    }
+
+    #[test]
+    fn threads_kill_degrade_completes_with_survivors() {
+        let ds = small_ds();
+        let mut cfg = EngineConfig::acpd(3, 2, 3, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 12;
+        cfg.fail_policy = crate::protocol::server::FailPolicy::Degrade;
+        let net = NetworkModel::lan().with_kill(1, 2);
+        let out = run(&ds, &cfg, &net, 9).unwrap();
+        assert_eq!(out.live_workers, 2);
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].worker, 1);
+        assert!(
+            out.history.last_gap() < 0.1,
+            "degraded run must still converge, gap {}",
+            out.history.last_gap()
+        );
     }
 }

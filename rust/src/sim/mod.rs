@@ -20,7 +20,7 @@ use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
 use crate::network::NetworkModel;
 use crate::protocol::messages::{DeltaMsg, UpdateMsg};
-use crate::protocol::server::{ServerAction, ServerConfig, ServerState};
+use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
 use crate::solver::objective::{combine, ObjectivePieces};
 use crate::solver::sdca::SdcaSolver;
@@ -30,6 +30,10 @@ use crate::util::rng::Pcg64;
 enum Payload {
     ToServer(UpdateMsg),
     ToWorker(DeltaMsg),
+    /// Injected fault becoming observable at the server ([`crate::network::FaultPlan`]):
+    /// the worker died after its local solve, before sending — the DES
+    /// analogue of a TCP reader seeing the socket close.
+    WorkerLost { wid: usize, reason: String },
 }
 
 struct Event {
@@ -78,6 +82,12 @@ pub struct SimStats {
     /// high-water mark of live commit-log entries on the server (bounded by
     /// the full-barrier period T; the O(d + live-log) memory story)
     pub peak_log_entries: usize,
+    /// workers lost during the run (empty unless the scenario injects
+    /// faults; populated only under `fail_policy = degrade`, since
+    /// `fail_fast` errors the run instead)
+    pub failures: Vec<WorkerFailure>,
+    /// workers still live at the end of the run
+    pub live_workers: usize,
 }
 
 pub struct SimOutput {
@@ -92,8 +102,22 @@ pub struct SimOutput {
 }
 
 /// Run one experiment in the simulator with the pure-rust CSR solver.
-/// Deterministic in all inputs.
+/// Deterministic in all inputs.  Panics on invalid configs and on fault
+/// scenarios that error the run (e.g. a `kill:` under `fail_fast`) — use
+/// [`try_run`] when those must surface as `Err` instead.
 pub fn run(ds: &Dataset, cfg: &EngineConfig, net: &NetworkModel, seed: u64) -> SimOutput {
+    try_run(ds, cfg, net, seed).expect("simulation failed")
+}
+
+/// Fallible variant of [`run`]: worker-loss errors (fail_fast, or degrade
+/// dropping below B) come back as `Err` so callers like [`crate::sweep`]
+/// can record a cell error rather than abort the whole grid.
+pub fn try_run(
+    ds: &Dataset,
+    cfg: &EngineConfig,
+    net: &NetworkModel,
+    seed: u64,
+) -> anyhow::Result<SimOutput> {
     let (loss, lambda, sigma, gamma, n_global) = (
         cfg.loss,
         cfg.lambda,
@@ -120,8 +144,8 @@ pub fn run_with_solvers(
         crate::data::partition::Partition,
         Pcg64,
     ) -> Box<dyn crate::solver::LocalSolver>,
-) -> SimOutput {
-    cfg.validate(ds.n()).expect("invalid engine config");
+) -> anyhow::Result<SimOutput> {
+    cfg.validate(ds.n())?;
     let d = ds.d();
     let k = cfg.workers;
     let rho_d = cfg.message_coords(d);
@@ -152,6 +176,7 @@ pub fn run_with_solvers(
             period: cfg.period,
             outer_rounds: cfg.outer_rounds,
             gamma: cfg.gamma as f32,
+            policy: cfg.fail_policy,
         },
         d,
     );
@@ -165,11 +190,35 @@ pub fn run_with_solvers(
     let mut comm_time = 0.0f64;
     let mut history = History::new(format!("{}", cfg.algorithm.name()));
 
+    // fault plan: same deterministic draw as the threads/TCP runtimes, so
+    // kill:<wid>@<round> and flaky:<p> scenarios are cross-runtime comparable
+    let kill_rounds: Vec<Option<u64>> =
+        (0..k).map(|wid| net.faults.kill_round_for(wid, seed)).collect();
+    let mut rounds_sent = vec![0u64; k];
+
     // kick off: every worker computes its first round at t = 0
     for w in workers.iter_mut() {
         let dt = net.compute_time(w.id, cfg.h, nnz_means[w.id], &mut time_rng);
         compute_time += dt;
         let msg = w.compute_round();
+        rounds_sent[w.id] = 1;
+        if kill_rounds[w.id] == Some(1) {
+            // dies after the local solve, before the send (the same point
+            // worker_loop injects the fault): compute is charged, nothing
+            // goes on the wire, and the loss becomes observable at `dt`
+            heap.push(Event {
+                time: dt,
+                seq: {
+                    seq += 1;
+                    seq
+                },
+                payload: Payload::WorkerLost {
+                    wid: w.id,
+                    reason: "injected fault: died before sending update 1".into(),
+                },
+            });
+            continue;
+        }
         let up = net.message_time(msg.wire_bytes());
         comm_time += up;
         bytes_up += msg.wire_bytes() as u64;
@@ -187,62 +236,11 @@ pub fn run_with_solvers(
     let mut last_eval_round = 0u64;
     while let Some(ev) = heap.pop() {
         now = now.max(ev.time);
-        match ev.payload {
-            Payload::ToServer(msg) => {
-                match server.on_update(msg) {
-                    ServerAction::Wait => {}
-                    ServerAction::Commit {
-                        replies,
-                        round,
-                        full_barrier,
-                        finished,
-                    } => {
-                        for r in replies {
-                            let t = net.message_time(r.wire_bytes());
-                            comm_time += t;
-                            bytes_down += r.wire_bytes() as u64;
-                            heap.push(Event {
-                                time: now + t,
-                                seq: {
-                                    seq += 1;
-                                    seq
-                                },
-                                payload: Payload::ToWorker(r),
-                            });
-                        }
-                        // evaluate the duality gap at FULL BARRIERS only —
-                        // the only moments a real deployment can assemble a
-                        // consistent (w, alpha) pair (the threads/TCP
-                        // runtimes probe exactly there), and the phase at
-                        // which the group-wise dynamics are smooth.
-                        let do_eval = full_barrier
-                            && (round - last_eval_round >= cfg.eval_every as u64
-                                || finished
-                                || last_eval_round == 0);
-                        if do_eval {
-                            last_eval_round = round;
-                            let gap = evaluate_gap(&workers, server.w(), cfg, ds.n());
-                            history.push(HistoryPoint {
-                                round,
-                                time: now,
-                                primal: gap.0,
-                                dual: gap.1,
-                                gap: gap.2,
-                                bytes_up,
-                                bytes_down,
-                                compute_time,
-                                comm_time,
-                            });
-                            if cfg.target_gap > 0.0
-                                && gap.2 <= cfg.target_gap
-                                && !server.finished()
-                            {
-                                server.request_stop();
-                            }
-                        }
-                    }
-                }
-            }
+        // ToServer and WorkerLost both yield a ServerAction consumed by the
+        // shared commit block below; ToWorker handles itself and continues.
+        let action = match ev.payload {
+            Payload::ToServer(msg) => server.on_update(msg),
+            Payload::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
             Payload::ToWorker(msg) => {
                 let wid = msg.worker as usize;
                 workers[wid].apply_delta(&msg);
@@ -250,17 +248,84 @@ pub fn run_with_solvers(
                     let dt = net.compute_time(wid, cfg.h, nnz_means[wid], &mut time_rng);
                     compute_time += dt;
                     let out = workers[wid].compute_round();
-                    let up = net.message_time(out.wire_bytes());
-                    comm_time += up;
-                    bytes_up += out.wire_bytes() as u64;
-                    heap.push(Event {
-                        time: now + dt + up,
-                        seq: {
-                            seq += 1;
-                            seq
-                        },
-                        payload: Payload::ToServer(out),
-                    });
+                    rounds_sent[wid] += 1;
+                    if kill_rounds[wid] == Some(rounds_sent[wid]) {
+                        heap.push(Event {
+                            time: now + dt,
+                            seq: {
+                                seq += 1;
+                                seq
+                            },
+                            payload: Payload::WorkerLost {
+                                wid,
+                                reason: format!(
+                                    "injected fault: died before sending update {}",
+                                    rounds_sent[wid]
+                                ),
+                            },
+                        });
+                    } else {
+                        let up = net.message_time(out.wire_bytes());
+                        comm_time += up;
+                        bytes_up += out.wire_bytes() as u64;
+                        heap.push(Event {
+                            time: now + dt + up,
+                            seq: {
+                                seq += 1;
+                                seq
+                            },
+                            payload: Payload::ToServer(out),
+                        });
+                    }
+                }
+                continue;
+            }
+        };
+        if let ServerAction::Commit {
+            replies,
+            round,
+            full_barrier,
+            finished,
+        } = action
+        {
+            for r in replies {
+                let t = net.message_time(r.wire_bytes());
+                comm_time += t;
+                bytes_down += r.wire_bytes() as u64;
+                heap.push(Event {
+                    time: now + t,
+                    seq: {
+                        seq += 1;
+                        seq
+                    },
+                    payload: Payload::ToWorker(r),
+                });
+            }
+            // evaluate the duality gap at FULL BARRIERS only —
+            // the only moments a real deployment can assemble a
+            // consistent (w, alpha) pair (the threads/TCP
+            // runtimes probe exactly there), and the phase at
+            // which the group-wise dynamics are smooth.
+            let do_eval = full_barrier
+                && (round - last_eval_round >= cfg.eval_every as u64
+                    || finished
+                    || last_eval_round == 0);
+            if do_eval {
+                last_eval_round = round;
+                let gap = evaluate_gap(&workers, &server, cfg, ds.n());
+                history.push(HistoryPoint {
+                    round,
+                    time: now,
+                    primal: gap.0,
+                    dual: gap.1,
+                    gap: gap.2,
+                    bytes_up,
+                    bytes_down,
+                    compute_time,
+                    comm_time,
+                });
+                if cfg.target_gap > 0.0 && gap.2 <= cfg.target_gap && !server.finished() {
+                    server.request_stop();
                 }
             }
         }
@@ -276,6 +341,8 @@ pub fn run_with_solvers(
         wall_time: now,
         rounds: server.total_rounds(),
         peak_log_entries: server.peak_log_entries(),
+        failures: server.failures().to_vec(),
+        live_workers: server.live_workers(),
     };
     // assemble final global dual state + leftover residual mass
     let mut final_alpha = vec![0.0f32; ds.n()];
@@ -289,25 +356,31 @@ pub fn run_with_solvers(
             *r += x;
         }
     }
-    SimOutput {
+    Ok(SimOutput {
         history,
         final_w: server.w().to_vec(),
         final_alpha,
         final_residual,
         stats,
-    }
+    })
 }
 
 /// Assemble the global duality gap from worker-local state + server model.
+/// Only live workers contribute pieces (a degraded run evaluates over the
+/// surviving partitions, normalized by the global n — matching what the
+/// threads/TCP server can actually probe).
 fn evaluate_gap(
     workers: &[WorkerState],
-    w: &[f32],
+    server: &ServerState,
     cfg: &EngineConfig,
     n: usize,
 ) -> (f64, f64, f64) {
+    let w = server.w();
     let mut merged = ObjectivePieces::default();
     for wk in workers {
-        merged = merged.merge(&wk.solver().objective_pieces(w));
+        if server.is_live(wk.id) {
+            merged = merged.merge(&wk.solver().objective_pieces(w));
+        }
     }
     let rep = combine(&merged, w, cfg.lambda, n);
     (rep.primal, rep.dual, rep.gap)
@@ -438,5 +511,58 @@ mod tests {
         let out = run(&ds, &cfg, &NetworkModel::lan(), 4);
         assert!(out.history.last_gap() <= 0.05 * 1.5);
         assert!(out.stats.rounds < 500, "ran {} rounds", out.stats.rounds);
+    }
+
+    #[test]
+    fn kill_fail_fast_surfaces_bounded_error() {
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        let net = NetworkModel::lan().with_kill(1, 2);
+        let err = try_run(&ds, &cfg, &net, 7).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 1"), "{msg}");
+        assert!(msg.contains("fail_fast"), "{msg}");
+        assert!(msg.contains("injected fault"), "{msg}");
+    }
+
+    #[test]
+    fn kill_degrade_completes_with_survivors() {
+        use crate::protocol::server::FailPolicy;
+        let ds = small_ds();
+        let mut cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        cfg.fail_policy = FailPolicy::Degrade;
+        cfg.outer_rounds = 12;
+        let out = try_run(&ds, &cfg, &NetworkModel::lan().with_kill(1, 2), 7).unwrap();
+        assert_eq!(out.stats.live_workers, 3);
+        assert_eq!(out.stats.failures.len(), 1);
+        assert_eq!(out.stats.failures[0].worker, 1);
+        assert!(out.stats.failures[0].reason.contains("injected fault"));
+        assert!(out.history.last_gap() < 0.1, "gap {}", out.history.last_gap());
+        // deterministic: the same fault plan reproduces the same record
+        let again = try_run(&ds, &cfg, &NetworkModel::lan().with_kill(1, 2), 7).unwrap();
+        assert_eq!(out.stats.failures, again.stats.failures);
+        assert_eq!(out.history.last_gap(), again.history.last_gap());
+    }
+
+    #[test]
+    fn kill_degrade_below_group_errors() {
+        use crate::protocol::server::FailPolicy;
+        let ds = small_ds();
+        let mut cfg = fast_cfg(EngineConfig::acpd(2, 2, 5, 1e-3));
+        cfg.fail_policy = FailPolicy::Degrade;
+        let err = try_run(&ds, &cfg, &NetworkModel::lan().with_kill(0, 1), 7).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("live workers"), "{msg}");
+    }
+
+    #[test]
+    fn fault_free_paths_ignore_fault_plumbing() {
+        // the fault RNG stream must not perturb a fault-free run: the lan()
+        // model and an explicitly empty FaultPlan are byte-identical
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        let a = run(&ds, &cfg, &NetworkModel::lan(), 7);
+        assert!(a.stats.failures.is_empty());
+        assert_eq!(a.stats.live_workers, 4);
     }
 }

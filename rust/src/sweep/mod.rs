@@ -70,6 +70,19 @@
 //! tolerance, time axes side by side) — `acpd sweep --runtime threads
 //! --parity` prints that table and fails if any cell disagrees.
 //!
+//! ## Fault scenarios
+//!
+//! The scenario axis also accepts `kill:<wid>@<round>` and `flaky:<p>`
+//! fault injections, honored by all three runtimes: the DES schedules the
+//! loss as a virtual event, while `threads`/`tcp` cells actually lose the
+//! worker (thread exit / socket close) and detect it through the
+//! [`crate::transport::TransportConfig`] liveness deadlines.  The shared
+//! `fail_policy` knob decides whether such a cell errors (`fail_fast`,
+//! default — the error surfaces through the pool, it never hangs) or
+//! completes on the survivors (`degrade`), with `live_workers`/`failures`
+//! report columns recording the outcome so [`report::parity`] can
+//! cross-check a degraded real run against the degraded sim.
+//!
 //! Example sweep config (`[sweep]` section, TOML subset — lists are
 //! comma-separated strings because the in-tree parser has no arrays;
 //! single scalars like `workers = 4` are accepted as one-element lists, so
@@ -91,6 +104,7 @@
 //! target_gap = 1e-4
 //! runtime = "sim"      # sim | threads | tcp
 //! threads = 0          # 0 = all cores
+//! fail_policy = "fail_fast"  # fail_fast | degrade (fault scenarios)
 //! ```
 
 pub mod report;
@@ -109,6 +123,7 @@ use crate::linalg::dense;
 use crate::loss::LossKind;
 use crate::metrics::History;
 use crate::network::{NetworkModel, Scenario};
+use crate::protocol::server::{FailPolicy, WorkerFailure};
 use crate::sim;
 
 pub use report::{parity, parity_csv, render_parity, ParityRow, RankedRow, SweepReport};
@@ -190,6 +205,10 @@ pub struct SweepSpec {
     /// Execution substrate for every cell (`sim` keeps the byte-identity
     /// guarantee; `threads`/`tcp` report real wall-clock axes).
     pub runtime: RuntimeKind,
+    /// Reaction to a lost worker in fault scenarios (`kill:`/`flaky:`):
+    /// `fail_fast` (default) errors the cell; `degrade` keeps committing
+    /// while live ≥ B and records the loss in the report.
+    pub fail_policy: FailPolicy,
     // ---- dataset knobs ----
     pub data_seed: u64,
     /// Override the source's sample count (0 = source default; LIBSVM
@@ -227,6 +246,7 @@ impl Default for SweepSpec {
             target_gap: 0.0,
             eval_every: 1,
             runtime: RuntimeKind::Sim,
+            fail_policy: FailPolicy::FailFast,
             data_seed: 42,
             n_override: 0,
             d_override: 0,
@@ -303,6 +323,21 @@ pub struct CellResult {
     pub compute_time: f64,
     pub comm_time: f64,
     pub eval_points: usize,
+    /// Workers still live when the cell finished (== `workers` unless the
+    /// scenario injected faults under `fail_policy = degrade`).
+    pub live_workers: usize,
+    /// Compact record of lost workers: `w<wid>@r<round>` joined by `;`
+    /// (empty for fault-free cells).
+    pub failures: String,
+}
+
+/// Render worker failures in the report's compact `w<wid>@r<round>` form.
+fn failures_column(failures: &[WorkerFailure]) -> String {
+    failures
+        .iter()
+        .map(|f| format!("w{}@r{}", f.worker, f.round))
+        .collect::<Vec<_>>()
+        .join(";")
 }
 
 /// A cell bound to its validated engine/network configs (internal).
@@ -406,6 +441,7 @@ impl SweepSpec {
         e.target_gap = self.target_gap;
         e.eval_every = self.eval_every;
         e.seed = cell.seed;
+        e.fail_policy = self.fail_policy;
         e
     }
 
@@ -465,7 +501,8 @@ impl SweepSpec {
         };
         format!(
             "{} algos x {} scenarios x {} datasets x {} K x {} B x {} T x {} rho_d x {} seeds \
-             = {} cells{} (runtime={} H={} lambda={:.1e} loss={} L={} target_gap={})",
+             = {} cells{} (runtime={} H={} lambda={:.1e} loss={} L={} target_gap={} \
+             fail_policy={})",
             self.algorithms.len(),
             self.scenarios.len(),
             self.datasets.len(),
@@ -482,6 +519,7 @@ impl SweepSpec {
             self.loss.name(),
             self.outer_rounds,
             self.target_gap,
+            self.fail_policy.name(),
         )
     }
 
@@ -540,6 +578,13 @@ impl SweepSpec {
             format!(
                 "sweep.runtime: unknown runtime {rt_name:?} ({})",
                 RuntimeKind::help_names()
+            )
+        })?;
+        let fp_name = doc.get_str("sweep", "fail_policy", s.fail_policy.name());
+        s.fail_policy = FailPolicy::from_name(&fp_name).with_context(|| {
+            format!(
+                "sweep.fail_policy: unknown policy {fp_name:?} ({})",
+                FailPolicy::help_names()
             )
         })?;
         s.data_seed = doc.get_i64("sweep", "data_seed", s.data_seed as i64) as u64;
@@ -765,12 +810,27 @@ struct CellRun {
     compute_time: f64,
     comm_time: f64,
     w_norm: f64,
+    live_workers: usize,
+    failures: Vec<WorkerFailure>,
 }
 
 fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<CellResult> {
+    // a fault scenario under fail_fast makes the cell itself the error —
+    // every runtime surfaces it here (bounded by its liveness deadlines)
+    // instead of hanging the pool
+    let cell_ctx = || {
+        format!(
+            "cell {} ({} / {} / {} / K={})",
+            pc.cell.index,
+            pc.cell.algorithm.name(),
+            pc.cell.scenario.name(),
+            pc.cell.source.name(),
+            pc.cell.workers
+        )
+    };
     let run = match runtime {
         RuntimeKind::Sim => {
-            let out = sim::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+            let out = sim::try_run(ds, &pc.engine, &pc.net, pc.cell.seed).with_context(cell_ctx)?;
             CellRun {
                 rounds: out.stats.rounds,
                 wall_time: out.stats.wall_time,
@@ -779,11 +839,14 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 compute_time: out.stats.compute_time,
                 comm_time: out.stats.comm_time,
                 w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+                live_workers: out.stats.live_workers,
+                failures: out.stats.failures,
                 history: out.history,
             }
         }
         RuntimeKind::Threads => {
-            let out = crate::runtime_threads::run(ds, &pc.engine, &pc.net, pc.cell.seed);
+            let out = crate::runtime_threads::run(ds, &pc.engine, &pc.net, pc.cell.seed)
+                .with_context(cell_ctx)?;
             CellRun {
                 rounds: out.rounds,
                 wall_time: out.wall_time,
@@ -792,10 +855,12 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 compute_time: 0.0,
                 comm_time: 0.0,
                 w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+                live_workers: out.live_workers,
+                failures: out.failures,
                 history: out.history,
             }
         }
-        RuntimeKind::Tcp => run_cell_tcp(pc, ds)?,
+        RuntimeKind::Tcp => run_cell_tcp(pc, ds).with_context(cell_ctx)?,
     };
     let (round_to_target, time_to_target) = if pc.engine.target_gap > 0.0 {
         match run.history.time_to_gap(pc.engine.target_gap) {
@@ -830,6 +895,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         compute_time: run.compute_time,
         comm_time: run.comm_time,
         eval_points: run.history.points.len(),
+        live_workers: run.live_workers,
+        failures: failures_column(&run.failures),
     })
 }
 
@@ -840,26 +907,30 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
 /// listener is bound to an ephemeral port and handed to the server
 /// race-free; workers connect to its resolved address.
 ///
-/// Fail-stop assumption: like the paper's MPI deployment, the protocol has
-/// no timeouts — if a worker dies mid-run (socket error, panic) the server
-/// blocks waiting for its message and the cell hangs rather than erroring.
-/// The preconditions that matter are closed off up front (engine configs
-/// are validated before the pool starts, the listener is bound before any
-/// worker connects), so on localhost this is a theoretical hazard; see
-/// ROADMAP "TCP cell hardening" for the timeout/heartbeat follow-up.
+/// Liveness: the server runs under [`crate::transport::TransportConfig`]
+/// deadlines (accept, hello, per-read), so a worker dying at ANY point —
+/// before connecting, mid-handshake, mid-run — surfaces as a typed
+/// `WorkerLost` event within one read-timeout.  Under `fail_fast` the cell
+/// returns the error; under `degrade` it completes on the survivors while
+/// live ≥ B.  No configuration can hang the pool.
 fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
+    let tcfg = crate::transport::TransportConfig::default();
     let listener =
         std::net::TcpListener::bind("127.0.0.1:0").context("bind tcp sweep cell listener")?;
     let addr = listener.local_addr().context("resolve listener addr")?.to_string();
     let t0 = std::time::Instant::now();
     let out = std::thread::scope(|scope| -> Result<crate::transport::TcpServerOutput> {
-        let server =
-            scope.spawn(|| crate::transport::run_server_on(listener, ds.n(), ds.d(), &pc.engine));
+        let server = scope.spawn(|| {
+            crate::transport::run_server_on(listener, ds.n(), ds.d(), &pc.engine, &tcfg)
+        });
         let mut workers = Vec::new();
         for wid in 0..pc.engine.workers {
             let addr = addr.clone();
+            let tcfg = &tcfg;
             workers.push(scope.spawn(move || {
-                crate::transport::run_worker(&addr, wid, ds, &pc.engine, &pc.net, pc.cell.seed)
+                crate::transport::run_worker(
+                    &addr, wid, ds, &pc.engine, &pc.net, pc.cell.seed, tcfg,
+                )
             }));
         }
         let out = server
@@ -879,6 +950,8 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
         compute_time: 0.0,
         comm_time: 0.0,
         w_norm: dense::norm2_sq(&out.final_w).sqrt(),
+        live_workers: out.live_workers,
+        failures: out.failures,
         history: out.history,
     })
 }
@@ -1129,7 +1202,57 @@ threads = 2
         assert!(SweepSpec::from_toml("[sweep]\ndatasets = \"nope\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\npresets = \"nope\"\n").is_err());
         assert!(SweepSpec::from_toml("[sweep]\nruntime = \"mpi\"\n").is_err());
+        assert!(SweepSpec::from_toml("[sweep]\nfail_policy = \"retry\"\n").is_err());
         assert!(parse_list::<usize>("1,x").is_err());
+    }
+
+    #[test]
+    fn toml_fail_policy_knob_parses() {
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 1\n").unwrap();
+        assert_eq!(spec.fail_policy, FailPolicy::FailFast);
+        let spec = SweepSpec::from_toml("[sweep]\nfail_policy = \"degrade\"\n").unwrap();
+        assert_eq!(spec.fail_policy, FailPolicy::Degrade);
+        // the knob reaches every cell's engine config
+        let cells = spec.cells();
+        assert_eq!(spec.engine_for(&cells[0]).fail_policy, FailPolicy::Degrade);
+        assert!(spec.describe().contains("fail_policy=degrade"), "{}", spec.describe());
+    }
+
+    /// A `kill:` scenario cell errors the sweep under fail_fast (with the
+    /// cell named in the message) and completes with failure accounting
+    /// under degrade.
+    #[test]
+    fn fault_scenario_cells_respect_fail_policy() {
+        let mut spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Kill { worker: 1, round: 2 }],
+            datasets: vec![preset(Preset::DenseTest)],
+            rho_ds: vec![0],
+            seeds: vec![1],
+            workers: vec![4],
+            groups: vec![2],
+            periods: vec![5],
+            h: 64,
+            outer_rounds: 4,
+            n_override: 64,
+            ..SweepSpec::default()
+        };
+        let err = format!("{:#}", run_sweep(&spec).unwrap_err());
+        assert!(err.contains("kill:1@2"), "{err}");
+        assert!(err.contains("fail_fast"), "{err}");
+        spec.fail_policy = FailPolicy::Degrade;
+        let report = run_sweep(&spec).expect("degrade sweep");
+        assert_eq!(report.cells.len(), 1);
+        let c = &report.cells[0];
+        assert_eq!(c.live_workers, 3);
+        // the recorded round is the server round at loss time — pin the
+        // worker id, not the exact commit count
+        assert!(c.failures.starts_with("w1@r"), "{}", c.failures);
+        // fault-free cells keep empty accounting
+        spec.scenarios = vec![Scenario::Lan];
+        let clean = run_sweep(&spec).expect("clean sweep");
+        assert_eq!(clean.cells[0].live_workers, 4);
+        assert_eq!(clean.cells[0].failures, "");
     }
 
     /// A tiny matrix end-to-end on each real runtime: cells execute, report

@@ -90,6 +90,8 @@ impl SweepReport {
             "eval_points",
             "runtime",
             "w_norm",
+            "live_workers",
+            "failures",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -125,6 +127,8 @@ impl SweepReport {
                 &c.eval_points,
                 &c.runtime,
                 &c.w_norm,
+                &c.live_workers,
+                &c.failures,
             ]);
         }
         w
@@ -285,7 +289,8 @@ impl SweepReport {
                  \"runtime\": {}, \"w_norm\": {}, \"final_gap\": {}, \
                  \"rounds\": {}, \"round_to_target\": {}, \"time_to_target_s\": {}, \
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
-                 \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}}}{}\n",
+                 \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}, \
+                 \"live_workers\": {}, \"failures\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
@@ -314,6 +319,8 @@ impl SweepReport {
                 json_f64(c.compute_time),
                 json_f64(c.comm_time),
                 c.eval_points,
+                c.live_workers,
+                json_str(&c.failures),
                 if i + 1 < self.cells.len() { "," } else { "" },
             );
         }
@@ -608,6 +615,8 @@ mod tests {
             compute_time: 0.7,
             comm_time: 0.3,
             eval_points: 10,
+            live_workers: 4,
+            failures: String::new(),
         }
     }
 
@@ -782,6 +791,12 @@ mod tests {
         let cells = r.cells_csv().to_string();
         assert_eq!(cells.lines().count(), 9); // header + 8 cells
         assert!(cells.starts_with("index,algorithm,scenario,dataset,n,d,nnz,"));
+        // fault-accounting columns append at the END so existing consumers
+        // keep their column positions
+        assert!(
+            cells.lines().next().unwrap().ends_with("w_norm,live_workers,failures"),
+            "{cells}"
+        );
         let header_cols = cells.lines().next().unwrap().split(',').count();
         assert!(cells.lines().skip(1).all(|l| l.split(',').count() == header_cols));
         let ranked = r.ranked_csv().to_string();
@@ -802,6 +817,8 @@ mod tests {
         assert!(j.contains("\"time_to_target_s\": null"));
         assert!(j.contains("\"dataset\": \"dense-test\""));
         assert!(j.contains("\"nnz\": 131072"));
+        assert!(j.contains("\"live_workers\": 4"));
+        assert!(j.contains("\"failures\": \"\""));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }

@@ -12,17 +12,27 @@
 //! `acpd sweep --runtime tcp` spawns one such cluster per sweep cell on
 //! in-process threads ([`crate::sweep`]).
 //!
-//! Like the paper's MPI deployment this transport is **fail-stop**: there
-//! are no timeouts or heartbeats, so a worker that dies mid-run leaves the
-//! server blocked on its socket rather than erroring (ROADMAP "TCP cell
-//! hardening" tracks the follow-up).  Byte accounting is identical to the
+//! Worker death is a first-class event, not a hang: every established
+//! socket carries a read timeout ([`TransportConfig::read_timeout`] — the
+//! liveness contract: a worker silent for longer is treated as dead), and
+//! the per-socket reader threads convert socket death, timeout, and decode
+//! failure into a typed [`ServerEvent::WorkerLost`] on the server channel.
+//! The [`ServerState`] then applies the configured
+//! [`FailPolicy`](crate::protocol::server::FailPolicy): `fail_fast` errors
+//! the run with the worker id and reason within one read timeout, while
+//! `degrade` drops the worker from the barrier set and keeps committing as
+//! long as live workers ≥ B.  The accept loop likewise rejects stray,
+//! malformed, duplicate and out-of-range hellos per-connection and keeps
+//! listening until [`TransportConfig::accept_deadline`], so one bad client
+//! cannot kill a cluster bring-up.  Byte accounting is identical to the
 //! other runtimes because all three charge [`ToServerMsg`]/[`ToWorkerMsg`]
 //! `wire_bytes()` — the frames on these sockets are those exact bytes.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -31,13 +41,42 @@ use crate::engine::EngineConfig;
 use crate::metrics::History;
 use crate::network::NetworkModel;
 use crate::protocol::messages::{ToServerMsg, ToWorkerMsg};
-use crate::protocol::server::{ServerConfig, ServerState};
+use crate::protocol::server::{ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
-use crate::runtime_threads::{server_loop, worker_loop};
+use crate::runtime_threads::{server_loop, worker_loop, ServerEvent};
 use crate::solver::sdca::SdcaSolver;
 use crate::util::rng::Pcg64;
 
 const MAX_FRAME: u32 = 1 << 30;
+
+/// Timeouts governing the TCP runtime.  Every blocking socket operation is
+/// bounded by one of these, which is what guarantees no cell can hang on a
+/// dead peer (tests/tcp_faults.rs pins the bound with watchdogs).
+#[derive(Debug, Clone)]
+pub struct TransportConfig {
+    /// How long an accepted connection may take to present its HELLO frame
+    /// before the connection is rejected.
+    pub hello_timeout: Duration,
+    /// Liveness deadline on established sockets (SO_RCVTIMEO): a peer
+    /// silent for longer is reported as [`ServerEvent::WorkerLost`] on the
+    /// server side, and treated as a dead server on the worker side.
+    /// Must exceed the longest legitimate inter-message gap (one local
+    /// solve plus scheduling noise).
+    pub read_timeout: Duration,
+    /// How long [`run_server_on`] keeps accepting before giving up on
+    /// workers that never connected.
+    pub accept_deadline: Duration,
+}
+
+impl Default for TransportConfig {
+    fn default() -> TransportConfig {
+        TransportConfig {
+            hello_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(30),
+            accept_deadline: Duration::from_secs(30),
+        }
+    }
+}
 
 /// Write one length-prefixed frame.  Generic over the sink so the framing
 /// logic is unit-testable against in-memory buffers; the runtimes pass
@@ -54,8 +93,16 @@ pub fn read_frame(stream: &mut impl Read) -> Result<Option<Vec<u8>>> {
 /// `send_frame` with an explicit size ceiling (`len < max` accepted).
 /// Split out so the boundary is testable without gigabyte payloads.
 fn send_frame_limited(stream: &mut impl Write, payload: &[u8], max: u32) -> Result<()> {
+    // the ceiling is checked in usize space BEFORE the u32 cast: a ≥ 4 GiB
+    // payload would otherwise wrap and slip past the guard, writing a
+    // corrupt length prefix (untestable at runtime without a 4 GiB buffer,
+    // hence the compile-time-obvious ordering here)
+    anyhow::ensure!(
+        (payload.len() as u64) < max as u64,
+        "frame too large: {} bytes",
+        payload.len()
+    );
     let len = payload.len() as u32;
-    anyhow::ensure!(len < max, "frame too large: {len}");
     stream.write_all(&len.to_le_bytes())?;
     stream.write_all(payload)?;
     Ok(())
@@ -65,11 +112,20 @@ fn send_frame_limited(stream: &mut impl Write, payload: &[u8], max: u32) -> Resu
 /// BEFORE the body buffer is allocated, so a hostile/corrupt header cannot
 /// trigger a huge allocation.
 fn read_frame_limited(stream: &mut impl Read, max: u32) -> Result<Option<Vec<u8>>> {
+    // manual header loop instead of read_exact: only an EOF at offset 0 —
+    // a frame boundary — is a clean shutdown (`Ok(None)`); an EOF after
+    // 1–3 header bytes is a torn frame and must surface as an error
+    // (read_exact's UnexpectedEof cannot tell the two apart)
     let mut len_buf = [0u8; 4];
-    match stream.read_exact(&mut len_buf) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("torn frame header: EOF after {got} of 4 bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
     }
     let len = u32::from_le_bytes(len_buf);
     if len >= max {
@@ -106,53 +162,166 @@ pub struct TcpServerOutput {
     pub rounds: u64,
     /// high-water mark of live commit-log entries on the server
     pub peak_log_entries: usize,
+    /// every observed worker loss (empty on a healthy run)
+    pub failures: Vec<WorkerFailure>,
+    /// workers still in the barrier set at the end (== K when healthy)
+    pub live_workers: usize,
 }
 
 /// Run the coordinator: accept K workers on `addr`, drive the protocol to
 /// completion, return the history.
-pub fn run_server(addr: &str, ds_n: usize, d: usize, cfg: &EngineConfig) -> Result<TcpServerOutput> {
+pub fn run_server(
+    addr: &str,
+    ds_n: usize,
+    d: usize,
+    cfg: &EngineConfig,
+    tcfg: &TransportConfig,
+) -> Result<TcpServerOutput> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    run_server_on(listener, ds_n, d, cfg)
+    run_server_on(listener, ds_n, d, cfg, tcfg)
+}
+
+/// Close every accepted socket and reap the reader threads — shutting a
+/// socket down unblocks its reader immediately, so teardown never waits
+/// out a read timeout.
+fn teardown(sockets: impl Iterator<Item = TcpStream>, readers: Vec<thread::JoinHandle<()>>) {
+    for s in sockets {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for h in readers {
+        let _ = h.join();
+    }
+}
+
+/// Map a read failure to the `WorkerLost` reason string.  SO_RCVTIMEO
+/// surfaces as WouldBlock (unix) or TimedOut (windows).
+fn classify_read_error(e: &anyhow::Error, timeout: Duration) -> String {
+    if let Some(io) = e.root_cause().downcast_ref::<std::io::Error>() {
+        if matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            return format!("read timeout ({timeout:?} liveness deadline exceeded)");
+        }
+    }
+    format!("socket error: {e:#}")
 }
 
 /// Like [`run_server`], but on an already-bound listener.  Callers that need
 /// a race-free ephemeral port (the sweep engine's `runtime = tcp` cells, the
 /// tests) bind `127.0.0.1:0` themselves, read the local address, and hand
 /// the listener over before spawning workers.
+///
+/// A connection that closes early, times out before its hello, presents a
+/// malformed hello, or claims a duplicate / out-of-range worker id is
+/// rejected individually; accepting continues until all K workers are in or
+/// [`TransportConfig::accept_deadline`] expires (then the bring-up errors,
+/// naming how many workers arrived).  After bring-up, worker death follows
+/// the [`ServerEvent::WorkerLost`] path described in the module docs.
 pub fn run_server_on(
     listener: TcpListener,
     ds_n: usize,
     d: usize,
     cfg: &EngineConfig,
+    tcfg: &TransportConfig,
 ) -> Result<TcpServerOutput> {
     let k = cfg.workers;
     let mut write_halves: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
-    let (tx, rx) = mpsc::channel::<ToServerMsg>();
+    let (tx, rx) = mpsc::channel::<ServerEvent>();
     let mut reader_handles = Vec::new();
 
-    for _ in 0..k {
-        let (mut stream, peer) = listener.accept().context("accept worker")?;
+    listener
+        .set_nonblocking(true)
+        .context("set listener nonblocking")?;
+    let deadline = Instant::now() + tcfg.accept_deadline;
+    let mut accepted = 0usize;
+    while accepted < k {
+        if Instant::now() >= deadline {
+            teardown(write_halves.into_iter().flatten(), reader_handles);
+            bail!(
+                "accepted {accepted} of {k} workers within {:?} accept deadline",
+                tcfg.accept_deadline
+            );
+        }
+        let (mut stream, peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(e) => {
+                teardown(write_halves.into_iter().flatten(), reader_handles);
+                return Err(anyhow::Error::from(e).context("accept worker"));
+            }
+        };
+        // accepted sockets may inherit the listener's nonblocking mode on
+        // some platforms — make them blocking-with-timeouts explicitly
+        stream.set_nonblocking(false).ok();
         stream.set_nodelay(true).ok();
-        let hello = read_frame(&mut stream)?
-            .with_context(|| format!("worker at {peer} closed before hello"))?;
-        let wid = parse_hello(&hello)? as usize;
-        anyhow::ensure!(wid < k, "worker id {wid} out of range");
-        anyhow::ensure!(write_halves[wid].is_none(), "duplicate worker id {wid}");
+        stream.set_read_timeout(Some(tcfg.hello_timeout)).ok();
+        // any hello problem rejects THIS connection only (dropping the
+        // stream closes it); the accept loop keeps listening
+        let wid = match read_frame(&mut stream) {
+            Ok(Some(frame)) => match parse_hello(&frame) {
+                Ok(w) => w as usize,
+                Err(e) => {
+                    eprintln!("rejecting connection from {peer}: {e}");
+                    continue;
+                }
+            },
+            Ok(None) => {
+                eprintln!("rejecting connection from {peer}: closed before hello");
+                continue;
+            }
+            Err(e) => {
+                eprintln!("rejecting connection from {peer}: {e:#}");
+                continue;
+            }
+        };
+        if wid >= k {
+            eprintln!("rejecting connection from {peer}: worker id {wid} out of range (K={k})");
+            continue;
+        }
+        if write_halves[wid].is_some() {
+            eprintln!("rejecting connection from {peer}: duplicate worker id {wid}");
+            continue;
+        }
+        // SO_RCVTIMEO is per-socket and shared with the try_clone'd reader
+        stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
         let mut read_half = stream.try_clone()?;
         write_halves[wid] = Some(stream);
+        accepted += 1;
         let tx = tx.clone();
-        reader_handles.push(thread::spawn(move || {
-            while let Ok(Some(frame)) = read_frame(&mut read_half) {
-                match ToServerMsg::decode(&frame) {
+        let read_timeout = tcfg.read_timeout;
+        reader_handles.push(thread::spawn(move || loop {
+            match read_frame(&mut read_half) {
+                Ok(Some(frame)) => match ToServerMsg::decode(&frame) {
                     Ok(msg) => {
-                        if tx.send(msg).is_err() {
-                            break;
+                        if tx.send(ServerEvent::Msg(msg)).is_err() {
+                            return; // server gone
                         }
                     }
                     Err(e) => {
-                        eprintln!("worker {wid}: bad frame: {e}");
-                        break;
+                        let _ = tx.send(ServerEvent::WorkerLost {
+                            wid,
+                            reason: format!("bad frame: {e:#}"),
+                        });
+                        return;
                     }
+                },
+                Ok(None) => {
+                    let _ = tx.send(ServerEvent::WorkerLost {
+                        wid,
+                        reason: "connection closed".to_string(),
+                    });
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(ServerEvent::WorkerLost {
+                        wid,
+                        reason: classify_read_error(&e, read_timeout),
+                    });
+                    return;
                 }
             }
         }));
@@ -167,27 +336,33 @@ pub fn run_server_on(
             period: cfg.period,
             outer_rounds: cfg.outer_rounds,
             gamma: cfg.gamma as f32,
+            policy: cfg.fail_policy,
         },
         d,
     );
     // writers are used from the single server thread only; interior
     // mutability via RefCell keeps the shared-closure signature.
-    let writers = std::cell::RefCell::new(&mut writers);
-    let (history, final_w, server, bytes_up, bytes_down) = server_loop(
+    let writers_cell = std::cell::RefCell::new(&mut writers);
+    let result = server_loop(
         server,
         cfg,
         ds_n,
         || rx.recv().ok(),
         |wid, msg| {
-            let mut w = writers.borrow_mut();
+            let mut w = writers_cell.borrow_mut();
+            // a failed send means the socket died; the reader thread on the
+            // same socket observes it and raises WorkerLost (a tx clone here
+            // would keep the channel open and starve the recv-None path)
             if let Err(e) = send_frame(&mut w[wid], &msg.encode()) {
                 eprintln!("send to worker {wid} failed: {e}");
             }
         },
     );
-    for h in reader_handles {
-        let _ = h.join();
-    }
+    drop(writers_cell);
+    // teardown runs on BOTH outcomes: closing the sockets unblocks every
+    // reader (and any worker parked in a read) immediately
+    teardown(writers.into_iter(), reader_handles);
+    let (history, final_w, server, bytes_up, bytes_down) = result?;
     Ok(TcpServerOutput {
         history,
         final_w,
@@ -196,12 +371,20 @@ pub fn run_server_on(
         participation: server.participation_rates(),
         rounds: server.total_rounds(),
         peak_log_entries: server.peak_log_entries(),
+        failures: server.failures().to_vec(),
+        live_workers: server.live_workers(),
     })
 }
 
 /// Run one worker process: connect, introduce, and serve the protocol.
 /// `ds` is the FULL dataset (each process re-derives its own partition from
 /// the shared seed — how the paper's workers each load their shard).
+///
+/// The socket carries [`TransportConfig::read_timeout`], so a dead server
+/// bounds the worker's wait too.  An injected fault
+/// ([`crate::network::FaultPlan`]) makes the worker exit without sending —
+/// the resulting socket close is exactly how the server observes the loss,
+/// the same path a real crash takes.
 pub fn run_worker(
     addr: &str,
     worker_id: usize,
@@ -209,6 +392,7 @@ pub fn run_worker(
     cfg: &EngineConfig,
     net: &NetworkModel,
     seed: u64,
+    tcfg: &TransportConfig,
 ) -> Result<()> {
     cfg.validate(ds.n())?;
     let d = ds.d();
@@ -238,6 +422,7 @@ pub fn run_worker(
 
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
     send_hello(&mut stream, worker_id as u32)?;
     let read_half = std::cell::RefCell::new(stream.try_clone()?);
     let write_half = std::cell::RefCell::new(stream);
@@ -260,11 +445,13 @@ pub fn run_worker(
     );
     state.set_error_feedback(cfg.error_feedback);
     let slowdown = net.slowdown.get(worker_id).copied().unwrap_or(1.0);
-    worker_loop(
+    let kill_round = net.faults.kill_round_for(worker_id, seed);
+    let died = worker_loop(
         state,
         slowdown,
         net.jitter.clone(),
         jitter_rng.unwrap(),
+        kill_round,
         |m| {
             let mut w = write_half.borrow_mut();
             if let Err(e) = send_frame(&mut *w, &m.encode()) {
@@ -272,6 +459,8 @@ pub fn run_worker(
             }
         },
         || {
+            // any read failure — including the SO_RCVTIMEO liveness
+            // timeout — reads as a dead server: exit instead of waiting
             let mut r = read_half.borrow_mut();
             read_frame(&mut *r)
                 .ok()
@@ -279,6 +468,10 @@ pub fn run_worker(
                 .and_then(|f| ToWorkerMsg::decode(&f).ok())
         },
     );
+    if let Some(reason) = died {
+        // returning drops the socket: the close IS the loss notice
+        eprintln!("worker {worker_id}: {reason}");
+    }
     Ok(())
 }
 
@@ -311,7 +504,11 @@ mod tests {
         assert!(read_frame(&mut empty).unwrap().is_none());
         for n in 1..4usize {
             let mut r = std::io::Cursor::new(vec![7u8; n]);
-            assert!(read_frame(&mut r).is_err(), "{n}-byte header accepted");
+            let err = read_frame(&mut r).unwrap_err();
+            assert!(
+                format!("{err}").contains("torn frame header"),
+                "{n}-byte header: {err}"
+            );
         }
     }
 
@@ -392,13 +589,23 @@ mod tests {
 
         let ds2 = ds.clone();
         let cfg2 = cfg.clone();
-        let server =
-            thread::spawn(move || run_server_on(listener, ds2.n(), ds2.d(), &cfg2).unwrap());
+        let server = thread::spawn(move || {
+            run_server_on(listener, ds2.n(), ds2.d(), &cfg2, &TransportConfig::default()).unwrap()
+        });
         let mut workers = Vec::new();
         for wid in 0..cfg.workers {
             let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
             workers.push(thread::spawn(move || {
-                run_worker(&addr_w, wid, &ds_w, &cfg_w, &NetworkModel::lan(), seed).unwrap()
+                run_worker(
+                    &addr_w,
+                    wid,
+                    &ds_w,
+                    &cfg_w,
+                    &NetworkModel::lan(),
+                    seed,
+                    &TransportConfig::default(),
+                )
+                .unwrap()
             }));
         }
         let out = server.join().unwrap();
@@ -408,5 +615,7 @@ mod tests {
         assert!(!out.history.points.is_empty());
         assert!(out.history.last_gap() < 0.1, "gap {}", out.history.last_gap());
         assert!(out.bytes_up > 0);
+        assert!(out.failures.is_empty());
+        assert_eq!(out.live_workers, cfg.workers);
     }
 }

@@ -13,7 +13,9 @@ use acpd::data::Dataset;
 use acpd::engine::{Algorithm, EngineConfig};
 use acpd::loss::LossKind;
 use acpd::network::{NetworkModel, Scenario};
+use acpd::protocol::server::FailPolicy;
 use acpd::sweep::{parity, run_sweep, RuntimeKind, SweepSpec};
+use acpd::transport::TransportConfig;
 
 fn ds() -> Dataset {
     let mut spec = Preset::Rcv1Small.spec();
@@ -35,7 +37,7 @@ fn sim_and_threads_agree_for_synchronous_config() {
     let cfg = sync_cfg();
     let seed = 5;
     let sim = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), seed);
-    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed).unwrap();
     // same seeds + same commit composition => same final gap up to the
     // float-summation order inside a commit
     let gs = sim.history.last_gap();
@@ -69,15 +71,25 @@ fn tcp_matches_threads_for_synchronous_config() {
     drop(listener);
 
     let (ds2, cfg2, addr2) = (ds.clone(), cfg.clone(), addr.clone());
-    let server =
-        thread::spawn(move || acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2).unwrap());
+    let server = thread::spawn(move || {
+        acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2, &TransportConfig::default())
+            .unwrap()
+    });
     thread::sleep(std::time::Duration::from_millis(150));
     let mut workers = Vec::new();
     for wid in 0..cfg.workers {
         let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
         workers.push(thread::spawn(move || {
-            acpd::transport::run_worker(&addr_w, wid, &ds_w, &cfg_w, &NetworkModel::lan(), seed)
-                .unwrap();
+            acpd::transport::run_worker(
+                &addr_w,
+                wid,
+                &ds_w,
+                &cfg_w,
+                &NetworkModel::lan(),
+                seed,
+                &TransportConfig::default(),
+            )
+            .unwrap();
         }));
     }
     let tcp = server.join().unwrap();
@@ -85,7 +97,7 @@ fn tcp_matches_threads_for_synchronous_config() {
         w.join().unwrap();
     }
 
-    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed).unwrap();
     let gt = thr.history.last_gap();
     let gc = tcp.history.last_gap();
     assert!(
@@ -108,22 +120,32 @@ fn acpd_converges_on_all_three_runtimes() {
     let sim = acpd::sim::run(&ds, &cfg, &NetworkModel::lan(), seed);
     assert!(sim.history.last_gap() < 1e-3, "sim {:.3e}", sim.history.last_gap());
 
-    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed);
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &NetworkModel::lan(), seed).unwrap();
     assert!(thr.history.last_gap() < 1e-3, "threads {:.3e}", thr.history.last_gap());
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     drop(listener);
     let (ds2, cfg2, addr2) = (ds.clone(), cfg.clone(), addr.clone());
-    let server =
-        thread::spawn(move || acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2).unwrap());
+    let server = thread::spawn(move || {
+        acpd::transport::run_server(&addr2, ds2.n(), ds2.d(), &cfg2, &TransportConfig::default())
+            .unwrap()
+    });
     thread::sleep(std::time::Duration::from_millis(150));
     let mut workers = Vec::new();
     for wid in 0..cfg.workers {
         let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
         workers.push(thread::spawn(move || {
-            acpd::transport::run_worker(&addr_w, wid, &ds_w, &cfg_w, &NetworkModel::lan(), seed)
-                .unwrap();
+            acpd::transport::run_worker(
+                &addr_w,
+                wid,
+                &ds_w,
+                &cfg_w,
+                &NetworkModel::lan(),
+                seed,
+                &TransportConfig::default(),
+            )
+            .unwrap();
         }));
     }
     let tcp = server.join().unwrap();
@@ -158,6 +180,7 @@ fn sync_matrix(runtime: RuntimeKind) -> SweepSpec {
         n_override: 300,
         d_override: 0,
         threads: 2,
+        fail_policy: FailPolicy::FailFast,
     }
 }
 

@@ -20,7 +20,7 @@
 
 use acpd::linalg::sparse::SparseVec;
 use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
-use acpd::protocol::server::{ServerAction, ServerConfig, ServerState};
+use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
 use acpd::testing::forall;
 use acpd::util::rng::Pcg64;
 
@@ -172,6 +172,7 @@ fn prop_log_server_matches_dense_reference() {
                 period: case.period,
                 outer_rounds: case.outer_rounds,
                 gamma: 0.5,
+                policy: FailPolicy::FailFast,
             };
             let mut log_srv = ServerState::new(cfg.clone(), case.d);
             let mut dense_srv = DensePendingServer::new(cfg, case.d);
@@ -245,6 +246,7 @@ fn straggler_reply_replays_missed_commits() {
         period: 4,
         outer_rounds: 2,
         gamma: 1.0,
+        policy: FailPolicy::FailFast,
     };
     let d = 16;
     let mut log_srv = ServerState::new(cfg.clone(), d);

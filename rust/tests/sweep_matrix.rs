@@ -13,6 +13,7 @@ use acpd::data::DatasetSource;
 use acpd::engine::Algorithm;
 use acpd::loss::LossKind;
 use acpd::network::Scenario;
+use acpd::protocol::server::FailPolicy;
 use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
 
 /// 2 algorithms x 2 scenarios x 2 seeds on a small rcv1-shaped problem —
@@ -38,6 +39,7 @@ fn matrix_2x2x2() -> SweepSpec {
         n_override: 512,
         d_override: 1000,
         threads: 1,
+        fail_policy: FailPolicy::FailFast,
     }
 }
 

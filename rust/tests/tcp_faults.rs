@@ -1,0 +1,263 @@
+//! Fault injection for the TCP runtime (and one sim/threads cross-check):
+//! dead workers, stray connections and bad hellos must surface as bounded,
+//! typed outcomes — never as a hung cell.  Every cluster run here executes
+//! under a watchdog: if the run outlives its bound the test fails instead
+//! of blocking the suite, which is exactly the liveness contract the
+//! transport timeouts exist to provide.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use acpd::data::synthetic::{self, Preset};
+use acpd::data::Dataset;
+use acpd::engine::EngineConfig;
+use acpd::network::NetworkModel;
+use acpd::protocol::server::FailPolicy;
+use acpd::transport::{run_server_on, run_worker, send_frame, TransportConfig};
+
+fn ds() -> Dataset {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = 200;
+    spec.d = 400;
+    synthetic::generate(&spec, 31)
+}
+
+/// Tight-but-safe timeouts: long enough for a localhost round trip under CI
+/// load, short enough that a genuine hang fails the watchdog quickly.
+fn fast_tcfg() -> TransportConfig {
+    TransportConfig {
+        hello_timeout: Duration::from_secs(2),
+        read_timeout: Duration::from_secs(10),
+        accept_deadline: Duration::from_secs(10),
+    }
+}
+
+/// Run `f` on its own thread; panic if it has not finished within `bound`.
+fn within<T: Send + 'static>(
+    bound: Duration,
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(bound) {
+        Ok(v) => v,
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{what} still running after {bound:?} — liveness contract broken")
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => panic!("{what} panicked"),
+    }
+}
+
+/// A cluster whose workers never arrive must error at the accept deadline —
+/// naming how many showed up — not wait forever.
+#[test]
+fn bringup_errs_when_workers_never_connect() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(2, 1, 3, 1e-2);
+    cfg.h = 64;
+    cfg.outer_rounds = 2;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let tcfg = TransportConfig {
+        accept_deadline: Duration::from_millis(400),
+        ..fast_tcfg()
+    };
+    let (n, d) = (ds.n(), ds.d());
+    let err = within(Duration::from_secs(10), "server bring-up", move || {
+        run_server_on(listener, n, d, &cfg, &tcfg).unwrap_err()
+    });
+    let msg = format!("{err:#}");
+    assert!(msg.contains("accept deadline"), "{msg}");
+    assert!(msg.contains("accepted 0 of 2"), "{msg}");
+}
+
+/// Pre-hello deaths, malformed hellos, out-of-range ids and duplicate ids
+/// each reject THAT connection only: the accept loop keeps listening and
+/// the real cluster still converges with zero recorded failures.
+#[test]
+fn stray_and_bad_hellos_do_not_kill_the_cluster() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(2, 1, 3, 1e-2);
+    cfg.h = 128;
+    cfg.outer_rounds = 5;
+    let seed = 77;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let (srv_tx, srv_rx) = mpsc::channel();
+    let (ds2, cfg2, tcfg) = (ds.clone(), cfg.clone(), fast_tcfg());
+    thread::spawn(move || {
+        let _ = srv_tx.send(run_server_on(listener, ds2.n(), ds2.d(), &cfg2, &tcfg));
+    });
+
+    // (1) connect and die before saying hello
+    drop(TcpStream::connect(&addr).unwrap());
+    // (2) a frame that is not a hello at all
+    let mut garbage = TcpStream::connect(&addr).unwrap();
+    send_frame(&mut garbage, b"definitely not a hello").unwrap();
+    // (3) a well-formed hello claiming an out-of-range id (wire format:
+    //     tag 0xA5 + u32-LE worker id — pinned here on purpose)
+    let mut out_of_range = TcpStream::connect(&addr).unwrap();
+    let mut frame = vec![0xA5u8];
+    frame.extend_from_slice(&7u32.to_le_bytes());
+    send_frame(&mut out_of_range, &frame).unwrap();
+
+    // real worker 0, accepted first...
+    let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
+    let w0 = thread::spawn(move || {
+        run_worker(&addr_w, 0, &ds_w, &cfg_w, &NetworkModel::lan(), seed, &fast_tcfg()).unwrap();
+    });
+    thread::sleep(Duration::from_millis(300));
+    // (4) ...so this duplicate claim on id 0 must be turned away
+    let mut dup = TcpStream::connect(&addr).unwrap();
+    let mut frame = vec![0xA5u8];
+    frame.extend_from_slice(&0u32.to_le_bytes());
+    send_frame(&mut dup, &frame).unwrap();
+
+    let (ds_w, cfg_w, addr_w) = (ds.clone(), cfg.clone(), addr.clone());
+    let w1 = thread::spawn(move || {
+        run_worker(&addr_w, 1, &ds_w, &cfg_w, &NetworkModel::lan(), seed, &fast_tcfg()).unwrap();
+    });
+
+    let out = srv_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("server still running — rejected connections blocked the cluster")
+        .expect("healthy cluster errored");
+    w0.join().unwrap();
+    w1.join().unwrap();
+    assert_eq!(out.live_workers, 2);
+    assert!(out.failures.is_empty(), "{:?}", out.failures);
+    assert!(
+        out.history.last_gap() < 1e-2,
+        "cluster did not converge: {:.3e}",
+        out.history.last_gap()
+    );
+    drop((garbage, out_of_range, dup));
+}
+
+/// A worker that dies mid-run under `fail_fast` (the default) errors the
+/// cell within one read-timeout, naming the worker — and the surviving
+/// worker processes exit too (server teardown closes their sockets).
+#[test]
+fn kill_fail_fast_surfaces_bounded_error() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(3, 2, 3, 1e-2);
+    cfg.h = 128;
+    cfg.outer_rounds = 5;
+    let seed = 9;
+    let net = NetworkModel::lan().with_kill(1, 2);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (srv_tx, srv_rx) = mpsc::channel();
+    let (ds2, cfg2) = (ds.clone(), cfg.clone());
+    thread::spawn(move || {
+        let _ = srv_tx.send(run_server_on(listener, ds2.n(), ds2.d(), &cfg2, &fast_tcfg()));
+    });
+    thread::sleep(Duration::from_millis(150));
+    let mut workers = Vec::new();
+    for wid in 0..cfg.workers {
+        let (ds_w, cfg_w, addr_w, net_w) = (ds.clone(), cfg.clone(), addr.clone(), net.clone());
+        workers.push(thread::spawn(move || {
+            run_worker(&addr_w, wid, &ds_w, &cfg_w, &net_w, seed, &fast_tcfg()).unwrap();
+        }));
+    }
+
+    let err = srv_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("fail_fast server did not stop after worker loss")
+        .expect_err("a killed worker must error the cell under fail_fast");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1"), "{msg}");
+    assert!(msg.contains("fail_fast"), "{msg}");
+    for w in workers {
+        w.join().unwrap(); // teardown unblocked every survivor
+    }
+}
+
+/// The same death under `degrade`: the cell completes on the survivors
+/// (B ≤ live < K), records exactly the injected loss, and still converges.
+#[test]
+fn kill_degrade_completes_with_survivors() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(3, 2, 3, 1e-2);
+    cfg.h = 128;
+    cfg.outer_rounds = 5;
+    cfg.fail_policy = FailPolicy::Degrade;
+    let seed = 9;
+    let net = NetworkModel::lan().with_kill(2, 1);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let (srv_tx, srv_rx) = mpsc::channel();
+    let (ds2, cfg2) = (ds.clone(), cfg.clone());
+    thread::spawn(move || {
+        let _ = srv_tx.send(run_server_on(listener, ds2.n(), ds2.d(), &cfg2, &fast_tcfg()));
+    });
+    thread::sleep(Duration::from_millis(150));
+    let mut workers = Vec::new();
+    for wid in 0..cfg.workers {
+        let (ds_w, cfg_w, addr_w, net_w) = (ds.clone(), cfg.clone(), addr.clone(), net.clone());
+        workers.push(thread::spawn(move || {
+            run_worker(&addr_w, wid, &ds_w, &cfg_w, &net_w, seed, &fast_tcfg()).unwrap();
+        }));
+    }
+
+    let out = srv_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("degrade server did not finish after worker loss")
+        .expect("degrade must complete while live >= B");
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(out.live_workers, 2);
+    assert_eq!(out.failures.len(), 1, "{:?}", out.failures);
+    assert_eq!(out.failures[0].worker, 2);
+    assert!(!out.failures[0].reason.is_empty());
+    assert!(
+        out.history.last_gap() < 0.1,
+        "survivors did not converge: {:.3e}",
+        out.history.last_gap()
+    );
+}
+
+/// Cross-runtime pin: the DES and the thread runtime agree on a degraded
+/// kill run — same loss accounting, same commit trajectory, and the same
+/// final gap up to gap-probe merge order.  Kill semantics (die before the
+/// r-th send) are defined identically in both.
+#[test]
+fn sim_and_threads_agree_on_degraded_kill_run() {
+    let ds = ds();
+    let mut cfg = EngineConfig::acpd(3, 2, 5, 1e-2);
+    cfg.h = 200;
+    cfg.outer_rounds = 10;
+    cfg.fail_policy = FailPolicy::Degrade;
+    let seed = 5;
+    let net = NetworkModel::lan().with_kill(2, 1);
+
+    let sim = acpd::sim::try_run(&ds, &cfg, &net, seed).unwrap();
+    let thr = acpd::runtime_threads::run(&ds, &cfg, &net, seed).unwrap();
+
+    assert_eq!(sim.stats.live_workers, 2);
+    assert_eq!(thr.live_workers, 2);
+    assert_eq!(sim.stats.failures.len(), 1);
+    assert_eq!(thr.failures.len(), 1);
+    assert_eq!(sim.stats.failures[0].worker, thr.failures[0].worker);
+
+    // worker 2 never sends in either runtime, so the survivors' trajectory
+    // — rounds and byte accounting — is identical
+    assert_eq!(sim.stats.rounds, thr.rounds);
+    assert_eq!(sim.stats.bytes_up, thr.bytes_up, "uplink accounting differs");
+    assert_eq!(sim.stats.bytes_down, thr.bytes_down, "downlink accounting differs");
+
+    let (gs, gt) = (sim.history.last_gap(), thr.history.last_gap());
+    assert!(
+        (gs - gt).abs() <= 1e-6 * (1.0 + gs.abs().max(gt.abs())) || (gs - gt).abs() < 1e-8,
+        "sim gap {gs:.6e} != threads gap {gt:.6e}"
+    );
+}
