@@ -101,6 +101,11 @@ pub fn render() -> String {
     s.push_str("  jittery-cloud   background-load jitter on every worker (Fig 5)\n");
     s.push_str("  kill:<w>@<r>    fault injection: worker w dies before its r-th send\n");
     s.push_str("  flaky:<p>       fault injection: geometric(p) death round per worker\n");
+    s.push_str("  burst:<p>:<s>:<l> non-persistent stragglers: windows of l rounds turn\n");
+    s.push_str("                  bursty with probability p, compute slows s x\n");
+    s.push_str("  churn:<pl>:<pr> time-varying membership: workers leave with per-round\n");
+    s.push_str("                  probability pl, rejoin with per-commit probability pr\n");
+    s.push_str("                  (requires fail_policy = degrade; rejoins in reports)\n");
     s.push_str(
         "  fault scenarios honor `fail_policy` (fail_fast = cell errors [default];\n  \
          degrade = continue while live workers >= B, losses recorded in reports)\n",
@@ -136,7 +141,7 @@ dataset sources (sweep `datasets`, train `--preset` / `--data`):
 
 sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
   algos      acpd | cocoa | cocoa+ | disdca                       default acpd,cocoa,cocoa+
-  scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> default lan,straggler:10,jittery-cloud
+  scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin> default lan,straggler:10,jittery-cloud
   datasets   <preset> | <name>:<path> (LIBSVM file)               default dense-test
   workers    K - cluster sizes                                    default 4
   group      B - acpd group sizes (0 = K/2; baselines run B = K)  default 2
@@ -152,6 +157,11 @@ network scenarios (per-cell cost models):
   jittery-cloud   background-load jitter on every worker (Fig 5)
   kill:<w>@<r>    fault injection: worker w dies before its r-th send
   flaky:<p>       fault injection: geometric(p) death round per worker
+  burst:<p>:<s>:<l> non-persistent stragglers: windows of l rounds turn
+                  bursty with probability p, compute slows s x
+  churn:<pl>:<pr> time-varying membership: workers leave with per-round
+                  probability pl, rejoin with per-commit probability pr
+                  (requires fail_policy = degrade; rejoins in reports)
   fault scenarios honor `fail_policy` (fail_fast = cell errors [default];
   degrade = continue while live workers >= B, losses recorded in reports)
 

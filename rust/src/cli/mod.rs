@@ -576,7 +576,9 @@ fn cmd_server(raw: &[String]) -> Result<()> {
         return Ok(());
     };
     eprintln!("server on {addr}: {}", x.engine.describe());
-    let out = acpd::transport::run_server(&addr, x.ds.n(), x.ds.d(), &x.engine, &tcfg)?;
+    // scenario-aware: `churn:` runs install the rejoin schedule server-side
+    let out =
+        acpd::transport::run_server_scenario(&addr, x.ds.n(), x.ds.d(), &x.engine, &x.net, x.seed, &tcfg)?;
     let stride = (out.history.points.len() / 20).max(1);
     print!("{}", out.history.render(stride));
     eprintln!(
@@ -586,6 +588,9 @@ fn cmd_server(raw: &[String]) -> Result<()> {
         out.participation
     );
     print_failures(&out.failures, out.live_workers);
+    if out.rejoins > 0 {
+        eprintln!("rejoins: {} (membership {})", out.rejoins, out.membership);
+    }
     if !x.out.is_empty() {
         out.history.to_csv().save(&x.out)?;
         eprintln!("wrote {}", x.out);

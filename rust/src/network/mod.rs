@@ -89,6 +89,38 @@ impl FaultPlan {
     }
 }
 
+/// Parameters of the `burst:<p>:<slow>:<len>` scenario: non-persistent
+/// stragglers (Ozfatura et al.).  Each worker's local rounds are cut into
+/// windows of `len` rounds; every window independently turns bursty with
+/// probability `p`, multiplying that worker's compute time by `slow` for
+/// the whole window.  Draws are pure functions of (seed, wid, window) on a
+/// dedicated PCG stream, so they are identical across runtimes and consume
+/// nothing from any other RNG.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurstParams {
+    /// probability a window is bursty (0 < p <= 1).
+    pub p: f64,
+    /// compute-time multiplier inside a bursty window (>= 1).
+    pub slow: f64,
+    /// window length in local rounds (>= 1).
+    pub len: u64,
+}
+
+/// Parameters of the `churn:<p_leave>:<p_rejoin>` scenario: time-varying
+/// membership.  Each worker repeatedly (a) works for a geometric(p_leave)
+/// number of local rounds, (b) leaves exactly like a `kill:` death (after
+/// the solve, before the send), then (c) stays away for a
+/// geometric(p_rejoin) number of server commits before being re-admitted
+/// with a reset cursor and a full-model reply.  All draws are pure
+/// per-(seed, wid, episode) PCG streams — identical across runtimes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnParams {
+    /// per-round leave probability (0 < p <= 1).
+    pub p_leave: f64,
+    /// per-commit rejoin probability while away (0 < p <= 1).
+    pub p_rejoin: f64,
+}
+
 /// Cluster cost model.
 #[derive(Debug, Clone)]
 pub struct NetworkModel {
@@ -109,6 +141,10 @@ pub struct NetworkModel {
     pub base_dispersion: f64,
     /// Fault-injection plan (worker deaths); default: no faults.
     pub faults: FaultPlan,
+    /// Non-persistent straggler bursts (`burst:` scenario); default: off.
+    pub burst: Option<BurstParams>,
+    /// Leave/rejoin membership churn (`churn:` scenario); default: off.
+    pub churn: Option<ChurnParams>,
 }
 
 impl NetworkModel {
@@ -122,6 +158,8 @@ impl NetworkModel {
             jitter: None,
             base_dispersion: 0.01,
             faults: FaultPlan::default(),
+            burst: None,
+            churn: None,
         }
     }
 
@@ -171,6 +209,28 @@ impl NetworkModel {
         self
     }
 
+    /// Non-persistent straggler bursts (compute-dominated so the `slow`
+    /// factor is visible on the time axis, like the straggler scenario).
+    pub fn with_burst(mut self, p: f64, slow: f64, len: u64) -> NetworkModel {
+        self.flop_time = 2e-7;
+        self.burst = Some(BurstParams { p, slow, len });
+        self
+    }
+
+    /// Leave/rejoin membership churn on a uniform LAN.
+    pub fn with_churn(mut self, p_leave: f64, p_rejoin: f64) -> NetworkModel {
+        self.churn = Some(ChurnParams { p_leave, p_rejoin });
+        self
+    }
+
+    /// Build the round-indexed schedule this model implies for a
+    /// `workers`-node cluster under `seed` (see [`ScenarioPlan`]).  All
+    /// three runtimes derive their plan through this one constructor, which
+    /// is what makes churn/burst runs cross-runtime comparable.
+    pub fn schedule(&self, workers: usize, seed: u64) -> ScenarioPlan {
+        ScenarioPlan::new(self, workers, seed)
+    }
+
     /// Time for one message of `bytes` over the link (α + bytes/β).
     pub fn message_time(&self, bytes: usize) -> f64 {
         self.latency_s + bytes as f64 / self.bandwidth_bps
@@ -191,6 +251,194 @@ impl NetworkModel {
         // ±base_dispersion uniform: breaks exact arrival ties
         let disp = 1.0 + self.base_dispersion * (2.0 * rng.next_f64() - 1.0);
         base * slow * jit * disp
+    }
+}
+
+/// A membership event produced by a round-indexed scenario schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioEvent {
+    /// The worker completes this local solve, then departs before sending
+    /// (exactly the `kill:` crash point, so all runtimes observe it the
+    /// same way).
+    Leave,
+    /// The worker is re-admitted by the server (recover/join).  Emitted at
+    /// server commits, not worker rounds — schedules carry it through
+    /// [`ScenarioSchedule::rejoin_gap`] rather than `event`.
+    Rejoin,
+}
+
+/// Round-indexed scenario interface: per-(worker, round) compute-delay
+/// multipliers and membership events, deterministic in the run seed.
+///
+/// This replaces the old "fixed per-worker delay draw at construction"
+/// model: a schedule can answer for any round, so slowness may be bursty
+/// and membership time-varying.  `round` is the worker's 1-based local
+/// round counter, counted across rejoin episodes.  Implementations must be
+/// pure (stream-isolated PCG draws keyed on seed/wid/round or episode):
+/// the same query returns the same answer in every runtime, and nothing is
+/// consumed from the solver/jitter/time RNG streams — which is what keeps
+/// every pre-existing scenario byte-identical.
+pub trait ScenarioSchedule {
+    /// Multiplicative compute-delay factor for worker `wid`'s `round`-th
+    /// local solve.  Exactly 1.0 for every legacy scenario (the legacy
+    /// delay model — slowdown/jitter/dispersion — stays inside
+    /// [`NetworkModel::compute_time`], so its RNG consumption is
+    /// untouched).
+    fn delay(&self, wid: usize, round: u64) -> f64 {
+        let _ = (wid, round);
+        1.0
+    }
+
+    /// Membership event at worker `wid`'s `round`-th local solve.
+    fn event(&self, wid: usize, round: u64) -> Option<ScenarioEvent>;
+
+    /// How many server commits worker `wid` stays away after its
+    /// `episode`-th departure (0-based); `None` = never returns (kill/flaky
+    /// deaths are permanent).
+    fn rejoin_gap(&self, wid: usize, episode: u64) -> Option<u64>;
+}
+
+/// One golden-ratio step per window/episode decorrelates the per-index
+/// streams without consuming RNG state.
+const PLAN_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Fresh per-episode worker RNG: a rejoined worker rebuilds its local
+/// solver state from a pure (seed, wid, episode) stream — identical in
+/// every runtime, consuming nothing from the run's other RNG streams.
+/// Episode 0 is the initial join and is NOT drawn from here (it keeps the
+/// legacy `root_rng.split(wid+1)` stream so fault-free runs stay
+/// byte-identical).
+pub fn episode_rng(seed: u64, wid: usize, episode: u64) -> Pcg64 {
+    Pcg64::with_stream(seed ^ episode.wrapping_mul(PLAN_SALT), 0x5EED ^ wid as u64)
+}
+
+/// Geometric(p) draw on [1, ∞) from a uniform `u` (the `flaky:` formula).
+fn geometric(p: f64, u: f64) -> u64 {
+    if p >= 1.0 {
+        return 1;
+    }
+    let u = u.min(1.0 - 1e-12);
+    (((1.0 - u).ln() / (1.0 - p).ln()).floor() as u64 + 1).max(1)
+}
+
+/// The concrete [`ScenarioSchedule`] every [`NetworkModel`] implies:
+/// legacy fault plans become single-episode `Leave` events (same
+/// `kill_round_for` draw, so `kill:`/`flaky:` behavior is bit-identical),
+/// `burst:` adds windowed delay multipliers, `churn:` adds repeated
+/// leave/rejoin episodes.  Construction performs no RNG draws beyond the
+/// legacy `kill_round_for` ones; everything else is answered lazily from
+/// pure per-query streams.
+#[derive(Debug, Clone)]
+pub struct ScenarioPlan {
+    seed: u64,
+    /// Episode-0 leave rounds from the legacy fault plan (kill/flaky).
+    kill_rounds: Vec<Option<u64>>,
+    burst: Option<BurstParams>,
+    churn: Option<ChurnParams>,
+}
+
+impl ScenarioPlan {
+    fn new(net: &NetworkModel, workers: usize, seed: u64) -> ScenarioPlan {
+        ScenarioPlan {
+            seed,
+            kill_rounds: (0..workers)
+                .map(|w| net.faults.kill_round_for(w, seed))
+                .collect(),
+            burst: net.burst.clone(),
+            churn: net.churn.clone(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.kill_rounds.len()
+    }
+
+    /// True if any worker may ever leave (drives the runtimes' churn
+    /// bookkeeping; false keeps them on the exact legacy code path).
+    pub fn has_events(&self) -> bool {
+        self.churn.is_some() || self.kill_rounds.iter().any(|k| k.is_some())
+    }
+
+    /// True if departed workers may return.
+    pub fn has_rejoins(&self) -> bool {
+        self.churn.is_some()
+    }
+
+    /// Local rounds worker `wid` completes in its `episode`-th membership
+    /// episode before leaving (`None` = works until shutdown).  Episode 0
+    /// starts at run begin; episode e >= 1 starts at the e-th re-admission.
+    pub fn leave_after(&self, wid: usize, episode: u64) -> Option<u64> {
+        if let Some(churn) = &self.churn {
+            let mut rng = Pcg64::with_stream(
+                self.seed ^ episode.wrapping_mul(PLAN_SALT),
+                0xC412 ^ wid as u64,
+            );
+            return Some(geometric(churn.p_leave, rng.next_f64()));
+        }
+        if episode == 0 {
+            self.kill_rounds.get(wid).copied().flatten()
+        } else {
+            None
+        }
+    }
+
+    /// Per-worker rejoin gaps for episodes `0..episodes`, in server
+    /// commits — the table [`crate::protocol::server::ServerState`] admits
+    /// from.  `episodes` should bound the number of commits in the run (a
+    /// worker cannot depart more often than the server commits).
+    pub fn rejoin_schedule(&self, episodes: u64) -> Vec<Vec<u64>> {
+        (0..self.workers())
+            .map(|wid| {
+                (0..episodes)
+                    .map_while(|ep| self.rejoin_gap(wid, ep))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl ScenarioSchedule for ScenarioPlan {
+    fn delay(&self, wid: usize, round: u64) -> f64 {
+        let Some(burst) = &self.burst else {
+            return 1.0;
+        };
+        let window = round.saturating_sub(1) / burst.len;
+        let mut rng = Pcg64::with_stream(
+            self.seed ^ window.wrapping_mul(PLAN_SALT),
+            0xB057 ^ wid as u64,
+        );
+        if rng.next_f64() < burst.p {
+            burst.slow
+        } else {
+            1.0
+        }
+    }
+
+    fn event(&self, wid: usize, round: u64) -> Option<ScenarioEvent> {
+        // walk the episode leave points; their cumulative sum gives the
+        // global leave rounds (#episodes <= #leaves <= round, so bounded)
+        let mut acc = 0u64;
+        for ep in 0.. {
+            let worked = self.leave_after(wid, ep)?;
+            acc = acc.saturating_add(worked);
+            if acc == round {
+                return Some(ScenarioEvent::Leave);
+            }
+            if acc > round {
+                return None;
+            }
+            self.rejoin_gap(wid, ep)?;
+        }
+        None
+    }
+
+    fn rejoin_gap(&self, wid: usize, episode: u64) -> Option<u64> {
+        let churn = self.churn.as_ref()?;
+        let mut rng = Pcg64::with_stream(
+            self.seed ^ episode.wrapping_mul(PLAN_SALT),
+            0x2E01 ^ wid as u64,
+        );
+        Some(geometric(churn.p_rejoin, rng.next_f64()))
     }
 }
 
@@ -222,6 +470,14 @@ pub enum Scenario {
     /// Fault injection: every worker carries per-round death probability
     /// `p` (non-persistent-failure churn model), on a uniform LAN.
     Flaky { p: f64 },
+    /// Non-persistent stragglers: windows of `len` local rounds turn
+    /// bursty with probability `p`, multiplying compute by `slow`
+    /// (compute-dominated regime; Ozfatura et al.'s model).
+    Burst { p: f64, slow: f64, len: u64 },
+    /// Time-varying membership: workers leave with per-round probability
+    /// `p_leave` and are re-admitted with per-commit probability
+    /// `p_rejoin`, on a uniform LAN.  Requires `fail_policy = degrade`.
+    Churn { p_leave: f64, p_rejoin: f64 },
 }
 
 impl Scenario {
@@ -233,11 +489,14 @@ impl Scenario {
             Scenario::JitteryCloud => "jittery-cloud".to_string(),
             Scenario::Kill { worker, round } => format!("kill:{worker}@{round}"),
             Scenario::Flaky { p } => format!("flaky:{p}"),
+            Scenario::Burst { p, slow, len } => format!("burst:{p}:{slow}:{len}"),
+            Scenario::Churn { p_leave, p_rejoin } => format!("churn:{p_leave}:{p_rejoin}"),
         }
     }
 
     /// Parse `lan` | `straggler` | `straggler:<sigma>` | `jittery-cloud`
-    /// | `kill:<wid>@<round>` | `flaky:<p>`.
+    /// | `kill:<wid>@<round>` | `flaky:<p>` | `burst:<p>:<slow>:<len>`
+    /// | `churn:<p_leave>:<p_rejoin>`.
     pub fn from_name(s: &str) -> Option<Scenario> {
         match s {
             "lan" => Some(Scenario::Lan),
@@ -262,6 +521,34 @@ impl Scenario {
                         None
                     };
                 }
+                if let Some(rest) = s.strip_prefix("burst:") {
+                    let mut it = rest.splitn(3, ':');
+                    let p: f64 = it.next()?.parse().ok()?;
+                    let slow: f64 = it.next()?.parse().ok()?;
+                    let len: u64 = it.next()?.parse().ok()?;
+                    let valid = p > 0.0
+                        && p <= 1.0
+                        && p.is_finite()
+                        && slow >= 1.0
+                        && slow.is_finite()
+                        && len >= 1;
+                    return if valid {
+                        Some(Scenario::Burst { p, slow, len })
+                    } else {
+                        None
+                    };
+                }
+                if let Some(rest) = s.strip_prefix("churn:") {
+                    let (a, b) = rest.split_once(':')?;
+                    let p_leave: f64 = a.parse().ok()?;
+                    let p_rejoin: f64 = b.parse().ok()?;
+                    let ok = |p: f64| p > 0.0 && p <= 1.0 && p.is_finite();
+                    return if ok(p_leave) && ok(p_rejoin) {
+                        Some(Scenario::Churn { p_leave, p_rejoin })
+                    } else {
+                        None
+                    };
+                }
                 let sigma: f64 = s.strip_prefix("straggler:")?.parse().ok()?;
                 if sigma >= 1.0 && sigma.is_finite() {
                     Some(Scenario::Straggler { sigma })
@@ -274,7 +561,8 @@ impl Scenario {
 
     /// All parseable scenario spellings (for help/error text).
     pub fn help_names() -> &'static str {
-        "lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p>"
+        "lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> \
+         | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin>"
     }
 
     /// Instantiate the cost model for a `workers`-node cluster.
@@ -285,6 +573,10 @@ impl Scenario {
             Scenario::JitteryCloud => NetworkModel::jittery_cloud(),
             Scenario::Kill { worker, round } => NetworkModel::lan().with_kill(*worker, *round),
             Scenario::Flaky { p } => NetworkModel::lan().with_flaky(*p),
+            Scenario::Burst { p, slow, len } => NetworkModel::lan().with_burst(*p, *slow, *len),
+            Scenario::Churn { p_leave, p_rejoin } => {
+                NetworkModel::lan().with_churn(*p_leave, *p_rejoin)
+            }
         }
     }
 }
@@ -408,5 +700,144 @@ mod tests {
         // p = 1 kills on the first round
         let certain = FaultPlan { kills: Vec::new(), flaky_p: 1.0 };
         assert_eq!(certain.kill_round_for(3, 9), Some(1));
+    }
+
+    #[test]
+    fn new_scenario_names_roundtrip() {
+        let all = [
+            Scenario::Burst { p: 0.3, slow: 8.0, len: 5 },
+            Scenario::Churn { p_leave: 0.25, p_rejoin: 0.5 },
+        ];
+        for s in all {
+            assert_eq!(Scenario::from_name(&s.name()), Some(s.clone()), "{}", s.name());
+        }
+        assert_eq!(Scenario::from_name("burst:0:8:5"), None); // p out of range
+        assert_eq!(Scenario::from_name("burst:0.3:0.5:5"), None); // slow < 1
+        assert_eq!(Scenario::from_name("burst:0.3:8:0"), None); // empty window
+        assert_eq!(Scenario::from_name("burst:0.3:8"), None); // missing len
+        assert_eq!(Scenario::from_name("churn:0.25"), None); // missing p_rejoin
+        assert_eq!(Scenario::from_name("churn:1.5:0.5"), None);
+        assert_eq!(Scenario::from_name("churn:0.25:0"), None);
+    }
+
+    #[test]
+    fn new_scenario_instantiation() {
+        let b = Scenario::Burst { p: 0.3, slow: 8.0, len: 5 }.instantiate(4);
+        assert_eq!(b.burst, Some(BurstParams { p: 0.3, slow: 8.0, len: 5 }));
+        assert_eq!(b.flop_time, 2e-7, "burst is compute-dominated");
+        assert!(b.faults.is_empty() && b.churn.is_none());
+        let c = Scenario::Churn { p_leave: 0.25, p_rejoin: 0.5 }.instantiate(4);
+        assert_eq!(c.churn, Some(ChurnParams { p_leave: 0.25, p_rejoin: 0.5 }));
+        assert_eq!(c.flop_time, NetworkModel::lan().flop_time, "churn is a uniform LAN");
+        assert!(c.faults.is_empty() && c.burst.is_none());
+    }
+
+    /// Legacy-scenario pin: every pre-existing scenario maps onto the
+    /// round-indexed schedule with delay ≡ 1.0 (the multiplier composes as
+    /// exact identity onto `compute_time`, so timing bits are unchanged)
+    /// and events exactly at the old `kill_round_for` draw.
+    #[test]
+    fn legacy_scenarios_are_identity_on_the_schedule() {
+        let seed = 42;
+        for s in [
+            Scenario::Lan,
+            Scenario::Straggler { sigma: 2.0 },
+            Scenario::JitteryCloud,
+            Scenario::Kill { worker: 1, round: 2 },
+            Scenario::Flaky { p: 0.01 },
+        ] {
+            let net = s.instantiate(4);
+            let plan = net.schedule(4, seed);
+            for wid in 0..4 {
+                for round in 1..=64 {
+                    assert_eq!(plan.delay(wid, round), 1.0, "{} w{wid} r{round}", s.name());
+                }
+                // events coincide with the legacy kill draw, once, with no
+                // rejoin — so membership behavior is exactly PR 6's
+                let kill = net.faults.kill_round_for(wid, seed);
+                assert_eq!(plan.leave_after(wid, 0), kill);
+                assert_eq!(plan.leave_after(wid, 1), None);
+                assert_eq!(plan.rejoin_gap(wid, 0), None);
+                if let Some(r) = kill {
+                    if r <= 64 {
+                        assert_eq!(plan.event(wid, r), Some(ScenarioEvent::Leave));
+                    }
+                    for round in 1..=64u64 {
+                        if round != r {
+                            assert_eq!(plan.event(wid, round), None);
+                        }
+                    }
+                } else {
+                    assert!((1..=64u64).all(|r| plan.event(wid, r).is_none()));
+                }
+            }
+            assert_eq!(
+                plan.has_events(),
+                !net.faults.is_empty(),
+                "{}",
+                s.name()
+            );
+            assert!(!plan.has_rejoins());
+            assert!(plan.rejoin_schedule(32).iter().all(|g| g.is_empty()));
+        }
+    }
+
+    #[test]
+    fn burst_schedule_is_windowed_and_deterministic() {
+        let net = Scenario::Burst { p: 0.4, slow: 6.0, len: 5 }.instantiate(8);
+        let plan = net.schedule(8, 7);
+        let plan2 = net.schedule(8, 7);
+        let mut slow_rounds = 0usize;
+        for wid in 0..8 {
+            for round in 1..=200u64 {
+                let d = plan.delay(wid, round);
+                assert_eq!(d, plan2.delay(wid, round), "pure draws");
+                assert!(d == 1.0 || d == 6.0, "delay {d}");
+                // constant within a window
+                let window_first = ((round - 1) / 5) * 5 + 1;
+                assert_eq!(d, plan.delay(wid, window_first));
+                if d > 1.0 {
+                    slow_rounds += 1;
+                }
+                assert_eq!(plan.event(wid, round), None, "burst has no membership events");
+            }
+        }
+        // p = 0.4 over 8 workers x 40 windows: both states must appear
+        assert!(slow_rounds > 100 && slow_rounds < 1500, "{slow_rounds}");
+        // decorrelated across workers and seeds
+        let other_seed = net.schedule(8, 8);
+        assert!((1..=200u64).any(|r| plan.delay(0, r) != plan.delay(1, r)));
+        assert!((1..=200u64).any(|r| plan.delay(0, r) != other_seed.delay(0, r)));
+    }
+
+    #[test]
+    fn churn_schedule_alternates_episodes_deterministically() {
+        let net = Scenario::Churn { p_leave: 0.5, p_rejoin: 0.5 }.instantiate(4);
+        let plan = net.schedule(4, 11);
+        assert!(plan.has_events() && plan.has_rejoins());
+        for wid in 0..4 {
+            for ep in 0..16u64 {
+                let worked = plan.leave_after(wid, ep).expect("churn always leaves again");
+                assert!(worked >= 1);
+                assert_eq!(plan.leave_after(wid, ep), net.schedule(4, 11).leave_after(wid, ep));
+                let gap = plan.rejoin_gap(wid, ep).expect("churn always rejoins");
+                assert!(gap >= 1);
+            }
+        }
+        // the trait-level event view: leaves at the cumulative episode sums
+        let mut acc = 0u64;
+        for ep in 0..4u64 {
+            acc += plan.leave_after(0, ep).unwrap();
+            assert_eq!(plan.event(0, acc), Some(ScenarioEvent::Leave), "episode {ep}");
+        }
+        // rejoin table for the server: one gap per episode, bounded count
+        let sched = plan.rejoin_schedule(12);
+        assert_eq!(sched.len(), 4);
+        assert!(sched.iter().all(|g| g.len() == 12 && g.iter().all(|&x| x >= 1)));
+        // p_rejoin = 1 pins the gap to exactly one commit
+        let eager = Scenario::Churn { p_leave: 0.5, p_rejoin: 1.0 }
+            .instantiate(2)
+            .schedule(2, 3);
+        assert!((0..8u64).all(|ep| eager.rejoin_gap(1, ep) == Some(1)));
     }
 }

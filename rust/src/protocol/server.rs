@@ -146,6 +146,21 @@ pub struct ServerState {
     live: Vec<bool>,
     /// every observed worker loss, in arrival order
     failures: Vec<WorkerFailure>,
+    /// `rejoin_schedule[k][e]`: commits worker k stays away on its e-th
+    /// departure (installed from `ScenarioPlan::rejoin_schedule` by churn
+    /// runtimes).  Empty (the default): departures are permanent — the
+    /// exact pre-churn behavior.
+    rejoin_schedule: Vec<Vec<u64>>,
+    /// departures observed per worker (indexes `rejoin_schedule[k]`)
+    episodes: Vec<usize>,
+    /// commit number at which an away worker is due to be re-admitted
+    rejoin_at: Vec<Option<u64>>,
+    /// re-admissions performed
+    rejoins: u64,
+    /// membership events in arrival order: (commit round, worker, joined?)
+    timeline: Vec<(u64, usize, bool)>,
+    /// cached |live|: keeps barrier checks O(1) at fleet scale (K ~ 100s)
+    live_count: usize,
     finished: bool,
     /// true once a stop was requested (target gap reached)
     stop_requested: bool,
@@ -173,6 +188,12 @@ impl ServerState {
             peak_log_entries: 0,
             live: vec![true; cfg.workers],
             failures: Vec::new(),
+            rejoin_schedule: Vec::new(),
+            episodes: vec![0; cfg.workers],
+            rejoin_at: vec![None; cfg.workers],
+            rejoins: 0,
+            timeline: Vec::new(),
+            live_count: cfg.workers,
             finished: false,
             stop_requested: false,
             cfg,
@@ -231,12 +252,59 @@ impl ServerState {
 
     /// Workers still in the barrier set (== K until a loss is observed).
     pub fn live_workers(&self) -> usize {
-        self.live.iter().filter(|&&a| a).count()
+        self.live_count
     }
 
     /// Every worker loss observed so far, in arrival order.
     pub fn failures(&self) -> &[WorkerFailure] {
         &self.failures
+    }
+
+    /// Install per-worker rejoin gaps (commit-clock) for churn scenarios:
+    /// `schedule[k][e]` is consumed on worker k's e-th departure, scheduling
+    /// its re-admission `gap` commits later.  Without a schedule (the
+    /// default) every departure is permanent.
+    pub fn set_rejoin_schedule(&mut self, schedule: Vec<Vec<u64>>) {
+        assert_eq!(schedule.len(), self.cfg.workers);
+        self.rejoin_schedule = schedule;
+    }
+
+    /// Re-admissions performed so far.
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Workers currently away but scheduled to return.
+    pub fn pending_rejoins(&self) -> usize {
+        self.rejoin_at.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Compact membership timeline: `w1-@r3;w1+@r7` reads "worker 1 left at
+    /// commit 3 and was re-admitted at commit 7".  Empty while membership
+    /// never changed.
+    pub fn membership_timeline(&self) -> String {
+        let mut out = String::new();
+        for &(round, wid, joined) in &self.timeline {
+            if !out.is_empty() {
+                out.push(';');
+            }
+            let sign = if joined { '+' } else { '-' };
+            out.push_str(&format!("w{wid}{sign}@r{round}"));
+        }
+        out
+    }
+
+    /// Event-driven admission: the runtime saw a fresh hello carrying a
+    /// prior wid (`ServerEvent::WorkerJoined`).  Returns the admission
+    /// reply, or `None` when there is nothing to admit — the worker is
+    /// live, the run is over, or a scheduled rejoin owns the admission
+    /// timing (the commit clock, not the reconnect race, decides when the
+    /// worker re-enters the barrier set).
+    pub fn on_worker_joined(&mut self, k: usize) -> Option<DeltaMsg> {
+        if k >= self.cfg.workers || self.live[k] || self.finished || self.rejoin_at[k].is_some() {
+            return None;
+        }
+        Some(self.admit(k))
     }
 
     /// Is the current inner iteration a full-barrier one?
@@ -250,7 +318,12 @@ impl ServerState {
             // healthy, so the fault-free path is unchanged)
             self.in_group == self.live_workers()
         } else {
-            self.in_group >= self.cfg.group.min(self.cfg.workers)
+            // B clamps to the live fleet: with every absence pending a
+            // rejoin, |live| may legitimately drop below B and the
+            // survivors must still commit (no commit ⇒ nobody is ever
+            // re-admitted).  While live ≥ B this is exactly `group`, so
+            // healthy and permanently-degraded runs are unchanged.
+            self.in_group >= self.cfg.group.min(self.live_count).max(1)
         }
     }
 
@@ -290,11 +363,21 @@ impl ServerState {
             return Ok(ServerAction::Wait);
         }
         self.live[k] = false;
+        self.live_count -= 1;
         self.failures.push(WorkerFailure {
             worker: k,
             round: self.total_rounds,
             reason: reason.to_string(),
         });
+        self.timeline.push((self.total_rounds, k, false));
+        // churn: the departure is an episode boundary — consume the next
+        // away gap and anchor the re-admission on the commit clock (which
+        // every runtime advances identically)
+        let gap = self.rejoin_schedule.get(k).and_then(|g| g.get(self.episodes[k]));
+        if let Some(&gap) = gap {
+            self.rejoin_at[k] = Some(self.total_rounds + gap);
+        }
+        self.episodes[k] += 1;
         // a pending update from the dead worker must not enter a commit
         if self.inbox[k].take().is_some() {
             self.in_group -= 1;
@@ -305,9 +388,10 @@ impl ServerState {
                 self.total_rounds
             ),
             FailPolicy::Degrade => {
-                let live = self.live_workers();
+                let live = self.live_count;
+                let pending = self.rejoin_at.iter().any(|r| r.is_some());
                 anyhow::ensure!(
-                    live >= self.cfg.group,
+                    live >= self.cfg.group || pending,
                     "worker {k} lost at round {}: {reason} — {live} live workers < group size B={}",
                     self.total_rounds,
                     self.cfg.group
@@ -319,6 +403,22 @@ impl ServerState {
                 }
                 // the dead worker may have been the log's laggard
                 self.truncate_log();
+                if self.live_count == 0 {
+                    // the whole fleet is away: no update can ever complete
+                    // a barrier again, so re-admit the earliest-due
+                    // returnee now (deterministic: min due round, min wid)
+                    let (_, next) = (0..self.cfg.workers)
+                        .filter_map(|j| self.rejoin_at[j].map(|due| (due, j)))
+                        .min()
+                        .expect("pending rejoin exists when live == 0");
+                    let reply = self.admit(next);
+                    return Ok(ServerAction::Commit {
+                        replies: vec![reply],
+                        round: self.total_rounds,
+                        full_barrier: false,
+                        finished: false,
+                    });
+                }
                 Ok(ServerAction::Wait)
             }
         }
@@ -371,7 +471,7 @@ impl ServerState {
 
         // line 11: materialize Δw̃_k = Σ log[cursor_k..] for each member and
         // advance its cursor past the log head
-        let replies: Vec<DeltaMsg> = members
+        let mut replies: Vec<DeltaMsg> = members
             .iter()
             .map(|&k| {
                 let delta = self.materialize_since(self.cursor[k]);
@@ -384,12 +484,45 @@ impl ServerState {
                 }
             })
             .collect();
+        // membership: re-admit every away worker whose gap has elapsed; the
+        // admission reply rides the same commit action
+        if !finished {
+            for k in 0..self.cfg.workers {
+                if self.rejoin_at[k].map_or(false, |due| due <= self.total_rounds) {
+                    let reply = self.admit(k);
+                    replies.push(reply);
+                }
+            }
+        }
         self.truncate_log();
         ServerAction::Commit {
             replies,
             round: self.total_rounds,
             full_barrier,
             finished,
+        }
+    }
+
+    /// Re-admit an away worker at the current commit: back into the barrier
+    /// set with a reset cursor and a full-model reply.  Encoding `w` via
+    /// `ModelDelta::from_dense` makes the reply bit-identical to what a
+    /// brand-new worker's cursor-0 materialization would carry (same values
+    /// — w IS the ordered sum of all commits — and the same sparse/dense
+    /// wire choice), so the returnee's first Δw̃ is well-defined.
+    fn admit(&mut self, k: usize) -> DeltaMsg {
+        debug_assert!(!self.live[k], "admitting a live worker");
+        self.rejoin_at[k] = None;
+        self.live[k] = true;
+        self.live_count += 1;
+        self.cursor[k] = self.total_rounds;
+        self.last_included[k] = self.total_rounds;
+        self.rejoins += 1;
+        self.timeline.push((self.total_rounds, k, true));
+        DeltaMsg {
+            worker: k as u32,
+            server_round: self.total_rounds,
+            shutdown: self.finished,
+            delta: ModelDelta::from_dense(&self.w),
         }
     }
 
@@ -795,6 +928,121 @@ mod tests {
             let _ = s.on_update(upd(0, 4, 0, 0.1));
         }
         assert_eq!(s.live_log_entries(), 0, "log leaked on a dead cursor");
+    }
+
+    #[test]
+    fn scheduled_rejoin_readmits_at_the_due_commit() {
+        // K=2, B=2, T=1: full barrier every commit.  Worker 1 leaves after
+        // commit 1 with a 2-commit away gap -> due back at commit 3.
+        let mut s = server_with_policy(2, 2, 1, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![], vec![2]]);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let _ = s.on_update(upd(1, 4, 1, 1.0)); // commit 1
+        let _ = s.on_worker_lost(1, "churn leave").unwrap();
+        assert_eq!(s.live_workers(), 1);
+        assert_eq!(s.pending_rejoins(), 1);
+        // live < B, but a rejoin is pending: the survivor commits alone,
+        // and commit 2 is before the due round — no admission yet
+        match s.on_update(upd(0, 4, 0, 1.0)) {
+            ServerAction::Commit { replies, round, .. } => {
+                assert_eq!(round, 2);
+                assert_eq!(replies.len(), 1);
+            }
+            _ => panic!("survivor must commit alone while a rejoin pends"),
+        }
+        // commit 3 carries the admission reply for worker 1
+        match s.on_update(upd(0, 4, 0, 1.0)) {
+            ServerAction::Commit { replies, round, .. } => {
+                assert_eq!(round, 3);
+                assert_eq!(replies.len(), 2);
+                let adm = replies.iter().find(|r| r.worker == 1).unwrap();
+                assert_eq!(adm.server_round, 3);
+                let mut buf = vec![0.0; 4];
+                adm.delta.add_into(&mut buf);
+                assert_eq!(buf, s.w());
+            }
+            _ => panic!(),
+        }
+        assert!(s.is_live(1));
+        assert_eq!(s.rejoins(), 1);
+        assert_eq!(s.pending_rejoins(), 0);
+        assert_eq!(s.membership_timeline(), "w1-@r1;w1+@r3");
+        // commit 4 is a full barrier over BOTH workers again
+        assert!(matches!(s.on_update(upd(0, 4, 0, 1.0)), ServerAction::Wait));
+        assert!(matches!(
+            s.on_update(upd(1, 4, 1, 1.0)),
+            ServerAction::Commit { .. }
+        ));
+    }
+
+    #[test]
+    fn rejoin_reply_matches_a_fresh_workers_view() {
+        // the admission reply must encode exactly w — same values and the
+        // same sparse/dense wire choice a cursor-0 materialization makes
+        let mut s = server_with_policy(2, 1, 4, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![], vec![1]]);
+        let _ = s.on_update(upd(0, 4, 0, 0.25)); // commit 1
+        let _ = s.on_update(upd(0, 4, 2, -0.5)); // commit 2
+        let _ = s.on_worker_lost(1, "churn leave").unwrap(); // due at 3
+        let adm = match s.on_update(upd(0, 4, 0, 1.0)) {
+            ServerAction::Commit { replies, .. } => {
+                replies.into_iter().find(|r| r.worker == 1).unwrap()
+            }
+            _ => panic!(),
+        };
+        let mut got = vec![0.0; 4];
+        adm.delta.add_into(&mut got);
+        assert_eq!(got, s.w());
+        let w_nnz = s.w().iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(adm.delta.nnz(), w_nnz);
+    }
+
+    #[test]
+    fn all_away_fleet_is_rescued_by_earliest_rejoiner() {
+        let mut s = server_with_policy(2, 1, 10, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![5], vec![3]]);
+        let _ = s.on_worker_lost(0, "churn leave").unwrap();
+        // losing the whole fleet re-admits the earliest-due returnee
+        // (worker 1, due at commit 3, vs worker 0 at commit 5) immediately
+        match s.on_worker_lost(1, "churn leave").unwrap() {
+            ServerAction::Commit { replies, .. } => {
+                assert_eq!(replies.len(), 1);
+                assert_eq!(replies[0].worker, 1);
+            }
+            _ => panic!("live==0 with pending rejoins must re-admit"),
+        }
+        assert_eq!(s.live_workers(), 1);
+        assert!(s.is_live(1));
+        // worker 0 is still due back at commit 5
+        for r in 1..=5u64 {
+            let n = match s.on_update(upd(1, 4, 1, 0.1)) {
+                ServerAction::Commit { replies, round, .. } => {
+                    assert_eq!(round, r);
+                    replies.len()
+                }
+                _ => panic!(),
+            };
+            assert_eq!(n, if r == 5 { 2 } else { 1 });
+        }
+        assert_eq!(s.rejoins(), 2);
+    }
+
+    #[test]
+    fn event_driven_join_admits_only_unscheduled_departures() {
+        let mut s = server_with_policy(2, 1, 10, FailPolicy::Degrade);
+        // live worker: nothing to admit
+        assert!(s.on_worker_joined(1).is_none());
+        let _ = s.on_worker_lost(1, "socket died").unwrap();
+        let adm = s.on_worker_joined(1).expect("reconnect re-admits");
+        assert_eq!(adm.worker, 1);
+        assert!(s.is_live(1));
+        assert_eq!(s.rejoins(), 1);
+        // a scheduled rejoin owns its admission timing: raw joins deferred
+        let mut s = server_with_policy(2, 1, 10, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![], vec![4]]);
+        let _ = s.on_worker_lost(1, "churn leave").unwrap();
+        assert!(s.on_worker_joined(1).is_none());
+        assert!(!s.is_live(1));
     }
 
     #[test]

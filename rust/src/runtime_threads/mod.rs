@@ -17,8 +17,8 @@ use std::time::{Duration, Instant};
 use crate::data::{partition::partition_rows, Dataset};
 use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
-use crate::network::NetworkModel;
-use crate::protocol::messages::{GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
+use crate::network::{episode_rng, NetworkModel};
+use crate::protocol::messages::{DeltaMsg, GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
 use crate::solver::objective::{combine, ObjectivePieces};
@@ -41,6 +41,10 @@ pub struct ThreadRunOutput {
     pub failures: Vec<WorkerFailure>,
     /// workers still in the barrier set at the end (== K when healthy)
     pub live_workers: usize,
+    /// re-admissions performed by the server (churn scenarios)
+    pub rejoins: u64,
+    /// compact membership timeline (`w1-@r3;w1+@r7`; empty while static)
+    pub membership: String,
 }
 
 /// What the server's message pump delivers: either a protocol message or a
@@ -51,6 +55,10 @@ pub struct ThreadRunOutput {
 pub enum ServerEvent {
     Msg(ToServerMsg),
     WorkerLost { wid: usize, reason: String },
+    /// A fresh hello carrying a previously-seen wid (TCP reconnect after a
+    /// departure).  Admission is event-driven unless a scheduled rejoin
+    /// owns the timing (`ServerState::on_worker_joined`).
+    WorkerJoined { wid: usize },
 }
 
 /// Drive one worker against abstract endpoints.  Reused verbatim by the TCP
@@ -142,6 +150,13 @@ pub fn server_loop(
             }
             ServerEvent::Msg(ToServerMsg::GapPieces(_)) => panic!("unsolicited gap pieces"),
             ServerEvent::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
+            ServerEvent::WorkerJoined { wid } => {
+                if let Some(r) = server.on_worker_joined(wid) {
+                    bytes_down += r.wire_bytes() as u64;
+                    send(wid, ToWorkerMsg::Delta(r));
+                }
+                ServerAction::Wait
+            }
         };
         match action {
             ServerAction::Wait => {}
@@ -178,6 +193,7 @@ pub fn server_loop(
                     }
                     let mut expected = awaiting.iter().filter(|&&a| a).count();
                     let mut merged = ObjectivePieces::default();
+                    let mut deferred_joins: Vec<usize> = Vec::new();
                     let mut got = 0;
                     while got < expected {
                         match recv() {
@@ -207,10 +223,22 @@ pub fn server_loop(
                                     expected -= 1;
                                 }
                             }
+                            Some(ServerEvent::WorkerJoined { wid }) => {
+                                // admit only after the probe round: admitting
+                                // mid-collection would let the returnee's
+                                // first update race the parked barrier
+                                deferred_joins.push(wid);
+                            }
                             None => {
                                 let w = server.w().to_vec();
                                 return Ok((history, w, server, bytes_up, bytes_down));
                             }
+                        }
+                    }
+                    for wid in deferred_joins {
+                        if let Some(r) = server.on_worker_joined(wid) {
+                            bytes_down += r.wire_bytes() as u64;
+                            send(wid, ToWorkerMsg::Delta(r));
                         }
                     }
                     let rep = combine(&merged, server.w(), cfg.lambda, n);
@@ -268,6 +296,10 @@ pub fn run(
     let mut jitter_rngs: Vec<Pcg64> =
         (0..k).map(|wid| root_rng.split(0x9999 + wid as u64)).collect();
 
+    // round-indexed scenario schedule: the same pure draws as sim/tcp
+    let plan = net.schedule(k, seed);
+    let churn = plan.has_rejoins();
+
     let (to_server_tx, to_server_rx) = mpsc::channel::<ServerEvent>();
     let mut worker_txs = Vec::new();
     let mut handles = Vec::new();
@@ -282,7 +314,7 @@ pub fn run(
         let jitter_rng = std::mem::replace(&mut jitter_rngs[wid], Pcg64::new(0));
         let slowdown = net.slowdown.get(wid).copied().unwrap_or(1.0);
         let jitter = net.jitter.clone();
-        let kill_round = net.faults.kill_round_for(wid, seed);
+        let plan = plan.clone();
         let (loss, lambda, sigma, gamma, h, n_global, error_feedback) = (
             cfg.loss,
             cfg.lambda,
@@ -293,32 +325,92 @@ pub fn run(
             cfg.error_feedback,
         );
         handles.push(thread::spawn(move || {
-            // solver constructed inside the thread (LocalSolver is !Send)
-            let solver = SdcaSolver::new(p, loss, lambda, n_global, sigma, gamma, solver_rng);
-            let mut state = WorkerState::new(wid, Box::new(solver), gamma as f32, h, rho_d_msg);
-            state.set_error_feedback(error_feedback);
-            let up_msg = up.clone();
-            let died = worker_loop(
-                state,
-                slowdown,
-                jitter,
-                jitter_rng,
-                kill_round,
-                move |m| {
-                    let _ = up_msg.send(ServerEvent::Msg(m));
-                },
-                move || rx.recv().ok(),
-            );
-            // an injected death becomes an explicit loss notice — the
-            // in-process analogue of a TCP reader seeing the socket die
-            if let Some(reason) = died {
+            // membership-episode loop: episode 0 is the legacy single-shot
+            // path (same RNG streams, so fault-free and kill/flaky runs are
+            // byte-identical); under churn each departure blocks on the
+            // server's scheduled re-admission and rebuilds worker state
+            // from scratch, exactly like the simulator.
+            let mut episode: u64 = 0;
+            let mut part = Some(p);
+            let mut first_rng = Some(solver_rng);
+            let mut jitter_rng = Some(jitter_rng);
+            let mut admission: Option<DeltaMsg> = None;
+            loop {
+                let p_ep = if churn {
+                    part.clone().expect("partition kept across episodes")
+                } else {
+                    part.take().expect("single episode without churn")
+                };
+                let rng = if episode == 0 {
+                    first_rng.take().unwrap()
+                } else {
+                    episode_rng(seed, wid, episode)
+                };
+                let jr = if episode == 0 {
+                    jitter_rng.take().unwrap()
+                } else {
+                    Pcg64::new(0) // churn scenarios carry no jitter
+                };
+                // solver constructed inside the thread (LocalSolver is !Send)
+                let solver = SdcaSolver::new(p_ep, loss, lambda, n_global, sigma, gamma, rng);
+                let mut state =
+                    WorkerState::new(wid, Box::new(solver), gamma as f32, h, rho_d_msg);
+                state.set_error_feedback(error_feedback);
+                if let Some(d) = admission.take() {
+                    // the full-model admission reply IS this episode's first
+                    // delta: apply it before computing, like a fresh worker
+                    state.apply_delta(&d);
+                    if state.done() {
+                        return;
+                    }
+                }
+                let leave_round = plan.leave_after(wid, episode);
+                let up_msg = up.clone();
+                let died = worker_loop(
+                    state,
+                    slowdown,
+                    jitter.clone(),
+                    jr,
+                    leave_round,
+                    move |m| {
+                        let _ = up_msg.send(ServerEvent::Msg(m));
+                    },
+                    || rx.recv().ok(),
+                );
+                // an injected death becomes an explicit loss notice — the
+                // in-process analogue of a TCP reader seeing the socket die
+                let Some(legacy_reason) = died else { return };
+                let reason = if churn {
+                    let r = leave_round.unwrap_or(0);
+                    format!("churn: left before sending update {r} (episode {episode})")
+                } else {
+                    legacy_reason
+                };
                 let _ = up.send(ServerEvent::WorkerLost { wid, reason });
+                if !churn {
+                    return;
+                }
+                // away: park until the server's commit clock re-admits us
+                // with a full-model Delta (stale gap probes are ignored —
+                // the server only awaits pieces from live workers)
+                let adm = loop {
+                    match rx.recv() {
+                        Ok(ToWorkerMsg::Delta(d)) => break d,
+                        Ok(ToWorkerMsg::GapRequest(_)) => continue,
+                        Err(_) => return, // server gone
+                    }
+                };
+                if adm.shutdown {
+                    return;
+                }
+                episode += 1;
+                admission = Some(adm);
             }
         }));
     }
     drop(to_server_tx);
 
-    let server = ServerState::new(
+    let mut server = ServerState::new(
         ServerConfig {
             workers: k,
             group: cfg.group,
@@ -329,6 +421,11 @@ pub fn run(
         },
         d,
     );
+    if churn {
+        // a worker cannot depart more often than the server commits
+        let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
+        server.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
+    }
     let result = server_loop(
         server,
         cfg,
@@ -357,6 +454,8 @@ pub fn run(
         peak_log_entries: server.peak_log_entries(),
         failures: server.failures().to_vec(),
         live_workers: server.live_workers(),
+        rejoins: server.rejoins(),
+        membership: server.membership_timeline(),
     })
 }
 
@@ -427,6 +526,24 @@ mod tests {
         let err = run(&ds, &cfg, &net, 9).unwrap_err().to_string();
         assert!(err.contains("worker 1"), "{err}");
         assert!(err.contains("fail_fast"), "{err}");
+    }
+
+    #[test]
+    fn threads_churn_degrade_rejoins_and_completes() {
+        let ds = small_ds();
+        // B = K + degrade: the composition-deterministic churn regime
+        let mut cfg = EngineConfig::acpd(4, 4, 5, 1e-2);
+        cfg.h = 256;
+        cfg.outer_rounds = 8;
+        cfg.fail_policy = crate::protocol::server::FailPolicy::Degrade;
+        let net = NetworkModel::lan().with_churn(0.6, 0.6);
+        let out = run(&ds, &cfg, &net, 7).unwrap();
+        assert!(out.failures.len() >= 1, "churn must record leaves");
+        assert!(out.rejoins >= 1, "membership: {}", out.membership);
+        assert!(out.membership.contains("+@r"), "{}", out.membership);
+        // every commit is a full barrier over the live set, so the total
+        // commit count is unchanged by churn
+        assert_eq!(out.rounds, (cfg.outer_rounds * cfg.period) as u64);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::collections::BinaryHeap;
 use crate::data::{partition::partition_rows, Dataset};
 use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
-use crate::network::NetworkModel;
+use crate::network::{episode_rng, NetworkModel, ScenarioSchedule};
 use crate::protocol::messages::{DeltaMsg, UpdateMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
@@ -88,6 +88,10 @@ pub struct SimStats {
     pub failures: Vec<WorkerFailure>,
     /// workers still live at the end of the run
     pub live_workers: usize,
+    /// re-admissions performed by the server (churn scenarios)
+    pub rejoins: u64,
+    /// compact membership timeline (`w1-@r3;w1+@r7`; empty while static)
+    pub membership: String,
 }
 
 pub struct SimOutput {
@@ -153,6 +157,13 @@ pub fn run_with_solvers(
 
     let mut root_rng = Pcg64::with_stream(seed, 0x51u64);
     let parts = partition_rows(ds, k, Some(seed ^ 0xACDC));
+    // churn rebuilds a returnee's solver over its original shard: keep the
+    // partitions only when the scenario can actually re-admit someone
+    let kept_parts: Vec<crate::data::partition::Partition> = if net.churn.is_some() {
+        parts.clone()
+    } else {
+        Vec::new()
+    };
 
     let mut workers: Vec<WorkerState> = parts
         .into_iter()
@@ -190,22 +201,47 @@ pub fn run_with_solvers(
     let mut comm_time = 0.0f64;
     let mut history = History::new(format!("{}", cfg.algorithm.name()));
 
-    // fault plan: same deterministic draw as the threads/TCP runtimes, so
-    // kill:<wid>@<round> and flaky:<p> scenarios are cross-runtime comparable
-    let kill_rounds: Vec<Option<u64>> =
-        (0..k).map(|wid| net.faults.kill_round_for(wid, seed)).collect();
+    // round-indexed scenario schedule: the SAME pure draws as the
+    // threads/TCP runtimes (kill_round_for for legacy kills, per-episode
+    // streams for churn, per-window streams for burst), so every fault
+    // scenario stays cross-runtime comparable
+    let plan = net.schedule(k, seed);
+    let churn = plan.has_rejoins();
+    if churn {
+        // a worker cannot depart more often than the server commits
+        let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
+        server.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
+    }
+    // per-worker membership bookkeeping: the episode index selects the
+    // scenario's leave draw, `rounds_sent` counts local rounds WITHIN the
+    // current episode (a returnee restarts at 0 like a fresh worker)
+    let mut episode = vec![0u64; k];
+    let mut away = vec![false; k];
     let mut rounds_sent = vec![0u64; k];
+    let leave_reason = |round: u64, ep: u64| -> String {
+        if churn {
+            format!("churn: left before sending update {round} (episode {ep})")
+        } else {
+            // the legacy spelling is part of the kill/flaky contract
+            format!("injected fault: died before sending update {round}")
+        }
+    };
 
     // kick off: every worker computes its first round at t = 0
     for w in workers.iter_mut() {
-        let dt = net.compute_time(w.id, cfg.h, nnz_means[w.id], &mut time_rng);
+        let mult = plan.delay(w.id, 1);
+        let mut dt = net.compute_time(w.id, cfg.h, nnz_means[w.id], &mut time_rng);
+        if mult != 1.0 {
+            dt *= mult;
+        }
         compute_time += dt;
         let msg = w.compute_round();
         rounds_sent[w.id] = 1;
-        if kill_rounds[w.id] == Some(1) {
+        if plan.leave_after(w.id, 0) == Some(1) {
             // dies after the local solve, before the send (the same point
             // worker_loop injects the fault): compute is charged, nothing
             // goes on the wire, and the loss becomes observable at `dt`
+            away[w.id] = true;
             heap.push(Event {
                 time: dt,
                 seq: {
@@ -214,7 +250,7 @@ pub fn run_with_solvers(
                 },
                 payload: Payload::WorkerLost {
                     wid: w.id,
-                    reason: "injected fault: died before sending update 1".into(),
+                    reason: leave_reason(1, 0),
                 },
             });
             continue;
@@ -243,13 +279,35 @@ pub fn run_with_solvers(
             Payload::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
             Payload::ToWorker(msg) => {
                 let wid = msg.worker as usize;
+                if away[wid] {
+                    // re-admission: the server accepted this worker back at
+                    // a commit and shipped the full model.  Rebuild the
+                    // worker from scratch (fresh solver over its original
+                    // shard, pure per-episode RNG) — exactly the state a
+                    // brand-new worker would hold — then fall through to
+                    // the normal apply/compute path.
+                    away[wid] = false;
+                    episode[wid] += 1;
+                    rounds_sent[wid] = 0;
+                    let solver =
+                        make_solver(kept_parts[wid].clone(), episode_rng(seed, wid, episode[wid]));
+                    let mut ws = WorkerState::new(wid, solver, cfg.gamma as f32, cfg.h, rho_d_msg);
+                    ws.set_error_feedback(cfg.error_feedback);
+                    workers[wid] = ws;
+                }
                 workers[wid].apply_delta(&msg);
                 if !workers[wid].done() {
-                    let dt = net.compute_time(wid, cfg.h, nnz_means[wid], &mut time_rng);
+                    let r = rounds_sent[wid] + 1;
+                    let mult = plan.delay(wid, r);
+                    let mut dt = net.compute_time(wid, cfg.h, nnz_means[wid], &mut time_rng);
+                    if mult != 1.0 {
+                        dt *= mult;
+                    }
                     compute_time += dt;
                     let out = workers[wid].compute_round();
-                    rounds_sent[wid] += 1;
-                    if kill_rounds[wid] == Some(rounds_sent[wid]) {
+                    rounds_sent[wid] = r;
+                    if plan.leave_after(wid, episode[wid]) == Some(r) {
+                        away[wid] = true;
                         heap.push(Event {
                             time: now + dt,
                             seq: {
@@ -258,10 +316,7 @@ pub fn run_with_solvers(
                             },
                             payload: Payload::WorkerLost {
                                 wid,
-                                reason: format!(
-                                    "injected fault: died before sending update {}",
-                                    rounds_sent[wid]
-                                ),
+                                reason: leave_reason(r, episode[wid]),
                             },
                         });
                     } else {
@@ -343,6 +398,8 @@ pub fn run_with_solvers(
         peak_log_entries: server.peak_log_entries(),
         failures: server.failures().to_vec(),
         live_workers: server.live_workers(),
+        rejoins: server.rejoins(),
+        membership: server.membership_timeline(),
     };
     // assemble final global dual state + leftover residual mass
     let mut final_alpha = vec![0.0f32; ds.n()];
@@ -564,5 +621,76 @@ mod tests {
         let a = run(&ds, &cfg, &NetworkModel::lan(), 7);
         assert!(a.stats.failures.is_empty());
         assert_eq!(a.stats.live_workers, 4);
+        assert_eq!(a.stats.rejoins, 0);
+        assert_eq!(a.stats.membership, "");
+    }
+
+    #[test]
+    fn burst_scenario_slows_some_windows() {
+        // same seed with and without bursts: identical rounds/bytes (delay
+        // multipliers touch timing only), strictly more compute time
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        let base = {
+            let mut net = NetworkModel::lan();
+            net.flop_time = 2e-7; // same regime as with_burst
+            run(&ds, &cfg, &net, 7)
+        };
+        let burst = run(
+            &ds,
+            &cfg,
+            &NetworkModel::lan().with_burst(0.4, 6.0, 3),
+            7,
+        );
+        assert!(
+            burst.stats.compute_time > base.stats.compute_time * 1.05,
+            "bursts must add compute time: {} vs {}",
+            burst.stats.compute_time,
+            base.stats.compute_time
+        );
+        assert_eq!(burst.stats.failures.len(), 0);
+        // deterministic
+        let again = run(&ds, &cfg, &NetworkModel::lan().with_burst(0.4, 6.0, 3), 7);
+        assert_eq!(burst.stats.compute_time, again.stats.compute_time);
+        assert_eq!(burst.stats.bytes_up, again.stats.bytes_up);
+    }
+
+    #[test]
+    fn churn_degrade_leaves_and_rejoins() {
+        use crate::protocol::server::FailPolicy;
+        let ds = small_ds();
+        // B = K: every commit is all-live, the regime where churn rounds
+        // and bytes are provably runtime-independent
+        let mut cfg = fast_cfg(EngineConfig::acpd(4, 4, 5, 1e-3));
+        cfg.fail_policy = FailPolicy::Degrade;
+        cfg.outer_rounds = 8;
+        let net = NetworkModel::lan().with_churn(0.6, 0.6);
+        let out = try_run(&ds, &cfg, &net, 7).unwrap();
+        assert!(out.stats.failures.len() >= 1, "churn must record leaves");
+        assert!(
+            out.stats.rejoins >= 1,
+            "churn must re-admit someone (membership: {})",
+            out.stats.membership
+        );
+        assert!(out.stats.membership.contains("+@r"), "{}", out.stats.membership);
+        assert!(out.stats.membership.contains("-@r"), "{}", out.stats.membership);
+        // commit count is unchanged by churn under B=K + degrade: every
+        // commit is a full barrier over whoever is live
+        assert_eq!(out.stats.rounds, (cfg.outer_rounds * cfg.period) as u64);
+        // deterministic end to end
+        let again = try_run(&ds, &cfg, &net, 7).unwrap();
+        assert_eq!(out.stats.membership, again.stats.membership);
+        assert_eq!(out.stats.rejoins, again.stats.rejoins);
+        assert_eq!(out.stats.bytes_up, again.stats.bytes_up);
+        assert_eq!(out.stats.bytes_down, again.stats.bytes_down);
+        assert_eq!(out.final_w, again.final_w);
+    }
+
+    #[test]
+    fn churn_fail_fast_errors() {
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::acpd(4, 4, 5, 1e-3));
+        let err = try_run(&ds, &cfg, &NetworkModel::lan().with_churn(0.6, 0.6), 7).unwrap_err();
+        assert!(format!("{err:#}").contains("fail_fast"));
     }
 }

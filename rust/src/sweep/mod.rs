@@ -329,6 +329,12 @@ pub struct CellResult {
     /// Compact record of lost workers: `w<wid>@r<round>` joined by `;`
     /// (empty for fault-free cells).
     pub failures: String,
+    /// Re-admissions granted over the run (> 0 only on `churn:` cells).
+    pub rejoins: u64,
+    /// Membership timeline: `w<wid>-@r<round>` for a departure,
+    /// `w<wid>+@r<round>` for a re-admission, joined by `;` (empty when
+    /// membership never changed).
+    pub membership: String,
 }
 
 /// Render worker failures in the report's compact `w<wid>@r<round>` form.
@@ -770,14 +776,17 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     Ok(SweepReport::new(description, results))
 }
 
-/// Estimated compute cost of one cell — total nnz · H · L, the work the
-/// DES charges its solvers (n · nnz/row · H flops per outer round, L outer
-/// rounds).  Only *relative* order matters: it decides which cells start
-/// first (LPT), never what they produce.
+/// Estimated compute cost of one cell — total nnz · H · L · T, the work
+/// the DES charges its solvers (n · nnz/row · H flops per commit, L · T
+/// commits).  Only *relative* order matters: it decides which cells start
+/// first (LPT), never what they produce.  Seeds of the same config tie
+/// exactly, land adjacent in the order, and are claimed one-by-one from
+/// the shared queue — which is what splits them across pool threads.
 fn cell_cost(pc: &PreparedCell, datasets: &[(DatasetSource, Dataset)]) -> f64 {
     datasets[pc.ds_idx].1.nnz() as f64
         * pc.engine.h as f64
         * pc.engine.outer_rounds.max(1) as f64
+        * pc.engine.period.max(1) as f64
 }
 
 /// Pool execution order: cells sorted by estimated cost descending
@@ -812,6 +821,8 @@ struct CellRun {
     w_norm: f64,
     live_workers: usize,
     failures: Vec<WorkerFailure>,
+    rejoins: u64,
+    membership: String,
 }
 
 fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<CellResult> {
@@ -841,6 +852,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 w_norm: dense::norm2_sq(&out.final_w).sqrt(),
                 live_workers: out.stats.live_workers,
                 failures: out.stats.failures,
+                rejoins: out.stats.rejoins,
+                membership: out.stats.membership,
                 history: out.history,
             }
         }
@@ -857,6 +870,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 w_norm: dense::norm2_sq(&out.final_w).sqrt(),
                 live_workers: out.live_workers,
                 failures: out.failures,
+                rejoins: out.rejoins,
+                membership: out.membership,
                 history: out.history,
             }
         }
@@ -897,6 +912,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         eval_points: run.history.points.len(),
         live_workers: run.live_workers,
         failures: failures_column(&run.failures),
+        rejoins: run.rejoins,
+        membership: run.membership,
     })
 }
 
@@ -921,7 +938,17 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
     let t0 = std::time::Instant::now();
     let out = std::thread::scope(|scope| -> Result<crate::transport::TcpServerOutput> {
         let server = scope.spawn(|| {
-            crate::transport::run_server_on(listener, ds.n(), ds.d(), &pc.engine, &tcfg)
+            // scenario-aware entry: `churn:` cells need the server to hold
+            // the rejoin schedule and keep accepting reconnect hellos
+            crate::transport::run_server_on_scenario(
+                listener,
+                ds.n(),
+                ds.d(),
+                &pc.engine,
+                &pc.net,
+                pc.cell.seed,
+                &tcfg,
+            )
         });
         let mut workers = Vec::new();
         for wid in 0..pc.engine.workers {
@@ -952,6 +979,8 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
         w_norm: dense::norm2_sq(&out.final_w).sqrt(),
         live_workers: out.live_workers,
         failures: out.failures,
+        rejoins: out.rejoins,
+        membership: out.membership,
         history: out.history,
     })
 }

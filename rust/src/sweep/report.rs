@@ -92,6 +92,8 @@ impl SweepReport {
             "w_norm",
             "live_workers",
             "failures",
+            "rejoins",
+            "membership",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -129,6 +131,8 @@ impl SweepReport {
                 &c.w_norm,
                 &c.live_workers,
                 &c.failures,
+                &c.rejoins,
+                &c.membership,
             ]);
         }
         w
@@ -290,7 +294,8 @@ impl SweepReport {
                  \"rounds\": {}, \"round_to_target\": {}, \"time_to_target_s\": {}, \
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}, \
-                 \"live_workers\": {}, \"failures\": {}}}{}\n",
+                 \"live_workers\": {}, \"failures\": {}, \
+                 \"rejoins\": {}, \"membership\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
@@ -321,6 +326,8 @@ impl SweepReport {
                 c.eval_points,
                 c.live_workers,
                 json_str(&c.failures),
+                c.rejoins,
+                json_str(&c.membership),
                 if i + 1 < self.cells.len() { "," } else { "" },
             );
         }
@@ -617,6 +624,8 @@ mod tests {
             eval_points: 10,
             live_workers: 4,
             failures: String::new(),
+            rejoins: 0,
+            membership: String::new(),
         }
     }
 
@@ -791,10 +800,14 @@ mod tests {
         let cells = r.cells_csv().to_string();
         assert_eq!(cells.lines().count(), 9); // header + 8 cells
         assert!(cells.starts_with("index,algorithm,scenario,dataset,n,d,nnz,"));
-        // fault-accounting columns append at the END so existing consumers
-        // keep their column positions
+        // fault- and membership-accounting columns append at the END so
+        // existing consumers keep their column positions
         assert!(
-            cells.lines().next().unwrap().ends_with("w_norm,live_workers,failures"),
+            cells
+                .lines()
+                .next()
+                .unwrap()
+                .ends_with("w_norm,live_workers,failures,rejoins,membership"),
             "{cells}"
         );
         let header_cols = cells.lines().next().unwrap().split(',').count();
@@ -819,6 +832,8 @@ mod tests {
         assert!(j.contains("\"nnz\": 131072"));
         assert!(j.contains("\"live_workers\": 4"));
         assert!(j.contains("\"failures\": \"\""));
+        assert!(j.contains("\"rejoins\": 0"));
+        assert!(j.contains("\"membership\": \"\""));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }

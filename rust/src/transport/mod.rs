@@ -27,10 +27,21 @@
 //! cannot kill a cluster bring-up.  Byte accounting is identical to the
 //! other runtimes because all three charge [`ToServerMsg`]/[`ToWorkerMsg`]
 //! `wire_bytes()` — the frames on these sockets are those exact bytes.
+//!
+//! `churn:` scenarios extend the handshake to *rejoins*: a departed worker
+//! comes back by opening a new connection and presenting a fresh hello that
+//! carries its prior id.  The server keeps accepting after bring-up (same
+//! per-connection validation), attaches the socket to the worker's vacated
+//! writer slot, flushes any frames queued while it was away, and raises
+//! [`ServerEvent::WorkerJoined`].  Re-admission *timing* stays with the
+//! server's precomputed rejoin schedule (scheduled admissions ride commit
+//! replies), so rounds/bytes accounting is identical to the sim and threads
+//! runtimes no matter when the reconnect lands on the wire.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -39,8 +50,8 @@ use anyhow::{bail, Context, Result};
 use crate::data::Dataset;
 use crate::engine::EngineConfig;
 use crate::metrics::History;
-use crate::network::NetworkModel;
-use crate::protocol::messages::{ToServerMsg, ToWorkerMsg};
+use crate::network::{episode_rng, NetworkModel};
+use crate::protocol::messages::{DeltaMsg, ToServerMsg, ToWorkerMsg};
 use crate::protocol::server::{ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
 use crate::runtime_threads::{server_loop, worker_loop, ServerEvent};
@@ -152,6 +163,70 @@ fn parse_hello(frame: &[u8]) -> Result<u32> {
     Ok(u32::from_le_bytes(frame[1..5].try_into().unwrap()))
 }
 
+/// A worker's server-side write half.  The reader thread vacates `stream`
+/// when the socket dies (churn runs only), so a returning worker's fresh
+/// hello finds the slot free; frames issued while no socket is attached
+/// queue in `pending` and are flushed on the next accepted hello for this
+/// id, so a scheduled admission reply can never be lost to reconnect
+/// timing.  Byte accounting stays deterministic because `server_loop`
+/// charges logical wire bytes when it *issues* a frame, not when the
+/// flush happens to reach the wire.
+struct WriterSlot {
+    stream: Option<TcpStream>,
+    pending: Vec<Vec<u8>>,
+}
+
+/// Per-socket reader: decode frames into [`ServerEvent`]s until the socket
+/// dies.  On churn runs (`slots` present) the exiting reader vacates the
+/// writer slot; the `WorkerLost` notice is sent BEFORE the slot empties, so
+/// a reconnect's `WorkerJoined` can never overtake the matching loss on the
+/// event channel.
+fn reader_loop(
+    mut read_half: TcpStream,
+    wid: usize,
+    tx: mpsc::Sender<ServerEvent>,
+    read_timeout: Duration,
+    slots: Option<Arc<Vec<Mutex<WriterSlot>>>>,
+) {
+    loop {
+        match read_frame(&mut read_half) {
+            Ok(Some(frame)) => match ToServerMsg::decode(&frame) {
+                Ok(msg) => {
+                    if tx.send(ServerEvent::Msg(msg)).is_err() {
+                        break; // server gone
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(ServerEvent::WorkerLost {
+                        wid,
+                        reason: format!("bad frame: {e:#}"),
+                    });
+                    break;
+                }
+            },
+            Ok(None) => {
+                let _ = tx.send(ServerEvent::WorkerLost {
+                    wid,
+                    reason: "connection closed".to_string(),
+                });
+                break;
+            }
+            Err(e) => {
+                let _ = tx.send(ServerEvent::WorkerLost {
+                    wid,
+                    reason: classify_read_error(&e, read_timeout),
+                });
+                break;
+            }
+        }
+    }
+    if let Some(slots) = slots {
+        if let Some(s) = slots[wid].lock().unwrap().stream.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
 pub struct TcpServerOutput {
     pub history: History,
     pub final_w: Vec<f32>,
@@ -166,6 +241,10 @@ pub struct TcpServerOutput {
     pub failures: Vec<WorkerFailure>,
     /// workers still in the barrier set at the end (== K when healthy)
     pub live_workers: usize,
+    /// re-admissions granted over the run (> 0 only on `churn:` scenarios)
+    pub rejoins: u64,
+    /// membership timeline (`w{id}{+|-}@r{round};…`, empty when healthy)
+    pub membership: String,
 }
 
 /// Run the coordinator: accept K workers on `addr`, drive the protocol to
@@ -181,12 +260,32 @@ pub fn run_server(
     run_server_on(listener, ds_n, d, cfg, tcfg)
 }
 
-/// Close every accepted socket and reap the reader threads — shutting a
+/// [`run_server`] with the scenario in view: `churn:` runs need the server
+/// to derive the same [`ScenarioPlan`](crate::network::ScenarioPlan) as the
+/// workers so it can install the rejoin schedule and keep accepting
+/// reconnect hellos.  For every scenario without rejoins this is exactly
+/// [`run_server`].
+pub fn run_server_scenario(
+    addr: &str,
+    ds_n: usize,
+    d: usize,
+    cfg: &EngineConfig,
+    net: &NetworkModel,
+    seed: u64,
+    tcfg: &TransportConfig,
+) -> Result<TcpServerOutput> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    run_server_on_scenario(listener, ds_n, d, cfg, net, seed, tcfg)
+}
+
+/// Close every attached socket and reap the reader threads — shutting a
 /// socket down unblocks its reader immediately, so teardown never waits
 /// out a read timeout.
-fn teardown(sockets: impl Iterator<Item = TcpStream>, readers: Vec<thread::JoinHandle<()>>) {
-    for s in sockets {
-        let _ = s.shutdown(Shutdown::Both);
+fn teardown(slots: &[Mutex<WriterSlot>], readers: Vec<thread::JoinHandle<()>>) {
+    for slot in slots {
+        if let Some(s) = slot.lock().unwrap().stream.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
     }
     for h in readers {
         let _ = h.join();
@@ -225,8 +324,35 @@ pub fn run_server_on(
     cfg: &EngineConfig,
     tcfg: &TransportConfig,
 ) -> Result<TcpServerOutput> {
+    // the server only needs the scenario for rejoin scheduling; a plain
+    // model has none, so this stays the legacy behavior exactly (legacy
+    // kill/flaky faults are injected worker-side and arrive as WorkerLost)
+    run_server_on_scenario(listener, ds_n, d, cfg, &NetworkModel::lan(), 0, tcfg)
+}
+
+/// [`run_server_on`] with the scenario in view — see [`run_server_scenario`].
+pub fn run_server_on_scenario(
+    listener: TcpListener,
+    ds_n: usize,
+    d: usize,
+    cfg: &EngineConfig,
+    net: &NetworkModel,
+    seed: u64,
+    tcfg: &TransportConfig,
+) -> Result<TcpServerOutput> {
     let k = cfg.workers;
-    let mut write_halves: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+    let plan = net.schedule(k, seed);
+    let churn = plan.has_rejoins();
+    let slots: Arc<Vec<Mutex<WriterSlot>>> = Arc::new(
+        (0..k)
+            .map(|_| {
+                Mutex::new(WriterSlot {
+                    stream: None,
+                    pending: Vec::new(),
+                })
+            })
+            .collect(),
+    );
     let (tx, rx) = mpsc::channel::<ServerEvent>();
     let mut reader_handles = Vec::new();
 
@@ -237,7 +363,7 @@ pub fn run_server_on(
     let mut accepted = 0usize;
     while accepted < k {
         if Instant::now() >= deadline {
-            teardown(write_halves.into_iter().flatten(), reader_handles);
+            teardown(&slots, reader_handles);
             bail!(
                 "accepted {accepted} of {k} workers within {:?} accept deadline",
                 tcfg.accept_deadline
@@ -250,7 +376,7 @@ pub fn run_server_on(
                 continue;
             }
             Err(e) => {
-                teardown(write_halves.into_iter().flatten(), reader_handles);
+                teardown(&slots, reader_handles);
                 return Err(anyhow::Error::from(e).context("accept worker"));
             }
         };
@@ -282,54 +408,43 @@ pub fn run_server_on(
             eprintln!("rejecting connection from {peer}: worker id {wid} out of range (K={k})");
             continue;
         }
-        if write_halves[wid].is_some() {
+        if slots[wid].lock().unwrap().stream.is_some() {
             eprintln!("rejecting connection from {peer}: duplicate worker id {wid}");
             continue;
         }
         // SO_RCVTIMEO is per-socket and shared with the try_clone'd reader
         stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
-        let mut read_half = stream.try_clone()?;
-        write_halves[wid] = Some(stream);
+        let read_half = stream.try_clone()?;
+        slots[wid].lock().unwrap().stream = Some(stream);
         accepted += 1;
         let tx = tx.clone();
         let read_timeout = tcfg.read_timeout;
-        reader_handles.push(thread::spawn(move || loop {
-            match read_frame(&mut read_half) {
-                Ok(Some(frame)) => match ToServerMsg::decode(&frame) {
-                    Ok(msg) => {
-                        if tx.send(ServerEvent::Msg(msg)).is_err() {
-                            return; // server gone
-                        }
-                    }
-                    Err(e) => {
-                        let _ = tx.send(ServerEvent::WorkerLost {
-                            wid,
-                            reason: format!("bad frame: {e:#}"),
-                        });
-                        return;
-                    }
-                },
-                Ok(None) => {
-                    let _ = tx.send(ServerEvent::WorkerLost {
-                        wid,
-                        reason: "connection closed".to_string(),
-                    });
-                    return;
-                }
-                Err(e) => {
-                    let _ = tx.send(ServerEvent::WorkerLost {
-                        wid,
-                        reason: classify_read_error(&e, read_timeout),
-                    });
-                    return;
-                }
-            }
+        // only churn readers vacate their slot on exit: it is what lets a
+        // reconnect through the duplicate-id check
+        let reader_slots = churn.then(|| slots.clone());
+        reader_handles.push(thread::spawn(move || {
+            reader_loop(read_half, wid, tx, read_timeout, reader_slots)
         }));
     }
+    // churn runs keep accepting after bring-up so departed workers can
+    // rejoin; every other scenario drops the listener here, exactly as
+    // before (a tx clone lives in the acceptor, which is fine: churn
+    // termination is the finished flag or a fail-policy error, never the
+    // all-readers-gone recv-None path)
+    let stop_accepting = Arc::new(AtomicBool::new(false));
+    let acceptor = churn.then(|| {
+        spawn_acceptor(
+            listener,
+            slots.clone(),
+            tx.clone(),
+            tcfg.clone(),
+            k,
+            stop_accepting.clone(),
+        )
+    });
     drop(tx);
-    let mut writers: Vec<TcpStream> = write_halves.into_iter().map(|s| s.unwrap()).collect();
 
-    let server = ServerState::new(
+    let mut server = ServerState::new(
         ServerConfig {
             workers: k,
             group: cfg.group,
@@ -340,28 +455,40 @@ pub fn run_server_on(
         },
         d,
     );
-    // writers are used from the single server thread only; interior
-    // mutability via RefCell keeps the shared-closure signature.
-    let writers_cell = std::cell::RefCell::new(&mut writers);
+    if churn {
+        let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
+        server.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
+    }
     let result = server_loop(
         server,
         cfg,
         ds_n,
         || rx.recv().ok(),
         |wid, msg| {
-            let mut w = writers_cell.borrow_mut();
-            // a failed send means the socket died; the reader thread on the
-            // same socket observes it and raises WorkerLost (a tx clone here
-            // would keep the channel open and starve the recv-None path)
-            if let Err(e) = send_frame(&mut w[wid], &msg.encode()) {
-                eprintln!("send to worker {wid} failed: {e}");
+            let mut slot = slots[wid].lock().unwrap();
+            let frame = msg.encode();
+            match slot.stream.as_mut() {
+                // a failed send means the socket died; the reader thread on
+                // the same socket observes it and raises WorkerLost (a tx
+                // clone here would keep the channel open and starve the
+                // recv-None path)
+                Some(s) => {
+                    if let Err(e) = send_frame(s, &frame) {
+                        eprintln!("send to worker {wid} failed: {e}");
+                    }
+                }
+                // worker is away: hold the frame for its next hello
+                None => slot.pending.push(frame),
             }
         },
     );
-    drop(writers_cell);
     // teardown runs on BOTH outcomes: closing the sockets unblocks every
     // reader (and any worker parked in a read) immediately
-    teardown(writers.into_iter(), reader_handles);
+    stop_accepting.store(true, Ordering::Relaxed);
+    teardown(&slots, reader_handles);
+    if let Some(h) = acceptor {
+        let _ = h.join();
+    }
     let (history, final_w, server, bytes_up, bytes_down) = result?;
     Ok(TcpServerOutput {
         history,
@@ -373,6 +500,90 @@ pub fn run_server_on(
         peak_log_entries: server.peak_log_entries(),
         failures: server.failures().to_vec(),
         live_workers: server.live_workers(),
+        rejoins: server.rejoins(),
+        membership: server.membership_timeline(),
+    })
+}
+
+/// Post-bring-up accept loop for `churn:` runs: validates reconnect hellos
+/// through the same per-connection checks as bring-up (a stray, malformed,
+/// out-of-range, or duplicate hello rejects that connection only), flushes
+/// frames queued while the worker was away, attaches the socket to the
+/// vacated writer slot, and announces [`ServerEvent::WorkerJoined`].
+fn spawn_acceptor(
+    listener: TcpListener,
+    slots: Arc<Vec<Mutex<WriterSlot>>>,
+    tx: mpsc::Sender<ServerEvent>,
+    tcfg: TransportConfig,
+    k: usize,
+    stop: Arc<AtomicBool>,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let mut readers: Vec<thread::JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            let (mut stream, peer) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(_) => break,
+            };
+            stream.set_nonblocking(false).ok();
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(tcfg.hello_timeout)).ok();
+            let wid = match read_frame(&mut stream) {
+                Ok(Some(frame)) => match parse_hello(&frame) {
+                    Ok(w) => w as usize,
+                    Err(e) => {
+                        eprintln!("rejecting reconnect from {peer}: {e}");
+                        continue;
+                    }
+                },
+                Ok(None) => {
+                    eprintln!("rejecting reconnect from {peer}: closed before hello");
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("rejecting reconnect from {peer}: {e:#}");
+                    continue;
+                }
+            };
+            if wid >= k {
+                eprintln!("rejecting reconnect from {peer}: worker id {wid} out of range (K={k})");
+                continue;
+            }
+            stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
+            let Ok(read_half) = stream.try_clone() else {
+                continue;
+            };
+            {
+                let mut slot = slots[wid].lock().unwrap();
+                if slot.stream.is_some() {
+                    // still attached: a genuine duplicate, or a retry that
+                    // raced the old socket's reader — reject; the worker
+                    // backs off and presents the hello again
+                    eprintln!("rejecting reconnect from {peer}: duplicate worker id {wid}");
+                    continue;
+                }
+                for frame in slot.pending.drain(..) {
+                    if let Err(e) = send_frame(&mut stream, &frame) {
+                        eprintln!("flush to worker {wid} failed: {e}");
+                    }
+                }
+                slot.stream = Some(stream);
+            }
+            let (tx2, slots2, rt) = (tx.clone(), slots.clone(), tcfg.read_timeout);
+            readers.push(thread::spawn(move || {
+                reader_loop(read_half, wid, tx2, rt, Some(slots2))
+            }));
+            if tx.send(ServerEvent::WorkerJoined { wid }).is_err() {
+                break; // server loop is gone
+            }
+        }
+        for h in readers {
+            let _ = h.join();
+        }
     })
 }
 
@@ -384,7 +595,11 @@ pub fn run_server_on(
 /// bounds the worker's wait too.  An injected fault
 /// ([`crate::network::FaultPlan`]) makes the worker exit without sending —
 /// the resulting socket close is exactly how the server observes the loss,
-/// the same path a real crash takes.
+/// the same path a real crash takes.  On `churn:` scenarios the worker
+/// loops over membership episodes instead of exiting: drop the socket
+/// (that close IS the loss notice), back off, reconnect with a fresh hello
+/// carrying the same id, and rebuild local state from the full-model
+/// admission delta exactly like a brand-new worker.
 pub fn run_worker(
     addr: &str,
     worker_id: usize,
@@ -419,60 +634,154 @@ pub fn run_worker(
             jitter_rng = Some(s);
         }
     }
+    let plan = net.schedule(cfg.workers, seed);
+    let churn = plan.has_rejoins();
+    let slowdown = net.slowdown.get(worker_id).copied().unwrap_or(1.0);
 
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
     send_hello(&mut stream, worker_id as u32)?;
-    let read_half = std::cell::RefCell::new(stream.try_clone()?);
-    let write_half = std::cell::RefCell::new(stream);
 
-    let solver = SdcaSolver::new(
-        part,
-        cfg.loss,
-        cfg.lambda,
-        ds.n(),
-        cfg.sigma_prime,
-        cfg.gamma,
-        solver_rng.unwrap(),
-    );
-    let mut state = WorkerState::new(
-        worker_id,
-        Box::new(solver),
-        cfg.gamma as f32,
-        cfg.h,
-        rho_d_msg,
-    );
-    state.set_error_feedback(cfg.error_feedback);
-    let slowdown = net.slowdown.get(worker_id).copied().unwrap_or(1.0);
-    let kill_round = net.faults.kill_round_for(worker_id, seed);
-    let died = worker_loop(
-        state,
-        slowdown,
-        net.jitter.clone(),
-        jitter_rng.unwrap(),
-        kill_round,
-        |m| {
-            let mut w = write_half.borrow_mut();
-            if let Err(e) = send_frame(&mut *w, &m.encode()) {
-                eprintln!("worker {worker_id}: send failed: {e}");
+    let mut part = Some(part);
+    let mut episode: u64 = 0;
+    let mut admission: Option<DeltaMsg> = None;
+    loop {
+        let read_half = std::cell::RefCell::new(stream.try_clone()?);
+        let write_half = std::cell::RefCell::new(stream);
+
+        let p_ep = if churn {
+            part.clone().expect("partition retained across churn episodes")
+        } else {
+            part.take().expect("single episode consumes the partition")
+        };
+        // episode 0 uses the streams aligned with the other runtimes; a
+        // returning episode draws from the shared pure per-episode stream
+        let rng = if episode == 0 {
+            solver_rng.take().expect("episode 0 uses the aligned stream")
+        } else {
+            episode_rng(seed, worker_id, episode)
+        };
+        let jr = if episode == 0 {
+            jitter_rng.take().expect("episode 0 uses the aligned stream")
+        } else {
+            Pcg64::new(0)
+        };
+        let solver = SdcaSolver::new(
+            p_ep,
+            cfg.loss,
+            cfg.lambda,
+            ds.n(),
+            cfg.sigma_prime,
+            cfg.gamma,
+            rng,
+        );
+        let mut state = WorkerState::new(
+            worker_id,
+            Box::new(solver),
+            cfg.gamma as f32,
+            cfg.h,
+            rho_d_msg,
+        );
+        state.set_error_feedback(cfg.error_feedback);
+        if let Some(dmsg) = admission.take() {
+            // replay the full-model admission reply to land on the
+            // server's w — identical to a fresh worker's first delta
+            state.apply_delta(&dmsg);
+            if state.done() {
+                return Ok(());
             }
-        },
-        || {
-            // any read failure — including the SO_RCVTIMEO liveness
-            // timeout — reads as a dead server: exit instead of waiting
-            let mut r = read_half.borrow_mut();
-            read_frame(&mut *r)
-                .ok()
-                .flatten()
-                .and_then(|f| ToWorkerMsg::decode(&f).ok())
-        },
-    );
-    if let Some(reason) = died {
-        // returning drops the socket: the close IS the loss notice
-        eprintln!("worker {worker_id}: {reason}");
+        }
+        let leave_round = plan.leave_after(worker_id, episode);
+        let died = worker_loop(
+            state,
+            slowdown,
+            net.jitter.clone(),
+            jr,
+            leave_round,
+            |m| {
+                let mut w = write_half.borrow_mut();
+                if let Err(e) = send_frame(&mut *w, &m.encode()) {
+                    eprintln!("worker {worker_id}: send failed: {e}");
+                }
+            },
+            || {
+                // any read failure — including the SO_RCVTIMEO liveness
+                // timeout — reads as a dead server: exit instead of waiting
+                let mut r = read_half.borrow_mut();
+                read_frame(&mut *r)
+                    .ok()
+                    .flatten()
+                    .and_then(|f| ToWorkerMsg::decode(&f).ok())
+            },
+        );
+        let Some(reason) = died else { return Ok(()) };
+        if !churn {
+            // returning drops the socket: the close IS the loss notice
+            eprintln!("worker {worker_id}: {reason}");
+            return Ok(());
+        }
+        let r = leave_round.unwrap_or(0);
+        eprintln!("worker {worker_id}: churn: left before sending update {r} (episode {episode})");
+        // drop both halves: the close is the loss notice the server acts on
+        drop(write_half);
+        drop(read_half);
+        episode += 1;
+        let Some((s, adm)) = rejoin(addr, worker_id, tcfg)? else {
+            // cluster finished (or failed) while this worker was away —
+            // a clean exit, same as a legacy faulted worker's
+            return Ok(());
+        };
+        if adm.shutdown {
+            return Ok(());
+        }
+        stream = s;
+        admission = Some(adm);
     }
-    Ok(())
+}
+
+/// How long a departed worker stays quiet before re-presenting its hello.
+const REJOIN_BACKOFF: Duration = Duration::from_millis(25);
+
+/// Reconnect after a churn departure: keep presenting a fresh hello with
+/// the prior worker id until the server accepts one and answers with the
+/// full-model admission delta.  An EOF on an individual attempt means that
+/// hello was rejected (the old socket's reader had not vacated the writer
+/// slot yet) — back off and re-present it.  `Ok(None)` means the cluster is
+/// no longer reachable: the run ended while this worker was away.
+fn rejoin(
+    addr: &str,
+    worker_id: usize,
+    tcfg: &TransportConfig,
+) -> Result<Option<(TcpStream, DeltaMsg)>> {
+    let deadline = Instant::now() + tcfg.accept_deadline;
+    loop {
+        thread::sleep(REJOIN_BACKOFF);
+        if Instant::now() >= deadline {
+            return Ok(None);
+        }
+        let Ok(mut stream) = TcpStream::connect(addr) else {
+            // connection refused: the listener is gone, the run is over
+            return Ok(None);
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
+        if send_hello(&mut stream, worker_id as u32).is_err() {
+            continue;
+        }
+        // the admission delta arrives when the rejoin schedule says so;
+        // until then the socket stays quiet
+        loop {
+            match read_frame(&mut stream).ok().flatten() {
+                Some(frame) => match ToWorkerMsg::decode(&frame) {
+                    Ok(ToWorkerMsg::Delta(dmsg)) => return Ok(Some((stream, dmsg))),
+                    Ok(_) => continue,
+                    Err(_) => break,
+                },
+                None => break,
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,547 @@
+//! Membership state machine vs dense reference, under churn.
+//!
+//! PR 7 teaches [`ServerState`] time-varying membership: departures consume
+//! a rejoin schedule, re-admissions ride commit replies (or an event-driven
+//! `on_worker_joined`), and the commit log truncates over live cursors.
+//! This suite pins that machinery against the obvious reference — one dense
+//! O(d) accumulator per worker plus an explicit live set — across
+//! randomized update orders, loss injection times and rejoin schedules:
+//!
+//!   * every action matches (Wait vs Commit vs error, round, full_barrier,
+//!     finished, reply set),
+//!   * every reply — member replies AND admission replies — is
+//!     byte-identical on the wire,
+//!   * a rejoined worker's admission reply equals a fresh worker's
+//!     cursor-0 materialization (`from_dense` of the ordered commit sum),
+//!   * cursors never pin the log: live entries stay ≤ T and drop to zero
+//!     at every full barrier,
+//!   * rejoin counts, failure lists and the membership timeline agree,
+//!   * the final model `w` is bit-for-bit identical.
+
+use acpd::linalg::sparse::SparseVec;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
+use acpd::testing::forall;
+use acpd::util::rng::Pcg64;
+
+/// What the reference wants the runtime to do (mirror of [`ServerAction`],
+/// plus an explicit error arm so predicted degrade-failures compare too).
+enum RefAction {
+    Wait,
+    Commit {
+        replies: Vec<DeltaMsg>,
+        round: u64,
+        full_barrier: bool,
+        finished: bool,
+    },
+    Error,
+}
+
+/// Reference server with membership: dense per-worker accumulators, an
+/// explicit live set, and the same rejoin-schedule semantics — all O(K·d),
+/// all eager.
+struct DenseChurnServer {
+    cfg: ServerConfig,
+    w: Vec<f32>,
+    pending: Vec<Vec<f32>>,
+    inbox: Vec<Option<ModelDelta>>,
+    in_group: usize,
+    t: usize,
+    l: usize,
+    total_rounds: u64,
+    finished: bool,
+    live: Vec<bool>,
+    schedule: Vec<Vec<u64>>,
+    episodes: Vec<usize>,
+    rejoin_at: Vec<Option<u64>>,
+    rejoins: u64,
+    timeline: Vec<(u64, usize, bool)>,
+}
+
+impl DenseChurnServer {
+    fn new(cfg: ServerConfig, dim: usize, schedule: Vec<Vec<u64>>) -> Self {
+        let k = cfg.workers;
+        DenseChurnServer {
+            w: vec![0.0; dim],
+            pending: vec![vec![0.0; dim]; k],
+            inbox: vec![None; k],
+            in_group: 0,
+            t: 0,
+            l: 0,
+            total_rounds: 0,
+            finished: false,
+            live: vec![true; k],
+            schedule,
+            episodes: vec![0; k],
+            rejoin_at: vec![None; k],
+            rejoins: 0,
+            timeline: Vec::new(),
+            cfg,
+        }
+    }
+
+    fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&a| a).count()
+    }
+
+    fn is_full_barrier(&self) -> bool {
+        self.t == self.cfg.period - 1
+    }
+
+    fn barrier_met(&self) -> bool {
+        if self.is_full_barrier() {
+            self.in_group == self.live_count()
+        } else {
+            self.in_group >= self.cfg.group.min(self.live_count()).max(1)
+        }
+    }
+
+    fn admit(&mut self, k: usize) -> DeltaMsg {
+        assert!(!self.live[k]);
+        self.rejoin_at[k] = None;
+        self.live[k] = true;
+        self.pending[k].fill(0.0);
+        self.rejoins += 1;
+        self.timeline.push((self.total_rounds, k, true));
+        DeltaMsg {
+            worker: k as u32,
+            server_round: self.total_rounds,
+            shutdown: self.finished,
+            delta: ModelDelta::from_dense(&self.w),
+        }
+    }
+
+    fn commit_group(&mut self) -> RefAction {
+        let gamma = self.cfg.gamma;
+        let full_barrier = self.is_full_barrier();
+        let members: Vec<usize> = (0..self.cfg.workers)
+            .filter(|&k| self.inbox[k].is_some())
+            .collect();
+        let mut g = vec![0.0f32; self.w.len()];
+        for &k in &members {
+            let f = self.inbox[k].take().unwrap();
+            f.add_scaled_into(&mut g, gamma);
+        }
+        for (wi, gi) in self.w.iter_mut().zip(&g) {
+            *wi += *gi;
+        }
+        for pend in self.pending.iter_mut() {
+            for (p, gi) in pend.iter_mut().zip(&g) {
+                *p += *gi;
+            }
+        }
+        self.in_group = 0;
+        self.total_rounds += 1;
+        if full_barrier {
+            self.t = 0;
+            self.l += 1;
+        } else {
+            self.t += 1;
+        }
+        let finished = self.l >= self.cfg.outer_rounds;
+        self.finished = finished;
+        let mut replies: Vec<DeltaMsg> = members
+            .iter()
+            .map(|&k| {
+                let delta = ModelDelta::from_dense(&self.pending[k]);
+                self.pending[k].fill(0.0);
+                DeltaMsg {
+                    worker: k as u32,
+                    server_round: self.total_rounds,
+                    shutdown: finished,
+                    delta,
+                }
+            })
+            .collect();
+        if !finished {
+            for k in 0..self.cfg.workers {
+                if self.rejoin_at[k].map_or(false, |due| due <= self.total_rounds) {
+                    let reply = self.admit(k);
+                    replies.push(reply);
+                }
+            }
+        }
+        RefAction::Commit {
+            replies,
+            round: self.total_rounds,
+            full_barrier,
+            finished,
+        }
+    }
+
+    fn on_update(&mut self, msg: UpdateMsg) -> RefAction {
+        assert!(!self.finished);
+        let k = msg.worker as usize;
+        if !self.live[k] {
+            return RefAction::Wait;
+        }
+        assert!(self.inbox[k].is_none());
+        self.inbox[k] = Some(msg.update);
+        self.in_group += 1;
+        if !self.barrier_met() {
+            return RefAction::Wait;
+        }
+        self.commit_group()
+    }
+
+    fn on_lost(&mut self, k: usize) -> RefAction {
+        if self.finished || !self.live[k] {
+            return RefAction::Wait;
+        }
+        self.live[k] = false;
+        self.timeline.push((self.total_rounds, k, false));
+        if let Some(&gap) = self.schedule[k].get(self.episodes[k]) {
+            self.rejoin_at[k] = Some(self.total_rounds + gap);
+        }
+        self.episodes[k] += 1;
+        if self.inbox[k].take().is_some() {
+            self.in_group -= 1;
+        }
+        let pending = self.rejoin_at.iter().any(|r| r.is_some());
+        if self.live_count() < self.cfg.group && !pending {
+            return RefAction::Error;
+        }
+        if self.in_group > 0 && self.barrier_met() {
+            return self.commit_group();
+        }
+        if self.live_count() == 0 {
+            let (_, next) = (0..self.cfg.workers)
+                .filter_map(|j| self.rejoin_at[j].map(|due| (due, j)))
+                .min()
+                .expect("pending rejoin exists when live == 0");
+            let reply = self.admit(next);
+            return RefAction::Commit {
+                replies: vec![reply],
+                round: self.total_rounds,
+                full_barrier: false,
+                finished: false,
+            };
+        }
+        RefAction::Wait
+    }
+
+    fn timeline_string(&self) -> String {
+        let mut out = String::new();
+        for &(round, wid, joined) in &self.timeline {
+            if !out.is_empty() {
+                out.push(';');
+            }
+            let sign = if joined { '+' } else { '-' };
+            out.push_str(&format!("w{wid}{sign}@r{round}"));
+        }
+        out
+    }
+}
+
+fn random_update(rng: &mut Pcg64, worker: usize, d: usize, max_nnz: usize) -> UpdateMsg {
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(rng.next_below(max_nnz.min(d) as u32 + 1) as usize);
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+    UpdateMsg::from_sparse(worker as u32, 0, SparseVec::new(d, idx, val))
+}
+
+#[derive(Debug)]
+struct Case {
+    workers: usize,
+    group: usize,
+    period: usize,
+    outer_rounds: usize,
+    d: usize,
+    max_nnz: usize,
+    /// `schedule[k]`: away gaps consumed per departure; exhausted ⇒
+    /// permanent (the legacy kill/flaky shape).
+    schedule: Vec<Vec<u64>>,
+    /// Permille chance per step of injecting a loss instead of an update.
+    loss_permille: u32,
+    stream_seed: u64,
+}
+
+/// Compare one production action against the reference's, enforcing
+/// byte-identical replies; returns `None` on mismatch, `Some(finished)`
+/// otherwise.  `sent` is cleared for every member reply (admission replies
+/// carry no in-flight update to clear — but clearing is idempotent).
+fn actions_match(
+    a: &ServerAction,
+    b: &RefAction,
+    sent: &mut [bool],
+) -> Option<bool> {
+    match (a, b) {
+        (ServerAction::Wait, RefAction::Wait) => Some(false),
+        (
+            ServerAction::Commit {
+                replies,
+                round,
+                full_barrier,
+                finished,
+            },
+            RefAction::Commit {
+                replies: ref_replies,
+                round: ref_round,
+                full_barrier: ref_full,
+                finished: ref_fin,
+            },
+        ) => {
+            if (round, full_barrier, finished) != (ref_round, ref_full, ref_fin) {
+                return None;
+            }
+            if replies.len() != ref_replies.len() {
+                return None;
+            }
+            for (r, rr) in replies.iter().zip(ref_replies) {
+                if r != rr || r.encode() != rr.encode() {
+                    return None;
+                }
+                sent[r.worker as usize] = false;
+            }
+            Some(*finished)
+        }
+        _ => None,
+    }
+}
+
+#[test]
+fn prop_membership_machine_matches_dense_reference() {
+    forall(
+        0xC4A2_0007,
+        60,
+        |rng, sz| {
+            let workers = 2 + rng.next_below(4) as usize;
+            let group = 1 + rng.next_below(workers as u32) as usize;
+            let period = 1 + rng.next_below(4) as usize;
+            let outer_rounds = 1 + rng.next_below(3) as usize;
+            let d = 1 + rng.next_below(sz.0 as u32 * 3 + 1) as usize;
+            let max_nnz = 1 + rng.next_below(d as u32) as usize;
+            // about half the workers can come back, one to three times,
+            // after short away gaps; the rest leave for good (kill/flaky)
+            let schedule = (0..workers)
+                .map(|_| {
+                    if rng.next_below(2) == 0 {
+                        (0..1 + rng.next_below(3))
+                            .map(|_| 1 + rng.next_below(4) as u64)
+                            .collect()
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect();
+            Case {
+                workers,
+                group,
+                period,
+                outer_rounds,
+                d,
+                max_nnz,
+                schedule,
+                loss_permille: 50 + rng.next_below(200),
+                stream_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let cfg = ServerConfig {
+                workers: case.workers,
+                group: case.group,
+                period: case.period,
+                outer_rounds: case.outer_rounds,
+                gamma: 0.5,
+                policy: FailPolicy::Degrade,
+            };
+            let mut log_srv = ServerState::new(cfg.clone(), case.d);
+            log_srv.set_rejoin_schedule(case.schedule.clone());
+            let mut dense_srv =
+                DenseChurnServer::new(cfg, case.d, case.schedule.clone());
+            let mut rng = Pcg64::new(case.stream_seed);
+            let mut sent = vec![false; case.workers];
+            let mut guard = 0usize;
+            while !log_srv.finished() {
+                guard += 1;
+                if guard > 5_000 {
+                    return false; // stuck: barrier never met
+                }
+                let free: Vec<usize> = (0..case.workers)
+                    .filter(|&i| log_srv.is_live(i) && !sent[i])
+                    .collect();
+                // losses hit any live worker — with or without an in-flight
+                // update, both removal paths matter
+                let live: Vec<usize> =
+                    (0..case.workers).filter(|&i| log_srv.is_live(i)).collect();
+                if live.is_empty() {
+                    return false; // live==0 must never persist (rescue path)
+                }
+                let lose = !live.is_empty()
+                    && rng.next_below(1000) < case.loss_permille;
+                let (a, b) = if lose || free.is_empty() {
+                    // free can only be empty if an un-met barrier holds every
+                    // live worker in-flight — impossible; losing one instead
+                    // keeps the driver honest rather than masking it
+                    if !lose && free.is_empty() {
+                        return false;
+                    }
+                    let wid = live[rng.next_below(live.len() as u32) as usize];
+                    sent[wid] = false;
+                    let ra = log_srv.on_worker_lost(wid, "injected");
+                    let rb = dense_srv.on_lost(wid);
+                    match ra {
+                        // both must agree the run dies here (live < B, no
+                        // pending rejoin) — that agreement IS the property
+                        Err(_) => return matches!(rb, RefAction::Error),
+                        Ok(a) => {
+                            if matches!(rb, RefAction::Error) {
+                                return false;
+                            }
+                            (a, rb)
+                        }
+                    }
+                } else {
+                    let wid = free[rng.next_below(free.len() as u32) as usize];
+                    let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
+                    sent[wid] = true;
+                    (log_srv.on_update(msg.clone()), dense_srv.on_update(msg))
+                };
+                if actions_match(&a, &b, &mut sent).is_none() {
+                    return false;
+                }
+                // cursors must never pin the log past one full-barrier period
+                if log_srv.live_log_entries() > case.period {
+                    return false;
+                }
+                if let ServerAction::Commit {
+                    full_barrier: true, ..
+                } = a
+                {
+                    // every live cursor advanced past the whole log
+                    if log_srv.live_log_entries() != 0 {
+                        return false;
+                    }
+                }
+            }
+            // membership accounting agrees end-to-end
+            if log_srv.rejoins() != dense_srv.rejoins {
+                return false;
+            }
+            if log_srv.membership_timeline() != dense_srv.timeline_string() {
+                return false;
+            }
+            if log_srv.failures().len()
+                != dense_srv.timeline.iter().filter(|&&(_, _, j)| !j).count()
+            {
+                return false;
+            }
+            if !dense_srv.finished {
+                return false;
+            }
+            // bit-for-bit identical final model
+            log_srv.w() == dense_srv.w.as_slice()
+        },
+    );
+}
+
+/// Event-driven admission (`on_worker_joined`, the TCP reconnect path): a
+/// permanently-departed worker that reconnects is re-admitted with a
+/// full-model reply bit-identical to a fresh worker's cursor-0
+/// materialization, exactly once, and never while live, finished, or owned
+/// by a scheduled rejoin.
+#[test]
+fn reconnect_admission_matches_fresh_worker_bootstrap() {
+    let cfg = ServerConfig {
+        workers: 3,
+        group: 2,
+        period: 2,
+        outer_rounds: 4,
+        gamma: 1.0,
+        policy: FailPolicy::Degrade,
+    };
+    let d = 12;
+    let mut srv = ServerState::new(cfg.clone(), d);
+    let mut dense = DenseChurnServer::new(cfg, d, vec![Vec::new(); 3]);
+    let mut rng = Pcg64::new(0xADA117);
+    let mut sent = vec![false; 3];
+    // run two commits with everyone live, then drop worker 2 for good
+    let mut commits = 0;
+    while commits < 2 {
+        let wid = (0..3).find(|&i| !sent[i]).unwrap();
+        let msg = random_update(&mut rng, wid, d, 6);
+        sent[wid] = true;
+        let a = srv.on_update(msg.clone());
+        let b = dense.on_update(msg);
+        assert!(actions_match(&a, &b, &mut sent).is_some(), "healthy prefix diverged");
+        if let ServerAction::Commit { .. } = a {
+            commits += 1;
+        }
+    }
+    assert!(matches!(srv.on_worker_lost(2, "gone").unwrap(), ServerAction::Wait));
+    assert!(matches!(dense.on_lost(2), RefAction::Wait));
+    assert_eq!(srv.live_workers(), 2);
+    // a live worker or an out-of-range id is never admitted
+    assert!(srv.on_worker_joined(0).is_none());
+    assert!(srv.on_worker_joined(99).is_none());
+    // the reconnect: admitted once, with the full model on the wire —
+    // byte-identical to a fresh worker's cursor-0 materialization, which
+    // the dense reference's `w` (the ordered commit sum) spells out
+    let reply = srv.on_worker_joined(2).expect("reconnect admits");
+    let fresh = DeltaMsg {
+        worker: 2,
+        server_round: srv.total_rounds(),
+        shutdown: false,
+        delta: ModelDelta::from_dense(&dense.w),
+    };
+    assert_eq!(reply, fresh);
+    assert_eq!(reply.encode(), fresh.encode());
+    assert!(srv.is_live(2));
+    assert_eq!(srv.live_workers(), 3);
+    assert_eq!(srv.rejoins(), 1);
+    assert!(srv.membership_timeline().contains("w2-@r"));
+    assert!(srv.membership_timeline().contains("w2+@r"));
+    // idempotence: the worker is live again, a second hello is a no-op
+    assert!(srv.on_worker_joined(2).is_none());
+    // a scheduled rejoin owns its admission timing: reconnects are refused
+    srv.set_rejoin_schedule(vec![Vec::new(), vec![5], Vec::new()]);
+    assert!(matches!(srv.on_worker_lost(1, "churn").unwrap(), ServerAction::Wait));
+    assert_eq!(srv.pending_rejoins(), 1);
+    assert!(srv.on_worker_joined(1).is_none(), "schedule owns admission");
+    assert_eq!(srv.rejoins(), 1);
+}
+
+/// An update racing ahead of its own loss notice is dropped, and a dead
+/// worker's cursor never pins the log (truncation over live cursors only).
+#[test]
+fn dead_worker_updates_drop_and_cursors_unpin() {
+    let cfg = ServerConfig {
+        workers: 3,
+        group: 1,
+        period: 4,
+        outer_rounds: 2,
+        gamma: 1.0,
+        policy: FailPolicy::Degrade,
+    };
+    let d = 8;
+    let mut srv = ServerState::new(cfg, d);
+    let mut rng = Pcg64::new(0xD0A);
+    // worker 2 departs before ever being included: its cursor stays 0
+    assert!(matches!(srv.on_worker_lost(2, "early").unwrap(), ServerAction::Wait));
+    // its straggling update must not enter any commit
+    let msg = random_update(&mut rng, 2, d, 4);
+    assert!(matches!(srv.on_update(msg), ServerAction::Wait));
+    // workers 0/1 alone drive the run; the dead cursor-0 worker must not
+    // leak one log entry per commit
+    let mut sent = [false; 2];
+    while !srv.finished() {
+        let wid = (0..2).find(|&i| !sent[i]).unwrap();
+        let msg = random_update(&mut rng, wid, d, 4);
+        sent[wid] = true;
+        if let ServerAction::Commit { replies, .. } = srv.on_update(msg) {
+            for r in &replies {
+                sent[r.worker as usize] = false;
+            }
+            assert!(
+                srv.live_log_entries() <= 4,
+                "dead cursor pinned the log: {} entries",
+                srv.live_log_entries()
+            );
+        }
+    }
+    assert_eq!(srv.total_rounds(), 8); // outer_rounds x period, degraded or not
+    assert_eq!(srv.failures().len(), 1);
+    assert_eq!(srv.rejoins(), 0);
+}

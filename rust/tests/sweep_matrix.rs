@@ -353,3 +353,175 @@ threads = 0
     assert_eq!(a.ranked_csv().to_string(), b.ranked_csv().to_string());
     assert_eq!(a.to_json(), b.to_json());
 }
+
+/// Backward-compat pin for the scenario-trait refactor: every pre-existing
+/// scenario string parses onto the round-indexed trait and runs untouched
+/// by the membership machinery — deterministic cells, `rejoins = 0`, empty
+/// membership timeline, and the `kill:` cell recording exactly its legacy
+/// loss.  (Byte-identity of the numerics themselves vs earlier revisions is
+/// carried by the golden trace and the equivalence suites; this test pins
+/// the sweep-level contract for all five spellings at once.)
+#[test]
+fn legacy_scenario_strings_run_unchanged_on_the_trait() {
+    let spec = SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![
+            Scenario::from_name("lan").unwrap(),
+            Scenario::from_name("straggler:2.0").unwrap(),
+            Scenario::from_name("jittery-cloud").unwrap(),
+            Scenario::from_name("kill:1@2").unwrap(),
+            Scenario::from_name("flaky:0.01").unwrap(),
+        ],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![1, 2],
+        workers: vec![4],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 2,
+        n_override: 256,
+        threads: 2,
+        fail_policy: FailPolicy::Degrade,
+        ..SweepSpec::default()
+    };
+    let report = run_sweep(&spec).expect("legacy-scenario sweep");
+    assert_eq!(report.cells.len(), 10); // 5 scenarios x 2 seeds
+    for c in &report.cells {
+        // no legacy scenario can ever touch the rejoin path
+        assert_eq!(c.rejoins, 0, "cell {} ({})", c.index, c.scenario);
+        assert_eq!(c.membership, "", "cell {} ({})", c.index, c.scenario);
+        assert_eq!(c.rounds, 10, "cell {} ({})", c.index, c.scenario);
+    }
+    // the kill cell records its injected loss (worker id pinned; the
+    // recorded round is the server round at loss time), per seed
+    for c in report.cells.iter().filter(|c| c.scenario.starts_with("kill")) {
+        assert!(c.failures.starts_with("w1@r"), "seed {}: {}", c.seed, c.failures);
+        assert_eq!(c.live_workers, 3);
+    }
+    for c in report.cells.iter().filter(|c| {
+        !c.scenario.starts_with("kill") && !c.scenario.starts_with("flaky")
+    }) {
+        assert_eq!(c.failures, "", "cell {} ({})", c.index, c.scenario);
+        assert_eq!(c.live_workers, 4);
+    }
+    // and the whole column is deterministic, byte for byte
+    let repeat = run_sweep(&spec).expect("repeat");
+    assert_eq!(report.cells_csv().to_string(), repeat.cells_csv().to_string());
+    assert_eq!(report.to_json(), repeat.to_json());
+}
+
+/// Seeds of one config are independent cells claimed one-by-one from the
+/// shared queue, so they split across pool threads — and the report must
+/// not care: byte-identical artifacts for pool sizes 1, 3 and 6 on a grid
+/// that is nothing BUT one config at six seeds.
+#[test]
+fn seeds_of_one_config_split_across_pool_threads() {
+    let mut spec = SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![Scenario::Lan],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![1, 2, 3, 4, 5, 6],
+        workers: vec![4],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 3,
+        n_override: 256,
+        threads: 1,
+        ..SweepSpec::default()
+    };
+    let serial = run_sweep(&spec).expect("serial");
+    assert_eq!(serial.cells.len(), 6);
+    for threads in [3usize, 6] {
+        spec.threads = threads;
+        let pooled = run_sweep(&spec).expect("pooled");
+        assert_eq!(
+            serial.cells_csv().to_string(),
+            pooled.cells_csv().to_string(),
+            "pool size {threads} changed the report"
+        );
+        assert_eq!(serial.to_json(), pooled.to_json());
+    }
+}
+
+/// Acceptance: a 256-worker `burst:` scenario is a tractable sim sweep cell
+/// (no O(K) per-event scans left on the commit path) — it must complete as
+/// an ordinary cell and run the exact commit count, all workers live.
+#[test]
+fn burst_cell_scales_to_256_workers() {
+    let spec = SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![Scenario::from_name("burst:0.3:8:5").unwrap()],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![256],
+        groups: vec![0], // auto: B = 128
+        periods: vec![5],
+        h: 16,
+        outer_rounds: 2,
+        n_override: 1024,
+        threads: 1,
+        ..SweepSpec::default()
+    };
+    let report = run_sweep(&spec).expect("256-worker burst sweep");
+    assert_eq!(report.cells.len(), 1);
+    let c = &report.cells[0];
+    assert_eq!((c.workers, c.group), (256, 128));
+    assert_eq!(c.rounds, 10); // outer_rounds x period, burst or not
+    assert_eq!(c.live_workers, 256);
+    assert_eq!((c.rejoins, c.membership.as_str(), c.failures.as_str()), (0, "", ""));
+    assert!(c.final_gap.is_finite());
+}
+
+/// Acceptance: one `churn:` cell completes end-to-end on sim, threads AND
+/// tcp with identical rounds/bytes/membership accounting and at least one
+/// recorded rejoin.  B = K makes every barrier span exactly the live set,
+/// which is what pins the commit composition — and therefore the byte
+/// accounting — to the scenario schedule instead of wall-clock timing.
+#[test]
+fn churn_cell_is_parity_pinned_across_all_three_runtimes() {
+    let spec = |rt: RuntimeKind| SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![Scenario::from_name("churn:0.6:0.6").unwrap()],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![4], // B = K: see above
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 8,
+        n_override: 256,
+        threads: 1,
+        runtime: rt,
+        fail_policy: FailPolicy::Degrade,
+        ..SweepSpec::default()
+    };
+    let sim = run_sweep(&spec(RuntimeKind::Sim)).expect("sim churn cell");
+    let thr = run_sweep(&spec(RuntimeKind::Threads)).expect("threads churn cell");
+    let tcp = run_sweep(&spec(RuntimeKind::Tcp)).expect("tcp churn cell");
+    let key = |r: &acpd::sweep::SweepReport| {
+        let c = &r.cells[0];
+        (
+            c.rounds,
+            c.bytes_up,
+            c.bytes_down,
+            c.rejoins,
+            c.membership.clone(),
+            c.failures.clone(),
+            c.live_workers,
+            c.w_norm.to_bits(),
+        )
+    };
+    let (s, t, p) = (key(&sim), key(&thr), key(&tcp));
+    assert_eq!(s, t, "sim vs threads churn accounting diverged");
+    assert_eq!(s, p, "sim vs tcp churn accounting diverged");
+    let c = &sim.cells[0];
+    assert_eq!(c.rounds, 40);
+    assert!(c.rejoins >= 1, "no rejoin recorded: {}", c.membership);
+    assert!(c.membership.contains("+@r"), "{}", c.membership);
+    assert!(c.membership.contains("-@r"), "{}", c.membership);
+}
