@@ -7,7 +7,9 @@
 //!   * the top-ρd filter on sparse inputs at d ∈ {1e5, 1e6} (O(nnz) select)
 //!   * the server commit path at d ∈ {1e5, 1e6} with fixed nnz — the
 //!     commit-log design goal is a per-commit cost independent of d, so the
-//!     two medians (and the emitted d-ratio) should sit within ~2x
+//!     two medians (and the emitted d-ratio) should sit within ~2x — plus
+//!     the shards axis S ∈ {1, 4, 8} at d = 1e6: parallel coordinate-range
+//!     commits, tracked by the dimensionless S=8/S=1 ratio row
 //!   * one full worker round (incremental re-centre + sparse epoch +
 //!     indexed filter + message) at d ∈ {1e5, 1e6} with fixed row nnz and
 //!     H — the O(touched) worker contract says the cost (and the emitted
@@ -170,7 +172,7 @@ fn main() {
     // protocol; with the sparse commit log the per-commit cost depends on
     // the communicated nnz, NOT on d — the d-ratio row pins that claim.
     {
-        let (k, b, t, nnz) = (8usize, 4usize, 10usize, 1_000usize);
+        let nnz = 1_000usize;
         let commits_target = common::scaled(2_000, 200);
         let mut per_commit = Vec::new();
         for d in [100_000usize, 1_000_000] {
@@ -178,51 +180,39 @@ fn main() {
             let pool: Vec<SparseVec> = (0..128)
                 .map(|_| rand_sparse_strided(&mut rng, d, nnz))
                 .collect();
-            let (med, _) = time_it(iters.min(10), || {
-                let mut s = ServerState::new(
-                    ServerConfig {
-                        workers: k,
-                        group: b,
-                        period: t,
-                        outer_rounds: 1_000_000,
-                        gamma: 0.5,
-                        policy: FailPolicy::FailFast,
-                    },
-                    d,
-                );
-                let mut sent = vec![false; k];
-                let mut commits = 0usize;
-                let mut pi = 0usize;
-                while commits < commits_target {
-                    for wid in 0..k {
-                        if sent[wid] {
-                            continue;
-                        }
-                        let sv = pool[pi % pool.len()].clone();
-                        pi += 1;
-                        sent[wid] = true;
-                        let msg = UpdateMsg::from_sparse(wid as u32, 0, sv);
-                        if let ServerAction::Commit { replies, .. } = s.on_update(msg) {
-                            commits += 1;
-                            for r in &replies {
-                                sent[r.worker as usize] = false;
-                            }
-                            std::hint::black_box(&replies);
-                        }
-                    }
-                }
-                s.total_rounds()
-            });
-            let us = med / commits_target as f64 * 1e6;
+            let us = time_server_commits(iters.min(10), d, 1, commits_target, &pool);
             per_commit.push(us);
-            println!(
-                "server_commit d={d:<7}  {us:>8.1} µs/commit  (K={k} B={b} T={t} nnz={nnz})"
-            );
+            println!("server_commit d={d:<7}  {us:>8.1} µs/commit  (K=8 B=4 T=10 nnz={nnz})");
             csv.rowf(&[&format!("server_commit_d{d}"), &"us_per_commit", &us, &"us"]);
         }
         let ratio = per_commit[1] / per_commit[0].max(1e-12);
         println!("server_commit   d=1e6 / d=1e5 cost ratio: {ratio:.2}x (goal: ~1, was ~10x dense)");
         csv.rowf(&[&"server_commit", &"d_ratio_1e6_over_1e5", &ratio, &"x"]);
+
+        // shards axis: the same stream at d = 1e6 with S ∈ {1, 4, 8}.  The
+        // coordinate-range shards split each commit's O(nnz) append and
+        // reply materialization across scoped threads, so the amortized
+        // per-commit cost trends toward O(nnz/S).  The dimensionless ratio
+        // row is what `scripts/bench_gate` tracks: thread-spawn overhead
+        // makes small commits a wash, so the gate guards the ratio against
+        // regressions rather than asserting a fixed speedup.
+        let d = 1_000_000usize;
+        let mut rng = Pcg64::new(9);
+        let pool: Vec<SparseVec> = (0..128)
+            .map(|_| rand_sparse_strided(&mut rng, d, nnz))
+            .collect();
+        let mut by_shards = Vec::new();
+        for shards in [1usize, 4, 8] {
+            let us = time_server_commits(iters.min(10), d, shards, commits_target, &pool);
+            by_shards.push(us);
+            println!(
+                "server_commit S={shards}       {us:>8.1} µs/commit  (d=1e6 K=8 B=4 T=10 nnz={nnz})"
+            );
+            csv.rowf(&[&format!("server_commit_s{shards}"), &"us_per_commit", &us, &"us"]);
+        }
+        let sratio = by_shards[2] / by_shards[0].max(1e-12);
+        println!("server_commit   S=8 / S=1 cost ratio: {sratio:.2}x (amortized goal: < 1)");
+        csv.rowf(&[&"server_commit", &"shard_commit_ratio_8_over_1", &sratio, &"x"]);
     }
 
     // ------------------------------------------------ worker round
@@ -412,6 +402,56 @@ fn worker_round_dataset(d: usize, n: usize, row_nnz: usize, pool: usize, seed: u
         labels,
         name: format!("worker-round-bench-d{d}"),
     }
+}
+
+/// Drive the full barrier protocol (K=8, B=4, T=10) until `commits_target`
+/// commits land; returns the median µs per commit.  Shared by the d-axis
+/// and shards-axis `server_commit` benches so both time the identical loop.
+fn time_server_commits(
+    iters: usize,
+    d: usize,
+    shards: usize,
+    commits_target: usize,
+    pool: &[SparseVec],
+) -> f64 {
+    let (k, b, t) = (8usize, 4usize, 10usize);
+    let (med, _) = time_it(iters, || {
+        let mut s = ServerState::new(
+            ServerConfig {
+                workers: k,
+                group: b,
+                period: t,
+                outer_rounds: 1_000_000,
+                gamma: 0.5,
+                policy: FailPolicy::FailFast,
+                shards,
+            },
+            d,
+        );
+        let mut sent = vec![false; k];
+        let mut commits = 0usize;
+        let mut pi = 0usize;
+        while commits < commits_target {
+            for wid in 0..k {
+                if sent[wid] {
+                    continue;
+                }
+                let sv = pool[pi % pool.len()].clone();
+                pi += 1;
+                sent[wid] = true;
+                let msg = UpdateMsg::from_sparse(wid as u32, 0, sv);
+                if let ServerAction::Commit { replies, .. } = s.on_update(msg) {
+                    commits += 1;
+                    for r in &replies {
+                        sent[r.worker as usize] = false;
+                    }
+                    std::hint::black_box(&replies);
+                }
+            }
+        }
+        s.total_rounds()
+    });
+    med / commits_target as f64 * 1e6
 }
 
 /// Random sparse vector with exactly `nnz` nonzeros, one per stride bucket

@@ -94,6 +94,12 @@ pub fn render() -> String {
         "  equivalent cells deduplicate: a baseline appears once per\n  \
          (algorithm, scenario, dataset, K, rho_d, seed) whatever group/period span\n",
     );
+    let _ = writeln!(
+        s,
+        "  shared knob `shards`: server commit-log shards per cell, committed in\n  \
+         parallel by coordinate range (default {}; any S is byte-identical to S = 1)",
+        d.shards
+    );
 
     s.push_str("\nnetwork scenarios (per-cell cost models):\n");
     s.push_str("  lan             uniform gigabit LAN (latency-dominated)\n");
@@ -150,6 +156,8 @@ sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
   seeds      run seeds                                            default 1,2,3
   equivalent cells deduplicate: a baseline appears once per
   (algorithm, scenario, dataset, K, rho_d, seed) whatever group/period span
+  shared knob `shards`: server commit-log shards per cell, committed in
+  parallel by coordinate range (default 1; any S is byte-identical to S = 1)
 
 network scenarios (per-cell cost models):
   lan             uniform gigabit LAN (latency-dominated)
@@ -189,5 +197,6 @@ cell runtimes (`runtime` key / `--runtime`):
         for axis in ["algos", "scenarios", "datasets", "workers", "group", "period", "rho_ds", "seeds"] {
             assert!(text.contains(&format!("  {axis}")), "axis {axis} missing");
         }
+        assert!(text.contains("`shards`"), "shards knob missing from catalog");
     }
 }

@@ -125,6 +125,7 @@ fn experiment_flags() -> Vec<FlagSpec> {
         FlagSpec::switch("jitter", "background-load jitter (fig 5 mode)"),
         FlagSpec::opt("kill", "inject fault: <wid>@<round> (worker dies before that send)", ""),
         FlagSpec::opt("fail-policy", "fail_fast|degrade on worker loss", "fail_fast"),
+        FlagSpec::opt("shards", "server commit-log shards (1 = reference single shard)", "1"),
         FlagSpec::switch("no-error-feedback", "drop filtered residual (ablation)"),
         FlagSpec::opt("runtime", "sim|threads", "sim"),
         FlagSpec::opt("out", "write history CSV here", ""),
@@ -229,6 +230,9 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
     let fp = a.get_str("fail-policy")?;
     cfg.engine.fail_policy = FailPolicy::from_name(&fp)
         .with_context(|| format!("unknown fail policy {fp:?} ({})", FailPolicy::help_names()))?;
+    if a.opts.contains_key("shards") || a.get_str("config")?.is_empty() {
+        cfg.engine.shards = a.get("shards")?;
+    }
     if a.get_bool("no-error-feedback") {
         cfg.engine.error_feedback = false;
     }
@@ -354,6 +358,7 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
             "fail_fast|degrade when a fault scenario loses a worker",
             "fail_fast",
         ),
+        FlagSpec::opt("shards", "server commit-log shards per cell (1 = reference)", "1"),
         FlagSpec::switch(
             "parity",
             "re-run the matrix on the simulator and cross-check (sim_vs_real)",
@@ -446,6 +451,9 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         let name = a.get_str("fail-policy")?;
         spec.fail_policy = FailPolicy::from_name(&name)
             .with_context(|| format!("unknown fail policy {name:?} ({})", FailPolicy::help_names()))?;
+    }
+    if explicit("shards") {
+        spec.shards = a.get("shards")?;
     }
     if explicit("threads") {
         spec.threads = a.get("threads")?;

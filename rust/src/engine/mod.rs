@@ -103,6 +103,12 @@ pub struct EngineConfig {
     ///
     /// [`ServerState`]: crate::protocol::server::ServerState
     pub fail_policy: FailPolicy,
+    /// S — commit-log shards on the server: the model and the sparse
+    /// commit log are partitioned by coordinate range and committed in
+    /// parallel.  1 (the default) is the sequential reference path;
+    /// any S produces byte-identical replies (pinned by
+    /// `tests/server_equiv.rs`).
+    pub shards: usize,
 }
 
 impl EngineConfig {
@@ -126,6 +132,7 @@ impl EngineConfig {
             seed: 42,
             error_feedback: true,
             fail_policy: FailPolicy::FailFast,
+            shards: 1,
         }
     }
 
@@ -148,6 +155,7 @@ impl EngineConfig {
             seed: 42,
             error_feedback: true,
             fail_policy: FailPolicy::FailFast,
+            shards: 1,
         }
     }
 
@@ -208,6 +216,7 @@ impl EngineConfig {
         anyhow::ensure!(self.sigma_prime > 0.0, "sigma' must be positive");
         anyhow::ensure!(self.lambda > 0.0, "lambda must be positive");
         anyhow::ensure!(self.h >= 1, "h must be >= 1");
+        anyhow::ensure!(self.shards >= 1, "shards S must be >= 1");
         anyhow::ensure!(n >= self.workers, "fewer samples than workers");
         Ok(())
     }

@@ -25,6 +25,21 @@
 //! regroups float additions at last-ulp relative to folding members into w
 //! one at a time (the pre-commit-log implementation detail).
 //!
+//! **Sharding** (`ServerConfig::shards`): at production dimension
+//! (d ~ 10⁸) and fleet-scale K the one sequential commit loop becomes the
+//! coordinator's own straggler.  [`ShardedLog`] partitions `w`, the
+//! scratch buffer and the commit log by coordinate range across S shards;
+//! a sparse group delta splits cleanly (its indices are strictly
+//! increasing), shards commit in parallel on scoped threads, and each
+//! reply is materialized per shard then stitched back in ascending range
+//! order — one strictly-increasing index sequence again.  Per-index float
+//! arithmetic and member order are unchanged (every index lives in exactly
+//! one shard), and the `prefers_sparse` wire rule is applied to the
+//! *stitched* nnz, so encoded frames are byte-identical to the S = 1 path.
+//! `shards = 1` (the default everywhere) IS the sequential reference
+//! implementation; the sharded-vs-single-shard property suite in
+//! `tests/server_equiv.rs` pins the equivalence.
+//!
 //! The runtime (sim / threads / tcp) decides *when* messages arrive; the
 //! state machine only decides *what happens*.
 
@@ -107,24 +122,25 @@ pub struct ServerConfig {
     pub gamma: f32,
     /// Reaction to a lost worker (fail-fast error vs B-of-K degradation).
     pub policy: FailPolicy,
+    /// S — commit-log shards.  The model, scratch and log are partitioned
+    /// by coordinate range into `min(S, d)`-ish equal slices (`ceil(d/S)`
+    /// coordinates each); S > 1 commits shards on scoped threads and
+    /// stitches replies back byte-identical to the single-shard path.
+    /// 1 (the default everywhere) is the sequential reference.
+    pub shards: usize,
 }
 
 pub struct ServerState {
     cfg: ServerConfig,
     /// global model w
     w: Vec<f32>,
-    /// sparse commit log: entry e = γ Σ_{k∈Φ_e} F(Δw_k), oldest first.
-    /// `log[0]` is commit number `log_base`; the log covers commits
-    /// [log_base, total_rounds).
-    log: VecDeque<SparseVec>,
-    log_base: u64,
-    /// per-worker cursor: commits [0, cursor[k]) are already folded into
-    /// worker k's local model (shipped in earlier replies)
-    cursor: Vec<u64>,
-    /// dense accumulation scratch, all-zero between operations
+    /// the coordinate-range-sharded commit log (logs, per-worker per-shard
+    /// cursors, per-shard touched lists); covers commits
+    /// [`ShardedLog::log_base`, `total_rounds`)
+    shards: ShardedLog,
+    /// dense accumulation scratch, all-zero between operations; shard s
+    /// only ever touches the `[lo_s, hi_s)` slice
     scratch: Vec<f32>,
-    /// indices written to `scratch` by the operation in flight
-    touched: Vec<u32>,
     /// messages of the current group, at most one per worker
     inbox: Vec<Option<ModelDelta>>,
     in_group: usize,
@@ -161,6 +177,12 @@ pub struct ServerState {
     timeline: Vec<(u64, usize, bool)>,
     /// cached |live|: keeps barrier checks O(1) at fleet scale (K ~ 100s)
     live_count: usize,
+    /// admission reply encoded at a given commit epoch: simultaneous
+    /// rejoins at one commit clock share one O(d) `ModelDelta::from_dense`
+    /// instead of each paying their own.  `w` only changes when
+    /// `total_rounds` advances, so the epoch key invalidates exactly at
+    /// the next commit.
+    admit_cache: Option<(u64, ModelDelta)>,
     finished: bool,
     /// true once a stop was requested (target gap reached)
     stop_requested: bool,
@@ -170,13 +192,11 @@ impl ServerState {
     pub fn new(cfg: ServerConfig, dim: usize) -> ServerState {
         assert!(cfg.group >= 1 && cfg.group <= cfg.workers);
         assert!(cfg.period >= 1);
+        assert!(cfg.shards >= 1, "shards must be >= 1");
         ServerState {
             w: vec![0.0; dim],
-            log: VecDeque::new(),
-            log_base: 0,
-            cursor: vec![0; cfg.workers],
+            shards: ShardedLog::new(cfg.shards, dim, cfg.workers),
             scratch: vec![0.0; dim],
-            touched: Vec::new(),
             inbox: vec![None; cfg.workers],
             in_group: 0,
             t: 0,
@@ -194,6 +214,7 @@ impl ServerState {
             rejoins: 0,
             timeline: Vec::new(),
             live_count: cfg.workers,
+            admit_cache: None,
             finished: false,
             stop_requested: false,
             cfg,
@@ -220,15 +241,32 @@ impl ServerState {
         self.max_staleness
     }
 
-    /// Commit-log entries currently held live (memory diagnostics; bounded
-    /// by the full-barrier period T).
+    /// Commit-log entries currently held live **per shard** (memory
+    /// diagnostics; bounded by the full-barrier period T).  Shard logs
+    /// advance in lockstep — every commit appends exactly one (possibly
+    /// empty) slice entry to every shard — so this equals each shard's log
+    /// length, which is exactly the single-shard value: the number stays
+    /// comparable across shard counts and S = 1 reports are unchanged.
     pub fn live_log_entries(&self) -> usize {
-        self.log.len()
+        self.shards.live_entries()
     }
 
     /// High-water mark of [`Self::live_log_entries`] over the run.
     pub fn peak_log_entries(&self) -> usize {
         self.peak_log_entries
+    }
+
+    /// Effective shard count (`ceil(d / ceil(d/S))` — at most S, smaller
+    /// when d is too small to fill S nonempty coordinate ranges).
+    pub fn shard_count(&self) -> usize {
+        self.shards.shards.len()
+    }
+
+    /// Live log entries of each shard individually (always uniform — see
+    /// [`Self::live_log_entries`]; exposed so tests can pin the per-shard
+    /// live-log ≤ T bound directly).
+    pub fn shard_live_log_entries(&self) -> Vec<usize> {
+        self.shards.shards.iter().map(|s| s.log.len()).collect()
     }
 
     /// Empirical inclusion frequency of each worker (the paper's q_k).
@@ -430,23 +468,20 @@ impl ServerState {
         let members: Vec<usize> = (0..self.cfg.workers)
             .filter(|&k| self.inbox[k].is_some())
             .collect();
-        // lines 8 + 10: aggregate the group ONCE into a sparse log entry —
-        // O(Σ member nnz), never O(B·d) — then fold it into w and share it
-        // with every worker through the log instead of K dense accumulators.
-        let scratch = &mut self.scratch;
-        let touched = &mut self.touched;
-        for &k in &members {
-            let f = self.inbox[k].take().unwrap();
-            f.for_each_nonzero(|i, v| {
-                scratch[i] += gamma * v;
-                touched.push(i as u32);
-            });
-        }
-        let (idx, val) = drain_scratch_sorted(scratch, touched);
-        let entry = SparseVec::new(self.w.len(), idx, val);
-        entry.add_into(&mut self.w, 1.0);
-        self.log.push_back(entry);
-        self.peak_log_entries = self.peak_log_entries.max(self.log.len());
+        // lines 8 + 10: aggregate the group ONCE into one sparse log entry
+        // per shard — O(Σ member nnz) total, split by coordinate range and
+        // committed in parallel for S > 1 — then fold each shard's entry
+        // into its slice of w.  Member order and per-index arithmetic are
+        // the single-shard reference's exactly (every index lives in
+        // exactly one shard), so the result is bit-identical for any S.
+        let deltas: Vec<ModelDelta> = members
+            .iter()
+            .map(|&k| self.inbox[k].take().unwrap())
+            .collect();
+        self.shards
+            .commit(&deltas, gamma, &mut self.w, &mut self.scratch);
+        drop(deltas);
+        self.peak_log_entries = self.peak_log_entries.max(self.shards.live_entries());
         self.in_group = 0;
         self.total_rounds += 1;
 
@@ -469,13 +504,14 @@ impl ServerState {
             self.stop_requested && full_barrier || self.l >= self.cfg.outer_rounds;
         self.finished = finished;
 
-        // line 11: materialize Δw̃_k = Σ log[cursor_k..] for each member and
-        // advance its cursor past the log head
+        // line 11: materialize Δw̃_k = Σ log[cursor_k..] for each member —
+        // per shard, stitched in ascending range order — and advance its
+        // per-shard cursors past the log head
         let mut replies: Vec<DeltaMsg> = members
             .iter()
             .map(|&k| {
-                let delta = self.materialize_since(self.cursor[k]);
-                self.cursor[k] = self.total_rounds;
+                let delta = self.materialize_reply(k);
+                self.shards.set_cursor(k, self.total_rounds);
                 DeltaMsg {
                     worker: k as u32,
                     server_round: self.total_rounds,
@@ -514,36 +550,39 @@ impl ServerState {
         self.rejoin_at[k] = None;
         self.live[k] = true;
         self.live_count += 1;
-        self.cursor[k] = self.total_rounds;
+        self.shards.set_cursor(k, self.total_rounds);
         self.last_included[k] = self.total_rounds;
         self.rejoins += 1;
         self.timeline.push((self.total_rounds, k, true));
+        // simultaneous rejoins at one commit epoch share one O(d) encoding
+        // of w; `from_dense` is deterministic and w is fixed between
+        // commits, so the cached clone is byte-identical to a fresh build
+        let delta = match &self.admit_cache {
+            Some((epoch, delta)) if *epoch == self.total_rounds => delta.clone(),
+            _ => {
+                let delta = ModelDelta::from_dense(&self.w);
+                self.admit_cache = Some((self.total_rounds, delta.clone()));
+                delta
+            }
+        };
         DeltaMsg {
             worker: k as u32,
             server_round: self.total_rounds,
             shutdown: self.finished,
-            delta: ModelDelta::from_dense(&self.w),
+            delta,
         }
     }
 
-    /// Sum of log entries in [from, total_rounds), encoded exactly as the
-    /// dense accumulator would have been: nonzeros in index order, sparse
-    /// vs dense chosen by the shared [`ModelDelta::prefers_sparse`] wire
-    /// rule.  Cost O(window nnz) (+ O(d) only when the reply is genuinely
-    /// dense, i.e. proportional to its payload).
-    fn materialize_since(&mut self, from: u64) -> ModelDelta {
+    /// Sum of log entries in [cursor_k, total_rounds), materialized shard
+    /// by shard and stitched in ascending range order, encoded exactly as
+    /// the dense accumulator would have been: nonzeros in index order,
+    /// sparse vs dense chosen by the shared [`ModelDelta::prefers_sparse`]
+    /// wire rule **on the stitched nnz**.  Cost O(window nnz) (+ O(d) only
+    /// when the reply is genuinely dense, i.e. proportional to its
+    /// payload).
+    fn materialize_reply(&mut self, k: usize) -> ModelDelta {
         let d = self.w.len();
-        debug_assert!(from >= self.log_base, "cursor behind truncated log");
-        let start = (from - self.log_base) as usize;
-        let scratch = &mut self.scratch;
-        let touched = &mut self.touched;
-        for e in self.log.iter().skip(start) {
-            for (&i, &v) in e.idx.iter().zip(&e.val) {
-                scratch[i as usize] += v;
-                touched.push(i);
-            }
-        }
-        let (idx, val) = drain_scratch_sorted(scratch, touched);
+        let (idx, val) = self.shards.materialize_for(k, &mut self.scratch);
         if ModelDelta::prefers_sparse(idx.len(), d) {
             ModelDelta::Sparse(SparseVec::new(d, idx, val))
         } else {
@@ -561,18 +600,12 @@ impl ServerState {
     /// never receive another reply, so their cursors must not pin the log
     /// (a degraded run would otherwise leak one entry per commit).
     fn truncate_log(&mut self) {
-        let min_cursor = self
-            .cursor
-            .iter()
-            .zip(&self.live)
-            .filter(|&(_, &alive)| alive)
-            .map(|(&c, _)| c)
+        let min_cursor = (0..self.cfg.workers)
+            .filter(|&k| self.live[k])
+            .map(|k| self.shards.cursor(k))
             .min()
             .unwrap_or(self.total_rounds);
-        while self.log_base < min_cursor && !self.log.is_empty() {
-            self.log.pop_front();
-            self.log_base += 1;
-        }
+        self.shards.truncate(min_cursor);
     }
 
     /// Invariant: w == Σ over history of committed entries; equivalently each
@@ -580,36 +613,255 @@ impl ServerState {
     /// inclusion.  Exposed for tests/diagnostics (allocates O(d); not a hot
     /// path).
     pub fn pending_norm(&self, k: usize) -> f64 {
-        let start = (self.cursor[k] - self.log_base) as usize;
         let mut acc = vec![0.0f32; self.w.len()];
-        for e in self.log.iter().skip(start) {
-            e.add_into(&mut acc, 1.0);
+        for shard in &self.shards.shards {
+            let start = (shard.cursor[k] - self.shards.log_base) as usize;
+            for e in shard.log.iter().skip(start) {
+                e.add_into(&mut acc, 1.0);
+            }
         }
         crate::linalg::dense::norm2_sq(&acc).sqrt()
     }
 }
 
-/// Drain an accumulation out of `scratch`: sort+dedup the touched indices,
-/// gather the nonzero values in index order as parallel (idx, val) arrays,
-/// and restore the shared invariant that `scratch` is all-zero and
-/// `touched` empty between operations.  Exact-zero sums (cancellations) are
-/// dropped, matching what `ModelDelta::from_dense` does to a dense
-/// accumulator.
-fn drain_scratch_sorted(scratch: &mut [f32], touched: &mut Vec<u32>) -> (Vec<u32>, Vec<f32>) {
+/// The commit log partitioned by coordinate range across S shards.  Shard
+/// s owns global indices [s·size, min((s+1)·size, d)) with
+/// size = ceil(d/S); the shard count is `ceil(d/size)`, so every shard's
+/// range is nonempty even when S > d.  All shard logs advance in lockstep
+/// — every commit appends exactly one (possibly empty) slice entry to
+/// every shard — so a single `log_base` covers them and each shard's log
+/// length equals the single-shard value.
+struct ShardedLog {
+    shards: Vec<LogShard>,
+    /// first commit number still held (shared: logs are lockstep)
+    log_base: u64,
+}
+
+/// One coordinate-range shard: its slice of every commit entry, one log
+/// cursor per worker, and a private touched list so shards accumulate
+/// concurrently without sharing mutable state.
+struct LogShard {
+    /// global coordinate range [lo, hi) this shard owns
+    lo: usize,
+    hi: usize,
+    /// this shard's slice of each commit entry e = γ Σ_{k∈Φ_e} F(Δw_k),
+    /// oldest first; indices are global, restricted to [lo, hi)
+    log: VecDeque<SparseVec>,
+    /// per-worker per-shard cursor: commits [0, cursor[k]) of this shard
+    /// are already folded into worker k's local model
+    cursor: Vec<u64>,
+    /// global indices written to this shard's scratch slice by the
+    /// operation in flight
+    touched: Vec<u32>,
+}
+
+impl ShardedLog {
+    fn new(s: usize, dim: usize, workers: usize) -> ShardedLog {
+        let size = dim.div_ceil(s.max(1)).max(1);
+        let count = dim.div_ceil(size).max(1);
+        let shards = (0..count)
+            .map(|i| LogShard {
+                lo: (i * size).min(dim),
+                hi: ((i + 1) * size).min(dim),
+                log: VecDeque::new(),
+                cursor: vec![0; workers],
+                touched: Vec::new(),
+            })
+            .collect();
+        ShardedLog {
+            shards,
+            log_base: 0,
+        }
+    }
+
+    /// Commit one group: accumulate + apply + append per shard — the
+    /// reference sequential path for one shard, scoped threads over the
+    /// shard set otherwise.  `w` and `scratch` are the full-dimension
+    /// buffers; each shard receives its own disjoint slice of both.
+    fn commit(&mut self, deltas: &[ModelDelta], gamma: f32, w: &mut [f32], scratch: &mut [f32]) {
+        let dim = w.len();
+        if self.shards.len() == 1 {
+            self.shards[0].commit(dim, deltas, gamma, w, scratch);
+        } else {
+            // every shard except possibly the last spans exactly `size`
+            // coordinates, so chunking w/scratch by it aligns the slices
+            // with the shard ranges
+            let size = self.shards[0].hi - self.shards[0].lo;
+            std::thread::scope(|scope| {
+                for ((shard, ws), ss) in self
+                    .shards
+                    .iter_mut()
+                    .zip(w.chunks_mut(size))
+                    .zip(scratch.chunks_mut(size))
+                {
+                    scope.spawn(move || shard.commit(dim, deltas, gamma, ws, ss));
+                }
+            });
+        }
+    }
+
+    /// Live commit entries per shard (uniform across shards — lockstep).
+    fn live_entries(&self) -> usize {
+        self.shards[0].log.len()
+    }
+
+    /// Worker k's cursor (identical in every shard: cursors only advance
+    /// through [`Self::set_cursor`]).
+    fn cursor(&self, k: usize) -> u64 {
+        self.shards[0].cursor[k]
+    }
+
+    /// Advance worker k's cursor in every shard.
+    fn set_cursor(&mut self, k: usize, c: u64) {
+        for s in &mut self.shards {
+            s.cursor[k] = c;
+        }
+    }
+
+    /// Stitch worker k's reply: each shard sums its slice of the commits in
+    /// [cursor_s[k], total) into its scratch slice and drains in index
+    /// order; visiting shards in ascending range order keeps the combined
+    /// index sequence strictly increasing — the same (index, value)
+    /// sequence the single-shard materialization produces.
+    fn materialize_for(&mut self, k: usize, scratch: &mut [f32]) -> (Vec<u32>, Vec<f32>) {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        let log_base = self.log_base;
+        for shard in &mut self.shards {
+            let (lo, hi) = (shard.lo, shard.hi);
+            shard.materialize_into(k, log_base, &mut scratch[lo..hi], &mut idx, &mut val);
+        }
+        (idx, val)
+    }
+
+    /// Pop commits every live worker has advanced past — one entry per
+    /// shard per popped commit (lockstep).
+    fn truncate(&mut self, min_cursor: u64) {
+        while self.log_base < min_cursor && !self.shards[0].log.is_empty() {
+            for s in &mut self.shards {
+                s.log.pop_front();
+            }
+            self.log_base += 1;
+        }
+    }
+}
+
+impl LogShard {
+    /// Accumulate this shard's [lo, hi) slice of every member delta into
+    /// `scratch` (the shard's slice of the dense scratch), drain it into a
+    /// sparse log entry, and fold the entry into `w` (the shard's slice of
+    /// the model).  Per-index arithmetic and member order match the
+    /// single-shard path exactly — each index lives in exactly one shard —
+    /// so stitched results are bit-identical for any shard count.
+    fn commit(
+        &mut self,
+        dim: usize,
+        deltas: &[ModelDelta],
+        gamma: f32,
+        w: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let (lo, hi) = (self.lo, self.hi);
+        let touched = &mut self.touched;
+        for f in deltas {
+            for_each_nonzero_in_range(f, lo, hi, |i, v| {
+                scratch[i - lo] += gamma * v;
+                touched.push(i as u32);
+            });
+        }
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        drain_scratch_sorted(scratch, touched, lo, &mut idx, &mut val);
+        for (&i, &v) in idx.iter().zip(&val) {
+            w[i as usize - lo] += v;
+        }
+        self.log.push_back(SparseVec::new(dim, idx, val));
+    }
+
+    /// Sum this shard's slice of commits [cursor[k], total) into `scratch`
+    /// (the shard's slice) and append the drained (global index, value)
+    /// pairs — strictly increasing within the shard — to `idx`/`val`.
+    fn materialize_into(
+        &mut self,
+        k: usize,
+        log_base: u64,
+        scratch: &mut [f32],
+        idx: &mut Vec<u32>,
+        val: &mut Vec<f32>,
+    ) {
+        debug_assert!(self.cursor[k] >= log_base, "cursor behind truncated log");
+        let start = (self.cursor[k] - log_base) as usize;
+        let lo = self.lo;
+        let touched = &mut self.touched;
+        for e in self.log.iter().skip(start) {
+            for (&i, &v) in e.idx.iter().zip(&e.val) {
+                scratch[i as usize - lo] += v;
+                touched.push(i);
+            }
+        }
+        drain_scratch_sorted(scratch, touched, lo, idx, val);
+    }
+}
+
+/// Visit the nonzeros of `delta` whose global index falls in [lo, hi), as
+/// `(index, value)` in index order — the shard-restricted twin of
+/// [`ModelDelta::for_each_nonzero`].  A sparse delta splits cleanly: its
+/// indices are strictly increasing, so the range is one contiguous idx/val
+/// subslice found by binary search; a dense delta walks only its [lo, hi)
+/// slice, skipping exact zeros exactly as the full walk does.
+fn for_each_nonzero_in_range(
+    delta: &ModelDelta,
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(usize, f32),
+) {
+    match delta {
+        ModelDelta::Sparse(s) => {
+            let a = s.idx.partition_point(|&i| (i as usize) < lo);
+            for (&i, &v) in s.idx[a..].iter().zip(&s.val[a..]) {
+                if i as usize >= hi {
+                    break;
+                }
+                f(i as usize, v);
+            }
+        }
+        ModelDelta::Dense(dv) => {
+            for (off, &v) in dv[lo..hi].iter().enumerate() {
+                if v != 0.0 {
+                    f(lo + off, v);
+                }
+            }
+        }
+    }
+}
+
+/// Drain an accumulation out of `scratch` — the dense slice covering
+/// global indices [base, base + len) — onto the ends of `idx`/`val`:
+/// sort+dedup the touched global indices, gather the nonzero values in
+/// index order, and restore the shared invariant that `scratch` is
+/// all-zero and `touched` empty between operations.  Exact-zero sums
+/// (cancellations) are dropped, matching what `ModelDelta::from_dense`
+/// does to a dense accumulator.
+fn drain_scratch_sorted(
+    scratch: &mut [f32],
+    touched: &mut Vec<u32>,
+    base: usize,
+    idx: &mut Vec<u32>,
+    val: &mut Vec<f32>,
+) {
     touched.sort_unstable();
     touched.dedup();
-    let mut idx = Vec::with_capacity(touched.len());
-    let mut val = Vec::with_capacity(touched.len());
+    idx.reserve(touched.len());
+    val.reserve(touched.len());
     for &i in touched.iter() {
-        let v = scratch[i as usize];
-        scratch[i as usize] = 0.0;
+        let v = scratch[i as usize - base];
+        scratch[i as usize - base] = 0.0;
         if v != 0.0 {
             idx.push(i);
             val.push(v);
         }
     }
     touched.clear();
-    (idx, val)
 }
 
 #[cfg(test)]
@@ -637,8 +889,24 @@ mod tests {
                 outer_rounds: 100,
                 gamma: 0.5,
                 policy,
+                shards: 1,
             },
             4,
+        )
+    }
+
+    fn sharded(k: usize, b: usize, t: usize, shards: usize, dim: usize) -> ServerState {
+        ServerState::new(
+            ServerConfig {
+                workers: k,
+                group: b,
+                period: t,
+                outer_rounds: 100,
+                gamma: 0.5,
+                policy: FailPolicy::Degrade,
+                shards,
+            },
+            dim,
         )
     }
 
@@ -728,6 +996,7 @@ mod tests {
                 outer_rounds: 2,
                 gamma: 1.0,
                 policy: FailPolicy::FailFast,
+                shards: 1,
             },
             4,
         );
@@ -1043,6 +1312,142 @@ mod tests {
         let _ = s.on_worker_lost(1, "churn leave").unwrap();
         assert!(s.on_worker_joined(1).is_none());
         assert!(!s.is_live(1));
+    }
+
+    fn multi_upd(worker: u32, dim: usize, pairs: &[(u32, f32)]) -> UpdateMsg {
+        let idx: Vec<u32> = pairs.iter().map(|&(i, _)| i).collect();
+        let val: Vec<f32> = pairs.iter().map(|&(_, v)| v).collect();
+        UpdateMsg::from_sparse(
+            worker,
+            0,
+            crate::linalg::sparse::SparseVec::new(dim, idx, val),
+        )
+    }
+
+    #[test]
+    fn shard_ranges_partition_the_dimension() {
+        for (s, dim) in [(1usize, 7usize), (2, 7), (3, 12), (8, 12), (20, 5), (4, 4)] {
+            let srv = sharded(2, 1, 3, s, dim);
+            let shards = &srv.shards.shards;
+            assert!(shards.len() <= s, "S={s} d={dim}");
+            assert_eq!(shards[0].lo, 0);
+            assert_eq!(shards.last().unwrap().hi, dim);
+            for w in shards.windows(2) {
+                assert_eq!(w[0].hi, w[1].lo, "ranges must be contiguous");
+            }
+            for sh in shards {
+                assert!(sh.lo < sh.hi, "empty shard range (S={s} d={dim})");
+            }
+            assert_eq!(srv.shard_count(), shards.len());
+        }
+    }
+
+    #[test]
+    fn sharded_commit_stitches_byte_identical_replies() {
+        // same straggler-heavy update stream on S = 1 and S = 3 at d = 12:
+        // identical actions, byte-identical encoded replies, bit-identical w
+        let dim = 12;
+        let mut reference = sharded(3, 1, 4, 1, dim);
+        let mut test = sharded(3, 1, 4, 3, dim);
+        let stream = [
+            multi_upd(0, dim, &[(0, 1.0), (5, -2.0), (11, 0.5)]),
+            multi_upd(0, dim, &[(3, 0.25), (4, 0.25)]),
+            // index 5 sums to exact zero across commits: the stragglers'
+            // stitched replay must drop the cancellation like S = 1 does
+            multi_upd(0, dim, &[(5, 2.0)]),
+            // full barrier: all three check in, stragglers replay the log
+            multi_upd(0, dim, &[(1, 1.0)]),
+            multi_upd(1, dim, &[(0, -1.0), (6, 3.0), (7, 4.0), (8, 5.0)]),
+            multi_upd(2, dim, &[(2, 1.5), (9, -0.5), (10, 0.125)]),
+        ];
+        for msg in stream {
+            let a = reference.on_update(msg.clone());
+            let b = test.on_update(msg);
+            match (a, b) {
+                (ServerAction::Wait, ServerAction::Wait) => {}
+                (
+                    ServerAction::Commit {
+                        replies: ra,
+                        round: na,
+                        full_barrier: fa,
+                        finished: za,
+                    },
+                    ServerAction::Commit {
+                        replies: rb,
+                        round: nb,
+                        full_barrier: fb,
+                        finished: zb,
+                    },
+                ) => {
+                    assert_eq!((na, fa, za), (nb, fb, zb));
+                    assert_eq!(ra.len(), rb.len());
+                    for (x, y) in ra.iter().zip(&rb) {
+                        assert_eq!(x.encode(), y.encode(), "worker {}", x.worker);
+                    }
+                }
+                (a, b) => panic!("action mismatch: {a:?} vs {b:?}"),
+            }
+        }
+        assert_eq!(reference.w(), test.w());
+        assert_eq!(test.shard_count(), 3);
+        // lockstep logs: every shard holds the same number of live entries
+        let per_shard = test.shard_live_log_entries();
+        assert!(per_shard.iter().all(|&n| n == reference.live_log_entries()));
+    }
+
+    #[test]
+    fn per_shard_live_log_bounded_by_period() {
+        // B=1, T=3, K=2 at S=4: worker 1 lags, the log grows to T-1 between
+        // full barriers and drains at each one — per shard
+        let dim = 8;
+        let mut s = sharded(2, 1, 3, 4, dim);
+        for cycle in 0..3 {
+            let _ = s.on_update(multi_upd(0, dim, &[(0, 0.1), (7, 0.1)]));
+            let _ = s.on_update(multi_upd(0, dim, &[(2, 0.1)]));
+            assert!(
+                s.shard_live_log_entries().iter().all(|&n| n <= 2),
+                "cycle {cycle}"
+            );
+            let _ = s.on_update(multi_upd(0, dim, &[(4, 0.1)]));
+            let _ = s.on_update(multi_upd(1, dim, &[(5, 0.1)]));
+            assert!(
+                s.shard_live_log_entries().iter().all(|&n| n == 0),
+                "full barrier must drain every shard (cycle {cycle})"
+            );
+        }
+        assert!(s.peak_log_entries() <= 3);
+    }
+
+    #[test]
+    fn admission_reply_memoized_within_epoch() {
+        // workers 1 and 2 rejoin at the same commit clock: the first
+        // admission builds the O(d) encoding, the second reuses it —
+        // byte-identical to a fresh `from_dense(w)` either way
+        let mut s = server_with_policy(3, 1, 100, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![], vec![1, 1], vec![1]]);
+        let _ = s.on_worker_lost(1, "churn leave").unwrap();
+        let _ = s.on_worker_lost(2, "churn leave").unwrap();
+        let replies = match s.on_update(upd(0, 4, 0, 2.0)) {
+            ServerAction::Commit { replies, .. } => replies,
+            _ => panic!("B=1 commit expected"),
+        };
+        assert_eq!(replies.len(), 3, "member + two admissions");
+        let fresh = ModelDelta::from_dense(s.w());
+        for r in replies.iter().filter(|r| r.worker != 0) {
+            assert_eq!(r.delta, fresh);
+        }
+        let (epoch, cached) = s.admit_cache.as_ref().expect("cache populated");
+        assert_eq!(*epoch, s.total_rounds());
+        assert_eq!(*cached, fresh);
+        // the next commit moves w: a later admission must NOT see the old
+        // cache (the epoch key invalidates it)
+        let _ = s.on_worker_lost(1, "churn leave again").unwrap();
+        let replies = match s.on_update(upd(0, 4, 1, 3.0)) {
+            ServerAction::Commit { replies, .. } => replies,
+            _ => panic!(),
+        };
+        let adm = replies.iter().find(|r| r.worker == 1).expect("readmission");
+        assert_eq!(adm.delta, ModelDelta::from_dense(s.w()));
     }
 
     #[test]

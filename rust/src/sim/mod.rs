@@ -80,8 +80,13 @@ pub struct SimStats {
     pub wall_time: f64,
     pub rounds: u64,
     /// high-water mark of live commit-log entries on the server (bounded by
-    /// the full-barrier period T; the O(d + live-log) memory story)
+    /// the full-barrier period T; the O(d + live-log) memory story).  Shard
+    /// logs advance in lockstep, so this per-shard high-water equals the
+    /// single-shard value whatever `shards` is.
     pub peak_log_entries: usize,
+    /// effective commit-log shard count the server ran with (≤ configured S
+    /// when d is small; 1 = sequential reference path)
+    pub shards: usize,
     /// workers lost during the run (empty unless the scenario injects
     /// faults; populated only under `fail_policy = degrade`, since
     /// `fail_fast` errors the run instead)
@@ -188,6 +193,7 @@ pub fn run_with_solvers(
             outer_rounds: cfg.outer_rounds,
             gamma: cfg.gamma as f32,
             policy: cfg.fail_policy,
+            shards: cfg.shards,
         },
         d,
     );
@@ -396,6 +402,7 @@ pub fn run_with_solvers(
         wall_time: now,
         rounds: server.total_rounds(),
         peak_log_entries: server.peak_log_entries(),
+        shards: server.shard_count(),
         failures: server.failures().to_vec(),
         live_workers: server.live_workers(),
         rejoins: server.rejoins(),

@@ -105,6 +105,7 @@
 //! runtime = "sim"      # sim | threads | tcp
 //! threads = 0          # 0 = all cores
 //! fail_policy = "fail_fast"  # fail_fast | degrade (fault scenarios)
+//! shards = 1           # server commit-log shards (1 = reference path)
 //! ```
 
 pub mod report;
@@ -209,6 +210,9 @@ pub struct SweepSpec {
     /// `fail_fast` (default) errors the cell; `degrade` keeps committing
     /// while live ≥ B and records the loss in the report.
     pub fail_policy: FailPolicy,
+    /// S — server commit-log shards per cell (1 = the sequential reference
+    /// path; any S is byte-identical, only wall-clock changes).
+    pub shards: usize,
     // ---- dataset knobs ----
     pub data_seed: u64,
     /// Override the source's sample count (0 = source default; LIBSVM
@@ -247,6 +251,7 @@ impl Default for SweepSpec {
             eval_every: 1,
             runtime: RuntimeKind::Sim,
             fail_policy: FailPolicy::FailFast,
+            shards: 1,
             data_seed: 42,
             n_override: 0,
             d_override: 0,
@@ -308,6 +313,8 @@ pub struct CellResult {
     /// Which runtime executed this cell (`sim` | `threads` | `tcp`); for
     /// real runtimes the time columns are wall-clock seconds.
     pub runtime: String,
+    /// S — commit-log shards the cell's server ran with (1 = reference).
+    pub shards: usize,
     /// ‖final w‖₂ — a compact fingerprint of the trained model, used by the
     /// sim-vs-real parity check (`report::parity`).
     pub w_norm: f64,
@@ -448,6 +455,7 @@ impl SweepSpec {
         e.eval_every = self.eval_every;
         e.seed = cell.seed;
         e.fail_policy = self.fail_policy;
+        e.shards = self.shards;
         e
     }
 
@@ -508,7 +516,7 @@ impl SweepSpec {
         format!(
             "{} algos x {} scenarios x {} datasets x {} K x {} B x {} T x {} rho_d x {} seeds \
              = {} cells{} (runtime={} H={} lambda={:.1e} loss={} L={} target_gap={} \
-             fail_policy={})",
+             fail_policy={} shards={})",
             self.algorithms.len(),
             self.scenarios.len(),
             self.datasets.len(),
@@ -526,6 +534,7 @@ impl SweepSpec {
             self.outer_rounds,
             self.target_gap,
             self.fail_policy.name(),
+            self.shards,
         )
     }
 
@@ -593,6 +602,7 @@ impl SweepSpec {
                 FailPolicy::help_names()
             )
         })?;
+        s.shards = doc.get_i64("sweep", "shards", s.shards as i64) as usize;
         s.data_seed = doc.get_i64("sweep", "data_seed", s.data_seed as i64) as u64;
         s.n_override = doc.get_i64("sweep", "n", s.n_override as i64) as usize;
         s.d_override = doc.get_i64("sweep", "d", s.d_override as i64) as usize;
@@ -720,12 +730,13 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
                     ""
                 };
                 format!(
-                    "cell {} ({} / {} / {} / K={}){}",
+                    "cell {} ({} / {} / {} / K={} / S={}){}",
                     cell.index,
                     cell.algorithm.name(),
                     cell.scenario.name(),
                     cell.source.name(),
                     cell.workers,
+                    engine.shards,
                     hint
                 )
             })?;
@@ -831,12 +842,13 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
     // instead of hanging the pool
     let cell_ctx = || {
         format!(
-            "cell {} ({} / {} / {} / K={})",
+            "cell {} ({} / {} / {} / K={} / S={})",
             pc.cell.index,
             pc.cell.algorithm.name(),
             pc.cell.scenario.name(),
             pc.cell.source.name(),
-            pc.cell.workers
+            pc.cell.workers,
+            pc.engine.shards
         )
     };
     let run = match runtime {
@@ -899,6 +911,7 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         group: pc.engine.group,
         period: pc.engine.period,
         runtime: runtime.name().to_string(),
+        shards: pc.engine.shards,
         w_norm: run.w_norm,
         final_gap: run.history.last_gap(),
         rounds: run.rounds,
@@ -1245,6 +1258,65 @@ threads = 2
         let cells = spec.cells();
         assert_eq!(spec.engine_for(&cells[0]).fail_policy, FailPolicy::Degrade);
         assert!(spec.describe().contains("fail_policy=degrade"), "{}", spec.describe());
+    }
+
+    #[test]
+    fn toml_shards_knob_parses() {
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 1\n").unwrap();
+        assert_eq!(spec.shards, 1);
+        let spec = SweepSpec::from_toml("[sweep]\nshards = 4\n").unwrap();
+        assert_eq!(spec.shards, 4);
+        // the knob reaches every cell's engine config and the header line
+        let cells = spec.cells();
+        assert_eq!(spec.engine_for(&cells[0]).shards, 4);
+        assert!(spec.describe().contains("shards=4"), "{}", spec.describe());
+        // a shard-count misconfiguration names S in the cell context
+        let bad = SweepSpec {
+            shards: 0,
+            n_override: 64,
+            seeds: vec![1],
+            ..SweepSpec::default()
+        };
+        let err = format!("{:#}", run_sweep(&bad).unwrap_err());
+        assert!(err.contains("S=0"), "{err}");
+        assert!(err.contains("shards"), "{err}");
+    }
+
+    /// Sharded cells produce byte-identical results to single-shard cells:
+    /// the sim report of an S = 3 sweep matches the S = 1 sweep everywhere
+    /// except the shards column itself.
+    #[test]
+    fn sharded_sim_cells_match_single_shard() {
+        let base = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan],
+            datasets: vec![preset(Preset::DenseTest)],
+            rho_ds: vec![0],
+            seeds: vec![1],
+            workers: vec![4],
+            groups: vec![2],
+            periods: vec![5],
+            h: 64,
+            outer_rounds: 4,
+            n_override: 64,
+            ..SweepSpec::default()
+        };
+        let sharded = SweepSpec {
+            shards: 3,
+            ..base.clone()
+        };
+        let a = run_sweep(&base).expect("single-shard sweep");
+        let b = run_sweep(&sharded).expect("sharded sweep");
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.shards, 1);
+            assert_eq!(y.shards, 3);
+            assert_eq!(x.w_norm, y.w_norm);
+            assert_eq!(x.final_gap, y.final_gap);
+            assert_eq!(x.bytes_up, y.bytes_up);
+            assert_eq!(x.bytes_down, y.bytes_down);
+            assert_eq!(x.rounds, y.rounds);
+        }
     }
 
     /// A `kill:` scenario cell errors the sweep under fail_fast (with the

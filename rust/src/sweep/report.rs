@@ -94,6 +94,7 @@ impl SweepReport {
             "failures",
             "rejoins",
             "membership",
+            "shards",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -133,6 +134,7 @@ impl SweepReport {
                 &c.failures,
                 &c.rejoins,
                 &c.membership,
+                &c.shards,
             ]);
         }
         w
@@ -295,7 +297,7 @@ impl SweepReport {
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}, \
                  \"live_workers\": {}, \"failures\": {}, \
-                 \"rejoins\": {}, \"membership\": {}}}{}\n",
+                 \"rejoins\": {}, \"membership\": {}, \"shards\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
@@ -328,6 +330,7 @@ impl SweepReport {
                 json_str(&c.failures),
                 c.rejoins,
                 json_str(&c.membership),
+                c.shards,
                 if i + 1 < self.cells.len() { "," } else { "" },
             );
         }
@@ -611,6 +614,7 @@ mod tests {
             group: 2,
             period: 5,
             runtime: "sim".to_string(),
+            shards: 1,
             w_norm: 1.0,
             final_gap,
             rounds: 100,
@@ -807,7 +811,7 @@ mod tests {
                 .lines()
                 .next()
                 .unwrap()
-                .ends_with("w_norm,live_workers,failures,rejoins,membership"),
+                .ends_with("w_norm,live_workers,failures,rejoins,membership,shards"),
             "{cells}"
         );
         let header_cols = cells.lines().next().unwrap().split(',').count();
@@ -834,6 +838,7 @@ mod tests {
         assert!(j.contains("\"failures\": \"\""));
         assert!(j.contains("\"rejoins\": 0"));
         assert!(j.contains("\"membership\": \"\""));
+        assert!(j.contains("\"shards\": 1"));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }

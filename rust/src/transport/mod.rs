@@ -235,8 +235,11 @@ pub struct TcpServerOutput {
     pub participation: Vec<f64>,
     /// total committed inner iterations (communication rounds)
     pub rounds: u64,
-    /// high-water mark of live commit-log entries on the server
+    /// high-water mark of live commit-log entries on the server (per-shard;
+    /// shard logs advance in lockstep, so this equals the single-shard value)
     pub peak_log_entries: usize,
+    /// effective commit-log shard count the server ran with
+    pub shards: usize,
     /// every observed worker loss (empty on a healthy run)
     pub failures: Vec<WorkerFailure>,
     /// workers still in the barrier set at the end (== K when healthy)
@@ -452,6 +455,7 @@ pub fn run_server_on_scenario(
             outer_rounds: cfg.outer_rounds,
             gamma: cfg.gamma as f32,
             policy: cfg.fail_policy,
+            shards: cfg.shards,
         },
         d,
     );
@@ -498,6 +502,7 @@ pub fn run_server_on_scenario(
         participation: server.participation_rates(),
         rounds: server.total_rounds(),
         peak_log_entries: server.peak_log_entries(),
+        shards: server.shard_count(),
         failures: server.failures().to_vec(),
         live_workers: server.live_workers(),
         rejoins: server.rejoins(),

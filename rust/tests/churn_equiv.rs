@@ -346,6 +346,7 @@ fn prop_membership_machine_matches_dense_reference() {
                 outer_rounds: case.outer_rounds,
                 gamma: 0.5,
                 policy: FailPolicy::Degrade,
+                shards: 1,
             };
             let mut log_srv = ServerState::new(cfg.clone(), case.d);
             log_srv.set_rejoin_schedule(case.schedule.clone());
@@ -451,6 +452,7 @@ fn reconnect_admission_matches_fresh_worker_bootstrap() {
         outer_rounds: 4,
         gamma: 1.0,
         policy: FailPolicy::Degrade,
+        shards: 1,
     };
     let d = 12;
     let mut srv = ServerState::new(cfg.clone(), d);
@@ -514,6 +516,7 @@ fn dead_worker_updates_drop_and_cursors_unpin() {
         outer_rounds: 2,
         gamma: 1.0,
         policy: FailPolicy::Degrade,
+        shards: 1,
     };
     let d = 8;
     let mut srv = ServerState::new(cfg, d);

@@ -181,6 +181,7 @@ fn sync_matrix(runtime: RuntimeKind) -> SweepSpec {
         d_override: 0,
         threads: 2,
         fail_policy: FailPolicy::FailFast,
+        shards: 1,
     }
 }
 

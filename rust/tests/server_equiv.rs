@@ -17,10 +17,23 @@
 //! differs — and what this test exercises — is the entire delivery
 //! mechanism: log cursors vs dense accumulators, lazy materialization vs
 //! eager reset, and log truncation.
+//!
+//! The second half of the suite pins the coordinate-range-sharded commit
+//! path (`ServerConfig::shards` > 1, committed on scoped threads) against
+//! the single-shard reference the same way: identical randomized streams —
+//! including churn losses and scheduled rejoins — must produce identical
+//! actions, byte-identical encoded replies, a bit-identical final `w`, and
+//! a per-shard live log bounded by T; plus one degraded churn sweep cell
+//! parity-pinned across sim/threads/tcp at S = 4.
 
+use acpd::data::synthetic::Preset;
+use acpd::data::DatasetSource;
+use acpd::engine::Algorithm;
 use acpd::linalg::sparse::SparseVec;
+use acpd::network::Scenario;
 use acpd::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
 use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
+use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
 use acpd::testing::forall;
 use acpd::util::rng::Pcg64;
 
@@ -173,6 +186,7 @@ fn prop_log_server_matches_dense_reference() {
                 outer_rounds: case.outer_rounds,
                 gamma: 0.5,
                 policy: FailPolicy::FailFast,
+                shards: 1,
             };
             let mut log_srv = ServerState::new(cfg.clone(), case.d);
             let mut dense_srv = DensePendingServer::new(cfg, case.d);
@@ -247,6 +261,7 @@ fn straggler_reply_replays_missed_commits() {
         outer_rounds: 2,
         gamma: 1.0,
         policy: FailPolicy::FailFast,
+        shards: 1,
     };
     let d = 16;
     let mut log_srv = ServerState::new(cfg.clone(), d);
@@ -292,4 +307,257 @@ fn straggler_reply_replays_missed_commits() {
     // the straggler pattern actually exercised lazy materialization: the
     // log had to hold the non-full-barrier commits of each outer round
     assert_eq!(log_srv.peak_log_entries(), 4);
+}
+
+/// Compare one sharded action against the single-shard reference's,
+/// enforcing byte-identical wire frames; clears `sent` for every reply
+/// (admission replies clear idempotently).
+fn sharded_actions_match(a: &ServerAction, b: &ServerAction, sent: &mut [bool]) -> bool {
+    match (a, b) {
+        (ServerAction::Wait, ServerAction::Wait) => true,
+        (
+            ServerAction::Commit {
+                replies,
+                round,
+                full_barrier,
+                finished,
+            },
+            ServerAction::Commit {
+                replies: ref_replies,
+                round: ref_round,
+                full_barrier: ref_full,
+                finished: ref_fin,
+            },
+        ) => {
+            if (round, full_barrier, finished) != (ref_round, ref_full, ref_fin) {
+                return false;
+            }
+            if replies.len() != ref_replies.len() {
+                return false;
+            }
+            for (r, rr) in replies.iter().zip(ref_replies) {
+                if r != rr || r.encode() != rr.encode() {
+                    return false;
+                }
+                sent[r.worker as usize] = false;
+            }
+            true
+        }
+        _ => false,
+    }
+}
+
+#[derive(Debug)]
+struct ShardCase {
+    workers: usize,
+    group: usize,
+    period: usize,
+    outer_rounds: usize,
+    d: usize,
+    max_nnz: usize,
+    /// S for the sharded machine (the reference always runs S = 1).
+    shards: usize,
+    /// `schedule[k]`: away gaps consumed per departure (churn); exhausted
+    /// ⇒ permanent.
+    schedule: Vec<Vec<u64>>,
+    /// Permille chance per step of injecting a loss instead of an update.
+    loss_permille: u32,
+    stream_seed: u64,
+}
+
+/// Tentpole equivalence: a coordinate-range-sharded server (S ∈ {1,2,3,8},
+/// parallel scoped-thread commits) and the single-shard sequential
+/// reference, fed one identical randomized stream — straggler arrival
+/// orders, churn losses, scheduled rejoins — must be observationally
+/// indistinguishable: identical actions, byte-identical encoded replies
+/// (member AND admission), identical membership accounting and a
+/// bit-identical final `w`.  Along the way every shard's live log stays
+/// within one full-barrier period.
+#[test]
+fn prop_sharded_server_matches_single_shard() {
+    forall(
+        0x5AA2_0008,
+        60,
+        |rng, sz| {
+            let workers = 2 + rng.next_below(4) as usize;
+            let group = 1 + rng.next_below(workers as u32) as usize;
+            let period = 1 + rng.next_below(4) as usize;
+            let outer_rounds = 1 + rng.next_below(3) as usize;
+            let d = 1 + rng.next_below(sz.0 as u32 * 3 + 1) as usize;
+            let max_nnz = 1 + rng.next_below(d as u32) as usize;
+            // S routinely exceeds the tiny d: the effective-count clamp and
+            // short-range shards are part of what this test exercises
+            let shards = [1, 2, 3, 8][rng.next_below(4) as usize];
+            let schedule = (0..workers)
+                .map(|_| {
+                    if rng.next_below(2) == 0 {
+                        (0..1 + rng.next_below(3))
+                            .map(|_| 1 + rng.next_below(4) as u64)
+                            .collect()
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect();
+            ShardCase {
+                workers,
+                group,
+                period,
+                outer_rounds,
+                d,
+                max_nnz,
+                shards,
+                schedule,
+                loss_permille: 50 + rng.next_below(200),
+                stream_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let cfg = ServerConfig {
+                workers: case.workers,
+                group: case.group,
+                period: case.period,
+                outer_rounds: case.outer_rounds,
+                gamma: 0.5,
+                policy: FailPolicy::Degrade,
+                shards: 1,
+            };
+            let mut ref_srv = ServerState::new(cfg.clone(), case.d);
+            let mut shard_srv = ServerState::new(
+                ServerConfig {
+                    shards: case.shards,
+                    ..cfg
+                },
+                case.d,
+            );
+            if shard_srv.shard_count() > case.shards.min(case.d).max(1) {
+                return false; // effective count must clamp to S and d
+            }
+            ref_srv.set_rejoin_schedule(case.schedule.clone());
+            shard_srv.set_rejoin_schedule(case.schedule.clone());
+            let mut rng = Pcg64::new(case.stream_seed);
+            let mut sent = vec![false; case.workers];
+            let mut guard = 0usize;
+            while !ref_srv.finished() {
+                guard += 1;
+                if guard > 5_000 {
+                    return false; // stuck: barrier never met
+                }
+                let free: Vec<usize> = (0..case.workers)
+                    .filter(|&i| ref_srv.is_live(i) && !sent[i])
+                    .collect();
+                let live: Vec<usize> =
+                    (0..case.workers).filter(|&i| ref_srv.is_live(i)).collect();
+                if live.is_empty() {
+                    return false; // live==0 must never persist (rescue path)
+                }
+                let lose = rng.next_below(1000) < case.loss_permille;
+                let (a, b) = if lose || free.is_empty() {
+                    if !lose && free.is_empty() {
+                        return false; // un-met barrier holding every live worker
+                    }
+                    let wid = live[rng.next_below(live.len() as u32) as usize];
+                    sent[wid] = false;
+                    let ra = shard_srv.on_worker_lost(wid, "injected");
+                    let rb = ref_srv.on_worker_lost(wid, "injected");
+                    match (ra, rb) {
+                        // both must agree the run dies here — that
+                        // agreement IS the property
+                        (Err(_), rb) => return rb.is_err(),
+                        (Ok(_), Err(_)) => return false,
+                        (Ok(a), Ok(b)) => (a, b),
+                    }
+                } else {
+                    let wid = free[rng.next_below(free.len() as u32) as usize];
+                    let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
+                    sent[wid] = true;
+                    (shard_srv.on_update(msg.clone()), ref_srv.on_update(msg))
+                };
+                if !sharded_actions_match(&a, &b, &mut sent) {
+                    return false;
+                }
+                // lockstep logs: every shard appends/truncates together, so
+                // each one's live window equals the single-shard value and
+                // never outgrows one full-barrier period
+                let per_shard = shard_srv.shard_live_log_entries();
+                let ref_live = ref_srv.live_log_entries();
+                if per_shard.len() != shard_srv.shard_count() {
+                    return false;
+                }
+                if !per_shard.iter().all(|&e| e <= case.period && e == ref_live) {
+                    return false;
+                }
+            }
+            if !shard_srv.finished() {
+                return false;
+            }
+            // membership accounting agrees end-to-end
+            if shard_srv.rejoins() != ref_srv.rejoins()
+                || shard_srv.membership_timeline() != ref_srv.membership_timeline()
+                || shard_srv.failures().len() != ref_srv.failures().len()
+                || shard_srv.peak_log_entries() != ref_srv.peak_log_entries()
+            {
+                return false;
+            }
+            // bit-for-bit identical final model
+            shard_srv.w() == ref_srv.w()
+        },
+    );
+}
+
+/// Sharding is invisible end-to-end: one degraded churn cell (B = K pins
+/// the commit composition to the scenario schedule) runs with S = 4 on
+/// sim, threads AND tcp, and every runtime's accounting — rounds, bytes,
+/// rejoins, membership, failures, ‖w‖ bits — matches the S = 1 sim
+/// reference exactly.  Only the reported shard count differs.
+#[test]
+fn sharded_churn_cell_parity_pinned_across_all_three_runtimes() {
+    let spec = |rt: RuntimeKind, shards: usize| SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![Scenario::from_name("churn:0.6:0.6").unwrap()],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![4], // B = K: see above
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 8,
+        n_override: 256,
+        threads: 1,
+        runtime: rt,
+        fail_policy: FailPolicy::Degrade,
+        shards,
+        ..SweepSpec::default()
+    };
+    let reference = run_sweep(&spec(RuntimeKind::Sim, 1)).expect("S=1 sim churn cell");
+    let sim = run_sweep(&spec(RuntimeKind::Sim, 4)).expect("S=4 sim churn cell");
+    let thr = run_sweep(&spec(RuntimeKind::Threads, 4)).expect("S=4 threads churn cell");
+    let tcp = run_sweep(&spec(RuntimeKind::Tcp, 4)).expect("S=4 tcp churn cell");
+    let key = |r: &acpd::sweep::SweepReport| {
+        let c = &r.cells[0];
+        (
+            c.rounds,
+            c.bytes_up,
+            c.bytes_down,
+            c.rejoins,
+            c.membership.clone(),
+            c.failures.clone(),
+            c.live_workers,
+            c.w_norm.to_bits(),
+        )
+    };
+    let base = key(&reference);
+    assert_eq!(base, key(&sim), "S=4 sim diverged from the S=1 reference");
+    assert_eq!(base, key(&thr), "S=4 threads diverged from the S=1 reference");
+    assert_eq!(base, key(&tcp), "S=4 tcp diverged from the S=1 reference");
+    assert_eq!(reference.cells[0].shards, 1);
+    for r in [&sim, &thr, &tcp] {
+        assert_eq!(r.cells[0].shards, 4, "{} cell shard count", r.cells[0].runtime);
+    }
+    // and the cell was a nontrivial churn run, not a degenerate pass
+    let c = &sim.cells[0];
+    assert_eq!(c.rounds, 40); // outer_rounds x period
+    assert!(c.rejoins >= 1, "no rejoin recorded: {}", c.membership);
+    assert!(c.membership.contains("+@r"), "{}", c.membership);
 }

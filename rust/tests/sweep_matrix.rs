@@ -40,6 +40,7 @@ fn matrix_2x2x2() -> SweepSpec {
         d_override: 1000,
         threads: 1,
         fail_policy: FailPolicy::FailFast,
+        shards: 1,
     }
 }
 
