@@ -100,6 +100,11 @@ pub fn render() -> String {
          parallel by coordinate range (default {}; any S is byte-identical to S = 1)",
         d.shards
     );
+    s.push_str(
+        "  shared knobs `checkpoint_every` / `checkpoint_dir`: durable server snapshot\n  \
+         cadence in commits (0 = off) and the two-slot rotation directory\n  \
+         (empty = temp dir); written atomically, resume is bit-identical\n",
+    );
 
     s.push_str("\nnetwork scenarios (per-cell cost models):\n");
     s.push_str("  lan             uniform gigabit LAN (latency-dominated)\n");
@@ -112,6 +117,10 @@ pub fn render() -> String {
     s.push_str("  churn:<pl>:<pr> time-varying membership: workers leave with per-round\n");
     s.push_str("                  probability pl, rejoin with per-commit probability pr\n");
     s.push_str("                  (requires fail_policy = degrade; rejoins in reports)\n");
+    s.push_str("  crash_server@<r> fault injection: the SERVER crashes at its first full\n");
+    s.push_str("                  barrier at/after round r and resumes bit-identically from\n");
+    s.push_str("                  its latest durable checkpoint (checkpoints / resumed_from\n");
+    s.push_str("                  report columns record the recovery)\n");
     s.push_str(
         "  fault scenarios honor `fail_policy` (fail_fast = cell errors [default];\n  \
          degrade = continue while live workers >= B, losses recorded in reports)\n",
@@ -147,7 +156,7 @@ dataset sources (sweep `datasets`, train `--preset` / `--data`):
 
 sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
   algos      acpd | cocoa | cocoa+ | disdca                       default acpd,cocoa,cocoa+
-  scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin> default lan,straggler:10,jittery-cloud
+  scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin> | crash_server@<round> default lan,straggler:10,jittery-cloud
   datasets   <preset> | <name>:<path> (LIBSVM file)               default dense-test
   workers    K - cluster sizes                                    default 4
   group      B - acpd group sizes (0 = K/2; baselines run B = K)  default 2
@@ -158,6 +167,9 @@ sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
   (algorithm, scenario, dataset, K, rho_d, seed) whatever group/period span
   shared knob `shards`: server commit-log shards per cell, committed in
   parallel by coordinate range (default 1; any S is byte-identical to S = 1)
+  shared knobs `checkpoint_every` / `checkpoint_dir`: durable server snapshot
+  cadence in commits (0 = off) and the two-slot rotation directory
+  (empty = temp dir); written atomically, resume is bit-identical
 
 network scenarios (per-cell cost models):
   lan             uniform gigabit LAN (latency-dominated)
@@ -170,6 +182,10 @@ network scenarios (per-cell cost models):
   churn:<pl>:<pr> time-varying membership: workers leave with per-round
                   probability pl, rejoin with per-commit probability pr
                   (requires fail_policy = degrade; rejoins in reports)
+  crash_server@<r> fault injection: the SERVER crashes at its first full
+                  barrier at/after round r and resumes bit-identically from
+                  its latest durable checkpoint (checkpoints / resumed_from
+                  report columns record the recovery)
   fault scenarios honor `fail_policy` (fail_fast = cell errors [default];
   degrade = continue while live workers >= B, losses recorded in reports)
 
@@ -198,5 +214,13 @@ cell runtimes (`runtime` key / `--runtime`):
             assert!(text.contains(&format!("  {axis}")), "axis {axis} missing");
         }
         assert!(text.contains("`shards`"), "shards knob missing from catalog");
+        assert!(
+            text.contains("`checkpoint_every`") && text.contains("`checkpoint_dir`"),
+            "checkpoint knobs missing from catalog"
+        );
+        assert!(
+            text.contains("crash_server@<r>"),
+            "crash_server scenario missing from catalog"
+        );
     }
 }

@@ -126,6 +126,21 @@ fn experiment_flags() -> Vec<FlagSpec> {
         FlagSpec::opt("kill", "inject fault: <wid>@<round> (worker dies before that send)", ""),
         FlagSpec::opt("fail-policy", "fail_fast|degrade on worker loss", "fail_fast"),
         FlagSpec::opt("shards", "server commit-log shards (1 = reference single shard)", "1"),
+        FlagSpec::opt(
+            "checkpoint-every",
+            "durable server snapshot cadence in commits (0=off)",
+            "0",
+        ),
+        FlagSpec::opt(
+            "checkpoint-dir",
+            "checkpoint slot directory (empty = temp dir when needed)",
+            "",
+        ),
+        FlagSpec::opt(
+            "crash-server",
+            "inject fault: crash the server at its first full barrier at/after this round (0=off)",
+            "0",
+        ),
         FlagSpec::switch("no-error-feedback", "drop filtered residual (ablation)"),
         FlagSpec::opt("runtime", "sim|threads", "sim"),
         FlagSpec::opt("out", "write history CSV here", ""),
@@ -233,6 +248,16 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
     if a.opts.contains_key("shards") || a.get_str("config")?.is_empty() {
         cfg.engine.shards = a.get("shards")?;
     }
+    if a.opts.contains_key("checkpoint-every") || a.get_str("config")?.is_empty() {
+        cfg.engine.checkpoint_every = a.get("checkpoint-every")?;
+    }
+    if a.opts.contains_key("checkpoint-dir") || a.get_str("config")?.is_empty() {
+        cfg.engine.checkpoint_dir = a.get_str("checkpoint-dir")?;
+    }
+    let crash: u64 = a.get("crash-server")?;
+    if crash > 0 {
+        cfg.network = cfg.network.with_server_crash(crash);
+    }
     if a.get_bool("no-error-feedback") {
         cfg.engine.error_feedback = false;
     }
@@ -325,7 +350,8 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
         FlagSpec::opt("algos", "comma list: acpd,cocoa,cocoa+,disdca", "acpd,cocoa,cocoa+"),
         FlagSpec::opt(
             "scenarios",
-            "comma list: lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p>",
+            "comma list: lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> \
+             | crash_server@<round> (see `acpd info` for all)",
             "lan,straggler:10,jittery-cloud",
         ),
         FlagSpec::opt(
@@ -359,6 +385,16 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
             "fail_fast",
         ),
         FlagSpec::opt("shards", "server commit-log shards per cell (1 = reference)", "1"),
+        FlagSpec::opt(
+            "checkpoint-every",
+            "durable server snapshot cadence in commits per cell (0=off)",
+            "0",
+        ),
+        FlagSpec::opt(
+            "checkpoint-dir",
+            "checkpoint slot directory (empty = temp dir when needed)",
+            "",
+        ),
         FlagSpec::switch(
             "parity",
             "re-run the matrix on the simulator and cross-check (sim_vs_real)",
@@ -454,6 +490,12 @@ fn cmd_sweep(raw: &[String]) -> Result<()> {
     }
     if explicit("shards") {
         spec.shards = a.get("shards")?;
+    }
+    if explicit("checkpoint-every") {
+        spec.checkpoint_every = a.get("checkpoint-every")?;
+    }
+    if explicit("checkpoint-dir") {
+        spec.checkpoint_dir = a.get_str("checkpoint-dir")?;
     }
     if explicit("threads") {
         spec.threads = a.get("threads")?;

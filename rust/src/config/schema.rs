@@ -96,6 +96,9 @@ impl ExperimentConfig {
         engine.eval_every = doc.get_i64("algo", "eval_every", 1) as usize;
         engine.seed = doc.get_i64("algo", "seed", 42) as u64;
         engine.shards = doc.get_i64("algo", "shards", engine.shards as i64) as usize;
+        engine.checkpoint_every =
+            doc.get_i64("algo", "checkpoint_every", engine.checkpoint_every as i64) as u64;
+        engine.checkpoint_dir = doc.get_str("algo", "checkpoint_dir", "");
         engine.error_feedback = doc.get_bool("algo", "error_feedback", true);
         let loss_name = doc.get_str("algo", "loss", "square");
         engine.loss =
@@ -165,6 +168,8 @@ h = 500
 lambda = 1e-3
 target_gap = 1e-4
 shards = 3
+checkpoint_every = 25
+checkpoint_dir = "/tmp/acpd-ckpt"
 
 [network]
 latency_s = 2e-3
@@ -181,6 +186,8 @@ straggler_factor = 10.0
         assert_eq!(cfg.engine.period, 20);
         assert_eq!(cfg.engine.rho_d, 100);
         assert_eq!(cfg.engine.shards, 3);
+        assert_eq!(cfg.engine.checkpoint_every, 25);
+        assert_eq!(cfg.engine.checkpoint_dir, "/tmp/acpd-ckpt");
         assert!((cfg.engine.sigma_prime - 1.0).abs() < 1e-12); // γB = 0.5*2
         assert_eq!(cfg.network.slowdown, vec![1.0, 10.0, 1.0, 1.0]);
         assert!((cfg.network.latency_s - 2e-3).abs() < 1e-15);

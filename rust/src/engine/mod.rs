@@ -109,6 +109,16 @@ pub struct EngineConfig {
     /// any S produces byte-identical replies (pinned by
     /// `tests/server_equiv.rs`).
     pub shards: usize,
+    /// Write a durable server checkpoint every this many commits
+    /// (0 = never, the default).  Checkpoints rotate through two slots in
+    /// `checkpoint_dir` with atomic tmp + fsync + rename writes; a crashed
+    /// server resumes from the latest valid one
+    /// (`tests/checkpoint_equiv.rs` pins bit-identical resume).
+    pub checkpoint_every: u64,
+    /// Directory for checkpoint rotation slots.  Empty (the default):
+    /// runs that need durability anyway — an injected `crash_server`
+    /// scenario — use a throwaway temp dir that is removed afterwards.
+    pub checkpoint_dir: String,
 }
 
 impl EngineConfig {
@@ -133,6 +143,8 @@ impl EngineConfig {
             error_feedback: true,
             fail_policy: FailPolicy::FailFast,
             shards: 1,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 
@@ -156,6 +168,8 @@ impl EngineConfig {
             error_feedback: true,
             fail_policy: FailPolicy::FailFast,
             shards: 1,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
         }
     }
 

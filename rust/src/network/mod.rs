@@ -145,6 +145,12 @@ pub struct NetworkModel {
     pub burst: Option<BurstParams>,
     /// Leave/rejoin membership churn (`churn:` scenario); default: off.
     pub churn: Option<ChurnParams>,
+    /// Injected *server* crash (`crash_server:` scenario): the server
+    /// checkpoints and dies at its first full-barrier commit with round
+    /// >= this, then restarts from the latest checkpoint; default: off.
+    /// Deterministic — no RNG stream — so all runtimes crash at the same
+    /// commit.
+    pub server_crash: Option<u64>,
 }
 
 impl NetworkModel {
@@ -160,6 +166,7 @@ impl NetworkModel {
             faults: FaultPlan::default(),
             burst: None,
             churn: None,
+            server_crash: None,
         }
     }
 
@@ -220,6 +227,13 @@ impl NetworkModel {
     /// Leave/rejoin membership churn on a uniform LAN.
     pub fn with_churn(mut self, p_leave: f64, p_rejoin: f64) -> NetworkModel {
         self.churn = Some(ChurnParams { p_leave, p_rejoin });
+        self
+    }
+
+    /// Crash the server at its first full-barrier commit with round >=
+    /// `round`, forcing a checkpoint restore (uniform LAN base).
+    pub fn with_server_crash(mut self, round: u64) -> NetworkModel {
+        self.server_crash = Some(round);
         self
     }
 
@@ -478,6 +492,11 @@ pub enum Scenario {
     /// `p_leave` and are re-admitted with per-commit probability
     /// `p_rejoin`, on a uniform LAN.  Requires `fail_policy = degrade`.
     Churn { p_leave: f64, p_rejoin: f64 },
+    /// Server fault injection: the server checkpoints and crashes at its
+    /// first full-barrier commit with round >= `round`, then restarts
+    /// from the latest checkpoint and resumes bit-identically, on a
+    /// uniform LAN (isolates the recovery effect).
+    CrashServer { round: u64 },
 }
 
 impl Scenario {
@@ -491,12 +510,13 @@ impl Scenario {
             Scenario::Flaky { p } => format!("flaky:{p}"),
             Scenario::Burst { p, slow, len } => format!("burst:{p}:{slow}:{len}"),
             Scenario::Churn { p_leave, p_rejoin } => format!("churn:{p_leave}:{p_rejoin}"),
+            Scenario::CrashServer { round } => format!("crash_server@{round}"),
         }
     }
 
     /// Parse `lan` | `straggler` | `straggler:<sigma>` | `jittery-cloud`
     /// | `kill:<wid>@<round>` | `flaky:<p>` | `burst:<p>:<slow>:<len>`
-    /// | `churn:<p_leave>:<p_rejoin>`.
+    /// | `churn:<p_leave>:<p_rejoin>` | `crash_server@<round>`.
     pub fn from_name(s: &str) -> Option<Scenario> {
         match s {
             "lan" => Some(Scenario::Lan),
@@ -538,6 +558,14 @@ impl Scenario {
                         None
                     };
                 }
+                if let Some(rest) = s.strip_prefix("crash_server@") {
+                    let round: u64 = rest.parse().ok()?;
+                    return if round >= 1 {
+                        Some(Scenario::CrashServer { round })
+                    } else {
+                        None
+                    };
+                }
                 if let Some(rest) = s.strip_prefix("churn:") {
                     let (a, b) = rest.split_once(':')?;
                     let p_leave: f64 = a.parse().ok()?;
@@ -562,7 +590,7 @@ impl Scenario {
     /// All parseable scenario spellings (for help/error text).
     pub fn help_names() -> &'static str {
         "lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> \
-         | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin>"
+         | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin> | crash_server@<round>"
     }
 
     /// Instantiate the cost model for a `workers`-node cluster.
@@ -577,6 +605,7 @@ impl Scenario {
             Scenario::Churn { p_leave, p_rejoin } => {
                 NetworkModel::lan().with_churn(*p_leave, *p_rejoin)
             }
+            Scenario::CrashServer { round } => NetworkModel::lan().with_server_crash(*round),
         }
     }
 }
@@ -707,6 +736,7 @@ mod tests {
         let all = [
             Scenario::Burst { p: 0.3, slow: 8.0, len: 5 },
             Scenario::Churn { p_leave: 0.25, p_rejoin: 0.5 },
+            Scenario::CrashServer { round: 3 },
         ];
         for s in all {
             assert_eq!(Scenario::from_name(&s.name()), Some(s.clone()), "{}", s.name());
@@ -718,6 +748,9 @@ mod tests {
         assert_eq!(Scenario::from_name("churn:0.25"), None); // missing p_rejoin
         assert_eq!(Scenario::from_name("churn:1.5:0.5"), None);
         assert_eq!(Scenario::from_name("churn:0.25:0"), None);
+        assert_eq!(Scenario::from_name("crash_server@0"), None); // rounds are 1-based
+        assert_eq!(Scenario::from_name("crash_server@x"), None);
+        assert_eq!(Scenario::from_name("crash_server"), None);
     }
 
     #[test]
@@ -730,6 +763,14 @@ mod tests {
         assert_eq!(c.churn, Some(ChurnParams { p_leave: 0.25, p_rejoin: 0.5 }));
         assert_eq!(c.flop_time, NetworkModel::lan().flop_time, "churn is a uniform LAN");
         assert!(c.faults.is_empty() && c.burst.is_none());
+        let cr = Scenario::CrashServer { round: 3 }.instantiate(4);
+        assert_eq!(cr.server_crash, Some(3));
+        assert_eq!(cr.flop_time, NetworkModel::lan().flop_time, "crash is a uniform LAN");
+        assert!(cr.faults.is_empty() && cr.burst.is_none() && cr.churn.is_none());
+        assert!(NetworkModel::lan().server_crash.is_none());
+        // a server crash is not a worker fault: the schedule carries no
+        // membership events, so workers stay on the legacy code path
+        assert!(!cr.schedule(4, 42).has_events());
     }
 
     /// Legacy-scenario pin: every pre-existing scenario maps onto the

@@ -1,0 +1,204 @@
+//! Durable server checkpoints: an atomic two-slot rotation on disk.
+//!
+//! A [`CheckpointStore`] owns a directory holding at most two snapshot
+//! files, `ckpt.0` / `ckpt.1`, written alternately so one complete older
+//! snapshot always survives a torn write of the newer one.  Writes are
+//! atomic — serialize to `ckpt.N.tmp`, fsync, rename over `ckpt.N` — and
+//! reads validate magic, version and CRC via [`ServerState::restore`],
+//! falling back to the other slot with every rejected slot's reason
+//! preserved in the error.
+//!
+//! The store is runtime-agnostic: the simulator, the thread runtime and
+//! the TCP runtime all write through it on the `checkpoint_every` commit
+//! cadence and reload through [`CheckpointStore::load_latest`] after an
+//! injected `crash_server@<round>`.  `tests/checkpoint_equiv.rs` pins the
+//! rotation and torn-write recovery behavior.
+
+use std::fs;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::protocol::server::ServerState;
+
+/// Number of rotation slots kept on disk.
+pub const SLOTS: usize = 2;
+
+/// Two-slot atomic checkpoint directory (see module docs).
+pub struct CheckpointStore {
+    dir: PathBuf,
+    /// snapshots written through this store (selects the next slot)
+    written: u64,
+    /// remove the directory on drop (throwaway stores for dirless runs)
+    ephemeral: bool,
+}
+
+/// Distinguishes concurrently-created ephemeral stores within one process
+/// (sweep cells run on a thread pool).
+static EPHEMERAL_ID: AtomicU64 = AtomicU64::new(0);
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<CheckpointStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore {
+            dir,
+            written: 0,
+            ephemeral: false,
+        })
+    }
+
+    /// A throwaway store under the system temp dir, removed on drop: used
+    /// when a run needs recovery durability (an injected server crash) but
+    /// no `checkpoint_dir` was configured.
+    pub fn ephemeral() -> Result<CheckpointStore> {
+        let n = EPHEMERAL_ID.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!("acpd-ckpt-{}-{n}", std::process::id()));
+        let mut store = CheckpointStore::new(dir)?;
+        store.ephemeral = true;
+        Ok(store)
+    }
+
+    /// Path of rotation slot `slot` (`ckpt.0` / `ckpt.1`).
+    pub fn slot_path(&self, slot: usize) -> PathBuf {
+        self.dir.join(format!("ckpt.{slot}"))
+    }
+
+    /// Snapshots written through this store.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Atomically persist one snapshot into the next rotation slot: write
+    /// `ckpt.N.tmp`, fsync, rename over `ckpt.N`.  Alternating slots keep
+    /// the previous complete snapshot intact while the new one is in
+    /// flight, so a crash *during* a checkpoint still leaves a valid
+    /// recovery point.
+    pub fn write(&mut self, server: &ServerState) -> Result<()> {
+        let slot = (self.written as usize) % SLOTS;
+        let path = self.slot_path(slot);
+        let tmp = self.dir.join(format!("ckpt.{slot}.tmp"));
+        let bytes = server.snapshot();
+        let mut f =
+            fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&bytes)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+        drop(f);
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Load the newest valid snapshot: every slot is read and validated
+    /// (magic / version / CRC), invalid or missing slots are skipped with
+    /// their reasons recorded, and the survivor with the highest commit
+    /// round wins.  Errors only when no slot holds a valid snapshot — and
+    /// then names every slot's failure (file path + reason).
+    pub fn load_latest(&self) -> Result<ServerState> {
+        let mut best: Option<ServerState> = None;
+        let mut problems: Vec<String> = Vec::new();
+        for slot in 0..SLOTS {
+            let path = self.slot_path(slot);
+            let state = fs::read(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|bytes| ServerState::restore(&bytes));
+            match state {
+                Ok(s) => {
+                    if best
+                        .as_ref()
+                        .map_or(true, |b| s.total_rounds() > b.total_rounds())
+                    {
+                        best = Some(s);
+                    }
+                }
+                Err(e) => problems.push(format!("slot {slot} ({}): {e:#}", path.display())),
+            }
+        }
+        best.ok_or_else(|| {
+            anyhow::anyhow!(
+                "no valid checkpoint in {}: {}",
+                self.dir.display(),
+                problems.join("; ")
+            )
+        })
+    }
+}
+
+impl Drop for CheckpointStore {
+    fn drop(&mut self) {
+        if self.ephemeral {
+            let _ = fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::server::{FailPolicy, ServerConfig};
+
+    fn tiny_server(rounds: u64) -> ServerState {
+        use crate::protocol::messages::UpdateMsg;
+        let mut s = ServerState::new(
+            ServerConfig {
+                workers: 1,
+                group: 1,
+                period: 100,
+                outer_rounds: 100,
+                gamma: 1.0,
+                policy: FailPolicy::FailFast,
+                shards: 1,
+            },
+            4,
+        );
+        for _ in 0..rounds {
+            let _ = s.on_update(UpdateMsg::from_sparse(
+                0,
+                0,
+                crate::linalg::sparse::SparseVec::new(4, vec![0], vec![1.0]),
+            ));
+        }
+        s
+    }
+
+    #[test]
+    fn writes_alternate_slots_and_newest_wins() {
+        let mut store = CheckpointStore::ephemeral().unwrap();
+        store.write(&tiny_server(1)).unwrap();
+        store.write(&tiny_server(2)).unwrap();
+        assert!(store.slot_path(0).exists());
+        assert!(store.slot_path(1).exists());
+        assert_eq!(store.written(), 2);
+        assert_eq!(store.load_latest().unwrap().total_rounds(), 2);
+        // a third write rotates back over slot 0
+        store.write(&tiny_server(3)).unwrap();
+        assert_eq!(store.load_latest().unwrap().total_rounds(), 3);
+    }
+
+    #[test]
+    fn ephemeral_store_cleans_up_on_drop() {
+        let dir = {
+            let mut store = CheckpointStore::ephemeral().unwrap();
+            store.write(&tiny_server(1)).unwrap();
+            let dir = store.slot_path(0).parent().unwrap().to_path_buf();
+            assert!(dir.exists());
+            dir
+        };
+        assert!(!dir.exists(), "ephemeral dir must be removed on drop");
+    }
+
+    #[test]
+    fn empty_store_errors_with_slot_context() {
+        let store = CheckpointStore::ephemeral().unwrap();
+        let err = store.load_latest().unwrap_err().to_string();
+        assert!(err.contains("no valid checkpoint"), "{err}");
+        assert!(err.contains("slot 0") && err.contains("slot 1"), "{err}");
+    }
+}

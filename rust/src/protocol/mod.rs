@@ -10,6 +10,12 @@
 //! runtime all drive the *same* code, which is what makes the simulated
 //! and real experiments comparable.
 
+//!
+//! [`checkpoint::CheckpointStore`] persists [`server::ServerState`]
+//! snapshots (atomic two-slot rotation, CRC-verified) so a crashed server
+//! resumes bit-identically from its last commit boundary.
+
+pub mod checkpoint;
 pub mod messages;
 pub mod server;
 pub mod worker;

@@ -47,6 +47,13 @@ use std::collections::VecDeque;
 
 use crate::linalg::sparse::SparseVec;
 use crate::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use crate::util::binio::{crc32, Decoder, Encoder};
+
+/// First word of a serialized [`ServerState`] snapshot.
+pub const SNAPSHOT_MAGIC: u32 = 0x4143_5044;
+/// Bumped whenever the snapshot payload layout changes; [`ServerState::restore`]
+/// refuses any other version.
+pub const SNAPSHOT_VERSION: u32 = 1;
 
 /// How the server reacts when a runtime reports a worker lost
 /// ([`ServerState::on_worker_lost`]).
@@ -186,6 +193,9 @@ pub struct ServerState {
     finished: bool,
     /// true once a stop was requested (target gap reached)
     stop_requested: bool,
+    /// commit replies stashed for a mid-commit checkpoint and not yet
+    /// delivered (see [`Self::stash_outbox`]); empty in normal operation
+    outbox: Vec<DeltaMsg>,
 }
 
 impl ServerState {
@@ -217,6 +227,7 @@ impl ServerState {
             admit_cache: None,
             finished: false,
             stop_requested: false,
+            outbox: Vec::new(),
             cfg,
         }
     }
@@ -621,6 +632,281 @@ impl ServerState {
             }
         }
         crate::linalg::dense::norm2_sq(&acc).sqrt()
+    }
+
+    /// Stash undelivered commit replies so they survive inside the next
+    /// [`Self::snapshot`].  A checkpoint taken *between* applying a commit
+    /// and emitting its replies must carry those replies: the members'
+    /// cursors have already advanced past the materialization window, so a
+    /// restored server could never regenerate them.
+    pub fn stash_outbox(&mut self, replies: Vec<DeltaMsg>) {
+        self.outbox = replies;
+    }
+
+    /// Drain replies stashed by [`Self::stash_outbox`].  Restored runtimes
+    /// emit these before processing any new message; empty on servers that
+    /// were never checkpointed mid-commit.
+    pub fn take_outbox(&mut self) -> Vec<DeltaMsg> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Serialize the full commit-clock state — config, `w`, every shard's
+    /// live log and per-worker cursors, the membership machine (liveness,
+    /// failures, rejoin schedule/episodes/due rounds, timeline), round and
+    /// staleness counters, and any stashed outbox — as one self-describing
+    /// blob: magic + version header, [`crate::util::binio`] payload,
+    /// trailing [`crc32`].  [`Self::restore`] rebuilds a bit-identical
+    /// server; `tests/checkpoint_equiv.rs` pins the round trip against the
+    /// live server at every commit.
+    ///
+    /// Rebuildable state is deliberately omitted: snapshots are only taken
+    /// at commit boundaries, where `scratch` is all-zero, `inbox` empty and
+    /// `in_group == 0`, and the admission cache is a pure memo.
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(128 + 4 * self.w.len());
+        e.put_u32(SNAPSHOT_MAGIC);
+        e.put_u32(SNAPSHOT_VERSION);
+        // config: restore is self-contained and re-derives shard geometry
+        e.put_u32(self.cfg.workers as u32);
+        e.put_u32(self.cfg.group as u32);
+        e.put_u32(self.cfg.period as u32);
+        e.put_u32(self.cfg.outer_rounds as u32);
+        e.put_f32(self.cfg.gamma);
+        e.put_u8(match self.cfg.policy {
+            FailPolicy::FailFast => 0,
+            FailPolicy::Degrade => 1,
+        });
+        e.put_u32(self.cfg.shards as u32);
+        // model
+        e.put_u64(self.w.len() as u64);
+        e.put_f32_slice(&self.w);
+        // sharded commit log
+        e.put_u64(self.shards.log_base);
+        e.put_u32(self.shards.shards.len() as u32);
+        for shard in &self.shards.shards {
+            e.put_u64(shard.lo as u64);
+            e.put_u64(shard.hi as u64);
+            for &c in &shard.cursor {
+                e.put_u64(c);
+            }
+            e.put_u32(shard.log.len() as u32);
+            for entry in &shard.log {
+                e.put_u32_slice(&entry.idx);
+                e.put_f32_slice(&entry.val);
+            }
+        }
+        // clocks + diagnostics
+        e.put_u32(self.t as u32);
+        e.put_u32(self.l as u32);
+        e.put_u64(self.total_rounds);
+        e.put_u64(self.max_staleness);
+        e.put_u64(self.peak_log_entries as u64);
+        for k in 0..self.cfg.workers {
+            e.put_u64(self.participation[k]);
+            e.put_u64(self.last_included[k]);
+        }
+        // membership machine
+        for &alive in &self.live {
+            e.put_u8(alive as u8);
+        }
+        e.put_u32(self.failures.len() as u32);
+        for f in &self.failures {
+            e.put_u32(f.worker as u32);
+            e.put_u64(f.round);
+            e.put_str(&f.reason);
+        }
+        e.put_u32(self.rejoin_schedule.len() as u32);
+        for gaps in &self.rejoin_schedule {
+            e.put_u32(gaps.len() as u32);
+            for &g in gaps {
+                e.put_u64(g);
+            }
+        }
+        for &ep in &self.episodes {
+            e.put_u64(ep as u64);
+        }
+        for &due in &self.rejoin_at {
+            match due {
+                Some(r) => {
+                    e.put_u8(1);
+                    e.put_u64(r);
+                }
+                None => e.put_u8(0),
+            }
+        }
+        e.put_u64(self.rejoins);
+        e.put_u32(self.timeline.len() as u32);
+        for &(round, wid, joined) in &self.timeline {
+            e.put_u64(round);
+            e.put_u32(wid as u32);
+            e.put_u8(joined as u8);
+        }
+        e.put_u8(self.finished as u8);
+        e.put_u8(self.stop_requested as u8);
+        // undelivered replies (nonempty only for mid-commit checkpoints)
+        e.put_u32(self.outbox.len() as u32);
+        for msg in &self.outbox {
+            e.put_bytes(&msg.encode());
+        }
+        let mut bytes = e.finish();
+        let crc = crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        bytes
+    }
+
+    /// Rebuild a server from [`Self::snapshot`] bytes.  Rejects anything
+    /// that is not a complete, current-version snapshot — bad magic, a
+    /// version this build does not read, a CRC mismatch from a torn or
+    /// truncated write — with an error naming the reason, so checkpoint
+    /// loaders can fall back to an older rotation slot.
+    pub fn restore(bytes: &[u8]) -> anyhow::Result<ServerState> {
+        anyhow::ensure!(
+            bytes.len() >= 12,
+            "checkpoint truncated: {} bytes is too short to hold a header",
+            bytes.len()
+        );
+        let mut d = Decoder::new(bytes);
+        let magic = d.get_u32()?;
+        anyhow::ensure!(
+            magic == SNAPSHOT_MAGIC,
+            "not a server checkpoint (magic {magic:#010x})"
+        );
+        let version = d.get_u32()?;
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "unsupported checkpoint version {version} (this build reads version {SNAPSHOT_VERSION})"
+        );
+        let body_len = bytes.len() - 4;
+        let stored = u32::from_le_bytes(bytes[body_len..].try_into().expect("4 trailing bytes"));
+        let computed = crc32(&bytes[..body_len]);
+        anyhow::ensure!(
+            stored == computed,
+            "checkpoint CRC mismatch (stored {stored:#010x}, computed {computed:#010x}): torn or corrupt write"
+        );
+        let workers = d.get_u32()? as usize;
+        let group = d.get_u32()? as usize;
+        let period = d.get_u32()? as usize;
+        let outer_rounds = d.get_u32()? as usize;
+        let gamma = d.get_f32()?;
+        let policy = match d.get_u8()? {
+            0 => FailPolicy::FailFast,
+            1 => FailPolicy::Degrade,
+            p => anyhow::bail!("bad fail-policy tag {p} in checkpoint"),
+        };
+        let shards = d.get_u32()? as usize;
+        anyhow::ensure!(
+            workers >= 1 && group >= 1 && group <= workers && period >= 1 && shards >= 1,
+            "implausible config in checkpoint (K={workers} B={group} T={period} S={shards})"
+        );
+        let cfg = ServerConfig {
+            workers,
+            group,
+            period,
+            outer_rounds,
+            gamma,
+            policy,
+            shards,
+        };
+        let dim = d.get_u64()? as usize;
+        let mut state = ServerState::new(cfg, dim);
+        let w = d.get_f32_vec()?;
+        anyhow::ensure!(w.len() == dim, "model length {} != dim {dim}", w.len());
+        state.w = w;
+        state.shards.log_base = d.get_u64()?;
+        let n_shards = d.get_u32()? as usize;
+        anyhow::ensure!(
+            n_shards == state.shards.shards.len(),
+            "shard count {n_shards} does not match geometry for S={shards}, d={dim} (expected {})",
+            state.shards.shards.len()
+        );
+        for shard in &mut state.shards.shards {
+            let lo = d.get_u64()? as usize;
+            let hi = d.get_u64()? as usize;
+            anyhow::ensure!(
+                lo == shard.lo && hi == shard.hi,
+                "shard range [{lo}, {hi}) does not match geometry [{}, {})",
+                shard.lo,
+                shard.hi
+            );
+            for c in shard.cursor.iter_mut() {
+                *c = d.get_u64()?;
+            }
+            let log_len = d.get_u32()? as usize;
+            let mut log = VecDeque::with_capacity(log_len);
+            for _ in 0..log_len {
+                let idx = d.get_u32_vec()?;
+                let val = d.get_f32_vec()?;
+                anyhow::ensure!(idx.len() == val.len(), "log entry idx/val length mismatch");
+                log.push_back(SparseVec::new(dim, idx, val));
+            }
+            shard.log = log;
+        }
+        state.t = d.get_u32()? as usize;
+        state.l = d.get_u32()? as usize;
+        state.total_rounds = d.get_u64()?;
+        state.max_staleness = d.get_u64()?;
+        state.peak_log_entries = d.get_u64()? as usize;
+        for k in 0..workers {
+            state.participation[k] = d.get_u64()?;
+            state.last_included[k] = d.get_u64()?;
+        }
+        for alive in state.live.iter_mut() {
+            *alive = d.get_u8()? != 0;
+        }
+        state.live_count = state.live.iter().filter(|&&a| a).count();
+        let n_failures = d.get_u32()? as usize;
+        state.failures.clear();
+        for _ in 0..n_failures {
+            state.failures.push(WorkerFailure {
+                worker: d.get_u32()? as usize,
+                round: d.get_u64()?,
+                reason: d.get_str()?,
+            });
+        }
+        let sched_len = d.get_u32()? as usize;
+        anyhow::ensure!(
+            sched_len == 0 || sched_len == workers,
+            "rejoin schedule length {sched_len} (expected 0 or {workers})"
+        );
+        state.rejoin_schedule.clear();
+        for _ in 0..sched_len {
+            let n = d.get_u32()? as usize;
+            let mut gaps = Vec::with_capacity(n);
+            for _ in 0..n {
+                gaps.push(d.get_u64()?);
+            }
+            state.rejoin_schedule.push(gaps);
+        }
+        for ep in state.episodes.iter_mut() {
+            *ep = d.get_u64()? as usize;
+        }
+        for due in state.rejoin_at.iter_mut() {
+            *due = match d.get_u8()? {
+                0 => None,
+                _ => Some(d.get_u64()?),
+            };
+        }
+        state.rejoins = d.get_u64()?;
+        let n_timeline = d.get_u32()? as usize;
+        state.timeline.clear();
+        for _ in 0..n_timeline {
+            state
+                .timeline
+                .push((d.get_u64()?, d.get_u32()? as usize, d.get_u8()? != 0));
+        }
+        state.finished = d.get_u8()? != 0;
+        state.stop_requested = d.get_u8()? != 0;
+        let n_outbox = d.get_u32()? as usize;
+        state.outbox.clear();
+        for _ in 0..n_outbox {
+            state.outbox.push(DeltaMsg::decode(&d.get_bytes()?)?);
+        }
+        anyhow::ensure!(
+            d.remaining() == 4,
+            "checkpoint payload has {} stray bytes before the CRC",
+            d.remaining().saturating_sub(4)
+        );
+        Ok(state)
     }
 }
 
@@ -1448,6 +1734,74 @@ mod tests {
         };
         let adm = replies.iter().find(|r| r.worker == 1).expect("readmission");
         assert_eq!(adm.delta, ModelDelta::from_dense(s.w()));
+    }
+
+    #[test]
+    fn snapshot_roundtrips_mid_run() {
+        // a server with real history: one commit, a loss, a pending rejoin
+        let mut s = server_with_policy(3, 2, 4, FailPolicy::Degrade);
+        s.set_rejoin_schedule(vec![vec![], vec![], vec![3]]);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let _ = s.on_update(upd(1, 4, 1, 2.0)); // commit 1 (B=2)
+        let _ = s.on_worker_lost(2, "socket died").unwrap();
+        let bytes = s.snapshot();
+        let r = ServerState::restore(&bytes).unwrap();
+        assert_eq!(r.w(), s.w());
+        assert_eq!(r.total_rounds(), s.total_rounds());
+        assert_eq!(r.live_workers(), s.live_workers());
+        assert_eq!(r.failures(), s.failures());
+        assert_eq!(r.pending_rejoins(), 1);
+        assert_eq!(r.membership_timeline(), s.membership_timeline());
+        assert_eq!(r.snapshot(), bytes, "snapshot of a restore is bit-identical");
+    }
+
+    #[test]
+    fn snapshot_carries_the_stashed_outbox() {
+        let mut s = server(2, 2, 10);
+        let _ = s.on_update(upd(0, 4, 0, 1.0));
+        let replies = match s.on_update(upd(1, 4, 1, 1.0)) {
+            ServerAction::Commit { replies, .. } => replies,
+            _ => panic!("B=K commit expected"),
+        };
+        let wire: Vec<Vec<u8>> = replies.iter().map(|r| r.encode()).collect();
+        s.stash_outbox(replies);
+        let mut r = ServerState::restore(&s.snapshot()).unwrap();
+        let out = r.take_outbox();
+        assert_eq!(out.len(), wire.len());
+        for (msg, bytes) in out.iter().zip(&wire) {
+            assert_eq!(&msg.encode(), bytes, "outbox reply must survive byte-identically");
+        }
+        assert!(r.take_outbox().is_empty(), "outbox drains once");
+    }
+
+    #[test]
+    fn corrupt_snapshots_rejected_with_reason() {
+        let s = server(2, 1, 3);
+        let good = s.snapshot();
+        // truncation below the fixed header
+        let err = ServerState::restore(&good[..8]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // truncation inside the payload breaks the CRC
+        let err = ServerState::restore(&good[..good.len() - 5])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // flipped payload byte -> CRC mismatch
+        let mut bad = good.clone();
+        bad[20] ^= 0xFF;
+        let err = ServerState::restore(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+        // future version -> version error (checked before the CRC, so the
+        // message names the version, not a checksum)
+        let mut vers = good.clone();
+        vers[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = ServerState::restore(&vers).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        // bad magic
+        let mut mag = good;
+        mag[0..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        let err = ServerState::restore(&mag).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
     }
 
     #[test]

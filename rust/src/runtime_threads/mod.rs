@@ -18,6 +18,7 @@ use crate::data::{partition::partition_rows, Dataset};
 use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
 use crate::network::{episode_rng, NetworkModel};
+use crate::protocol::checkpoint::CheckpointStore;
 use crate::protocol::messages::{DeltaMsg, GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
@@ -48,6 +49,10 @@ pub struct ThreadRunOutput {
     pub rejoins: u64,
     /// compact membership timeline (`w1-@r3;w1+@r7`; empty while static)
     pub membership: String,
+    /// durable server snapshots written (0 with checkpointing off)
+    pub checkpoints: u64,
+    /// commit round the server resumed from after an injected crash
+    pub resumed_from: Option<u64>,
 }
 
 /// What the server's message pump delivers: either a protocol message or a
@@ -126,6 +131,70 @@ pub fn worker_loop(
     }
 }
 
+/// Per-restart bookkeeping that must survive a server crash: the history
+/// and byte meters span restarts (a resumed run reports ONE run), and the
+/// eval cadence must not re-probe rounds it already evaluated.
+pub struct ResumeCarry {
+    pub history: History,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub last_eval_round: u64,
+    /// wall-clock origin of every history point, kept across restarts so a
+    /// resumed run's time axis stays monotone
+    pub start: Instant,
+}
+
+impl ResumeCarry {
+    pub fn new(algo: &str) -> ResumeCarry {
+        ResumeCarry {
+            history: History::new(algo),
+            bytes_up: 0,
+            bytes_down: 0,
+            last_eval_round: 0,
+            start: Instant::now(),
+        }
+    }
+}
+
+/// Checkpoint/crash wiring for one [`server_loop_ctl`] invocation.
+pub struct CheckpointCtl<'a> {
+    /// write a durable snapshot every this many commits (0 = never)
+    pub every: u64,
+    /// the rotation store; required when `every > 0` or a crash is armed
+    pub store: Option<&'a mut CheckpointStore>,
+    /// armed server crash: checkpoint and die at the first full-barrier
+    /// commit with round >= this, before sending that commit's replies
+    pub crash_round: Option<u64>,
+}
+
+impl CheckpointCtl<'_> {
+    /// No checkpointing, no crash — the legacy code path.
+    pub fn disabled() -> CheckpointCtl<'static> {
+        CheckpointCtl {
+            every: 0,
+            store: None,
+            crash_round: None,
+        }
+    }
+}
+
+/// How one [`server_loop_ctl`] invocation ended.
+pub enum LoopOutcome {
+    /// Run complete (or the transport went away): final state and meters.
+    Finished {
+        history: History,
+        final_w: Vec<f32>,
+        server: ServerState,
+        bytes_up: u64,
+        bytes_down: u64,
+    },
+    /// The armed crash fired: the server checkpointed — with the commit's
+    /// undelivered replies stashed in its outbox — and died without
+    /// sending them.  The caller restores from the store and re-enters
+    /// [`server_loop_ctl`] with this carry.
+    Crashed { carry: ResumeCarry },
+}
+
 /// Server loop over abstract endpoints; shared by the thread and TCP
 /// runtimes.  Returns (history, final w, server state, bytes up, bytes down).
 ///
@@ -133,17 +202,70 @@ pub fn worker_loop(
 /// under `fail_fast`, or when live workers fall below B under `degrade` —
 /// so a dead worker surfaces as a cell error instead of a blocked recv.
 pub fn server_loop(
-    mut server: ServerState,
+    server: ServerState,
     cfg: &EngineConfig,
     n: usize,
     recv: impl Fn() -> Option<ServerEvent>,
     send: impl Fn(usize, ToWorkerMsg),
 ) -> anyhow::Result<(History, Vec<f32>, ServerState, u64, u64)> {
-    let start = Instant::now();
-    let mut history = History::new(cfg.algorithm.name());
-    let mut bytes_up = 0u64;
-    let mut bytes_down = 0u64;
-    let mut last_eval_round = 0u64;
+    let carry = ResumeCarry::new(cfg.algorithm.name());
+    match server_loop_ctl(server, cfg, n, recv, send, CheckpointCtl::disabled(), carry)? {
+        LoopOutcome::Finished {
+            history,
+            final_w,
+            server,
+            bytes_up,
+            bytes_down,
+        } => Ok((history, final_w, server, bytes_up, bytes_down)),
+        LoopOutcome::Crashed { .. } => {
+            anyhow::bail!("server crashed with checkpointing disabled")
+        }
+    }
+}
+
+/// [`server_loop`] with checkpoint/crash control: writes durable snapshots
+/// on the `ctl.every` commit cadence, and — when `ctl.crash_round` is
+/// armed — checkpoints and dies at the first qualifying full barrier
+/// *before* delivering that commit's replies (they ride along inside the
+/// snapshot's outbox, so the restarted server delivers exactly the bytes
+/// the crash swallowed).  The crash point is a quiescent cluster state:
+/// every live worker is parked awaiting its reply, so nothing is in
+/// flight and the resumed run is bit-identical to a crash-free one
+/// (pinned by `tests/checkpoint_equiv.rs`).
+pub fn server_loop_ctl(
+    mut server: ServerState,
+    cfg: &EngineConfig,
+    n: usize,
+    recv: impl Fn() -> Option<ServerEvent>,
+    send: impl Fn(usize, ToWorkerMsg),
+    mut ctl: CheckpointCtl<'_>,
+    carry: ResumeCarry,
+) -> anyhow::Result<LoopOutcome> {
+    let ResumeCarry {
+        mut history,
+        mut bytes_up,
+        mut bytes_down,
+        mut last_eval_round,
+        start,
+    } = carry;
+    // deliver replies stashed by a pre-crash checkpoint: the restored
+    // server already committed that round, so the workers still parked on
+    // it receive exactly the bytes the crash swallowed
+    for r in server.take_outbox() {
+        bytes_down += r.wire_bytes() as u64;
+        let wid = r.worker as usize;
+        send(wid, ToWorkerMsg::Delta(r));
+    }
+    if server.finished() {
+        let final_w = server.w().to_vec();
+        return Ok(LoopOutcome::Finished {
+            history,
+            final_w,
+            server,
+            bytes_up,
+            bytes_down,
+        });
+    }
     loop {
         let Some(ev) = recv() else { break };
         let action = match ev {
@@ -233,8 +355,14 @@ pub fn server_loop(
                                 deferred_joins.push(wid);
                             }
                             None => {
-                                let w = server.w().to_vec();
-                                return Ok((history, w, server, bytes_up, bytes_down));
+                                let final_w = server.w().to_vec();
+                                return Ok(LoopOutcome::Finished {
+                                    history,
+                                    final_w,
+                                    server,
+                                    bytes_up,
+                                    bytes_down,
+                                });
                             }
                         }
                     }
@@ -260,10 +388,40 @@ pub fn server_loop(
                         server.request_stop();
                     }
                 }
+                // armed crash: fire at the first qualifying full barrier,
+                // AFTER the gap probe (the history point survives inside
+                // the carry) but BEFORE the replies go out — they are
+                // checkpointed in the outbox instead, so commit `round` is
+                // durable and never recomputed
+                if full_barrier && ctl.crash_round.map_or(false, |cr| round >= cr) {
+                    server.stash_outbox(replies);
+                    match ctl.store.as_mut() {
+                        Some(store) => store.write(&server)?,
+                        None => anyhow::bail!(
+                            "server crash injected but no checkpoint store is configured"
+                        ),
+                    }
+                    return Ok(LoopOutcome::Crashed {
+                        carry: ResumeCarry {
+                            history,
+                            bytes_up,
+                            bytes_down,
+                            last_eval_round,
+                            start,
+                        },
+                    });
+                }
                 for r in replies {
                     bytes_down += r.wire_bytes() as u64;
                     let wid = r.worker as usize;
                     send(wid, ToWorkerMsg::Delta(r));
+                }
+                // cadence checkpoint: written after the replies, so the
+                // snapshot's outbox is empty and a restore re-sends nothing
+                if ctl.every > 0 && round % ctl.every == 0 {
+                    if let Some(store) = ctl.store.as_mut() {
+                        store.write(&server)?;
+                    }
                 }
                 if finished {
                     break;
@@ -271,8 +429,14 @@ pub fn server_loop(
             }
         }
     }
-    let w = server.w().to_vec();
-    Ok((history, w, server, bytes_up, bytes_down))
+    let final_w = server.w().to_vec();
+    Ok(LoopOutcome::Finished {
+        history,
+        final_w,
+        server,
+        bytes_up,
+        bytes_down,
+    })
 }
 
 /// Run a full experiment on OS threads.  The convergence path is identical
@@ -302,6 +466,21 @@ pub fn run(
     // round-indexed scenario schedule: the same pure draws as sim/tcp
     let plan = net.schedule(k, seed);
     let churn = plan.has_rejoins();
+
+    // durable-checkpoint wiring: a store exists iff a cadence is set or a
+    // server crash is injected (recovery needs at least the crash
+    // snapshot).  Constructed before any thread spawns so a bad directory
+    // cannot leak parked workers.
+    let crash = net.server_crash;
+    let mut store = if cfg.checkpoint_every > 0 || crash.is_some() {
+        Some(if cfg.checkpoint_dir.is_empty() {
+            CheckpointStore::ephemeral()?
+        } else {
+            CheckpointStore::new(cfg.checkpoint_dir.as_str())?
+        })
+    } else {
+        None
+    };
 
     let (to_server_tx, to_server_rx) = mpsc::channel::<ServerEvent>();
     let mut worker_txs = Vec::new();
@@ -413,32 +592,81 @@ pub fn run(
     }
     drop(to_server_tx);
 
-    let mut server = ServerState::new(
-        ServerConfig {
-            workers: k,
-            group: cfg.group,
-            period: cfg.period,
-            outer_rounds: cfg.outer_rounds,
-            gamma: cfg.gamma as f32,
-            policy: cfg.fail_policy,
-            shards: cfg.shards,
-        },
-        d,
-    );
-    if churn {
-        // a worker cannot depart more often than the server commits
-        let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
-        server.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
-    }
-    let result = server_loop(
-        server,
-        cfg,
-        ds.n(),
-        || to_server_rx.recv().ok(),
-        |wid, msg| {
-            let _ = worker_txs[wid].send(msg);
-        },
-    );
+    let mk_server = || {
+        let mut s = ServerState::new(
+            ServerConfig {
+                workers: k,
+                group: cfg.group,
+                period: cfg.period,
+                outer_rounds: cfg.outer_rounds,
+                gamma: cfg.gamma as f32,
+                policy: cfg.fail_policy,
+                shards: cfg.shards,
+            },
+            d,
+        );
+        if churn {
+            // a worker cannot depart more often than the server commits
+            let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
+            s.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
+        }
+        s
+    };
+    // crash-restart loop: on an injected server crash, reload the latest
+    // durable snapshot — exactly what a restarted server process does —
+    // and re-enter with the carried history/meters.  Committed rounds are
+    // never recomputed; the worker threads stay parked on their channels
+    // throughout and never notice the restart.
+    let mut crash_pending = crash;
+    let mut restored: Option<ServerState> = None;
+    let mut resumed_from: Option<u64> = None;
+    let mut carry = ResumeCarry::new(cfg.algorithm.name());
+    let result = loop {
+        let server = match restored.take() {
+            Some(s) => s,
+            None => mk_server(),
+        };
+        let ctl = CheckpointCtl {
+            every: cfg.checkpoint_every,
+            store: store.as_mut(),
+            crash_round: crash_pending,
+        };
+        match server_loop_ctl(
+            server,
+            cfg,
+            ds.n(),
+            || to_server_rx.recv().ok(),
+            |wid, msg| {
+                let _ = worker_txs[wid].send(msg);
+            },
+            ctl,
+            carry,
+        ) {
+            Ok(LoopOutcome::Finished {
+                history,
+                final_w,
+                server,
+                bytes_up,
+                bytes_down,
+            }) => break Ok((history, final_w, server, bytes_up, bytes_down)),
+            Ok(LoopOutcome::Crashed { carry: resumed }) => {
+                carry = resumed;
+                crash_pending = None; // one crash per run
+                match store
+                    .as_ref()
+                    .expect("crash checkpoint was just written")
+                    .load_latest()
+                {
+                    Ok(s) => {
+                        resumed_from = Some(s.total_rounds());
+                        restored = Some(s);
+                    }
+                    Err(e) => break Err(e.context("recover after injected server crash")),
+                }
+            }
+            Err(e) => break Err(e),
+        }
+    };
     // unblock and join every worker BEFORE surfacing a server error, so a
     // failed cell never leaks parked threads
     drop(worker_txs);
@@ -461,6 +689,8 @@ pub fn run(
         live_workers: server.live_workers(),
         rejoins: server.rejoins(),
         membership: server.membership_timeline(),
+        checkpoints: store.as_ref().map_or(0, |s| s.written()),
+        resumed_from,
     })
 }
 

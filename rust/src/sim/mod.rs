@@ -19,6 +19,7 @@ use crate::data::{partition::partition_rows, Dataset};
 use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
 use crate::network::{episode_rng, NetworkModel, ScenarioSchedule};
+use crate::protocol::checkpoint::CheckpointStore;
 use crate::protocol::messages::{DeltaMsg, UpdateMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
@@ -97,6 +98,10 @@ pub struct SimStats {
     pub rejoins: u64,
     /// compact membership timeline (`w1-@r3;w1+@r7`; empty while static)
     pub membership: String,
+    /// durable server snapshots written (0 with checkpointing off)
+    pub checkpoints: u64,
+    /// commit round the server resumed from after an injected crash
+    pub resumed_from: Option<u64>,
 }
 
 pub struct SimOutput {
@@ -197,6 +202,20 @@ pub fn run_with_solvers(
         },
         d,
     );
+
+    // durable-checkpoint wiring: a store exists iff a cadence is set or a
+    // server crash is injected (recovery needs at least the crash snapshot)
+    let mut crash_pending = net.server_crash;
+    let mut resumed_from: Option<u64> = None;
+    let mut store = if cfg.checkpoint_every > 0 || crash_pending.is_some() {
+        Some(if cfg.checkpoint_dir.is_empty() {
+            CheckpointStore::ephemeral()?
+        } else {
+            CheckpointStore::new(cfg.checkpoint_dir.as_str())?
+        })
+    } else {
+        None
+    };
 
     let mut heap: BinaryHeap<Event> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -343,12 +362,30 @@ pub fn run_with_solvers(
             }
         };
         if let ServerAction::Commit {
-            replies,
+            mut replies,
             round,
             full_barrier,
             finished,
         } = action
         {
+            // injected server crash: at the first qualifying full barrier
+            // the cluster is quiescent (every live worker parked awaiting
+            // its reply), so the server stashes the undelivered replies in
+            // its snapshot outbox, checkpoints, dies and restarts from the
+            // store — the DES analogue of a process restart.  The restored
+            // state is bit-identical (pinned by tests), so the replies are
+            // delivered and the run proceeds as if nothing happened.
+            if full_barrier && crash_pending.map_or(false, |cr| round >= cr) {
+                crash_pending = None; // one crash per run
+                let st = store.as_mut().expect("crash scenarios always build a store");
+                server.stash_outbox(replies);
+                st.write(&server)?;
+                server = st
+                    .load_latest()
+                    .map_err(|e| e.context("recover after injected server crash"))?;
+                resumed_from = Some(server.total_rounds());
+                replies = server.take_outbox();
+            }
             for r in replies {
                 let t = net.message_time(r.wire_bytes());
                 comm_time += t;
@@ -361,6 +398,14 @@ pub fn run_with_solvers(
                     },
                     payload: Payload::ToWorker(r),
                 });
+            }
+            // cadence checkpoint: written after the replies are scheduled,
+            // so the snapshot's outbox is empty and a restore re-sends
+            // nothing
+            if cfg.checkpoint_every > 0 && round % cfg.checkpoint_every == 0 {
+                if let Some(st) = store.as_mut() {
+                    st.write(&server)?;
+                }
             }
             // evaluate the duality gap at FULL BARRIERS only —
             // the only moments a real deployment can assemble a
@@ -407,6 +452,8 @@ pub fn run_with_solvers(
         live_workers: server.live_workers(),
         rejoins: server.rejoins(),
         membership: server.membership_timeline(),
+        checkpoints: store.as_ref().map_or(0, |s| s.written()),
+        resumed_from,
     };
     // assemble final global dual state + leftover residual mass
     let mut final_alpha = vec![0.0f32; ds.n()];
@@ -691,6 +738,40 @@ mod tests {
         assert_eq!(out.stats.bytes_up, again.stats.bytes_up);
         assert_eq!(out.stats.bytes_down, again.stats.bytes_down);
         assert_eq!(out.final_w, again.final_w);
+    }
+
+    #[test]
+    fn crash_server_resumes_bit_identically() {
+        let ds = small_ds();
+        let cfg = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        let base = run(&ds, &cfg, &NetworkModel::lan(), 7);
+        let crashed = run(&ds, &cfg, &NetworkModel::lan().with_server_crash(3), 7);
+        // T = 5, so the first full barrier with round >= 3 is round 5
+        assert_eq!(crashed.stats.resumed_from, Some(5));
+        assert!(crashed.stats.checkpoints >= 1);
+        assert_eq!(base.stats.resumed_from, None);
+        assert_eq!(base.stats.checkpoints, 0);
+        // the resumed run is bit-identical to the crash-free one: same
+        // model bits, bytes, rounds, gap curve and virtual time axis
+        assert_eq!(base.final_w, crashed.final_w);
+        assert_eq!(base.final_alpha, crashed.final_alpha);
+        assert_eq!(base.stats.rounds, crashed.stats.rounds);
+        assert_eq!(base.stats.bytes_up, crashed.stats.bytes_up);
+        assert_eq!(base.stats.bytes_down, crashed.stats.bytes_down);
+        assert_eq!(base.history.points.len(), crashed.history.points.len());
+        for (x, y) in base.history.points.iter().zip(&crashed.history.points) {
+            assert_eq!(x.round, y.round);
+            assert_eq!(x.gap, y.gap);
+            assert_eq!(x.time, y.time);
+            assert_eq!(x.bytes_down, y.bytes_down);
+        }
+        // checkpoint cadence alone must not perturb anything either
+        let mut ck = cfg.clone();
+        ck.checkpoint_every = 2;
+        let cadenced = run(&ds, &ck, &NetworkModel::lan(), 7);
+        assert!(cadenced.stats.checkpoints >= 2);
+        assert_eq!(cadenced.final_w, base.final_w);
+        assert_eq!(cadenced.stats.bytes_down, base.stats.bytes_down);
     }
 
     #[test]

@@ -83,6 +83,15 @@
 //! report columns recording the outcome so [`report::parity`] can
 //! cross-check a degraded real run against the degraded sim.
 //!
+//! A `crash_server@<round>` scenario instead kills the **server** at its
+//! first full barrier at/after the round: the cell writes a durable
+//! checkpoint ([`crate::protocol::checkpoint`]), restarts from it, and
+//! must finish bit-identical to the crash-free cell.  The shared
+//! `checkpoint_every`/`checkpoint_dir` knobs enable periodic durable
+//! snapshots on any cell; the `checkpoints`/`resumed_from` report columns
+//! record how many snapshots were written and the commit epoch a resumed
+//! server restarted from (`-` when it never crashed).
+//!
 //! Example sweep config (`[sweep]` section, TOML subset — lists are
 //! comma-separated strings because the in-tree parser has no arrays;
 //! single scalars like `workers = 4` are accepted as one-element lists, so
@@ -106,6 +115,8 @@
 //! threads = 0          # 0 = all cores
 //! fail_policy = "fail_fast"  # fail_fast | degrade (fault scenarios)
 //! shards = 1           # server commit-log shards (1 = reference path)
+//! checkpoint_every = 0 # durable server snapshot cadence in commits (0 = off)
+//! checkpoint_dir = ""  # checkpoint slot directory ("" = throwaway temp dir)
 //! ```
 
 pub mod report;
@@ -213,6 +224,13 @@ pub struct SweepSpec {
     /// S — server commit-log shards per cell (1 = the sequential reference
     /// path; any S is byte-identical, only wall-clock changes).
     pub shards: usize,
+    /// Durable server snapshot cadence in commits (0 = never, the
+    /// default).  Fault-free cells with 0 are byte-identical to builds
+    /// without the checkpoint subsystem.
+    pub checkpoint_every: u64,
+    /// Directory for the two checkpoint rotation slots; empty = each cell
+    /// that needs one uses a throwaway temp dir.
+    pub checkpoint_dir: String,
     // ---- dataset knobs ----
     pub data_seed: u64,
     /// Override the source's sample count (0 = source default; LIBSVM
@@ -252,6 +270,8 @@ impl Default for SweepSpec {
             runtime: RuntimeKind::Sim,
             fail_policy: FailPolicy::FailFast,
             shards: 1,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
             data_seed: 42,
             n_override: 0,
             d_override: 0,
@@ -342,6 +362,12 @@ pub struct CellResult {
     /// `w<wid>+@r<round>` for a re-admission, joined by `;` (empty when
     /// membership never changed).
     pub membership: String,
+    /// Durable server snapshots written over the run (cadence writes plus
+    /// the forced crash-point write; 0 when checkpointing never engaged).
+    pub checkpoints: u64,
+    /// Commit epoch (total committed rounds) the server resumed from after
+    /// an injected crash, or `-` for a run that never restarted.
+    pub resumed_from: String,
 }
 
 /// Render worker failures in the report's compact `w<wid>@r<round>` form.
@@ -456,6 +482,8 @@ impl SweepSpec {
         e.seed = cell.seed;
         e.fail_policy = self.fail_policy;
         e.shards = self.shards;
+        e.checkpoint_every = self.checkpoint_every;
+        e.checkpoint_dir = self.checkpoint_dir.clone();
         e
     }
 
@@ -513,10 +541,22 @@ impl SweepSpec {
         } else {
             String::new()
         };
+        // appended ONLY when checkpointing is on, so default headers (and
+        // therefore fault-free reports) stay byte-identical
+        let ckpt = if self.checkpoint_every > 0 {
+            let dir = if self.checkpoint_dir.is_empty() {
+                String::new()
+            } else {
+                format!(" checkpoint_dir={}", self.checkpoint_dir)
+            };
+            format!(" checkpoint_every={}{dir}", self.checkpoint_every)
+        } else {
+            String::new()
+        };
         format!(
             "{} algos x {} scenarios x {} datasets x {} K x {} B x {} T x {} rho_d x {} seeds \
              = {} cells{} (runtime={} H={} lambda={:.1e} loss={} L={} target_gap={} \
-             fail_policy={} shards={})",
+             fail_policy={} shards={}{ckpt})",
             self.algorithms.len(),
             self.scenarios.len(),
             self.datasets.len(),
@@ -603,6 +643,9 @@ impl SweepSpec {
             )
         })?;
         s.shards = doc.get_i64("sweep", "shards", s.shards as i64) as usize;
+        s.checkpoint_every =
+            doc.get_i64("sweep", "checkpoint_every", s.checkpoint_every as i64) as u64;
+        s.checkpoint_dir = doc.get_str("sweep", "checkpoint_dir", "");
         s.data_seed = doc.get_i64("sweep", "data_seed", s.data_seed as i64) as u64;
         s.n_override = doc.get_i64("sweep", "n", s.n_override as i64) as usize;
         s.d_override = doc.get_i64("sweep", "d", s.d_override as i64) as usize;
@@ -834,6 +877,8 @@ struct CellRun {
     failures: Vec<WorkerFailure>,
     rejoins: u64,
     membership: String,
+    checkpoints: u64,
+    resumed_from: Option<u64>,
 }
 
 fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<CellResult> {
@@ -866,6 +911,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 failures: out.stats.failures,
                 rejoins: out.stats.rejoins,
                 membership: out.stats.membership,
+                checkpoints: out.stats.checkpoints,
+                resumed_from: out.stats.resumed_from,
                 history: out.history,
             }
         }
@@ -884,6 +931,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 failures: out.failures,
                 rejoins: out.rejoins,
                 membership: out.membership,
+                checkpoints: out.checkpoints,
+                resumed_from: out.resumed_from,
                 history: out.history,
             }
         }
@@ -927,6 +976,10 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         failures: failures_column(&run.failures),
         rejoins: run.rejoins,
         membership: run.membership,
+        checkpoints: run.checkpoints,
+        resumed_from: run
+            .resumed_from
+            .map_or_else(|| "-".to_string(), |epoch| epoch.to_string()),
     })
 }
 
@@ -994,6 +1047,8 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
         failures: out.failures,
         rejoins: out.rejoins,
         membership: out.membership,
+        checkpoints: out.checkpoints,
+        resumed_from: out.resumed_from,
         history: out.history,
     })
 }
@@ -1280,6 +1335,70 @@ threads = 2
         let err = format!("{:#}", run_sweep(&bad).unwrap_err());
         assert!(err.contains("S=0"), "{err}");
         assert!(err.contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn toml_checkpoint_knobs_parse() {
+        // off by default, and OFF means the header line does not mention
+        // checkpointing at all — fault-free reports stay byte-identical
+        let spec = SweepSpec::from_toml("[sweep]\nseeds = 1\n").unwrap();
+        assert_eq!(spec.checkpoint_every, 0);
+        assert_eq!(spec.checkpoint_dir, "");
+        assert!(!spec.describe().contains("checkpoint"), "{}", spec.describe());
+        let spec = SweepSpec::from_toml(
+            "[sweep]\ncheckpoint_every = 4\ncheckpoint_dir = \"/tmp/ck\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.checkpoint_every, 4);
+        assert_eq!(spec.checkpoint_dir, "/tmp/ck");
+        // the knobs reach every cell's engine config and the header line
+        let cells = spec.cells();
+        let e = spec.engine_for(&cells[0]);
+        assert_eq!(e.checkpoint_every, 4);
+        assert_eq!(e.checkpoint_dir, "/tmp/ck");
+        assert!(spec.describe().contains("checkpoint_every=4"), "{}", spec.describe());
+        assert!(
+            spec.describe().contains("checkpoint_dir=/tmp/ck"),
+            "{}",
+            spec.describe()
+        );
+    }
+
+    /// A `crash_server@<round>` sim cell restarts from its forced
+    /// checkpoint and lands bit-identical to the crash-free cell on every
+    /// deterministic column, with the crash recorded in the new
+    /// checkpoints / resumed_from columns.
+    #[test]
+    fn crash_scenario_cells_resume_bit_identically() {
+        let spec = SweepSpec {
+            algorithms: vec![Algorithm::Acpd],
+            scenarios: vec![Scenario::Lan, Scenario::CrashServer { round: 3 }],
+            datasets: vec![preset(Preset::DenseTest)],
+            rho_ds: vec![0],
+            seeds: vec![1],
+            workers: vec![4],
+            groups: vec![2],
+            periods: vec![5],
+            h: 64,
+            outer_rounds: 4,
+            n_override: 64,
+            ..SweepSpec::default()
+        };
+        let report = run_sweep(&spec).expect("crash sweep");
+        assert_eq!(report.cells.len(), 2);
+        let clean = &report.cells[0];
+        let crash = &report.cells[1];
+        assert_eq!(clean.scenario, "lan");
+        assert_eq!((clean.checkpoints, clean.resumed_from.as_str()), (0, "-"));
+        assert_eq!(crash.scenario, "crash_server@3");
+        assert!(crash.checkpoints >= 1, "{}", crash.checkpoints);
+        assert_ne!(crash.resumed_from, "-");
+        // committed state survives the restart bit-identically
+        assert_eq!(crash.w_norm, clean.w_norm);
+        assert_eq!(crash.final_gap, clean.final_gap);
+        assert_eq!(crash.rounds, clean.rounds);
+        assert_eq!(crash.bytes_up, clean.bytes_up);
+        assert_eq!(crash.bytes_down, clean.bytes_down);
     }
 
     /// Sharded cells produce byte-identical results to single-shard cells:

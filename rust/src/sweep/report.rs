@@ -95,6 +95,8 @@ impl SweepReport {
             "rejoins",
             "membership",
             "shards",
+            "checkpoints",
+            "resumed_from",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -135,6 +137,8 @@ impl SweepReport {
                 &c.rejoins,
                 &c.membership,
                 &c.shards,
+                &c.checkpoints,
+                &c.resumed_from,
             ]);
         }
         w
@@ -297,7 +301,8 @@ impl SweepReport {
                  \"wall_time_s\": {}, \"bytes_up\": {}, \"bytes_down\": {}, \
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}, \
                  \"live_workers\": {}, \"failures\": {}, \
-                 \"rejoins\": {}, \"membership\": {}, \"shards\": {}}}{}\n",
+                 \"rejoins\": {}, \"membership\": {}, \"shards\": {}, \
+                 \"checkpoints\": {}, \"resumed_from\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
@@ -331,6 +336,8 @@ impl SweepReport {
                 c.rejoins,
                 json_str(&c.membership),
                 c.shards,
+                c.checkpoints,
+                json_str(&c.resumed_from),
                 if i + 1 < self.cells.len() { "," } else { "" },
             );
         }
@@ -630,6 +637,8 @@ mod tests {
             failures: String::new(),
             rejoins: 0,
             membership: String::new(),
+            checkpoints: 0,
+            resumed_from: "-".to_string(),
         }
     }
 
@@ -811,7 +820,10 @@ mod tests {
                 .lines()
                 .next()
                 .unwrap()
-                .ends_with("w_norm,live_workers,failures,rejoins,membership,shards"),
+                .ends_with(
+                    "w_norm,live_workers,failures,rejoins,membership,shards,\
+                     checkpoints,resumed_from"
+                ),
             "{cells}"
         );
         let header_cols = cells.lines().next().unwrap().split(',').count();
@@ -839,6 +851,8 @@ mod tests {
         assert!(j.contains("\"rejoins\": 0"));
         assert!(j.contains("\"membership\": \"\""));
         assert!(j.contains("\"shards\": 1"));
+        assert!(j.contains("\"checkpoints\": 0"));
+        assert!(j.contains("\"resumed_from\": \"-\""));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }

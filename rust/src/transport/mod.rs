@@ -51,10 +51,13 @@ use crate::data::Dataset;
 use crate::engine::EngineConfig;
 use crate::metrics::History;
 use crate::network::{episode_rng, NetworkModel};
+use crate::protocol::checkpoint::CheckpointStore;
 use crate::protocol::messages::{DeltaMsg, ToServerMsg, ToWorkerMsg};
 use crate::protocol::server::{ServerConfig, ServerState, WorkerFailure};
 use crate::protocol::worker::WorkerState;
-use crate::runtime_threads::{server_loop, worker_loop, ServerEvent};
+use crate::runtime_threads::{
+    server_loop_ctl, worker_loop, CheckpointCtl, LoopOutcome, ResumeCarry, ServerEvent,
+};
 use crate::solver::sdca::SdcaSolver;
 use crate::util::rng::Pcg64;
 
@@ -248,6 +251,10 @@ pub struct TcpServerOutput {
     pub rejoins: u64,
     /// membership timeline (`w{id}{+|-}@r{round};…`, empty when healthy)
     pub membership: String,
+    /// durable server snapshots written (0 with checkpointing off)
+    pub checkpoints: u64,
+    /// commit round the server resumed from after an injected crash
+    pub resumed_from: Option<u64>,
 }
 
 /// Run the coordinator: accept K workers on `addr`, drive the protocol to
@@ -346,168 +353,236 @@ pub fn run_server_on_scenario(
     let k = cfg.workers;
     let plan = net.schedule(k, seed);
     let churn = plan.has_rejoins();
-    let slots: Arc<Vec<Mutex<WriterSlot>>> = Arc::new(
-        (0..k)
-            .map(|_| {
-                Mutex::new(WriterSlot {
-                    stream: None,
-                    pending: Vec::new(),
-                })
-            })
-            .collect(),
-    );
-    let (tx, rx) = mpsc::channel::<ServerEvent>();
-    let mut reader_handles = Vec::new();
+    // durable-checkpoint wiring: the store AND the listener both survive an
+    // injected `crash_server` restart — written-counts accumulate across
+    // restarts, and reconnecting workers find the same address listening
+    let mut crash_pending = net.server_crash;
+    let mut store = if cfg.checkpoint_every > 0 || crash_pending.is_some() {
+        Some(if cfg.checkpoint_dir.is_empty() {
+            CheckpointStore::ephemeral()?
+        } else {
+            CheckpointStore::new(cfg.checkpoint_dir.as_str())?
+        })
+    } else {
+        None
+    };
+    let mut restored: Option<ServerState> = None;
+    let mut resumed_from: Option<u64> = None;
+    let mut carry = ResumeCarry::new(cfg.algorithm.name());
 
     listener
         .set_nonblocking(true)
         .context("set listener nonblocking")?;
-    let deadline = Instant::now() + tcfg.accept_deadline;
-    let mut accepted = 0usize;
-    while accepted < k {
-        if Instant::now() >= deadline {
-            teardown(&slots, reader_handles);
-            bail!(
-                "accepted {accepted} of {k} workers within {:?} accept deadline",
-                tcfg.accept_deadline
-            );
-        }
-        let (mut stream, peer) = match listener.accept() {
-            Ok(conn) => conn,
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                thread::sleep(Duration::from_millis(5));
-                continue;
-            }
-            Err(e) => {
+
+    // bring-up + serve, repeated once per server incarnation: a fresh run
+    // executes this loop body exactly once; after an injected crash the
+    // loop tears the incarnation down (dropping every worker socket),
+    // restores from the checkpoint store, and comes around to re-accept
+    // the reconnecting workers' hellos
+    loop {
+        let slots: Arc<Vec<Mutex<WriterSlot>>> = Arc::new(
+            (0..k)
+                .map(|_| {
+                    Mutex::new(WriterSlot {
+                        stream: None,
+                        pending: Vec::new(),
+                    })
+                })
+                .collect(),
+        );
+        let (tx, rx) = mpsc::channel::<ServerEvent>();
+        let mut reader_handles = Vec::new();
+
+        let deadline = Instant::now() + tcfg.accept_deadline;
+        let mut accepted = 0usize;
+        while accepted < k {
+            if Instant::now() >= deadline {
                 teardown(&slots, reader_handles);
-                return Err(anyhow::Error::from(e).context("accept worker"));
+                bail!(
+                    "accepted {accepted} of {k} workers within {:?} accept deadline",
+                    tcfg.accept_deadline
+                );
             }
-        };
-        // accepted sockets may inherit the listener's nonblocking mode on
-        // some platforms — make them blocking-with-timeouts explicitly
-        stream.set_nonblocking(false).ok();
-        stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(tcfg.hello_timeout)).ok();
-        // any hello problem rejects THIS connection only (dropping the
-        // stream closes it); the accept loop keeps listening
-        let wid = match read_frame(&mut stream) {
-            Ok(Some(frame)) => match parse_hello(&frame) {
-                Ok(w) => w as usize,
-                Err(e) => {
-                    eprintln!("rejecting connection from {peer}: {e}");
+            let (mut stream, peer) = match listener.accept() {
+                Ok(conn) => conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
                     continue;
                 }
-            },
-            Ok(None) => {
-                eprintln!("rejecting connection from {peer}: closed before hello");
+                Err(e) => {
+                    teardown(&slots, reader_handles);
+                    return Err(anyhow::Error::from(e).context("accept worker"));
+                }
+            };
+            // accepted sockets may inherit the listener's nonblocking mode on
+            // some platforms — make them blocking-with-timeouts explicitly
+            stream.set_nonblocking(false).ok();
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(tcfg.hello_timeout)).ok();
+            // any hello problem rejects THIS connection only (dropping the
+            // stream closes it); the accept loop keeps listening
+            let wid = match read_frame(&mut stream) {
+                Ok(Some(frame)) => match parse_hello(&frame) {
+                    Ok(w) => w as usize,
+                    Err(e) => {
+                        eprintln!("rejecting connection from {peer}: {e}");
+                        continue;
+                    }
+                },
+                Ok(None) => {
+                    eprintln!("rejecting connection from {peer}: closed before hello");
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("rejecting connection from {peer}: {e:#}");
+                    continue;
+                }
+            };
+            if wid >= k {
+                eprintln!(
+                    "rejecting connection from {peer}: worker id {wid} out of range (K={k})"
+                );
                 continue;
             }
-            Err(e) => {
-                eprintln!("rejecting connection from {peer}: {e:#}");
+            if slots[wid].lock().unwrap().stream.is_some() {
+                eprintln!("rejecting connection from {peer}: duplicate worker id {wid}");
                 continue;
+            }
+            // SO_RCVTIMEO is per-socket and shared with the try_clone'd reader
+            stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
+            let read_half = stream.try_clone()?;
+            slots[wid].lock().unwrap().stream = Some(stream);
+            accepted += 1;
+            let tx = tx.clone();
+            let read_timeout = tcfg.read_timeout;
+            // only churn readers vacate their slot on exit: it is what lets a
+            // reconnect through the duplicate-id check
+            let reader_slots = churn.then(|| slots.clone());
+            reader_handles.push(thread::spawn(move || {
+                reader_loop(read_half, wid, tx, read_timeout, reader_slots)
+            }));
+        }
+        // churn runs keep accepting after bring-up so departed workers can
+        // rejoin (a tx clone lives in the acceptor, which is fine: churn
+        // termination is the finished flag or a fail-policy error, never
+        // the all-readers-gone recv-None path).  The acceptor runs on a
+        // CLONE of the listener so the original survives a crash restart.
+        let stop_accepting = Arc::new(AtomicBool::new(false));
+        let acceptor = if churn {
+            Some(spawn_acceptor(
+                listener.try_clone().context("clone listener")?,
+                slots.clone(),
+                tx.clone(),
+                tcfg.clone(),
+                k,
+                stop_accepting.clone(),
+            ))
+        } else {
+            None
+        };
+        drop(tx);
+
+        let server = match restored.take() {
+            Some(s) => s,
+            None => {
+                let mut s = ServerState::new(
+                    ServerConfig {
+                        workers: k,
+                        group: cfg.group,
+                        period: cfg.period,
+                        outer_rounds: cfg.outer_rounds,
+                        gamma: cfg.gamma as f32,
+                        policy: cfg.fail_policy,
+                        shards: cfg.shards,
+                    },
+                    d,
+                );
+                if churn {
+                    let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
+                    s.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
+                }
+                s
             }
         };
-        if wid >= k {
-            eprintln!("rejecting connection from {peer}: worker id {wid} out of range (K={k})");
-            continue;
-        }
-        if slots[wid].lock().unwrap().stream.is_some() {
-            eprintln!("rejecting connection from {peer}: duplicate worker id {wid}");
-            continue;
-        }
-        // SO_RCVTIMEO is per-socket and shared with the try_clone'd reader
-        stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
-        let read_half = stream.try_clone()?;
-        slots[wid].lock().unwrap().stream = Some(stream);
-        accepted += 1;
-        let tx = tx.clone();
-        let read_timeout = tcfg.read_timeout;
-        // only churn readers vacate their slot on exit: it is what lets a
-        // reconnect through the duplicate-id check
-        let reader_slots = churn.then(|| slots.clone());
-        reader_handles.push(thread::spawn(move || {
-            reader_loop(read_half, wid, tx, read_timeout, reader_slots)
-        }));
-    }
-    // churn runs keep accepting after bring-up so departed workers can
-    // rejoin; every other scenario drops the listener here, exactly as
-    // before (a tx clone lives in the acceptor, which is fine: churn
-    // termination is the finished flag or a fail-policy error, never the
-    // all-readers-gone recv-None path)
-    let stop_accepting = Arc::new(AtomicBool::new(false));
-    let acceptor = churn.then(|| {
-        spawn_acceptor(
-            listener,
-            slots.clone(),
-            tx.clone(),
-            tcfg.clone(),
-            k,
-            stop_accepting.clone(),
-        )
-    });
-    drop(tx);
-
-    let mut server = ServerState::new(
-        ServerConfig {
-            workers: k,
-            group: cfg.group,
-            period: cfg.period,
-            outer_rounds: cfg.outer_rounds,
-            gamma: cfg.gamma as f32,
-            policy: cfg.fail_policy,
-            shards: cfg.shards,
-        },
-        d,
-    );
-    if churn {
-        let max_episodes = (cfg.outer_rounds * cfg.period) as u64 + 2;
-        server.set_rejoin_schedule(plan.rejoin_schedule(max_episodes));
-    }
-    let result = server_loop(
-        server,
-        cfg,
-        ds_n,
-        || rx.recv().ok(),
-        |wid, msg| {
-            let mut slot = slots[wid].lock().unwrap();
-            let frame = msg.encode();
-            match slot.stream.as_mut() {
-                // a failed send means the socket died; the reader thread on
-                // the same socket observes it and raises WorkerLost (a tx
-                // clone here would keep the channel open and starve the
-                // recv-None path)
-                Some(s) => {
-                    if let Err(e) = send_frame(s, &frame) {
-                        eprintln!("send to worker {wid} failed: {e}");
+        let ctl = CheckpointCtl {
+            every: cfg.checkpoint_every,
+            store: store.as_mut(),
+            crash_round: crash_pending,
+        };
+        let result = server_loop_ctl(
+            server,
+            cfg,
+            ds_n,
+            || rx.recv().ok(),
+            |wid, msg| {
+                let mut slot = slots[wid].lock().unwrap();
+                let frame = msg.encode();
+                match slot.stream.as_mut() {
+                    // a failed send means the socket died; the reader thread on
+                    // the same socket observes it and raises WorkerLost (a tx
+                    // clone here would keep the channel open and starve the
+                    // recv-None path)
+                    Some(s) => {
+                        if let Err(e) = send_frame(s, &frame) {
+                            eprintln!("send to worker {wid} failed: {e}");
+                        }
                     }
+                    // worker is away: hold the frame for its next hello
+                    None => slot.pending.push(frame),
                 }
-                // worker is away: hold the frame for its next hello
-                None => slot.pending.push(frame),
+            },
+            ctl,
+            carry,
+        );
+        // teardown runs on EVERY outcome — finish, error, and crash: closing
+        // the sockets unblocks every reader (and any worker parked in a
+        // read) immediately.  On a crash this IS the injected fault the
+        // workers observe: their sockets die and they enter reconnect.
+        stop_accepting.store(true, Ordering::Relaxed);
+        teardown(&slots, reader_handles);
+        if let Some(h) = acceptor {
+            let _ = h.join();
+        }
+        match result? {
+            LoopOutcome::Finished {
+                history,
+                final_w,
+                server,
+                bytes_up,
+                bytes_down,
+            } => {
+                return Ok(TcpServerOutput {
+                    history,
+                    final_w,
+                    bytes_up,
+                    bytes_down,
+                    participation: server.participation_rates(),
+                    rounds: server.total_rounds(),
+                    peak_log_entries: server.peak_log_entries(),
+                    shards: server.shard_count(),
+                    failures: server.failures().to_vec(),
+                    live_workers: server.live_workers(),
+                    rejoins: server.rejoins(),
+                    membership: server.membership_timeline(),
+                    checkpoints: store.as_ref().map_or(0, |s| s.written()),
+                    resumed_from,
+                });
             }
-        },
-    );
-    // teardown runs on BOTH outcomes: closing the sockets unblocks every
-    // reader (and any worker parked in a read) immediately
-    stop_accepting.store(true, Ordering::Relaxed);
-    teardown(&slots, reader_handles);
-    if let Some(h) = acceptor {
-        let _ = h.join();
+            LoopOutcome::Crashed { carry: resumed } => {
+                carry = resumed;
+                crash_pending = None; // one crash per run
+                let s = store
+                    .as_ref()
+                    .expect("crash checkpoint was just written")
+                    .load_latest()
+                    .map_err(|e| e.context("recover after injected server crash"))?;
+                resumed_from = Some(s.total_rounds());
+                restored = Some(s);
+                // loop around: re-accept the reconnecting workers, then
+                // resume from the restored state
+            }
+        }
     }
-    let (history, final_w, server, bytes_up, bytes_down) = result?;
-    Ok(TcpServerOutput {
-        history,
-        final_w,
-        bytes_up,
-        bytes_down,
-        participation: server.participation_rates(),
-        rounds: server.total_rounds(),
-        peak_log_entries: server.peak_log_entries(),
-        shards: server.shard_count(),
-        failures: server.failures().to_vec(),
-        live_workers: server.live_workers(),
-        rejoins: server.rejoins(),
-        membership: server.membership_timeline(),
-    })
 }
 
 /// Post-bring-up accept loop for `churn:` runs: validates reconnect hellos
@@ -698,6 +773,7 @@ pub fn run_worker(
             }
         }
         let leave_round = plan.leave_after(worker_id, episode);
+        let crash_mode = net.server_crash.is_some();
         let died = worker_loop(
             state,
             slowdown,
@@ -710,14 +786,31 @@ pub fn run_worker(
                     eprintln!("worker {worker_id}: send failed: {e}");
                 }
             },
-            || {
+            || loop {
                 // any read failure — including the SO_RCVTIMEO liveness
                 // timeout — reads as a dead server: exit instead of waiting
-                let mut r = read_half.borrow_mut();
-                read_frame(&mut *r)
-                    .ok()
-                    .flatten()
-                    .and_then(|f| ToWorkerMsg::decode(&f).ok())
+                let msg = {
+                    let mut r = read_half.borrow_mut();
+                    read_frame(&mut *r)
+                        .ok()
+                        .flatten()
+                        .and_then(|f| ToWorkerMsg::decode(&f).ok())
+                };
+                if msg.is_some() || !crash_mode {
+                    return msg;
+                }
+                // crash_server run: the dead socket means the server is
+                // restarting from its checkpoint.  Reconnect with the same
+                // hello and KEEP this worker's state — the worker was never
+                // lost, only its socket died; the restarted server owes it
+                // the crashed commit's reply.  `None` = the run is over.
+                let Some(s) = resume_reconnect(addr, worker_id, tcfg) else {
+                    return None;
+                };
+                let Ok(rh) = s.try_clone() else { return None };
+                eprintln!("worker {worker_id}: reconnected after server restart");
+                *read_half.borrow_mut() = rh;
+                *write_half.borrow_mut() = s;
             },
         );
         let Some(reason) = died else { return Ok(()) };
@@ -745,23 +838,40 @@ pub fn run_worker(
     }
 }
 
-/// How long a departed worker stays quiet before re-presenting its hello.
-const REJOIN_BACKOFF: Duration = Duration::from_millis(25);
+/// How long a departed worker stays quiet before its `attempt`-th retry
+/// (0-based): capped exponential backoff with deterministic per-worker
+/// jitter.  The base (10 ms) doubles each attempt up to the 400 ms cap;
+/// the jitter (< 10 ms, a pure (attempt, worker) PCG draw on a dedicated
+/// stream) decorrelates workers that died together so their retries never
+/// land in lockstep.  Below the cap the doubling dominates the jitter, so
+/// the schedule is strictly increasing; it is deterministic in
+/// (attempt, wid), which is what makes it unit-testable.
+fn rejoin_backoff(attempt: u32, wid: usize) -> Duration {
+    const BASE_MS: u64 = 10;
+    const CAP_MS: u64 = 400;
+    // `min(16)` bounds the shift: past the cap the exponent is irrelevant
+    let exp = BASE_MS.saturating_mul(1u64 << attempt.min(16)).min(CAP_MS);
+    let jitter = Pcg64::with_stream(attempt as u64, 0xBACC ^ wid as u64).next_below(10) as u64;
+    Duration::from_millis(exp + jitter)
+}
 
 /// Reconnect after a churn departure: keep presenting a fresh hello with
 /// the prior worker id until the server accepts one and answers with the
 /// full-model admission delta.  An EOF on an individual attempt means that
 /// hello was rejected (the old socket's reader had not vacated the writer
-/// slot yet) — back off and re-present it.  `Ok(None)` means the cluster is
-/// no longer reachable: the run ended while this worker was away.
+/// slot yet) — back off ([`rejoin_backoff`]) and re-present it.  `Ok(None)`
+/// means the cluster is no longer reachable: the run ended while this
+/// worker was away.
 fn rejoin(
     addr: &str,
     worker_id: usize,
     tcfg: &TransportConfig,
 ) -> Result<Option<(TcpStream, DeltaMsg)>> {
     let deadline = Instant::now() + tcfg.accept_deadline;
+    let mut attempt = 0u32;
     loop {
-        thread::sleep(REJOIN_BACKOFF);
+        thread::sleep(rejoin_backoff(attempt, worker_id));
+        attempt = attempt.saturating_add(1);
         if Instant::now() >= deadline {
             return Ok(None);
         }
@@ -789,10 +899,64 @@ fn rejoin(
     }
 }
 
+/// Reconnect after an injected server crash (`crash_server@` scenario):
+/// present the hello until the restarted server accepts it, on the same
+/// [`rejoin_backoff`] schedule as churn rejoins.  Unlike a churn rejoin
+/// the worker keeps its full local state and awaits no admission delta —
+/// the restarted server's first frames are the crashed commit's stashed
+/// replies.  The listener survives the restart on the server side, so a
+/// refused connection means the run is over (`None`); a connection that
+/// lands during the restart window simply queues in the listener backlog
+/// until the new incarnation's bring-up accepts its hello.
+fn resume_reconnect(addr: &str, worker_id: usize, tcfg: &TransportConfig) -> Option<TcpStream> {
+    let deadline = Instant::now() + tcfg.accept_deadline;
+    let mut attempt = 0u32;
+    while Instant::now() < deadline {
+        thread::sleep(rejoin_backoff(attempt, worker_id));
+        attempt = attempt.saturating_add(1);
+        let Ok(mut stream) = TcpStream::connect(addr) else {
+            return None; // listener gone: the run is over
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(tcfg.read_timeout)).ok();
+        if send_hello(&mut stream, worker_id as u32).is_ok() {
+            return Some(stream);
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::{self, Preset};
+
+    #[test]
+    fn rejoin_backoff_schedule_is_capped_exponential() {
+        // deterministic in (attempt, wid)
+        for a in 0..12u32 {
+            assert_eq!(rejoin_backoff(a, 3), rejoin_backoff(a, 3));
+        }
+        // attempt 0: base 10 ms plus sub-10ms jitter
+        let first = rejoin_backoff(0, 0).as_millis() as u64;
+        assert!((10..20).contains(&first), "first backoff {first} ms");
+        // strictly increasing below the cap (doubling dominates the jitter)
+        let sched: Vec<u64> = (0..12u32)
+            .map(|a| rejoin_backoff(a, 5).as_millis() as u64)
+            .collect();
+        for w in sched.windows(2).take(6) {
+            assert!(w[0] < w[1], "schedule not increasing: {sched:?}");
+        }
+        // capped at 400 ms (+ jitter) forever after — including attempt
+        // counts past the shift-width guard
+        for a in 6..40u32 {
+            let ms = rejoin_backoff(a, 5).as_millis() as u64;
+            assert!((400..410).contains(&ms), "attempt {a}: {ms} ms");
+        }
+        // per-worker jitter decorrelates: identical schedules would make
+        // simultaneously-dead workers stampede the listener in lockstep
+        assert!((0..12u32).any(|a| rejoin_backoff(a, 0) != rejoin_backoff(a, 1)));
+    }
 
     #[test]
     fn frame_roundtrip_in_memory() {

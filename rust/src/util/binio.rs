@@ -169,6 +169,21 @@ impl<'a> Decoder<'a> {
     }
 }
 
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the checksum
+/// trailing every server checkpoint.  Bitwise, table-free: checkpoints are
+/// cold-path I/O, so clarity wins over throughput.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = u32::MAX;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +217,14 @@ mod tests {
         let mut d = Decoder::new(&buf);
         assert_eq!(d.get_f32_vec().unwrap(), vec![1.0, -2.0, 3.5]);
         assert_eq!(d.get_u32_vec().unwrap(), vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn crc32_reference_vectors() {
+        // the classic CRC-32 check value, plus the empty-input identity
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
     }
 
     #[test]

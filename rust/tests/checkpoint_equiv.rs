@@ -1,0 +1,302 @@
+//! Durable checkpoint/restore equivalence.
+//!
+//! The crash-tolerance contract has three layers, each pinned here:
+//!
+//!   * **Snapshot transparency** — a server that dies and is reborn from
+//!     its own snapshot at EVERY commit point must be observationally
+//!     indistinguishable from one that never died: identical actions
+//!     (Wait vs Commit, round, full_barrier, finished), byte-identical
+//!     encoded replies, a bit-identical final `w`, and a byte-identical
+//!     re-snapshot.  Randomized over worker counts, group sizes, barrier
+//!     periods, dimensions, arrival orders and shard counts S ∈ {1, 4}.
+//!   * **Torn-write recovery** — the two-slot rotation of
+//!     [`CheckpointStore`] survives a truncated newer slot by falling back
+//!     to the older one; when every slot is corrupt (truncation, bit rot,
+//!     unknown version) the error names each slot's file and reason.
+//!   * **End-to-end crash recovery** — a `crash_server@<round>` sweep cell
+//!     on the threads and tcp runtimes tears the server down at its first
+//!     full barrier at/after the round, restarts it from the forced
+//!     checkpoint, and must land bit-identical to the crash-free `lan`
+//!     cell on every deterministic column (rounds, bytes, ‖w‖ bits, gap
+//!     bits, eval points) — committed rounds are never recomputed.  The
+//!     simulator leg of the same contract lives in `sim::tests` and
+//!     `sweep::tests` next to the code it pins.
+
+use acpd::data::synthetic::Preset;
+use acpd::data::DatasetSource;
+use acpd::engine::Algorithm;
+use acpd::linalg::sparse::SparseVec;
+use acpd::network::Scenario;
+use acpd::protocol::checkpoint::CheckpointStore;
+use acpd::protocol::messages::UpdateMsg;
+use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
+use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
+use acpd::testing::forall;
+use acpd::util::rng::Pcg64;
+
+fn random_update(rng: &mut Pcg64, worker: usize, d: usize, max_nnz: usize) -> UpdateMsg {
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(rng.next_below(max_nnz.min(d) as u32 + 1) as usize);
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| rng.next_normal() as f32).collect();
+    UpdateMsg::from_sparse(worker as u32, 0, SparseVec::new(d, idx, val))
+}
+
+#[derive(Debug)]
+struct Case {
+    workers: usize,
+    group: usize,
+    period: usize,
+    outer_rounds: usize,
+    d: usize,
+    max_nnz: usize,
+    /// S for BOTH machines — sharded snapshots must roundtrip too.
+    shards: usize,
+    stream_seed: u64,
+}
+
+/// Snapshot transparency: the `hopper` server is torn down and restored
+/// from its own snapshot after every single commit (the only points the
+/// runtimes snapshot at — the inbox is provably empty there), while the
+/// `live` server never restarts.  Both consume one identical randomized
+/// update stream and must stay in lockstep to the last byte.
+#[test]
+fn prop_snapshot_roundtrip_is_observationally_invisible() {
+    forall(
+        0xC4E9_0001,
+        60,
+        |rng, sz| {
+            let workers = 1 + rng.next_below(5) as usize;
+            let group = 1 + rng.next_below(workers as u32) as usize;
+            let period = 1 + rng.next_below(4) as usize;
+            let outer_rounds = 1 + rng.next_below(3) as usize;
+            let d = 1 + rng.next_below(sz.0 as u32 * 3 + 1) as usize;
+            let max_nnz = 1 + rng.next_below(d as u32) as usize;
+            Case {
+                workers,
+                group,
+                period,
+                outer_rounds,
+                d,
+                max_nnz,
+                shards: [1, 4][rng.next_below(2) as usize],
+                stream_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let cfg = ServerConfig {
+                workers: case.workers,
+                group: case.group,
+                period: case.period,
+                outer_rounds: case.outer_rounds,
+                gamma: 0.5,
+                policy: FailPolicy::FailFast,
+                shards: case.shards,
+            };
+            let mut live = ServerState::new(cfg.clone(), case.d);
+            let mut hopper = ServerState::new(cfg, case.d);
+            let mut rng = Pcg64::new(case.stream_seed);
+            let mut sent = vec![false; case.workers];
+            let mut guard = 0usize;
+            let mut commits = 0usize;
+            while !live.finished() {
+                guard += 1;
+                if guard > 5_000 {
+                    return false; // stuck: barrier never met
+                }
+                let free: Vec<usize> = (0..case.workers).filter(|&i| !sent[i]).collect();
+                if free.is_empty() {
+                    return false; // unreachable if barriers fire correctly
+                }
+                let wid = free[rng.next_below(free.len() as u32) as usize];
+                let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
+                sent[wid] = true;
+                let a = live.on_update(msg.clone());
+                let b = hopper.on_update(msg);
+                match (a, b) {
+                    (ServerAction::Wait, ServerAction::Wait) => {}
+                    (
+                        ServerAction::Commit {
+                            replies,
+                            round,
+                            full_barrier,
+                            finished,
+                        },
+                        ServerAction::Commit {
+                            replies: h_replies,
+                            round: h_round,
+                            full_barrier: h_full,
+                            finished: h_fin,
+                        },
+                    ) => {
+                        if (round, full_barrier, finished) != (h_round, h_full, h_fin) {
+                            return false;
+                        }
+                        if replies.len() != h_replies.len() {
+                            return false;
+                        }
+                        for (r, rr) in replies.iter().zip(&h_replies) {
+                            // equal as values AND byte-identical on the wire
+                            if r != rr || r.encode() != rr.encode() {
+                                return false;
+                            }
+                            sent[r.worker as usize] = false;
+                        }
+                        // die and be reborn from the snapshot...
+                        let snap = hopper.snapshot();
+                        hopper = match ServerState::restore(&snap) {
+                            Ok(s) => s,
+                            Err(_) => return false,
+                        };
+                        // ...and restore must be exact: re-snapshotting the
+                        // reborn server reproduces the same bytes
+                        if hopper.snapshot() != snap {
+                            return false;
+                        }
+                        commits += 1;
+                    }
+                    _ => return false, // one committed, the other waited
+                }
+            }
+            // the case actually exercised restarts, and both machines agree
+            // the run is over with a bit-identical model
+            commits > 0 && hopper.finished() && live.w() == hopper.w()
+        },
+    );
+}
+
+/// A server with `rounds` committed single-worker rounds (enough state for
+/// the disk-corruption tests to have a meaningful payload).
+fn driven_server(rounds: u64) -> ServerState {
+    let mut s = ServerState::new(
+        ServerConfig {
+            workers: 1,
+            group: 1,
+            period: 100,
+            outer_rounds: 100,
+            gamma: 1.0,
+            policy: FailPolicy::FailFast,
+            shards: 1,
+        },
+        8,
+    );
+    for i in 0..rounds {
+        let _ = s.on_update(UpdateMsg::from_sparse(
+            0,
+            0,
+            SparseVec::new(8, vec![(i % 8) as u32], vec![1.0]),
+        ));
+    }
+    s
+}
+
+/// Torn-write recovery: a truncated newest slot falls back to the intact
+/// older slot; once bit rot takes that one too, the error names every
+/// slot's file and reason instead of resuming from garbage.
+#[test]
+fn torn_write_falls_back_then_fails_loudly() {
+    let mut store = CheckpointStore::ephemeral().unwrap();
+    store.write(&driven_server(1)).unwrap(); // slot 0 (older)
+    store.write(&driven_server(2)).unwrap(); // slot 1 (newer)
+    assert_eq!(store.load_latest().unwrap().total_rounds(), 2);
+
+    // torn write: the newer slot is cut off mid-file -> CRC/length reject,
+    // recovery falls back to the previous rotation slot
+    let newer = store.slot_path(1);
+    let bytes = std::fs::read(&newer).unwrap();
+    std::fs::write(&newer, &bytes[..bytes.len() / 2]).unwrap();
+    let recovered = store.load_latest().expect("older slot must survive the torn write");
+    assert_eq!(recovered.total_rounds(), 1);
+
+    // bit rot in the older slot as well -> nothing valid remains, and the
+    // error carries per-slot context (slot number + file path + reason)
+    let older = store.slot_path(0);
+    let mut bytes = std::fs::read(&older).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&older, &bytes).unwrap();
+    let err = format!("{:#}", store.load_latest().unwrap_err());
+    assert!(err.contains("no valid checkpoint"), "{err}");
+    assert!(err.contains("slot 0") && err.contains("slot 1"), "{err}");
+    assert!(err.contains("ckpt.0") && err.contains("ckpt.1"), "{err}");
+}
+
+/// A snapshot stamped with an unknown format version is rejected by name
+/// (checked before the CRC, so a version bump is reported as such instead
+/// of as corruption).
+#[test]
+fn wrong_version_is_rejected_by_name() {
+    let mut store = CheckpointStore::ephemeral().unwrap();
+    store.write(&driven_server(1)).unwrap();
+    let path = store.slot_path(0);
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[4..8].copy_from_slice(&99u32.to_le_bytes()); // version field (LE)
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", store.load_latest().unwrap_err());
+    assert!(err.contains("version"), "{err}");
+}
+
+/// End-to-end crash recovery on the real runtimes: a `crash_server@3`
+/// cell actually loses its server (the TCP listener's accept loop is torn
+/// down and restarted; workers survive the dead socket via reconnect
+/// backoff) and must finish bit-identical to the crash-free `lan` cell of
+/// the same matrix on every deterministic column.  With T = 5 the first
+/// full barrier at/after round 3 is commit 5, so `resumed_from` is pinned
+/// to exactly 5 on both runtimes.
+#[test]
+fn crash_server_cell_parity_on_threads_and_tcp() {
+    let spec = |rt: RuntimeKind| SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![
+            Scenario::Lan,
+            Scenario::from_name("crash_server@3").unwrap(),
+        ],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 4,
+        n_override: 64,
+        threads: 1,
+        runtime: rt,
+        ..SweepSpec::default()
+    };
+    for rt in [RuntimeKind::Threads, RuntimeKind::Tcp] {
+        let report = run_sweep(&spec(rt)).expect("crash-recovery matrix");
+        assert_eq!(report.cells.len(), 2);
+        let clean = &report.cells[0];
+        let crash = &report.cells[1];
+        assert_eq!(clean.scenario, "lan");
+        assert_eq!(
+            (clean.checkpoints, clean.resumed_from.as_str()),
+            (0, "-"),
+            "{} clean cell grew checkpoint accounting",
+            rt.name()
+        );
+        assert_eq!(crash.scenario, "crash_server@3");
+        assert!(crash.checkpoints >= 1, "{} wrote no checkpoint", rt.name());
+        assert_eq!(crash.resumed_from, "5", "{} crash cell", rt.name());
+        // committed rounds are never recomputed: everything deterministic
+        // matches the crash-free cell bit-for-bit
+        assert_eq!(crash.rounds, clean.rounds, "{} rounds", rt.name());
+        assert_eq!(crash.bytes_up, clean.bytes_up, "{} bytes_up", rt.name());
+        assert_eq!(crash.bytes_down, clean.bytes_down, "{} bytes_down", rt.name());
+        assert_eq!(
+            crash.w_norm.to_bits(),
+            clean.w_norm.to_bits(),
+            "{} final w diverged across the restart",
+            rt.name()
+        );
+        assert_eq!(
+            crash.final_gap.to_bits(),
+            clean.final_gap.to_bits(),
+            "{} final gap diverged across the restart",
+            rt.name()
+        );
+        assert_eq!(crash.eval_points, clean.eval_points, "{} eval points", rt.name());
+    }
+}

@@ -11,10 +11,11 @@ use std::thread;
 use std::time::Duration;
 
 use acpd::data::synthetic::{self, Preset};
-use acpd::data::Dataset;
-use acpd::engine::EngineConfig;
-use acpd::network::NetworkModel;
+use acpd::data::{Dataset, DatasetSource};
+use acpd::engine::{Algorithm, EngineConfig};
+use acpd::network::{NetworkModel, Scenario};
 use acpd::protocol::server::FailPolicy;
+use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
 use acpd::transport::{run_server_on, run_worker, send_frame, TransportConfig};
 
 fn ds() -> Dataset {
@@ -260,4 +261,83 @@ fn sim_and_threads_agree_on_degraded_kill_run() {
         (gs - gt).abs() <= 1e-6 * (1.0 + gs.abs().max(gt.abs())) || (gs - gt).abs() < 1e-8,
         "sim gap {gs:.6e} != threads gap {gt:.6e}"
     );
+}
+
+/// `flaky:` under `degrade` agrees across ALL THREE runtimes.  The
+/// geometric fault plan is a pure function of (worker, seed), so the test
+/// probes seeds up front for one where exactly one of K = 4 workers draws
+/// an early death and the other three outlive the whole run — then runs
+/// that exact cell on sim, threads and tcp and requires identical loss
+/// accounting, identical byte/round totals and a bit-identical model norm.
+#[test]
+fn flaky_degrade_cell_parity_across_all_three_runtimes() {
+    const P: f64 = 0.02;
+    const K: usize = 4;
+    const ROUNDS: u64 = 20; // outer_rounds (4) x period (5)
+
+    // probe the pure fault plan exactly as every runtime will evaluate it
+    let plan = NetworkModel::lan().with_flaky(P).faults;
+    let draws = |s: u64| -> Vec<u64> {
+        (0..K)
+            .map(|w| plan.kill_round_for(w, s).expect("flaky always draws"))
+            .collect()
+    };
+    let seed = (1..10_000u64)
+        .find(|&s| {
+            let k = draws(s);
+            // one death early enough to land mid-run; survivors draw past
+            // any send count they can reach (<= ROUNDS + 1 in-flight)
+            k.iter().filter(|&&r| (2..=ROUNDS / 2).contains(&r)).count() == 1
+                && k.iter().filter(|&&r| r > ROUNDS + 1).count() == K - 1
+        })
+        .expect("no seed in 1..10000 yields exactly one early flaky death");
+    let doomed = draws(seed)
+        .iter()
+        .position(|&r| r <= ROUNDS / 2)
+        .unwrap();
+
+    let spec = |rt: RuntimeKind| SweepSpec {
+        algorithms: vec![Algorithm::Acpd],
+        scenarios: vec![Scenario::Flaky { p: P }],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![seed],
+        workers: vec![K],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 4,
+        n_override: 256,
+        threads: 1,
+        runtime: rt,
+        fail_policy: FailPolicy::Degrade,
+        ..SweepSpec::default()
+    };
+    let sim = run_sweep(&spec(RuntimeKind::Sim)).expect("sim flaky cell");
+    let thr = run_sweep(&spec(RuntimeKind::Threads)).expect("threads flaky cell");
+    let tcp = run_sweep(&spec(RuntimeKind::Tcp)).expect("tcp flaky cell");
+
+    // the cell genuinely degraded: exactly the probed worker was lost
+    let c = &sim.cells[0];
+    assert_eq!(c.live_workers, K - 1, "failures: {}", c.failures);
+    assert!(
+        c.failures.starts_with(&format!("w{doomed}@")),
+        "expected worker {doomed} to die, got {:?}",
+        c.failures
+    );
+    assert_eq!(c.rounds, ROUNDS, "degraded run must still finish the horizon");
+
+    let key = |r: &acpd::sweep::SweepReport| {
+        let c = &r.cells[0];
+        (
+            c.rounds,
+            c.bytes_up,
+            c.bytes_down,
+            c.failures.clone(),
+            c.live_workers,
+            c.w_norm.to_bits(),
+        )
+    };
+    assert_eq!(key(&sim), key(&thr), "threads diverged from sim under flaky/degrade");
+    assert_eq!(key(&sim), key(&tcp), "tcp diverged from sim under flaky/degrade");
 }
