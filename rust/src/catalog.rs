@@ -48,8 +48,8 @@ pub fn render() -> String {
     let axes: [(&str, &str, String); 8] = [
         (
             "algos",
-            "acpd | cocoa | cocoa+ | disdca",
-            join(d.algorithms.iter().map(|a| a.name().to_string())),
+            crate::engine::Algorithm::help_names(),
+            join(d.algorithms.iter().map(|a| a.name())),
         ),
         (
             "scenarios",
@@ -155,7 +155,7 @@ dataset sources (sweep `datasets`, train `--preset` / `--data`):
                 parsed once per sweep, rows unit-normalized (Assumption 1)
 
 sweep grid axes ([sweep] TOML keys / `acpd sweep` flags; comma lists):
-  algos      acpd | cocoa | cocoa+ | disdca                       default acpd,cocoa,cocoa+
+  algos      acpd | acpd-lag:<theta> | cocoa | cocoa+ | disdca    default acpd,cocoa,cocoa+
   scenarios  lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> | burst:<p>:<slow>:<len> | churn:<p_leave>:<p_rejoin> | crash_server@<round> default lan,straggler:10,jittery-cloud
   datasets   <preset> | <name>:<path> (LIBSVM file)               default dense-test
   workers    K - cluster sizes                                    default 4
@@ -206,6 +206,7 @@ cell runtimes (`runtime` key / `--runtime`):
             assert!(text.contains(name), "preset {name} missing from catalog");
         }
         assert!(text.contains(Scenario::help_names()));
+        assert!(text.contains(crate::engine::Algorithm::help_names()));
         assert!(text.contains(DatasetSource::help_syntax()));
         for rt in [RuntimeKind::Sim, RuntimeKind::Threads, RuntimeKind::Tcp] {
             assert!(text.contains(rt.name()), "runtime {} missing", rt.name());

@@ -107,7 +107,7 @@ fn experiment_flags() -> Vec<FlagSpec> {
         FlagSpec::opt("preset", "synthetic preset", "rcv1-small"),
         FlagSpec::opt("data", "LIBSVM file (overrides preset)", ""),
         FlagSpec::opt("data-seed", "dataset seed", "42"),
-        FlagSpec::opt("algo", "acpd|cocoa|cocoa+|disdca", "acpd"),
+        FlagSpec::opt("algo", "acpd|acpd-lag:<theta>|cocoa|cocoa+|disdca", "acpd"),
         FlagSpec::opt("workers", "K", "4"),
         FlagSpec::opt("group", "B (acpd)", "2"),
         FlagSpec::opt("period", "T (acpd)", "10"),
@@ -179,6 +179,13 @@ fn parse_experiment(raw: &[String], extra: &[FlagSpec]) -> Result<Option<Experim
                 Algorithm::Acpd => {
                     EngineConfig::acpd(workers, a.get("group")?, a.get("period")?, lambda)
                 }
+                Algorithm::AcpdLag { .. } => EngineConfig::acpd_lag(
+                    workers,
+                    a.get("group")?,
+                    a.get("period")?,
+                    lambda,
+                    algorithm.skip_theta(),
+                ),
                 Algorithm::Cocoa => EngineConfig::cocoa(workers, lambda),
                 Algorithm::CocoaPlus => EngineConfig::cocoa_plus(workers, lambda),
                 Algorithm::DisDca => EngineConfig::disdca(workers, lambda),
@@ -347,7 +354,11 @@ fn cmd_train(raw: &[String]) -> Result<()> {
 fn cmd_sweep(raw: &[String]) -> Result<()> {
     let specs = [
         FlagSpec::opt("config", "TOML file with a [sweep] section (flags override)", ""),
-        FlagSpec::opt("algos", "comma list: acpd,cocoa,cocoa+,disdca", "acpd,cocoa,cocoa+"),
+        FlagSpec::opt(
+            "algos",
+            "comma list: acpd,acpd-lag:<theta>,cocoa,cocoa+,disdca",
+            "acpd,cocoa,cocoa+",
+        ),
         FlagSpec::opt(
             "scenarios",
             "comma list: lan | straggler:<sigma> | jittery-cloud | kill:<wid>@<round> | flaky:<p> \

@@ -76,6 +76,11 @@ impl ExperimentConfig {
                 let period = doc.get_i64("algo", "period", 10) as usize;
                 EngineConfig::acpd(workers, group, period, lambda)
             }
+            Algorithm::AcpdLag { .. } => {
+                let group = doc.get_i64("algo", "group", (workers / 2).max(1) as i64) as usize;
+                let period = doc.get_i64("algo", "period", 10) as usize;
+                EngineConfig::acpd_lag(workers, group, period, lambda, algorithm.skip_theta())
+            }
             Algorithm::Cocoa => EngineConfig::cocoa(workers, lambda),
             Algorithm::CocoaPlus => EngineConfig::cocoa_plus(workers, lambda),
             Algorithm::DisDca => EngineConfig::disdca(workers, lambda),
@@ -201,6 +206,17 @@ straggler_factor = 10.0
         assert_eq!(cfg.engine.algorithm, Algorithm::CocoaPlus);
         assert!(cfg.engine.is_synchronous());
         assert_eq!(cfg.engine.sigma_prime, 8.0);
+    }
+
+    #[test]
+    fn acpd_lag_algo_parses_with_theta() {
+        let cfg = ExperimentConfig::from_toml(
+            "[algo]\nname = \"acpd-lag:0.25\"\nworkers = 4\ngroup = 2\nperiod = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.engine.algorithm, Algorithm::acpd_lag(0.25));
+        assert!((cfg.engine.skip_theta - 0.25).abs() < 1e-15);
+        assert_eq!((cfg.engine.group, cfg.engine.period), (2, 5));
     }
 
     #[test]

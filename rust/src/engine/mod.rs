@@ -34,6 +34,16 @@ use crate::protocol::server::FailPolicy;
 pub enum Algorithm {
     /// The paper's contribution (Algorithms 1 & 2).
     Acpd,
+    /// ACPD + LAG-style adaptive communication skipping (Chen et al. 2018,
+    /// arXiv:1805.09965): a worker whose epoch delta is small relative to
+    /// its recently-sent updates sends a tiny skip frame instead of a full
+    /// update, keeping the delta in its error-feedback residual.  The
+    /// threshold θ is stored as its IEEE-754 bit pattern so the enum stays
+    /// `Copy + Eq` (sweep axes dedup and compare algorithm values); use
+    /// [`Algorithm::acpd_lag`] / [`Algorithm::skip_theta`] instead of
+    /// touching the bits.  θ = 0 never skips and is byte-identical to
+    /// [`Algorithm::Acpd`] (pinned by `tests/skip_equiv.rs`).
+    AcpdLag { theta_bits: u64 },
     /// CoCoA with averaging aggregation (Jaggi et al. 2014).
     Cocoa,
     /// CoCoA+ with adding aggregation (Ma et al. 2015).
@@ -42,24 +52,67 @@ pub enum Algorithm {
     DisDca,
 }
 
+/// Default skip threshold used by the bare `acpd-lag` spelling.
+pub const DEFAULT_SKIP_THETA: f64 = 0.5;
+
 impl Algorithm {
-    pub fn name(self) -> &'static str {
-        match self {
-            Algorithm::Acpd => "acpd",
-            Algorithm::Cocoa => "cocoa",
-            Algorithm::CocoaPlus => "cocoa+",
-            Algorithm::DisDca => "disdca",
+    /// The adaptive-skip variant with threshold `theta` (θ >= 0; 0 = never
+    /// skip, equivalent to plain ACPD).
+    pub fn acpd_lag(theta: f64) -> Algorithm {
+        Algorithm::AcpdLag {
+            theta_bits: theta.to_bits(),
         }
     }
 
+    /// LAG skip threshold θ of this config point (0 for every non-skipping
+    /// algorithm).
+    pub fn skip_theta(self) -> f64 {
+        match self {
+            Algorithm::AcpdLag { theta_bits } => f64::from_bits(theta_bits),
+            _ => 0.0,
+        }
+    }
+
+    /// ACPD protocol geometry (asynchronous B/T groups, top-ρd filtering)?
+    /// True for plain ACPD and the adaptive-skip variant; the baselines are
+    /// synchronous and dense.
+    pub fn is_acpd_family(self) -> bool {
+        matches!(self, Algorithm::Acpd | Algorithm::AcpdLag { .. })
+    }
+
+    /// Stable name used in configs, flags and report rows
+    /// (`acpd-lag:<theta>` carries its threshold, like scenario spellings).
+    pub fn name(self) -> String {
+        match self {
+            Algorithm::Acpd => "acpd".to_string(),
+            Algorithm::AcpdLag { .. } => format!("acpd-lag:{}", self.skip_theta()),
+            Algorithm::Cocoa => "cocoa".to_string(),
+            Algorithm::CocoaPlus => "cocoa+".to_string(),
+            Algorithm::DisDca => "disdca".to_string(),
+        }
+    }
+
+    /// Parse `acpd` | `acpd-lag[:<theta>]` | `cocoa` | `cocoa+` | `disdca`.
     pub fn from_name(s: &str) -> Option<Algorithm> {
         Some(match s {
             "acpd" => Algorithm::Acpd,
+            "acpd-lag" | "acpd_lag" => Algorithm::acpd_lag(DEFAULT_SKIP_THETA),
             "cocoa" => Algorithm::Cocoa,
             "cocoa+" | "cocoaplus" | "cocoa_plus" => Algorithm::CocoaPlus,
             "disdca" => Algorithm::DisDca,
-            _ => return None,
+            _ => {
+                let theta: f64 = s.strip_prefix("acpd-lag:")?.parse().ok()?;
+                if theta >= 0.0 && theta.is_finite() {
+                    return Some(Algorithm::acpd_lag(theta));
+                }
+                return None;
+            }
         })
+    }
+
+    /// All parseable algorithm spellings (for help/error text).
+    pub fn help_names() -> &'static str {
+        "acpd | acpd-lag:<theta> | cocoa | cocoa+ | disdca"
     }
 }
 
@@ -119,6 +172,14 @@ pub struct EngineConfig {
     /// runs that need durability anyway — an injected `crash_server`
     /// scenario — use a throwaway temp dir that is removed afterwards.
     pub checkpoint_dir: String,
+    /// θ — LAG-style adaptive skip threshold ([`Algorithm::AcpdLag`]):
+    /// after each local epoch a worker skips its send when the epoch
+    /// delta's squared norm falls below θ (decayed by consecutive skips)
+    /// times the mean squared norm of its recently-sent updates.  0 (the
+    /// default, and the only value for every other algorithm) disables
+    /// skipping entirely — the worker code path is byte-identical to plain
+    /// ACPD (pinned by `tests/skip_equiv.rs`).
+    pub skip_theta: f64,
 }
 
 impl EngineConfig {
@@ -145,6 +206,23 @@ impl EngineConfig {
             shards: 1,
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
+            skip_theta: 0.0,
+        }
+    }
+
+    /// ACPD + LAG-style adaptive skipping with threshold θ
+    /// ([`Algorithm::AcpdLag`]); θ = 0 is byte-identical to [`Self::acpd`].
+    pub fn acpd_lag(
+        workers: usize,
+        group: usize,
+        period: usize,
+        lambda: f64,
+        theta: f64,
+    ) -> EngineConfig {
+        EngineConfig {
+            algorithm: Algorithm::acpd_lag(theta),
+            skip_theta: theta,
+            ..EngineConfig::acpd(workers, group, period, lambda)
         }
     }
 
@@ -170,6 +248,7 @@ impl EngineConfig {
             shards: 1,
             checkpoint_every: 0,
             checkpoint_dir: String::new(),
+            skip_theta: 0.0,
         }
     }
 
@@ -191,9 +270,9 @@ impl EngineConfig {
         }
     }
 
-    /// Keep σ' consistent after mutating γ/B on an ACPD config.
+    /// Keep σ' consistent after mutating γ/B on an ACPD-family config.
     pub fn recouple_sigma(&mut self) {
-        if self.algorithm == Algorithm::Acpd {
+        if self.algorithm.is_acpd_family() {
             self.sigma_prime = self.gamma * self.group as f64;
         }
     }
@@ -231,13 +310,17 @@ impl EngineConfig {
         anyhow::ensure!(self.lambda > 0.0, "lambda must be positive");
         anyhow::ensure!(self.h >= 1, "h must be >= 1");
         anyhow::ensure!(self.shards >= 1, "shards S must be >= 1");
+        anyhow::ensure!(
+            self.skip_theta >= 0.0 && self.skip_theta.is_finite(),
+            "skip theta must be finite and >= 0"
+        );
         anyhow::ensure!(n >= self.workers, "fewer samples than workers");
         Ok(())
     }
 
     /// One-line description for logs.
     pub fn describe(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} K={} B={} T={} rho_d={} gamma={} sigma'={} H={} lambda={:.1e} loss={}",
             self.algorithm.name(),
             self.workers,
@@ -249,7 +332,11 @@ impl EngineConfig {
             self.h,
             self.lambda,
             self.loss.name()
-        )
+        );
+        if self.skip_theta > 0.0 {
+            s.push_str(&format!(" skip={}", self.skip_theta));
+        }
+        s
     }
 }
 
@@ -313,11 +400,48 @@ mod tests {
     fn algorithm_names() {
         for a in [
             Algorithm::Acpd,
+            Algorithm::acpd_lag(0.0),
+            Algorithm::acpd_lag(0.5),
+            Algorithm::acpd_lag(0.125),
             Algorithm::Cocoa,
             Algorithm::CocoaPlus,
             Algorithm::DisDca,
         ] {
-            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+            assert_eq!(Algorithm::from_name(&a.name()), Some(a), "{}", a.name());
         }
+        assert_eq!(
+            Algorithm::from_name("acpd-lag"),
+            Some(Algorithm::acpd_lag(DEFAULT_SKIP_THETA))
+        );
+        assert_eq!(Algorithm::from_name("acpd-lag:-0.1"), None);
+        assert_eq!(Algorithm::from_name("acpd-lag:inf"), None);
+        assert_eq!(Algorithm::from_name("acpd-lag:x"), None);
+    }
+
+    #[test]
+    fn acpd_lag_is_acpd_geometry_plus_theta() {
+        let lag = EngineConfig::acpd_lag(4, 2, 10, 1e-3, 0.5);
+        let base = EngineConfig::acpd(4, 2, 10, 1e-3);
+        assert_eq!(lag.algorithm, Algorithm::acpd_lag(0.5));
+        assert!(lag.algorithm.is_acpd_family() && base.algorithm.is_acpd_family());
+        assert!(!Algorithm::Cocoa.is_acpd_family());
+        assert_eq!(lag.skip_theta, 0.5);
+        assert_eq!(lag.algorithm.skip_theta(), 0.5);
+        assert_eq!(Algorithm::Acpd.skip_theta(), 0.0);
+        // identical protocol geometry: only the algorithm tag and θ differ
+        assert_eq!((lag.group, lag.period, lag.rho_d), (base.group, base.period, base.rho_d));
+        assert_eq!(lag.sigma_prime, base.sigma_prime);
+        lag.validate(100).unwrap();
+        // σ' recoupling treats the variant as ACPD
+        let mut lag2 = lag.clone();
+        lag2.gamma = 0.25;
+        lag2.recouple_sigma();
+        assert!((lag2.sigma_prime - 0.5).abs() < 1e-12);
+        // negative / non-finite θ is rejected
+        let mut bad = lag;
+        bad.skip_theta = -1.0;
+        assert!(bad.validate(100).is_err());
+        bad.skip_theta = f64::NAN;
+        assert!(bad.validate(100).is_err());
     }
 }

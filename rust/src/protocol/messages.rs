@@ -126,6 +126,23 @@ impl ModelDelta {
     }
 }
 
+/// Worker → server: adaptive-skip notification (LAG-style lazy
+/// aggregation, `Algorithm::AcpdLag`).  The worker's epoch delta fell
+/// under its skip threshold, so instead of a full [`UpdateMsg`] it ships
+/// this fixed-size frame; the server advances the worker's round cursor
+/// with an empty contribution and the skipped mass stays in the worker's
+/// error-feedback residual.  `saved` carries the worker-computed byte
+/// saving (the update frame it *would* have sent minus this frame), so
+/// all three runtimes aggregate the metric identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkipMsg {
+    pub worker: u32,
+    /// monotone per-worker round counter (same clock as [`UpdateMsg`])
+    pub round: u64,
+    /// bytes saved vs. the full update this frame replaces
+    pub saved: u64,
+}
+
 /// Server → worker envelope.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeltaMsg {
@@ -161,6 +178,7 @@ pub struct GapPiecesMsg {
 pub enum ToServerMsg {
     Update(UpdateMsg),
     GapPieces(GapPiecesMsg),
+    Skip(SkipMsg),
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -174,6 +192,7 @@ const TAG_UPDATE: u8 = 1;
 const TAG_DELTA: u8 = 2;
 const TAG_GAP_REQ: u8 = 3;
 const TAG_GAP_PIECES: u8 = 4;
+const TAG_SKIP: u8 = 5;
 const TAG_SPARSE: u8 = 0;
 const TAG_DENSE: u8 = 1;
 
@@ -223,6 +242,43 @@ impl UpdateMsg {
     /// (`ModelDelta::wire_bytes` already includes its encoding-tag byte.)
     pub fn wire_bytes(&self) -> usize {
         1 + 4 + 8 + self.update.wire_bytes()
+    }
+}
+
+impl SkipMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::with_capacity(self.wire_bytes());
+        e.put_u8(TAG_SKIP);
+        e.put_u32(self.worker);
+        e.put_u64(self.round);
+        e.put_u64(self.saved);
+        e.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SkipMsg> {
+        let mut d = Decoder::new(buf);
+        let tag = d.get_u8()?;
+        if tag != TAG_SKIP {
+            bail!("expected SkipMsg tag, got {tag}");
+        }
+        let worker = d.get_u32()?;
+        let round = d.get_u64()?;
+        let saved = d.get_u64()?;
+        if !d.finished() {
+            bail!("trailing bytes in SkipMsg frame");
+        }
+        Ok(SkipMsg {
+            worker,
+            round,
+            saved,
+        })
+    }
+
+    /// Bytes this message occupies on the wire (simulator charge): a
+    /// fixed 21 B regardless of model dimension — the whole point of the
+    /// skip is that this replaces an O(ρd) update frame.
+    pub fn wire_bytes(&self) -> usize {
+        1 + 4 + 8 + 8
     }
 }
 
@@ -327,6 +383,7 @@ impl ToServerMsg {
         match self {
             ToServerMsg::Update(m) => m.encode(),
             ToServerMsg::GapPieces(m) => m.encode(),
+            ToServerMsg::Skip(m) => m.encode(),
         }
     }
 
@@ -334,6 +391,7 @@ impl ToServerMsg {
         match buf.first() {
             Some(&TAG_UPDATE) => Ok(ToServerMsg::Update(UpdateMsg::decode(buf)?)),
             Some(&TAG_GAP_PIECES) => Ok(ToServerMsg::GapPieces(GapPiecesMsg::decode(buf)?)),
+            Some(&TAG_SKIP) => Ok(ToServerMsg::Skip(SkipMsg::decode(buf)?)),
             t => bail!("bad ToServerMsg tag {t:?}"),
         }
     }
@@ -448,5 +506,29 @@ mod tests {
     fn cross_decoding_rejected() {
         let m = UpdateMsg::from_sparse(0, 1, SparseVec::empty(4));
         assert!(DeltaMsg::decode(&m.encode()).is_err());
+    }
+
+    #[test]
+    fn skip_roundtrip_and_fixed_size() {
+        let m = SkipMsg {
+            worker: 7,
+            round: 42,
+            saved: 1_000_003,
+        };
+        let buf = m.encode();
+        assert_eq!(buf.len(), m.wire_bytes());
+        assert_eq!(m.wire_bytes(), 21); // fixed, dimension-independent
+        assert_eq!(SkipMsg::decode(&buf).unwrap(), m);
+        // envelope routing
+        match ToServerMsg::decode(&buf).unwrap() {
+            ToServerMsg::Skip(s) => assert_eq!(s, m),
+            other => panic!("skip frame misrouted: {other:?}"),
+        }
+        // cross-decoding rejected
+        assert!(UpdateMsg::decode(&buf).is_err());
+        // trailing garbage rejected
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(SkipMsg::decode(&long).is_err());
     }
 }

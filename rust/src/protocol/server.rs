@@ -46,14 +46,15 @@
 use std::collections::VecDeque;
 
 use crate::linalg::sparse::SparseVec;
-use crate::protocol::messages::{DeltaMsg, ModelDelta, UpdateMsg};
+use crate::protocol::messages::{DeltaMsg, ModelDelta, SkipMsg, UpdateMsg};
 use crate::util::binio::{crc32, Decoder, Encoder};
 
 /// First word of a serialized [`ServerState`] snapshot.
 pub const SNAPSHOT_MAGIC: u32 = 0x4143_5044;
 /// Bumped whenever the snapshot payload layout changes; [`ServerState::restore`]
-/// refuses any other version.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// refuses any other version.  v2 appended the adaptive-skip accounting
+/// (per-worker skip counts + totals) for `Algorithm::AcpdLag`.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// How the server reacts when a runtime reports a worker lost
 /// ([`ServerState::on_worker_lost`]).
@@ -196,6 +197,13 @@ pub struct ServerState {
     /// commit replies stashed for a mid-commit checkpoint and not yet
     /// delivered (see [`Self::stash_outbox`]); empty in normal operation
     outbox: Vec<DeltaMsg>,
+    /// per-worker count of rounds answered with a [`SkipMsg`]
+    /// (`Algorithm::AcpdLag`; all-zero for never-skipping algorithms)
+    skips: Vec<u64>,
+    /// Σ skips — total skipped rounds across the fleet
+    skipped_rounds: u64,
+    /// Σ `SkipMsg::saved` — upstream bytes the skips avoided
+    skip_bytes_saved: u64,
 }
 
 impl ServerState {
@@ -228,6 +236,9 @@ impl ServerState {
             finished: false,
             stop_requested: false,
             outbox: Vec::new(),
+            skips: vec![0; cfg.workers],
+            skipped_rounds: 0,
+            skip_bytes_saved: 0,
             cfg,
         }
     }
@@ -396,6 +407,53 @@ impl ServerState {
             return ServerAction::Wait;
         }
         self.commit_group()
+    }
+
+    /// Ingest one adaptive-skip notice (`Algorithm::AcpdLag`): the worker's
+    /// epoch delta fell under its LAG threshold, so its round contributes
+    /// an **empty** delta through the exact same group/commit path as
+    /// [`Self::on_update`] — the barrier count, the worker's log cursor,
+    /// participation and the (l, t) clock all advance as if a full update
+    /// had arrived, and every shard appends its usual (here: unchanged)
+    /// lockstep log entry.  The skipped mass stays in the worker's
+    /// error-feedback residual and drains on its next real send, so the
+    /// conservation ledger stays closed (pinned by tests/skip_equiv.rs).
+    pub fn on_skip(&mut self, msg: SkipMsg) -> ServerAction {
+        assert!(!self.finished, "skip after shutdown");
+        let k = msg.worker as usize;
+        assert!(k < self.cfg.workers, "worker id {k} out of range");
+        if !self.live[k] {
+            // same race as on_update: a frame can outrun its loss notice
+            return ServerAction::Wait;
+        }
+        assert!(
+            self.inbox[k].is_none(),
+            "worker {k} sent twice within one group (protocol violation)"
+        );
+        self.skips[k] += 1;
+        self.skipped_rounds += 1;
+        self.skip_bytes_saved += msg.saved;
+        self.inbox[k] = Some(ModelDelta::Sparse(SparseVec::empty(self.w.len())));
+        self.in_group += 1;
+        if !self.barrier_met() {
+            return ServerAction::Wait;
+        }
+        self.commit_group()
+    }
+
+    /// Total rounds answered with a skip frame instead of an update.
+    pub fn skipped_rounds(&self) -> u64 {
+        self.skipped_rounds
+    }
+
+    /// Upstream bytes those skips saved (Σ worker-reported savings).
+    pub fn skip_bytes_saved(&self) -> u64 {
+        self.skip_bytes_saved
+    }
+
+    /// Per-worker skip counts (diagnostics/tests).
+    pub fn skips_per_worker(&self) -> &[u64] {
+        &self.skips
     }
 
     /// Ingest a worker-loss notice from the runtime.  Under
@@ -748,6 +806,12 @@ impl ServerState {
         for msg in &self.outbox {
             e.put_bytes(&msg.encode());
         }
+        // adaptive-skip accounting (snapshot v2; all-zero unless AcpdLag)
+        for &s in &self.skips {
+            e.put_u64(s);
+        }
+        e.put_u64(self.skipped_rounds);
+        e.put_u64(self.skip_bytes_saved);
         let mut bytes = e.finish();
         let crc = crc32(&bytes);
         bytes.extend_from_slice(&crc.to_le_bytes());
@@ -901,6 +965,11 @@ impl ServerState {
         for _ in 0..n_outbox {
             state.outbox.push(DeltaMsg::decode(&d.get_bytes()?)?);
         }
+        for s in state.skips.iter_mut() {
+            *s = d.get_u64()?;
+        }
+        state.skipped_rounds = d.get_u64()?;
+        state.skip_bytes_saved = d.get_u64()?;
         anyhow::ensure!(
             d.remaining() == 4,
             "checkpoint payload has {} stray bytes before the CRC",

@@ -43,8 +43,21 @@
 //! ρd values (incl. dense mode) and error-feedback settings.
 
 use crate::filter::{filter_topk_indexed, FilterScratch};
-use crate::protocol::messages::{DeltaMsg, UpdateMsg};
+use crate::protocol::messages::{DeltaMsg, ModelDelta, SkipMsg, UpdateMsg};
 use crate::solver::LocalSolver;
+
+/// How many recently-sent update norms² the LAG-style skip rule averages
+/// over (its reference scale; LAG uses a fixed small window too).
+const SKIP_WINDOW: usize = 4;
+
+/// One round's outbound traffic: either the usual filtered update, or —
+/// under `Algorithm::AcpdLag` when the epoch delta is provably small — a
+/// fixed-size [`SkipMsg`] that costs 21 B instead of O(ρd).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundOutput {
+    Update(UpdateMsg),
+    Skip(SkipMsg),
+}
 
 pub struct WorkerState {
     pub id: usize,
@@ -74,6 +87,16 @@ pub struct WorkerState {
     /// paper §III-B2 practical variant: keep the filtered-out residual
     /// (error feedback).  false = drop it after sending (ablation).
     error_feedback: bool,
+    /// θ — LAG-style skip threshold (0 = never skip; the θ=0 path is
+    /// byte-identical to plain ACPD, pinned by tests/skip_equiv.rs).
+    skip_theta: f64,
+    /// norms² of the last ≤ SKIP_WINDOW *sent* updates (skip reference)
+    sent_norms: Vec<f64>,
+    /// skips since the last real send (decays the threshold 2^-k so a
+    /// worker cannot starve the server of fresh mass forever)
+    consecutive_skips: u32,
+    skipped_rounds: u64,
+    skip_bytes_saved: u64,
     /// set when the server's reply carried `shutdown`
     done: bool,
 }
@@ -155,6 +178,11 @@ impl WorkerState {
             scratch: FilterScratch::default(),
             round: 0,
             error_feedback: true,
+            skip_theta: 0.0,
+            sent_norms: Vec::new(),
+            consecutive_skips: 0,
+            skipped_rounds: 0,
+            skip_bytes_saved: 0,
             done: false,
         }
     }
@@ -164,9 +192,64 @@ impl WorkerState {
         self.error_feedback = on;
     }
 
+    /// Set the LAG-style skip threshold θ (default 0 = never skip).
+    pub fn set_skip_theta(&mut self, theta: f64) {
+        self.skip_theta = theta;
+    }
+
+    /// Rounds this worker answered with a [`SkipMsg`] instead of an update.
+    pub fn skipped_rounds(&self) -> u64 {
+        self.skipped_rounds
+    }
+
+    /// Upstream bytes those skips saved vs. the updates they replaced.
+    pub fn skip_bytes_saved(&self) -> u64 {
+        self.skip_bytes_saved
+    }
+
     /// Lines 3-9: one local round; returns the filtered update to send.
-    /// O(touched + nnz(resid) + nnz(sent)) — see module docs.
+    /// Baseline entry point for never-skipping algorithms — with θ = 0
+    /// (the default) [`WorkerState::compute_round_adaptive`] can never
+    /// skip, so this is a plain unwrap around it.
     pub fn compute_round(&mut self) -> UpdateMsg {
+        match self.compute_round_adaptive() {
+            RoundOutput::Update(m) => m,
+            RoundOutput::Skip(_) => unreachable!("skip emitted with θ = 0"),
+        }
+    }
+
+    /// The wire bytes the update this round *would* send costs, estimated
+    /// from the candidate support before the filter runs (the shared
+    /// [`ModelDelta::prefers_sparse`] rule picks the encoding).  Feeds the
+    /// `saved` field of a [`SkipMsg`] — a metric, computed worker-side so
+    /// all three runtimes aggregate it identically.
+    fn hypothetical_update_bytes(&self) -> usize {
+        let d = self.resid.len();
+        let nnz = if self.rho_d == 0 {
+            self.support.len()
+        } else {
+            self.rho_d.min(self.support.len())
+        };
+        let delta = if ModelDelta::prefers_sparse(nnz, d) {
+            1 + 4 + 4 + 4 + 8 * nnz // enc tag + dim + 2 slice headers + pairs
+        } else {
+            1 + 4 + 4 * d // enc tag + slice header + dense payload
+        };
+        1 + 4 + 8 + delta // frame tag + worker + round
+    }
+
+    /// One local round under the adaptive-skip rule (LAG, arXiv:1805.09965
+    /// composed with the paper's top-ρd filter): after folding the epoch
+    /// delta into the residual, compare its norm² against a decaying
+    /// fraction of the mean norm² of the last ≤ SKIP_WINDOW sent updates —
+    /// `‖Δw_epoch‖² ≤ (θ / 2^k)·mean` with k = consecutive skips.  Under
+    /// the threshold: keep ALL the mass in the error-feedback residual
+    /// (the filter does not run), advance the round clock, and emit a
+    /// fixed-size [`SkipMsg`].  Otherwise behave exactly like plain ACPD.
+    /// With θ = 0 the skip branch is statically unreachable and the code
+    /// path is bit-identical to [`WorkerState::compute_round`]'s historic
+    /// body.
+    pub fn compute_round_adaptive(&mut self) -> RoundOutput {
         debug_assert!(!self.done);
         // line 4: the subproblem is centred on the MAINTAINED w_eff; the
         // dirty list tells the solver where it moved since last epoch
@@ -179,6 +262,37 @@ impl WorkerState {
             self.resid[j as usize] += x;
         }
         merge_union(&mut self.support, &dw.idx, &mut self.support_scratch);
+        // LAG decision point — strictly gated on θ > 0 so the θ = 0 path
+        // stays byte-identical to plain ACPD
+        if self.skip_theta > 0.0 && !self.sent_norms.is_empty() {
+            let epoch_norm_sq: f64 = dw.val.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let mean: f64 = self.sent_norms.iter().sum::<f64>() / self.sent_norms.len() as f64;
+            let thr = (self.skip_theta / f64::powi(2.0, self.consecutive_skips as i32)) * mean;
+            if epoch_norm_sq <= thr {
+                // the whole epoch delta stays in resid (error feedback);
+                // re-centre w_eff where resid moved
+                for &j in dw.idx.iter() {
+                    refresh_w_eff(
+                        &mut self.w_eff,
+                        &self.w_k,
+                        self.gamma,
+                        &self.resid,
+                        &mut self.dirty,
+                        j,
+                    );
+                }
+                let skip = SkipMsg {
+                    worker: self.id as u32,
+                    round: self.round + 1,
+                    saved: (self.hypothetical_update_bytes() as u64).saturating_sub(21),
+                };
+                self.consecutive_skips += 1;
+                self.skipped_rounds += 1;
+                self.skip_bytes_saved += skip.saved;
+                self.round += 1;
+                return RoundOutput::Skip(skip);
+            }
+        }
         // lines 7-12: split over the explicit candidate list
         let filtered =
             filter_topk_indexed(&mut self.resid, &mut self.support, self.rho_d, &mut self.scratch);
@@ -208,8 +322,17 @@ impl WorkerState {
             }
             self.support.clear();
         }
+        if self.skip_theta > 0.0 {
+            // refresh the skip reference with this send's norm²
+            let sent_norm_sq: f64 = filtered.val.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            if self.sent_norms.len() == SKIP_WINDOW {
+                self.sent_norms.remove(0);
+            }
+            self.sent_norms.push(sent_norm_sq);
+            self.consecutive_skips = 0;
+        }
         self.round += 1;
-        UpdateMsg::from_sparse(self.id as u32, self.round, filtered)
+        RoundOutput::Update(UpdateMsg::from_sparse(self.id as u32, self.round, filtered))
     }
 
     /// Lines 13-14: fold the server's Δw̃_k into the local model.  Cost is
@@ -405,6 +528,36 @@ mod tests {
             delta: ModelDelta::Dense(vec![0.25; 200]),
         });
         assert!(w.w_k().iter().all(|&x| (x - 0.25).abs() < 1e-7));
+    }
+
+    #[test]
+    fn adaptive_skip_emits_fixed_frames_and_keeps_mass() {
+        let mut w = make_worker(10);
+        w.set_skip_theta(1e12); // absurdly permissive: skip as soon as legal
+        // round 1 always sends — the reference window is empty
+        assert!(matches!(w.compute_round_adaptive(), RoundOutput::Update(_)));
+        w.apply_delta(&DeltaMsg {
+            worker: 0,
+            server_round: 1,
+            shutdown: false,
+            delta: ModelDelta::Dense(vec![0.0; 200]),
+        });
+        // round 2 falls under the huge threshold: a 21 B frame, the full
+        // epoch delta retained in the error-feedback residual, and the
+        // round clock still advancing
+        match w.compute_round_adaptive() {
+            RoundOutput::Skip(s) => {
+                assert_eq!(s.round, 2);
+                assert_eq!(s.worker, 0);
+                assert!(s.saved > 0);
+                assert_eq!(s.wire_bytes(), 21);
+            }
+            other => panic!("expected a skip, got {other:?}"),
+        }
+        assert_eq!(w.skipped_rounds(), 1);
+        assert!(w.skip_bytes_saved() > 0);
+        assert_eq!(w.rounds_completed(), 2);
+        assert!(dense::norm2_sq(w.residual()) > 0.0);
     }
 
     #[test]

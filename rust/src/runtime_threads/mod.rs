@@ -21,7 +21,7 @@ use crate::network::{episode_rng, NetworkModel};
 use crate::protocol::checkpoint::CheckpointStore;
 use crate::protocol::messages::{DeltaMsg, GapPiecesMsg, GapRequestMsg, ToServerMsg, ToWorkerMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
-use crate::protocol::worker::WorkerState;
+use crate::protocol::worker::{RoundOutput, WorkerState};
 use crate::solver::objective::{combine, ObjectivePieces};
 use crate::solver::sdca::SdcaSolver;
 use crate::util::rng::Pcg64;
@@ -53,6 +53,10 @@ pub struct ThreadRunOutput {
     pub checkpoints: u64,
     /// commit round the server resumed from after an injected crash
     pub resumed_from: Option<u64>,
+    /// rounds answered with a skip frame (`Algorithm::AcpdLag`; 0 otherwise)
+    pub skipped_rounds: u64,
+    /// upstream bytes those skips saved vs. the updates they replaced
+    pub skip_bytes_saved: u64,
 }
 
 /// What the server's message pump delivers: either a protocol message or a
@@ -90,7 +94,7 @@ pub fn worker_loop(
     let mut round: u64 = 0;
     loop {
         let t0 = Instant::now();
-        let msg = state.compute_round();
+        let out = state.compute_round_adaptive();
         round += 1;
         if kill_round == Some(round) {
             return Some(format!("injected fault: died before sending update {round}"));
@@ -105,7 +109,10 @@ pub fn worker_loop(
         if factor > 1.0 {
             thread::sleep(Duration::from_secs_f64(elapsed * (factor - 1.0)));
         }
-        send(ToServerMsg::Update(msg));
+        match out {
+            RoundOutput::Update(msg) => send(ToServerMsg::Update(msg)),
+            RoundOutput::Skip(skip) => send(ToServerMsg::Skip(skip)),
+        }
         // await our delta; answer any gap probes that arrive first
         loop {
             match recv() {
@@ -145,7 +152,7 @@ pub struct ResumeCarry {
 }
 
 impl ResumeCarry {
-    pub fn new(algo: &str) -> ResumeCarry {
+    pub fn new(algo: impl Into<String>) -> ResumeCarry {
         ResumeCarry {
             history: History::new(algo),
             bytes_up: 0,
@@ -273,6 +280,10 @@ pub fn server_loop_ctl(
                 bytes_up += u.wire_bytes() as u64;
                 server.on_update(u)
             }
+            ServerEvent::Msg(ToServerMsg::Skip(s)) => {
+                bytes_up += s.wire_bytes() as u64;
+                server.on_skip(s)
+            }
             ServerEvent::Msg(ToServerMsg::GapPieces(_)) => panic!("unsolicited gap pieces"),
             ServerEvent::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
             ServerEvent::WorkerJoined { wid } => {
@@ -333,7 +344,8 @@ pub fn server_loop_ctl(
                                     v: p.v,
                                 });
                             }
-                            Some(ServerEvent::Msg(ToServerMsg::Update(_))) => {
+                            Some(ServerEvent::Msg(ToServerMsg::Update(_)))
+                            | Some(ServerEvent::Msg(ToServerMsg::Skip(_))) => {
                                 panic!("update during gap collection (barrier broken)")
                             }
                             Some(ServerEvent::WorkerLost { wid, reason }) => {
@@ -497,7 +509,7 @@ pub fn run(
         let slowdown = net.slowdown.get(wid).copied().unwrap_or(1.0);
         let jitter = net.jitter.clone();
         let plan = plan.clone();
-        let (loss, lambda, sigma, gamma, h, n_global, error_feedback) = (
+        let (loss, lambda, sigma, gamma, h, n_global, error_feedback, skip_theta) = (
             cfg.loss,
             cfg.lambda,
             cfg.sigma_prime,
@@ -505,6 +517,7 @@ pub fn run(
             cfg.h,
             ds.n(),
             cfg.error_feedback,
+            cfg.skip_theta,
         );
         handles.push(thread::spawn(move || {
             // membership-episode loop: episode 0 is the legacy single-shot
@@ -538,6 +551,7 @@ pub fn run(
                 let mut state =
                     WorkerState::new(wid, Box::new(solver), gamma as f32, h, rho_d_msg);
                 state.set_error_feedback(error_feedback);
+                state.set_skip_theta(skip_theta);
                 if let Some(d) = admission.take() {
                     // the full-model admission reply IS this episode's first
                     // delta: apply it before computing, like a fresh worker
@@ -691,6 +705,8 @@ pub fn run(
         membership: server.membership_timeline(),
         checkpoints: store.as_ref().map_or(0, |s| s.written()),
         resumed_from,
+        skipped_rounds: server.skipped_rounds(),
+        skip_bytes_saved: server.skip_bytes_saved(),
     })
 }
 

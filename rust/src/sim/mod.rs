@@ -20,9 +20,9 @@ use crate::engine::EngineConfig;
 use crate::metrics::{History, HistoryPoint};
 use crate::network::{episode_rng, NetworkModel, ScenarioSchedule};
 use crate::protocol::checkpoint::CheckpointStore;
-use crate::protocol::messages::{DeltaMsg, UpdateMsg};
+use crate::protocol::messages::{DeltaMsg, SkipMsg, UpdateMsg};
 use crate::protocol::server::{ServerAction, ServerConfig, ServerState, WorkerFailure};
-use crate::protocol::worker::WorkerState;
+use crate::protocol::worker::{RoundOutput, WorkerState};
 use crate::solver::objective::{combine, ObjectivePieces};
 use crate::solver::sdca::SdcaSolver;
 use crate::util::rng::Pcg64;
@@ -30,6 +30,9 @@ use crate::util::rng::Pcg64;
 /// A scheduled event.
 enum Payload {
     ToServer(UpdateMsg),
+    /// Adaptive-skip frame (`Algorithm::AcpdLag`): a fixed 21 B upstream
+    /// charge instead of the O(ρd) update it replaces.
+    SkipToServer(SkipMsg),
     ToWorker(DeltaMsg),
     /// Injected fault becoming observable at the server ([`crate::network::FaultPlan`]):
     /// the worker died after its local solve, before sending — the DES
@@ -102,6 +105,10 @@ pub struct SimStats {
     pub checkpoints: u64,
     /// commit round the server resumed from after an injected crash
     pub resumed_from: Option<u64>,
+    /// rounds answered with a skip frame (`Algorithm::AcpdLag`; 0 otherwise)
+    pub skipped_rounds: u64,
+    /// upstream bytes those skips saved vs. the updates they replaced
+    pub skip_bytes_saved: u64,
 }
 
 pub struct SimOutput {
@@ -182,6 +189,7 @@ pub fn run_with_solvers(
             let solver = make_solver(p, root_rng.split(wid as u64 + 1));
             let mut ws = WorkerState::new(wid, solver, cfg.gamma as f32, cfg.h, rho_d_msg);
             ws.set_error_feedback(cfg.error_feedback);
+            ws.set_skip_theta(cfg.skip_theta);
             ws
         })
         .collect();
@@ -224,7 +232,7 @@ pub fn run_with_solvers(
     let mut bytes_down = 0u64;
     let mut compute_time = 0.0f64;
     let mut comm_time = 0.0f64;
-    let mut history = History::new(format!("{}", cfg.algorithm.name()));
+    let mut history = History::new(cfg.algorithm.name());
 
     // round-indexed scenario schedule: the SAME pure draws as the
     // threads/TCP runtimes (kill_round_for for legacy kills, per-episode
@@ -260,7 +268,7 @@ pub fn run_with_solvers(
             dt *= mult;
         }
         compute_time += dt;
-        let msg = w.compute_round();
+        let out = w.compute_round_adaptive();
         rounds_sent[w.id] = 1;
         if plan.leave_after(w.id, 0) == Some(1) {
             // dies after the local solve, before the send (the same point
@@ -280,16 +288,20 @@ pub fn run_with_solvers(
             });
             continue;
         }
-        let up = net.message_time(msg.wire_bytes());
+        let (wire, payload) = match out {
+            RoundOutput::Update(m) => (m.wire_bytes(), Payload::ToServer(m)),
+            RoundOutput::Skip(s) => (s.wire_bytes(), Payload::SkipToServer(s)),
+        };
+        let up = net.message_time(wire);
         comm_time += up;
-        bytes_up += msg.wire_bytes() as u64;
+        bytes_up += wire as u64;
         heap.push(Event {
             time: dt + up,
             seq: {
                 seq += 1;
                 seq
             },
-            payload: Payload::ToServer(msg),
+            payload,
         });
     }
 
@@ -301,6 +313,7 @@ pub fn run_with_solvers(
         // shared commit block below; ToWorker handles itself and continues.
         let action = match ev.payload {
             Payload::ToServer(msg) => server.on_update(msg),
+            Payload::SkipToServer(msg) => server.on_skip(msg),
             Payload::WorkerLost { wid, reason } => server.on_worker_lost(wid, &reason)?,
             Payload::ToWorker(msg) => {
                 let wid = msg.worker as usize;
@@ -318,6 +331,7 @@ pub fn run_with_solvers(
                         make_solver(kept_parts[wid].clone(), episode_rng(seed, wid, episode[wid]));
                     let mut ws = WorkerState::new(wid, solver, cfg.gamma as f32, cfg.h, rho_d_msg);
                     ws.set_error_feedback(cfg.error_feedback);
+                    ws.set_skip_theta(cfg.skip_theta);
                     workers[wid] = ws;
                 }
                 workers[wid].apply_delta(&msg);
@@ -329,7 +343,7 @@ pub fn run_with_solvers(
                         dt *= mult;
                     }
                     compute_time += dt;
-                    let out = workers[wid].compute_round();
+                    let out = workers[wid].compute_round_adaptive();
                     rounds_sent[wid] = r;
                     if plan.leave_after(wid, episode[wid]) == Some(r) {
                         away[wid] = true;
@@ -345,16 +359,20 @@ pub fn run_with_solvers(
                             },
                         });
                     } else {
-                        let up = net.message_time(out.wire_bytes());
+                        let (wire, payload) = match out {
+                            RoundOutput::Update(m) => (m.wire_bytes(), Payload::ToServer(m)),
+                            RoundOutput::Skip(s) => (s.wire_bytes(), Payload::SkipToServer(s)),
+                        };
+                        let up = net.message_time(wire);
                         comm_time += up;
-                        bytes_up += out.wire_bytes() as u64;
+                        bytes_up += wire as u64;
                         heap.push(Event {
                             time: now + dt + up,
                             seq: {
                                 seq += 1;
                                 seq
                             },
-                            payload: Payload::ToServer(out),
+                            payload,
                         });
                     }
                 }
@@ -454,6 +472,8 @@ pub fn run_with_solvers(
         membership: server.membership_timeline(),
         checkpoints: store.as_ref().map_or(0, |s| s.written()),
         resumed_from,
+        skipped_rounds: server.skipped_rounds(),
+        skip_bytes_saved: server.skip_bytes_saved(),
     };
     // assemble final global dual state + leftover residual mass
     let mut final_alpha = vec![0.0f32; ds.n()];
@@ -772,6 +792,32 @@ mod tests {
         assert!(cadenced.stats.checkpoints >= 2);
         assert_eq!(cadenced.final_w, base.final_w);
         assert_eq!(cadenced.stats.bytes_down, base.stats.bytes_down);
+    }
+
+    #[test]
+    fn acpd_lag_skips_rounds_and_saves_bytes() {
+        let ds = small_ds();
+        let base = fast_cfg(EngineConfig::acpd(4, 2, 5, 1e-3));
+        let lag = fast_cfg(EngineConfig::acpd_lag(4, 2, 5, 1e-3, 0.9));
+        let a = run(&ds, &base, &NetworkModel::lan(), 7);
+        let b = run(&ds, &lag, &NetworkModel::lan(), 7);
+        assert_eq!(a.stats.skipped_rounds, 0);
+        assert_eq!(a.stats.skip_bytes_saved, 0);
+        assert!(b.stats.skipped_rounds > 0, "θ=0.9 never skipped");
+        assert!(b.stats.skip_bytes_saved > 0);
+        assert!(
+            b.stats.bytes_up < a.stats.bytes_up,
+            "skips must cut upstream bytes: {} vs {}",
+            b.stats.bytes_up,
+            a.stats.bytes_up
+        );
+        // the skip replies still drive the same commit clock
+        assert_eq!(b.stats.rounds, a.stats.rounds);
+        // θ = 0 is bit-identical to plain ACPD end to end
+        let z = run(&ds, &fast_cfg(EngineConfig::acpd_lag(4, 2, 5, 1e-3, 0.0)), &NetworkModel::lan(), 7);
+        assert_eq!(z.final_w, a.final_w);
+        assert_eq!(z.stats.bytes_up, a.stats.bytes_up);
+        assert_eq!(z.stats.skipped_rounds, 0);
     }
 
     #[test]

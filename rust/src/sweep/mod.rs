@@ -286,7 +286,7 @@ impl Default for SweepSpec {
 /// coupling.  This is the equivalence the cell deduplication keys on.
 fn effective_geometry(algorithm: Algorithm, k: usize, group: usize, period: usize) -> (usize, usize) {
     match algorithm {
-        Algorithm::Acpd => {
+        Algorithm::Acpd | Algorithm::AcpdLag { .. } => {
             let b = if group == 0 { (k / 2).max(1) } else { group };
             (b, period)
         }
@@ -368,6 +368,12 @@ pub struct CellResult {
     /// Commit epoch (total committed rounds) the server resumed from after
     /// an injected crash, or `-` for a run that never restarted.
     pub resumed_from: String,
+    /// Rounds where a worker sent a LAG-style skip frame instead of a full
+    /// update (0 for every algorithm except `acpd-lag:<theta>` with θ > 0).
+    pub skipped_rounds: u64,
+    /// Upstream bytes those skip frames avoided: Σ (estimated full-update
+    /// frame − skip frame) over all skipped rounds.
+    pub skip_bytes_saved: u64,
 }
 
 /// Render worker failures in the report's compact `w<wid>@r<round>` form.
@@ -469,6 +475,13 @@ impl SweepSpec {
             Algorithm::Acpd => {
                 EngineConfig::acpd(cell.workers, cell.group, cell.period, self.lambda)
             }
+            Algorithm::AcpdLag { .. } => EngineConfig::acpd_lag(
+                cell.workers,
+                cell.group,
+                cell.period,
+                self.lambda,
+                cell.algorithm.skip_theta(),
+            ),
             Algorithm::Cocoa => EngineConfig::cocoa(cell.workers, self.lambda),
             Algorithm::CocoaPlus => EngineConfig::cocoa_plus(cell.workers, self.lambda),
             Algorithm::DisDca => EngineConfig::disdca(cell.workers, self.lambda),
@@ -702,7 +715,7 @@ fn parse_named<T>(
 }
 
 pub fn parse_algorithms(s: &str) -> Result<Vec<Algorithm>> {
-    parse_named(s, "acpd|cocoa|cocoa+|disdca", Algorithm::from_name)
+    parse_named(s, Algorithm::help_names(), Algorithm::from_name)
 }
 
 pub fn parse_scenarios(s: &str) -> Result<Vec<Scenario>> {
@@ -879,6 +892,8 @@ struct CellRun {
     membership: String,
     checkpoints: u64,
     resumed_from: Option<u64>,
+    skipped_rounds: u64,
+    skip_bytes_saved: u64,
 }
 
 fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<CellResult> {
@@ -913,6 +928,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 membership: out.stats.membership,
                 checkpoints: out.stats.checkpoints,
                 resumed_from: out.stats.resumed_from,
+                skipped_rounds: out.stats.skipped_rounds,
+                skip_bytes_saved: out.stats.skip_bytes_saved,
                 history: out.history,
             }
         }
@@ -933,6 +950,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
                 membership: out.membership,
                 checkpoints: out.checkpoints,
                 resumed_from: out.resumed_from,
+                skipped_rounds: out.skipped_rounds,
+                skip_bytes_saved: out.skip_bytes_saved,
                 history: out.history,
             }
         }
@@ -948,7 +967,7 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
     };
     Ok(CellResult {
         index: pc.cell.index,
-        algorithm: pc.cell.algorithm.name().to_string(),
+        algorithm: pc.cell.algorithm.name(),
         scenario: pc.cell.scenario.name(),
         dataset: pc.cell.source.name(),
         n: ds.n(),
@@ -980,6 +999,8 @@ fn run_cell(pc: &PreparedCell, ds: &Dataset, runtime: RuntimeKind) -> Result<Cel
         resumed_from: run
             .resumed_from
             .map_or_else(|| "-".to_string(), |epoch| epoch.to_string()),
+        skipped_rounds: run.skipped_rounds,
+        skip_bytes_saved: run.skip_bytes_saved,
     })
 }
 
@@ -1049,6 +1070,8 @@ fn run_cell_tcp(pc: &PreparedCell, ds: &Dataset) -> Result<CellRun> {
         membership: out.membership,
         checkpoints: out.checkpoints,
         resumed_from: out.resumed_from,
+        skipped_rounds: out.skipped_rounds,
+        skip_bytes_saved: out.skip_bytes_saved,
         history: out.history,
     })
 }

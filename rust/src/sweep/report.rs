@@ -97,6 +97,8 @@ impl SweepReport {
             "shards",
             "checkpoints",
             "resumed_from",
+            "skipped_rounds",
+            "skip_bytes_saved",
         ]);
         for c in &self.cells {
             let rtt = c
@@ -139,6 +141,8 @@ impl SweepReport {
                 &c.shards,
                 &c.checkpoints,
                 &c.resumed_from,
+                &c.skipped_rounds,
+                &c.skip_bytes_saved,
             ]);
         }
         w
@@ -302,7 +306,8 @@ impl SweepReport {
                  \"compute_time_s\": {}, \"comm_time_s\": {}, \"eval_points\": {}, \
                  \"live_workers\": {}, \"failures\": {}, \
                  \"rejoins\": {}, \"membership\": {}, \"shards\": {}, \
-                 \"checkpoints\": {}, \"resumed_from\": {}}}{}\n",
+                 \"checkpoints\": {}, \"resumed_from\": {}, \
+                 \"skipped_rounds\": {}, \"skip_bytes_saved\": {}}}{}\n",
                 c.index,
                 json_str(&c.algorithm),
                 json_str(&c.scenario),
@@ -338,6 +343,8 @@ impl SweepReport {
                 c.shards,
                 c.checkpoints,
                 json_str(&c.resumed_from),
+                c.skipped_rounds,
+                c.skip_bytes_saved,
                 if i + 1 < self.cells.len() { "," } else { "" },
             );
         }
@@ -639,6 +646,8 @@ mod tests {
             membership: String::new(),
             checkpoints: 0,
             resumed_from: "-".to_string(),
+            skipped_rounds: 0,
+            skip_bytes_saved: 0,
         }
     }
 
@@ -813,8 +822,8 @@ mod tests {
         let cells = r.cells_csv().to_string();
         assert_eq!(cells.lines().count(), 9); // header + 8 cells
         assert!(cells.starts_with("index,algorithm,scenario,dataset,n,d,nnz,"));
-        // fault- and membership-accounting columns append at the END so
-        // existing consumers keep their column positions
+        // fault-, membership- and skip-accounting columns append at the END
+        // so existing consumers keep their column positions
         assert!(
             cells
                 .lines()
@@ -822,7 +831,7 @@ mod tests {
                 .unwrap()
                 .ends_with(
                     "w_norm,live_workers,failures,rejoins,membership,shards,\
-                     checkpoints,resumed_from"
+                     checkpoints,resumed_from,skipped_rounds,skip_bytes_saved"
                 ),
             "{cells}"
         );
@@ -853,6 +862,8 @@ mod tests {
         assert!(j.contains("\"shards\": 1"));
         assert!(j.contains("\"checkpoints\": 0"));
         assert!(j.contains("\"resumed_from\": \"-\""));
+        assert!(j.contains("\"skipped_rounds\": 0"));
+        assert!(j.contains("\"skip_bytes_saved\": 0"));
         assert!(!j.contains("inf"), "non-finite leaked into JSON");
         assert!(j.contains("\"ranked\""));
     }

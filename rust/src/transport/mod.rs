@@ -255,6 +255,10 @@ pub struct TcpServerOutput {
     pub checkpoints: u64,
     /// commit round the server resumed from after an injected crash
     pub resumed_from: Option<u64>,
+    /// rounds answered with a skip frame (`Algorithm::AcpdLag`; 0 otherwise)
+    pub skipped_rounds: u64,
+    /// upstream bytes those skips saved vs. the updates they replaced
+    pub skip_bytes_saved: u64,
 }
 
 /// Run the coordinator: accept K workers on `addr`, drive the protocol to
@@ -566,6 +570,8 @@ pub fn run_server_on_scenario(
                     membership: server.membership_timeline(),
                     checkpoints: store.as_ref().map_or(0, |s| s.written()),
                     resumed_from,
+                    skipped_rounds: server.skipped_rounds(),
+                    skip_bytes_saved: server.skip_bytes_saved(),
                 });
             }
             LoopOutcome::Crashed { carry: resumed } => {
@@ -764,6 +770,7 @@ pub fn run_worker(
             rho_d_msg,
         );
         state.set_error_feedback(cfg.error_feedback);
+        state.set_skip_theta(cfg.skip_theta);
         if let Some(dmsg) = admission.take() {
             // replay the full-model admission reply to land on the
             // server's w — identical to a fresh worker's first delta

@@ -28,7 +28,7 @@ use acpd::engine::Algorithm;
 use acpd::linalg::sparse::SparseVec;
 use acpd::network::Scenario;
 use acpd::protocol::checkpoint::CheckpointStore;
-use acpd::protocol::messages::UpdateMsg;
+use acpd::protocol::messages::{SkipMsg, UpdateMsg};
 use acpd::protocol::server::{FailPolicy, ServerAction, ServerConfig, ServerState};
 use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
 use acpd::testing::forall;
@@ -60,7 +60,10 @@ struct Case {
 /// from its own snapshot after every single commit (the only points the
 /// runtimes snapshot at — the inbox is provably empty there), while the
 /// `live` server never restarts.  Both consume one identical randomized
-/// update stream and must stay in lockstep to the last byte.
+/// stream — a mix of full updates and LAG-style skip frames, so the
+/// snapshot-v2 skip state (per-worker skip counts + the two aggregate
+/// counters) rides through every restart — and must stay in lockstep to
+/// the last byte.
 #[test]
 fn prop_snapshot_roundtrip_is_observationally_invisible() {
     forall(
@@ -110,10 +113,20 @@ fn prop_snapshot_roundtrip_is_observationally_invisible() {
                     return false; // unreachable if barriers fire correctly
                 }
                 let wid = free[rng.next_below(free.len() as u32) as usize];
-                let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
                 sent[wid] = true;
-                let a = live.on_update(msg.clone());
-                let b = hopper.on_update(msg);
+                // ~1 in 4 rounds arrives as a skip frame (empty contribution
+                // through the same commit path; see ServerState::on_skip)
+                let (a, b) = if rng.next_f64() < 0.25 {
+                    let skip = SkipMsg {
+                        worker: wid as u32,
+                        round: 0,
+                        saved: rng.next_below(4096) as u64,
+                    };
+                    (live.on_skip(skip.clone()), hopper.on_skip(skip))
+                } else {
+                    let msg = random_update(&mut rng, wid, case.d, case.max_nnz);
+                    (live.on_update(msg.clone()), hopper.on_update(msg))
+                };
                 match (a, b) {
                     (ServerAction::Wait, ServerAction::Wait) => {}
                     (
@@ -160,8 +173,14 @@ fn prop_snapshot_roundtrip_is_observationally_invisible() {
                 }
             }
             // the case actually exercised restarts, and both machines agree
-            // the run is over with a bit-identical model
-            commits > 0 && hopper.finished() && live.w() == hopper.w()
+            // the run is over with a bit-identical model AND identical skip
+            // accounting (v2 snapshot payload) on every axis
+            commits > 0
+                && hopper.finished()
+                && live.w() == hopper.w()
+                && live.skipped_rounds() == hopper.skipped_rounds()
+                && live.skip_bytes_saved() == hopper.skip_bytes_saved()
+                && live.skips_per_worker() == hopper.skips_per_worker()
         },
     );
 }
@@ -298,5 +317,67 @@ fn crash_server_cell_parity_on_threads_and_tcp() {
             rt.name()
         );
         assert_eq!(crash.eval_points, clean.eval_points, "{} eval points", rt.name());
+    }
+}
+
+/// Composition of the two newest axes: an `acpd-lag` (adaptive-skip) cell
+/// that loses its server to `crash_server@3` must recover bit-identical to
+/// the crash-free `lan` cell — INCLUDING the skip accounting.  Skip
+/// decisions are worker-local and workers survive the server crash, while
+/// the server's skip counters ride the v2 snapshot through the restart, so
+/// `skipped_rounds`/`skip_bytes_saved` may not drift by a single unit.
+#[test]
+fn skip_cell_survives_server_crash_bit_identically() {
+    let spec = |rt: RuntimeKind| SweepSpec {
+        algorithms: vec![Algorithm::acpd_lag(2.0)],
+        scenarios: vec![
+            Scenario::Lan,
+            Scenario::from_name("crash_server@3").unwrap(),
+        ],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 4,
+        n_override: 64,
+        threads: 1,
+        runtime: rt,
+        ..SweepSpec::default()
+    };
+    for rt in [RuntimeKind::Threads, RuntimeKind::Tcp] {
+        let report = run_sweep(&spec(rt)).expect("skip x crash matrix");
+        assert_eq!(report.cells.len(), 2);
+        let clean = &report.cells[0];
+        let crash = &report.cells[1];
+        assert_eq!(clean.scenario, "lan");
+        assert_eq!(crash.scenario, "crash_server@3");
+        assert!(crash.checkpoints >= 1, "{} wrote no checkpoint", rt.name());
+        assert_eq!(crash.resumed_from, "5", "{} crash cell", rt.name());
+        // the cell genuinely exercises the composition: skips happened
+        assert!(
+            clean.skipped_rounds > 0,
+            "{} θ = 2 cell never skipped",
+            rt.name()
+        );
+        // and the restart is invisible on every deterministic column,
+        // skip accounting included
+        assert_eq!(
+            (crash.skipped_rounds, crash.skip_bytes_saved),
+            (clean.skipped_rounds, clean.skip_bytes_saved),
+            "{} skip accounting drifted across the restart",
+            rt.name()
+        );
+        assert_eq!(crash.rounds, clean.rounds, "{} rounds", rt.name());
+        assert_eq!(crash.bytes_up, clean.bytes_up, "{} bytes_up", rt.name());
+        assert_eq!(crash.bytes_down, clean.bytes_down, "{} bytes_down", rt.name());
+        assert_eq!(
+            crash.w_norm.to_bits(),
+            clean.w_norm.to_bits(),
+            "{} final w diverged across the restart",
+            rt.name()
+        );
     }
 }

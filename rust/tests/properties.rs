@@ -84,6 +84,68 @@ fn prop_error_feedback_conserves_mass_across_rounds() {
     );
 }
 
+/// Error-feedback conservation extended to LAG-style skip rounds
+/// (`Algorithm::AcpdLag`): a skip round folds the new update into the
+/// residual WITHOUT running the filter — nothing is sent, exactly what
+/// [`WorkerState`] does when a round falls under its skip threshold.
+/// Across any interleaving of send and skip rounds the per-round split
+/// stays exact (bit-for-bit reconstruction), and once inputs stop and
+/// skipping stops the carried mass — everything the skip rounds retained
+/// included — still drains to exactly zero within ceil(d/k) rounds:
+/// skipped mass is delayed, never lost and never unboundedly accumulating.
+#[test]
+fn prop_error_feedback_conserves_mass_across_skip_rounds() {
+    forall(
+        0xEF_5C1F,
+        80,
+        |rng, sz| {
+            let d = 4 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let k = 1 + rng.next_below(d as u32) as usize;
+            let rounds = 2 + rng.next_below(12) as usize;
+            let stream_seed = rng.next_u64();
+            (d, k, rounds, stream_seed)
+        },
+        |&(d, k, rounds, stream_seed)| {
+            let mut rng = Pcg64::new(stream_seed);
+            let mut resid = vec![0.0f32; d];
+            let mut scratch = FilterScratch::default();
+            for _ in 0..rounds {
+                let u: Vec<f32> = (0..d).map(|_| (rng.next_f64() as f32) * 2.0 - 1.0).collect();
+                let mut delta: Vec<f32> =
+                    resid.iter().zip(&u).map(|(r, x)| r + x).collect();
+                let before = delta.clone();
+                if rng.next_f64() < 0.4 {
+                    // skip round: the filter never runs, the whole folded
+                    // input is carried — conservation is the identity
+                    resid = delta;
+                    continue;
+                }
+                let sent = filter_topk(&mut delta, k, &mut scratch);
+                if sent.nnz() > k {
+                    return false;
+                }
+                // exact split on send rounds, skip rounds in the carry
+                let mut recon = delta.clone();
+                sent.add_into(&mut recon, 1.0);
+                if recon != before {
+                    return false;
+                }
+                resid = delta;
+            }
+            // drain: once inputs AND skipping stop, the residual ships
+            // within the same ceil(d/k) budget as the never-skipping system
+            let budget = (d + k - 1) / k + 1;
+            for _ in 0..budget {
+                if resid.iter().all(|&x| x == 0.0) {
+                    break;
+                }
+                let _ = filter_topk(&mut resid, k, &mut scratch);
+            }
+            resid.iter().all(|&x| x == 0.0)
+        },
+    );
+}
+
 #[test]
 fn prop_residual_dominated_by_sent_coordinates() {
     // At every round the filter keeps the largest magnitudes: no residual

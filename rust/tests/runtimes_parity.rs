@@ -182,6 +182,7 @@ fn sync_matrix(runtime: RuntimeKind) -> SweepSpec {
         threads: 2,
         fail_policy: FailPolicy::FailFast,
         shards: 1,
+        ..SweepSpec::default()
     }
 }
 

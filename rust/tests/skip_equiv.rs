@@ -1,0 +1,458 @@
+//! Skip-equivalence suite for `Algorithm::AcpdLag` (LAG-style adaptive
+//! communication skipping, arXiv:1805.09965 composed with the paper's
+//! top-ρd filter + error feedback).  The adaptive variant is admissible
+//! only because of two exact contracts, both pinned here:
+//!
+//!   * **θ = 0 is plain ACPD, byte for byte** — with the threshold off,
+//!     [`WorkerState::compute_round_adaptive`] must be indistinguishable
+//!     from the historic [`WorkerState::compute_round`] path: identical
+//!     wire frames (values AND encoding choice), bit-identical `w_k`,
+//!     residual and dual variables after every round, across randomized
+//!     dimensions, ρd budgets, losses, γ values and error-feedback
+//!     settings.  `acpd-lag:0` therefore reproduces `acpd` exactly at
+//!     sweep level too (same cells modulo the algorithm name).
+//!   * **Skipping never loses mass** — a skipped round keeps the WHOLE
+//!     epoch delta in the error-feedback residual and ships a fixed
+//!     21-byte [`SkipMsg`]; the conservation ledger
+//!     `Σ sent + residual == (1/λn)·Aᵀα` stays closed through any mix of
+//!     sends and skips, and the pent-up mass drains on the next real send.
+//!
+//! On top of the worker-level contracts, one `acpd-lag` straggler cell is
+//! parity-pinned across all three runtimes (sim == threads == tcp on
+//! rounds, bytes, skip accounting and ‖w‖ bits), and the headline
+//! acceptance — skips happen and strictly cut upstream bytes versus the
+//! paired plain-ACPD cell — is asserted at matrix scale.
+
+use acpd::data::{partition::partition_rows, synthetic, synthetic::Preset, Dataset, DatasetSource};
+use acpd::engine::Algorithm;
+use acpd::linalg::sparse::SparseVec;
+use acpd::loss::LossKind;
+use acpd::network::Scenario;
+use acpd::protocol::messages::{DeltaMsg, ModelDelta};
+use acpd::protocol::worker::{RoundOutput, WorkerState};
+use acpd::solver::sdca::SdcaSolver;
+use acpd::sweep::{run_sweep, RuntimeKind, SweepSpec};
+use acpd::testing::forall;
+use acpd::util::rng::Pcg64;
+
+const LAMBDA: f64 = 0.01;
+
+#[derive(Debug)]
+struct Case {
+    n: usize,
+    d: usize,
+    h: usize,
+    rho_d: usize,
+    loss: LossKind,
+    gamma: f32,
+    error_feedback: bool,
+    theta: f64,
+    rounds: usize,
+    seed: u64,
+    reply_seed: u64,
+}
+
+fn dataset(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut spec = Preset::Rcv1Small.spec();
+    spec.n = n;
+    spec.d = d;
+    synthetic::generate(&spec, seed)
+}
+
+fn make_worker(case: &Case) -> WorkerState {
+    let ds = dataset(case.n, case.d, case.seed ^ 0xDA7A);
+    let part = partition_rows(&ds, 1, None).into_iter().next().unwrap();
+    let solver = SdcaSolver::new(
+        part,
+        case.loss,
+        LAMBDA,
+        ds.n(),
+        1.0,
+        case.gamma as f64,
+        Pcg64::new(case.seed),
+    );
+    let mut w = WorkerState::new(0, Box::new(solver), case.gamma, case.h, case.rho_d);
+    w.set_error_feedback(case.error_feedback);
+    w
+}
+
+/// A random server reply: sparse or dense encoding, random support/values,
+/// sometimes empty — the same message is applied to both workers.
+fn random_reply(rng: &mut Pcg64, d: usize) -> DeltaMsg {
+    let nnz = rng.next_below(d as u32 + 1) as usize;
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(nnz);
+    idx.sort_unstable();
+    let val: Vec<f32> = idx.iter().map(|_| (rng.next_normal() as f32) * 0.1).collect();
+    let sv = SparseVec::new(d, idx, val);
+    let delta = if rng.next_f64() < 0.5 {
+        ModelDelta::Sparse(sv)
+    } else {
+        ModelDelta::Dense(sv.to_dense())
+    };
+    DeltaMsg {
+        worker: 0,
+        server_round: 0,
+        shutdown: false,
+        delta,
+    }
+}
+
+fn empty_reply(d: usize, server_round: u64) -> DeltaMsg {
+    DeltaMsg {
+        worker: 0,
+        server_round,
+        shutdown: false,
+        delta: ModelDelta::Sparse(SparseVec::empty(d)),
+    }
+}
+
+/// θ = 0 regression contract: the adaptive entry point with the threshold
+/// off is byte-identical to the plain path — same wire frames, bit-equal
+/// `w_k`/residual/α every round, zero skip accounting — across randomized
+/// problems and randomized (sparse and dense) server replies.
+#[test]
+fn prop_theta_zero_is_byte_identical_to_plain_acpd() {
+    forall(
+        0x5C1F_0001,
+        40,
+        |rng, sz| {
+            let d = 16 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let n = 16 + rng.next_below(48) as usize;
+            let h = 1 + rng.next_below(64) as usize;
+            let rho_d = rng.next_below(d as u32 + 1) as usize;
+            let loss = match rng.next_below(3) {
+                0 => LossKind::Square,
+                1 => LossKind::Logistic,
+                _ => LossKind::SmoothHinge,
+            };
+            let gamma = if rng.next_f64() < 0.5 { 1.0 } else { 0.5 };
+            Case {
+                n,
+                d,
+                h,
+                rho_d,
+                loss,
+                gamma,
+                error_feedback: rng.next_f64() < 0.75,
+                theta: 0.0,
+                rounds: 2 + rng.next_below(5) as usize,
+                seed: rng.next_u64(),
+                reply_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let mut plain = make_worker(case);
+            let mut lag = make_worker(case);
+            lag.set_skip_theta(case.theta); // θ = 0: skipping statically off
+            let mut reply_rng = Pcg64::new(case.reply_seed);
+            for round in 0..case.rounds {
+                let a = plain.compute_round();
+                let b = match lag.compute_round_adaptive() {
+                    RoundOutput::Update(m) => m,
+                    RoundOutput::Skip(_) => {
+                        eprintln!("round {round}: θ = 0 worker emitted a skip");
+                        return false;
+                    }
+                };
+                if a.encode() != b.encode() {
+                    eprintln!("round {round}: wire frames differ");
+                    return false;
+                }
+                if plain.w_k() != lag.w_k()
+                    || plain.residual() != lag.residual()
+                    || plain.alpha() != lag.alpha()
+                {
+                    eprintln!("round {round}: state diverged");
+                    return false;
+                }
+                let reply = random_reply(&mut reply_rng, case.d);
+                plain.apply_delta(&reply);
+                lag.apply_delta(&reply);
+            }
+            lag.skipped_rounds() == 0 && lag.skip_bytes_saved() == 0
+        },
+    );
+}
+
+/// Conservation ledger under skipping: for ANY θ > 0 the round stream is a
+/// mix of updates and fixed-size skip frames, every skip frame encodes to
+/// exactly 21 bytes with the worker's post-skip round stamp, the worker's
+/// skip counters agree with the observed stream, and the ledger
+/// `Σ sent + residual == (1/λn)·Aᵀα` closes — skipped mass is delayed in
+/// the residual, never lost.
+#[test]
+fn prop_skip_ledger_conserves_mass() {
+    forall(
+        0x5C1F_0002,
+        30,
+        |rng, sz| {
+            let d = 16 + rng.next_below(sz.0 as u32 * 4 + 1) as usize;
+            let n = 16 + rng.next_below(48) as usize;
+            Case {
+                n,
+                d,
+                h: 8 + rng.next_below(64) as usize,
+                rho_d: rng.next_below(d as u32 + 1) as usize,
+                loss: LossKind::Square,
+                gamma: 1.0,
+                error_feedback: true, // the ledger needs the residual kept
+                theta: [0.75, 2.0, 1e6][rng.next_below(3) as usize],
+                rounds: 3 + rng.next_below(6) as usize,
+                seed: rng.next_u64(),
+                reply_seed: rng.next_u64(),
+            }
+        },
+        |case| {
+            let ds = dataset(case.n, case.d, case.seed ^ 0xDA7A);
+            let mut w = make_worker(case);
+            w.set_skip_theta(case.theta);
+            let mut sent = vec![0.0f32; case.d];
+            let mut skips_seen = 0u64;
+            let mut saved_seen = 0u64;
+            for round in 1..=case.rounds as u64 {
+                match w.compute_round_adaptive() {
+                    RoundOutput::Update(m) => {
+                        if m.round != round {
+                            eprintln!("update round stamp {} != {round}", m.round);
+                            return false;
+                        }
+                        m.update.add_scaled_into(&mut sent, 1.0);
+                    }
+                    RoundOutput::Skip(s) => {
+                        if s.round != round || s.encode().len() != 21 {
+                            eprintln!("bad skip frame at round {round}: {s:?}");
+                            return false;
+                        }
+                        skips_seen += 1;
+                        saved_seen += s.saved;
+                    }
+                }
+                // replies carry no model movement so the ledger stays pure
+                w.apply_delta(&empty_reply(case.d, round));
+            }
+            if w.skipped_rounds() != skips_seen || w.skip_bytes_saved() != saved_seen {
+                eprintln!(
+                    "counter drift: worker says ({}, {}), stream says ({skips_seen}, {saved_seen})",
+                    w.skipped_rounds(),
+                    w.skip_bytes_saved()
+                );
+                return false;
+            }
+            // ledger: Σ sent + residual == (1/λn)·Aᵀα up to f32 accumulation
+            let mut expect = vec![0.0f32; case.d];
+            ds.features.t_matvec(w.alpha(), &mut expect);
+            let lam_n = (LAMBDA * ds.n() as f64) as f32;
+            let max_diff = sent
+                .iter()
+                .zip(w.residual())
+                .zip(&expect)
+                .map(|((s, r), e)| (s + r - e / lam_n).abs())
+                .fold(0.0f32, f32::max);
+            if max_diff >= 1e-3 {
+                eprintln!("ledger open by {max_diff} (θ = {}, {skips_seen} skips)", case.theta);
+                return false;
+            }
+            true
+        },
+    );
+}
+
+/// Deterministic drain pin: an astronomically high θ forces round 1 to
+/// send and rounds 2–4 to skip (the 2^-k decay cannot bite that fast), so
+/// the residual piles up four epochs of mass; switching the threshold off
+/// then forces a real send, and in dense mode (ρd = 0) that single update
+/// must ship EVERYTHING — residual identically zero afterwards, ledger
+/// closed by the sent mass alone.
+#[test]
+fn skipped_mass_drains_on_the_next_real_send() {
+    let case = Case {
+        n: 48,
+        d: 160,
+        h: 96,
+        rho_d: 0,
+        loss: LossKind::Square,
+        gamma: 1.0,
+        error_feedback: true,
+        theta: 1e9,
+        rounds: 5,
+        seed: 0xC0FFEE,
+        reply_seed: 0,
+    };
+    let ds = dataset(case.n, case.d, case.seed ^ 0xDA7A);
+    let mut w = make_worker(&case);
+    w.set_skip_theta(case.theta);
+    let mut sent = vec![0.0f32; case.d];
+
+    // round 1: no reference norms yet — must send
+    match w.compute_round_adaptive() {
+        RoundOutput::Update(m) => m.update.add_scaled_into(&mut sent, 1.0),
+        RoundOutput::Skip(s) => panic!("round 1 skipped with empty reference window: {s:?}"),
+    }
+    w.apply_delta(&empty_reply(case.d, 1));
+
+    // rounds 2-4: θ/2^k ∈ {1e9, 5e8, 2.5e8} × mean — guaranteed skips
+    for round in 2..=4u64 {
+        match w.compute_round_adaptive() {
+            RoundOutput::Skip(s) => {
+                assert_eq!(s.round, round);
+                assert!(s.saved > 0, "dense-mode skip saved nothing");
+            }
+            RoundOutput::Update(m) => panic!("round {round} sent under θ = 1e9: {:?}", m.round),
+        }
+        w.apply_delta(&empty_reply(case.d, round));
+    }
+    assert_eq!(w.skipped_rounds(), 3);
+    assert!(
+        w.residual().iter().any(|&x| x != 0.0),
+        "three skipped epochs left no retained mass"
+    );
+
+    // threshold off → the plain path: round 5 must send, and dense mode
+    // ships the whole residual (pent-up skipped mass included)
+    w.set_skip_theta(0.0);
+    match w.compute_round_adaptive() {
+        RoundOutput::Update(m) => {
+            assert_eq!(m.round, 5);
+            m.update.add_scaled_into(&mut sent, 1.0);
+        }
+        RoundOutput::Skip(s) => panic!("θ = 0 round skipped: {s:?}"),
+    }
+    assert!(
+        w.residual().iter().all(|&x| x == 0.0),
+        "dense-mode send left residual mass behind"
+    );
+    assert_eq!(w.skipped_rounds(), 3, "the forced send must not skip-count");
+
+    // ledger closes on the sent mass alone (residual is zero)
+    let mut expect = vec![0.0f32; case.d];
+    ds.features.t_matvec(w.alpha(), &mut expect);
+    let lam_n = (LAMBDA * ds.n() as f64) as f32;
+    let max_diff = sent
+        .iter()
+        .zip(&expect)
+        .map(|(s, e)| (s - e / lam_n).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "drain ledger open by {max_diff}");
+}
+
+/// `acpd-lag:0` at sweep level: the grid runs it as a distinct algorithm,
+/// but every deterministic column of its cells — rounds, bytes both ways,
+/// ‖w‖ bits, gap bits, eval points — is identical to the paired plain
+/// `acpd` cell; only the algorithm name differs, and the skip columns are
+/// zero on both sides.
+#[test]
+fn theta_zero_sweep_cell_matches_plain_acpd_modulo_the_name() {
+    let spec = SweepSpec {
+        algorithms: vec![Algorithm::Acpd, Algorithm::acpd_lag(0.0)],
+        scenarios: vec![Scenario::Lan, Scenario::Straggler { sigma: 10.0 }],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![2],
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 4,
+        n_override: 256,
+        threads: 1,
+        ..SweepSpec::default()
+    };
+    let report = run_sweep(&spec).expect("θ=0 equivalence sweep");
+    assert_eq!(report.cells.len(), 4); // 2 algos x 2 scenarios
+    for scenario in ["lan", "straggler:10"] {
+        let a = report
+            .cells
+            .iter()
+            .find(|c| c.algorithm == "acpd" && c.scenario == scenario)
+            .expect("plain acpd cell");
+        let b = report
+            .cells
+            .iter()
+            .find(|c| c.algorithm == "acpd-lag:0" && c.scenario == scenario)
+            .expect("acpd-lag:0 cell");
+        assert_eq!(
+            (a.rounds, a.bytes_up, a.bytes_down, a.eval_points),
+            (b.rounds, b.bytes_up, b.bytes_down, b.eval_points),
+            "{scenario}: accounting diverged at θ = 0"
+        );
+        assert_eq!(a.w_norm.to_bits(), b.w_norm.to_bits(), "{scenario}: ‖w‖");
+        assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits(), "{scenario}: gap");
+        assert_eq!(
+            (a.skipped_rounds, a.skip_bytes_saved, b.skipped_rounds, b.skip_bytes_saved),
+            (0, 0, 0, 0),
+            "{scenario}: skip accounting must be zero on both sides"
+        );
+    }
+}
+
+/// Cross-runtime parity + the headline acceptance in one matrix: an
+/// `acpd-lag` cell under `straggler:10` (B = K pins the commit composition
+/// to the schedule, exactly like the churn parity pin) must agree across
+/// sim, threads AND tcp on rounds, bytes both ways, the skip columns and
+/// ‖w‖ bits — and, against the paired plain-ACPD cell, it must actually
+/// skip rounds and strictly cut upstream bytes while committing the same
+/// round count.
+#[test]
+fn lag_straggler_cell_is_parity_pinned_across_all_three_runtimes() {
+    let spec = |rt: RuntimeKind| SweepSpec {
+        algorithms: vec![Algorithm::Acpd, Algorithm::acpd_lag(2.0)],
+        scenarios: vec![Scenario::Straggler { sigma: 10.0 }],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![7],
+        workers: vec![4],
+        groups: vec![4], // B = K: timing can't reshuffle group composition
+        periods: vec![5],
+        h: 64,
+        outer_rounds: 8,
+        n_override: 256,
+        threads: 1,
+        runtime: rt,
+        ..SweepSpec::default()
+    };
+    let sim = run_sweep(&spec(RuntimeKind::Sim)).expect("sim straggler matrix");
+    let thr = run_sweep(&spec(RuntimeKind::Threads)).expect("threads straggler matrix");
+    let tcp = run_sweep(&spec(RuntimeKind::Tcp)).expect("tcp straggler matrix");
+    let key = |r: &acpd::sweep::SweepReport| {
+        r.cells
+            .iter()
+            .map(|c| {
+                (
+                    c.algorithm.clone(),
+                    c.rounds,
+                    c.bytes_up,
+                    c.bytes_down,
+                    c.skipped_rounds,
+                    c.skip_bytes_saved,
+                    c.w_norm.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let (s, t, p) = (key(&sim), key(&thr), key(&tcp));
+    assert_eq!(s, t, "sim vs threads skip accounting diverged");
+    assert_eq!(s, p, "sim vs tcp skip accounting diverged");
+
+    let plain = sim
+        .cells
+        .iter()
+        .find(|c| c.algorithm == "acpd")
+        .expect("plain acpd cell");
+    let lag = sim
+        .cells
+        .iter()
+        .find(|c| c.algorithm.starts_with("acpd-lag"))
+        .expect("acpd-lag cell");
+    assert_eq!((plain.skipped_rounds, plain.skip_bytes_saved), (0, 0));
+    assert!(lag.skipped_rounds > 0, "θ = 2 straggler cell never skipped");
+    assert!(lag.skip_bytes_saved > 0);
+    assert_eq!(lag.rounds, plain.rounds, "skips must not slow the commit clock");
+    assert!(
+        lag.bytes_up < plain.bytes_up,
+        "skips must strictly cut upstream bytes: {} vs {}",
+        lag.bytes_up,
+        plain.bytes_up
+    );
+}

@@ -41,6 +41,7 @@ fn matrix_2x2x2() -> SweepSpec {
         threads: 1,
         fail_policy: FailPolicy::FailFast,
         shards: 1,
+        ..SweepSpec::default()
     }
 }
 
@@ -525,4 +526,51 @@ fn churn_cell_is_parity_pinned_across_all_three_runtimes() {
     assert!(c.rejoins >= 1, "no rejoin recorded: {}", c.membership);
     assert!(c.membership.contains("+@r"), "{}", c.membership);
     assert!(c.membership.contains("-@r"), "{}", c.membership);
+}
+
+/// Regression pin for the adaptive-skip report extension: a grid that
+/// never names `acpd-lag` must produce cells.csv/report.json identical to
+/// the pre-extension artifacts modulo the two END-APPENDED columns — the
+/// header grows `,skipped_rounds,skip_bytes_saved`, every data row grows a
+/// literal `,0,0`, and nothing else moves (so positional `cut -d,` ranges
+/// over the historic columns keep working, and stripping the suffix
+/// reproduces the old artifact byte-for-byte).
+#[test]
+fn legacy_grids_only_append_zero_skip_columns() {
+    let spec = SweepSpec {
+        algorithms: vec![Algorithm::Acpd, Algorithm::CocoaPlus],
+        scenarios: vec![Scenario::Lan],
+        datasets: vec![DatasetSource::Preset(Preset::DenseTest)],
+        rho_ds: vec![0],
+        seeds: vec![1, 2],
+        workers: vec![2],
+        groups: vec![2],
+        periods: vec![2],
+        h: 32,
+        outer_rounds: 2,
+        n_override: 128,
+        threads: 1,
+        ..SweepSpec::default()
+    };
+    let report = run_sweep(&spec).expect("legacy grid");
+    assert_eq!(report.cells.len(), 4);
+    let csv = report.cells_csv().to_string();
+    let mut lines = csv.lines();
+    let header = lines.next().unwrap();
+    assert!(
+        header.ends_with(",checkpoints,resumed_from,skipped_rounds,skip_bytes_saved"),
+        "skip columns must be end-appended: {header}"
+    );
+    for line in lines {
+        assert!(
+            line.ends_with(",0,0"),
+            "legacy cell grew nonzero skip accounting: {line}"
+        );
+    }
+    // JSON: the new keys exist and are zero on every legacy cell
+    let json = report.to_json();
+    assert_eq!(json.matches("\"skipped_rounds\": 0").count(), 4);
+    assert_eq!(json.matches("\"skip_bytes_saved\": 0").count(), 4);
+    // the ranked comparison table is untouched by the new axis
+    assert!(!report.ranked_csv().to_string().contains("skip"));
 }
